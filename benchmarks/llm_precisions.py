@@ -1,0 +1,103 @@
+"""Beyond-paper: VRR-solved accumulation precisions for the ten assigned
+LLM-family architectures across their shape grid — the Table-1 analogue a
+TPU matrix-unit designer would consume.
+
+Also supports --invert-nzr: solve for the NZR that reproduces the paper's
+AlexNet GRAD entries (the sparsity the paper measured but did not publish).
+"""
+
+from __future__ import annotations
+
+from repro.configs import ALIASES, SHAPES, get_config, shape_cells
+from repro.core.acc_lengths import transformer_specs
+from repro.core.precision import assign_network, min_m_acc
+
+
+def specs_for(arch: str, shape_name: str):
+    cfg = get_config(arch)
+    shp = SHAPES[shape_name]
+    return cfg, transformer_specs(
+        d_model=cfg.d_model,
+        d_ff=cfg.d_ff or cfg.d_model,
+        n_heads=cfg.n_heads,
+        n_kv_heads=cfg.n_kv_heads,
+        d_head=cfg.head_dim,
+        seq_len=shp.seq_len,
+        global_batch=shp.global_batch,
+        vocab_size=cfg.vocab_size,
+        moe_experts=cfg.moe.n_experts if cfg.moe else 0,
+        moe_top_k=cfg.moe.top_k if cfg.moe else 0,
+    )
+
+
+def run(csv=False):
+    print("### per-arch max accumulator requirement at train_4k "
+          "(mantissa bits, normal/chunked-64; m_p=5)")
+    print(f"{'arch':26s} {'maxFWD':>7s} {'maxBWD':>7s} {'maxGRAD':>8s} "
+          f"{'GRAD chunked':>13s} {'16b acc OK?':>12s}")
+    out = {}
+    for arch in ALIASES:
+        cfg, specs = specs_for(arch, "train_4k")
+        a = assign_network(arch, specs, m_p=5)
+        mx = {"FWD": 0, "BWD": 0, "GRAD": 0}
+        mx_c = {"FWD": 0, "BWD": 0, "GRAD": 0}
+        for s in specs:
+            nb, cb = a.get(s.layer, s.role)
+            mx[s.role] = max(mx[s.role], nb)
+            mx_c[s.role] = max(mx_c[s.role], cb)
+        # Wang et al. 16-bit accumulation = (1,6,9): OK iff chunked GRAD <= 9
+        ok16 = "yes" if mx_c["GRAD"] <= 9 else "NO"
+        print(f"{arch:26s} {mx['FWD']:7d} {mx['BWD']:7d} {mx['GRAD']:8d} "
+              f"{mx_c['GRAD']:13d} {ok16:>12s}")
+        out[arch] = mx_c["GRAD"]
+
+    print("\n### MoE expert GEMMs need fewer GRAD bits (per-expert token "
+          "count < B*T):")
+    for arch in ("moonshot-v1-16b-a3b", "llama4-maverick-400b-a17b"):
+        cfg, specs = specs_for(arch, "train_4k")
+        a = assign_network(arch, specs, m_p=5)
+        print(f"  {arch}: dense-equivalent GRAD would be "
+              f"{min_m_acc(SHAPES['train_4k'].tokens, 5)}b, expert GRAD is "
+              f"{a.get('moe.up', 'GRAD')[0]}b "
+              f"(E={cfg.moe.n_experts}, k={cfg.moe.top_k})")
+
+    print("\n### accumulation-length scaling across shapes (qwen3-8b, "
+          "attention probs @ V GEMM):")
+    for shape in shape_cells("qwen3-8b"):
+        _, specs = specs_for("qwen3-8b", shape)
+        av = next(s for s in specs if s.layer == "attn.av")
+        print(f"  {shape:12s} n_av = {av.n:9,d} -> m_acc = "
+              f"{min_m_acc(av.n, 5)}b")
+    return out
+
+
+def invert_nzr():
+    """Solve the NZR consistent with the paper's AlexNet GRAD bits."""
+    paper = {"Conv 1": (10, 256 * 55 * 55), "Conv 2": (9, 256 * 27 * 27),
+             "Conv 3": (8, 256 * 13 * 13), "Conv 4": (6, 256 * 13 * 13),
+             "Conv 5": (6, 256 * 13 * 13)}
+    print("### NZR inversion for paper AlexNet GRAD entries")
+    for layer, (bits, n) in paper.items():
+        lo, hi = 1e-4, 1.0
+        # find largest nzr with min_m_acc == bits
+        best = None
+        z = hi
+        for _ in range(40):
+            mid = (lo + hi) / 2
+            if min_m_acc(n, 5, nzr=mid) <= bits:
+                best = mid
+                lo = mid
+            else:
+                hi = mid
+        print(f"  {layer}: paper {bits}b @ n={n:,} -> implied NZR <= "
+              f"{best:.3f}" if best else f"  {layer}: infeasible")
+
+
+if __name__ == "__main__":
+    import sys
+
+    if "--invert-nzr" in sys.argv:
+        invert_nzr()
+    else:
+        run()
+        invert_nzr()

@@ -1,0 +1,206 @@
+"""Roofline analysis from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Per (arch x shape x mesh) cell, from the compiled dry-run JSONs:
+  compute term    = HLO_FLOPs_per_dev / peak_FLOPs            [s]
+  memory term     = HLO_bytes_per_dev / HBM_bw                [s]
+  collective term = wire_bytes_per_dev / ICI_link_bw          [s]
+plus MODEL_FLOPS (6*N_active*D train / 2*N_active*D inference), the
+useful-compute ratio MODEL_FLOPS / HLO_FLOPs, the dominant term and the
+structural roofline fraction  t_model / max(term).
+
+Hardware constants (TPU v5e): 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s
+per ICI link (we conservatively model all collective wire bytes through a
+single link; v5e has 4 links, so this upper-bounds the collective term).
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+HBM_PER_CHIP = 16e9  # v5e
+
+_PARAM_CACHE: dict[str, tuple[float, float]] = {}
+
+
+def param_counts(arch: str) -> tuple[float, float]:
+    """(total, active) parameter counts from abstract init (no allocation)."""
+    if arch in _PARAM_CACHE:
+        return _PARAM_CACHE[arch]
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_config
+    from repro.models.api import get_model
+
+    cfg = get_config(arch)
+    model = get_model(cfg)
+    shapes = jax.eval_shape(model.init_params,
+                            jax.ShapeDtypeStruct((2,), jnp.uint32))
+    total = expert = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(shapes)[0]:
+        names = [str(getattr(k, "key", getattr(k, "idx", k))) for k in path]
+        n = 1
+        for d in leaf.shape:
+            n *= d
+        total += n
+        if "moe" in names and "shared" not in names and names[-1] in (
+                "w_gate", "w_up", "w_down"):
+            expert += n
+    active = float(total)
+    if cfg.moe is not None and expert:
+        active = total - expert + expert * cfg.moe.top_k / cfg.moe.n_experts
+    _PARAM_CACHE[arch] = (float(total), float(active))
+    return _PARAM_CACHE[arch]
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    """Global MODEL_FLOPS by the 6*N*D / 2*N*D convention."""
+    from repro.configs import SHAPES
+
+    shp = SHAPES[shape_name]
+    _, active = param_counts(arch)
+    if shp.kind == "train":
+        return 6.0 * active * shp.tokens
+    if shp.kind == "prefill":
+        return 2.0 * active * shp.tokens
+    # decode: one new token per sequence
+    return 2.0 * active * shp.global_batch
+
+
+def analyze_cell(rec: dict) -> dict:
+    chips = rec["n_chips"]
+    flops_dev = rec["cost"].get("flops", 0.0)
+    bytes_dev = rec["cost"].get("bytes accessed", 0.0)
+    if not bytes_dev:  # older jax spells the total differently
+        bytes_dev = rec["cost"].get("bytes accessedout{}", 0.0)
+    coll_dev = rec["collectives"]["total"]
+    t_compute = flops_dev / PEAK_FLOPS
+    t_memory = bytes_dev / HBM_BW
+    t_coll = coll_dev / ICI_BW
+    mf = model_flops(rec["arch"], rec["shape"])
+    t_model = mf / (chips * PEAK_FLOPS)
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    frac = t_model / max(max(terms.values()), 1e-30)
+    useful = mf / max(flops_dev * chips, 1e-30)
+    # resident bytes per device: live arguments (params/optimizer/caches) +
+    # temporaries + outputs.  (CPU-backend peak_memory_in_bytes omits temps.)
+    m = rec.get("memory", {})
+    peak_mem = max(
+        m.get("peak_memory_in_bytes", 0),
+        m.get("argument_size_in_bytes", 0) + m.get("temp_size_in_bytes", 0)
+        + m.get("output_size_in_bytes", 0) - m.get("alias_size_in_bytes", 0),
+    )
+    return {
+        "arch": rec["arch"],
+        "shape": rec["shape"],
+        "mesh": rec["mesh"],
+        "flops_dev": flops_dev,
+        "bytes_dev": bytes_dev,
+        "coll_dev": coll_dev,
+        "t_compute": t_compute,
+        "t_memory": t_memory,
+        "t_collective": t_coll,
+        "dominant": dominant,
+        "model_flops": mf,
+        "useful_ratio": useful,
+        "roofline_fraction": frac,
+        "peak_mem_gb": peak_mem / 1e9,
+        "fits_16gb": peak_mem <= HBM_PER_CHIP,
+    }
+
+
+def load_cells(dirpath: str = "results/dryrun", mesh: str | None = "16x16",
+               mem_dirpath: str = "results/dryrun_rolled"):
+    """Merge the two dry-run passes per (arch, shape, mesh):
+
+    * ``dirpath``/*__cost.json   — exact FLOPs/bytes/collectives via
+      per-layer composition (repro.launch.costrun)
+    * ``mem_dirpath``/*.json     — production (rolled, microbatched)
+      memory_analysis for the fit check
+
+    Falls back to whatever single pass exists.
+    """
+    mem = {}
+    for f in glob.glob(os.path.join(mem_dirpath, "*.json")):
+        r = json.load(open(f))
+        mem[(r["arch"], r["shape"], r["mesh"])] = r.get("memory", {})
+    cells = []
+    seen = set()
+    for f in sorted(glob.glob(os.path.join(dirpath, "*__cost.json"))):
+        rec = json.load(open(f))
+        if mesh and rec["mesh"] != mesh:
+            continue
+        key = (rec["arch"], rec["shape"], rec["mesh"])
+        rec["memory"] = mem.get(key, {})
+        seen.add(key)
+        cells.append(analyze_cell(rec))
+    # cells without a cost pass: fall back to rolled (flops under-reported)
+    for f in sorted(glob.glob(os.path.join(mem_dirpath, "*.json"))):
+        rec = json.load(open(f))
+        key = (rec["arch"], rec["shape"], rec["mesh"])
+        if (mesh and rec["mesh"] != mesh) or key in seen:
+            continue
+        c = analyze_cell(rec)
+        c["arch"] += "*"  # rolled-only marker
+        cells.append(c)
+    return cells
+
+
+def fmt_s(x: float) -> str:
+    if x >= 1:
+        return f"{x:7.2f}s "
+    if x >= 1e-3:
+        return f"{x * 1e3:7.2f}ms"
+    return f"{x * 1e6:7.1f}us"
+
+
+def run(csv=False, dirpath: str = "results/dryrun", mesh: str = "16x16",
+        mem_dirpath: str = "results/dryrun_rolled"):
+    cells = load_cells(dirpath, mesh, mem_dirpath=mem_dirpath)
+    if not cells:
+        print(f"no dry-run artifacts in {dirpath} for mesh {mesh} — run "
+              f"PYTHONPATH=src python -m repro.launch.dryrun --all first")
+        return {}
+    print(f"### roofline terms per cell ({mesh}, {len(cells)} cells; "
+          f"v5e: 197TF/s, 819GB/s HBM, 50GB/s ICI link)")
+    print(f"{'arch':26s} {'shape':12s} {'compute':>9s} {'memory':>9s} "
+          f"{'collect':>9s} {'domnt':>6s} {'6ND/HLO':>8s} {'roofl%':>7s} "
+          f"{'mem/dev':>8s}")
+    rows = []
+    for c in cells:
+        print(f"{c['arch']:26s} {c['shape']:12s} {fmt_s(c['t_compute'])} "
+              f"{fmt_s(c['t_memory'])} {fmt_s(c['t_collective'])} "
+              f"{c['dominant'][:6]:>6s} {c['useful_ratio']:8.3f} "
+              f"{100 * c['roofline_fraction']:6.1f}% "
+              f"{c['peak_mem_gb']:6.1f}GB{'' if c['fits_16gb'] else ' OOM'}")
+        rows.append(c)
+    tag = os.path.basename(os.path.normpath(dirpath))
+    out_csv = os.path.join(dirpath, "..",
+                           f"roofline_{tag}_{mesh.replace('x', '_')}.csv")
+    with open(out_csv, "w") as f:
+        keys = list(rows[0].keys())
+        f.write(",".join(keys) + "\n")
+        for c in rows:
+            f.write(",".join(str(c[k]) for k in keys) + "\n")
+    print(f"\nwrote {out_csv}")
+    worst = min((c for c in rows if c["shape"] == "train_4k"),
+                key=lambda c: c["roofline_fraction"])
+    collbound = max(rows, key=lambda c: c["t_collective"] / max(
+        max(c["t_compute"], c["t_memory"]), 1e-30))
+    print(f"worst train roofline fraction: {worst['arch']} "
+          f"({100 * worst['roofline_fraction']:.1f}%)")
+    print(f"most collective-bound: {collbound['arch']} x {collbound['shape']}")
+    return {"cells": len(rows)}
+
+
+if __name__ == "__main__":
+    import sys
+
+    mesh = sys.argv[sys.argv.index("--mesh") + 1] if "--mesh" in sys.argv else "16x16"
+    run(mesh=mesh)

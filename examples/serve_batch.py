@@ -1,0 +1,29 @@
+"""Batched serving example: prefill + greedy decode across architectures,
+exercising KV caches (dense/MoE), SSM recurrent states (mamba2), the hybrid
+shared-attention cache (zamba2) and the enc-dec cross-attention priming
+(seamless) through the same public API.
+
+Run:  PYTHONPATH=src python examples/serve_batch.py [--gen 12]
+"""
+
+import argparse
+
+from repro.launch import serve
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--gen", type=int, default=8)
+    ap.add_argument("--batch", type=int, default=2)
+    args = ap.parse_args()
+
+    for arch in ("qwen2-1.5b", "mamba2-1.3b", "zamba2-7b",
+                 "moonshot-v1-16b-a3b", "seamless-m4t-large-v2"):
+        print("\n" + "=" * 60)
+        serve.main(["--arch", arch, "--smoke",
+                    "--batch", str(args.batch),
+                    "--prompt-len", "16", "--gen", str(args.gen)])
+
+
+if __name__ == "__main__":
+    main()

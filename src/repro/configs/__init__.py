@@ -1,0 +1,61 @@
+"""Assigned-architecture registry: ``get_config(arch)`` / ``get_smoke_config``.
+
+One module per architecture; each exposes ``CONFIG`` (the exact assigned
+full-size config) and ``SMOKE`` (a reduced same-family config for CPU
+smoke tests).
+"""
+
+from __future__ import annotations
+
+import importlib
+
+from repro.models.config import ModelConfig, ShapeConfig, SHAPES  # noqa: F401
+
+ARCHS = [
+    "internvl2_2b",
+    "qwen2_1_5b",
+    "qwen3_8b",
+    "llama3_2_3b",
+    "granite_8b",
+    "seamless_m4t_large_v2",
+    "moonshot_v1_16b_a3b",
+    "llama4_maverick_400b_a17b",
+    "zamba2_7b",
+    "mamba2_1_3b",
+]
+
+# canonical ids from the brief -> module names
+ALIASES = {
+    "internvl2-2b": "internvl2_2b",
+    "qwen2-1.5b": "qwen2_1_5b",
+    "qwen3-8b": "qwen3_8b",
+    "llama3.2-3b": "llama3_2_3b",
+    "granite-8b": "granite_8b",
+    "seamless-m4t-large-v2": "seamless_m4t_large_v2",
+    "moonshot-v1-16b-a3b": "moonshot_v1_16b_a3b",
+    "llama4-maverick-400b-a17b": "llama4_maverick_400b_a17b",
+    "zamba2-7b": "zamba2_7b",
+    "mamba2-1.3b": "mamba2_1_3b",
+}
+
+
+def _module(arch: str):
+    name = ALIASES.get(arch, arch).replace("-", "_").replace(".", "_")
+    return importlib.import_module(f"repro.configs.{name}")
+
+
+def get_config(arch: str) -> ModelConfig:
+    return _module(arch).CONFIG
+
+
+def get_smoke_config(arch: str) -> ModelConfig:
+    return _module(arch).SMOKE
+
+
+def shape_cells(arch: str) -> list[str]:
+    """Shape names applicable to this architecture (brief's skip rules)."""
+    cfg = get_config(arch)
+    cells = ["train_4k", "prefill_32k", "decode_32k"]
+    if cfg.sub_quadratic:
+        cells.append("long_500k")
+    return cells

@@ -1,0 +1,25 @@
+"""mamba2-1.3b [ssm]: 48L d_model=2048 (attn-free) vocab=50280,
+ssm_state=128 — SSD (state-space duality) [arXiv:2405.21060; unverified]."""
+
+from dataclasses import replace
+
+from repro.models.config import ModelConfig, SSMConfig
+
+CONFIG = ModelConfig(
+    name="mamba2-1.3b",
+    family="ssm",
+    n_layers=48,
+    d_model=2048,
+    n_heads=1,       # attention-free; attn fields unused
+    n_kv_heads=1,
+    d_head=64,
+    d_ff=0,
+    vocab_size=50280,
+    ssm=SSMConfig(state_dim=128, head_dim=64, expand=2, chunk=256),
+    tie_embeddings=True,
+)
+
+SMOKE = replace(
+    CONFIG, n_layers=3, d_model=64, vocab_size=256,
+    ssm=SSMConfig(state_dim=16, head_dim=16, expand=2, chunk=16),
+)

@@ -1,0 +1,31 @@
+"""seamless-m4t-large-v2 [audio]: 24L d_model=1024 16H (kv=16) d_ff=8192
+vocab=256206 — enc-dec, multimodal [arXiv:2308.11596; hf].
+
+Audio frontend is a stub: the encoder consumes pre-computed frame
+embeddings (dim 1024 per the w2v-BERT feature extractor output).
+Train/prefill shapes split the seq budget S_enc = S_dec = seq_len // 2
+(DESIGN.md).
+"""
+
+from dataclasses import replace
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="seamless-m4t-large-v2",
+    family="encdec",
+    n_layers=24,           # decoder layers
+    encoder_layers=24,
+    d_model=1024,
+    n_heads=16,
+    n_kv_heads=16,
+    d_head=64,
+    d_ff=8192,
+    vocab_size=256206,
+    frontend_dim=1024,
+)
+
+SMOKE = replace(
+    CONFIG, n_layers=2, encoder_layers=2, d_model=64, n_heads=4,
+    n_kv_heads=4, d_head=16, d_ff=128, vocab_size=256, frontend_dim=32,
+)

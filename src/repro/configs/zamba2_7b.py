@@ -1,0 +1,29 @@
+"""zamba2-7b [hybrid]: 81L d_model=3584 32H (kv=32) d_ff=14336
+vocab=32000, ssm_state=64 — Mamba2 backbone + shared attention block
+applied every 6 SSM layers (params shared across applications)
+[arXiv:2411.15242; unverified]."""
+
+from dataclasses import replace
+
+from repro.models.config import ModelConfig, SSMConfig
+
+CONFIG = ModelConfig(
+    name="zamba2-7b",
+    family="hybrid",
+    n_layers=81,
+    d_model=3584,
+    n_heads=32,
+    n_kv_heads=32,
+    d_head=112,
+    d_ff=14336,
+    vocab_size=32000,
+    ssm=SSMConfig(state_dim=64, head_dim=64, expand=2, chunk=256),
+    hybrid_attn_every=6,
+)
+
+SMOKE = replace(
+    CONFIG, n_layers=5, d_model=64, n_heads=4, n_kv_heads=4, d_head=16,
+    d_ff=128, vocab_size=256,
+    ssm=SSMConfig(state_dim=16, head_dim=16, expand=2, chunk=16),
+    hybrid_attn_every=2,
+)

@@ -1,0 +1,20 @@
+# The paper's primary contribution: the Variance Retention Ratio analysis
+# (closed-form accumulation bit-width scaling) and the minimal-precision
+# solver built on it.
+from repro.core.vrr import (  # noqa: F401
+    CUTOFF_LOG_V,
+    log_variance_lost,
+    qfunc,
+    vrr,
+    vrr_chunked,
+    vrr_chunked_sparse,
+    vrr_full_swamping,
+    vrr_sparse,
+)
+from repro.core.precision import (  # noqa: F401
+    AccumSpec,
+    PrecisionAssignment,
+    assign_network,
+    min_m_acc,
+    suitable,
+)

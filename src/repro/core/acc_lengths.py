@@ -1,0 +1,156 @@
+"""Accumulation-length extraction (paper §5 + beyond-paper LLM GEMMs).
+
+For a convolution ``k x k`` with ``C_in -> C_out`` over an ``H x W`` output
+and minibatch ``B`` (im2col GEMM view, as in the paper's CUDA GEMM patch):
+
+* FWD  (activation = W * x)      : n = k^2 * C_in
+* BWD  (dx = W^T * dy)           : n = k^2 * C_out
+* GRAD (dW = dy * x^T)           : n = B * H_out * W_out
+
+For a transformer dense GEMM ``d_in -> d_out`` over ``B*T`` tokens:
+
+* FWD : n = d_in
+* BWD : n = d_out
+* GRAD: n = B * T          (the regime where the paper's analysis bites:
+                            at train_4k this is ~10^6)
+
+plus the two in-attention GEMMs: scores (n = d_head) and the
+attention-weighted value sum (n = T_kv, relevant at 32k prefill).
+For MoE expert GEMMs the GRAD length is the per-expert token count
+``B * T * top_k / E`` (capacity-factor ignored; it only changes n by <2x,
+i.e. <=1 mantissa bit at the VRR knee spacing of ~4x/bit).
+"""
+
+from __future__ import annotations
+
+from repro.core.precision import AccumSpec
+
+__all__ = [
+    "conv_specs",
+    "dense_specs",
+    "resnet32_cifar",
+    "resnet18_imagenet",
+    "alexnet_imagenet",
+    "transformer_specs",
+]
+
+
+def conv_specs(
+    layer: str,
+    k: int,
+    c_in: int,
+    c_out: int,
+    h_out: int,
+    w_out: int,
+    batch: int,
+    *,
+    first: bool = False,
+    nzr_fwd: float = 1.0,
+    nzr_grad: float = 1.0,
+) -> list[AccumSpec]:
+    s = [
+        AccumSpec(layer, "FWD", k * k * c_in, nzr_fwd),
+        AccumSpec(layer, "GRAD", batch * h_out * w_out, nzr_grad),
+    ]
+    if not first:  # no BWD through the input layer (paper: "N/A")
+        s.insert(1, AccumSpec(layer, "BWD", k * k * c_out))
+    return s
+
+
+def dense_specs(
+    layer: str,
+    d_in: int,
+    d_out: int,
+    tokens: int,
+    *,
+    nzr_fwd: float = 1.0,
+    nzr_grad: float = 1.0,
+    first: bool = False,
+) -> list[AccumSpec]:
+    s = [
+        AccumSpec(layer, "FWD", d_in, nzr_fwd),
+        AccumSpec(layer, "GRAD", tokens, nzr_grad),
+    ]
+    if not first:
+        s.insert(1, AccumSpec(layer, "BWD", d_out))
+    return s
+
+
+# --------------------------------------------------------------------------
+# The paper's three benchmark networks (Table 1 granularity).
+# NZR defaults to 1.0 (conservative); the paper measured NZRs from baseline
+# runs (unavailable here) -- benchmarks/table1_precisions.py reports both
+# NZR=1.0 and a ReLU-informed estimate.
+# --------------------------------------------------------------------------
+
+
+def resnet32_cifar(batch: int = 128, nzr: float = 1.0) -> list[AccumSpec]:
+    out: list[AccumSpec] = []
+    out += conv_specs("Conv 0", 3, 3, 16, 32, 32, batch, first=True)
+    out += conv_specs("ResBlock 1", 3, 16, 16, 32, 32, batch, nzr_fwd=nzr, nzr_grad=nzr)
+    out += conv_specs("ResBlock 2", 3, 32, 32, 16, 16, batch, nzr_fwd=nzr, nzr_grad=nzr)
+    out += conv_specs("ResBlock 3", 3, 64, 64, 8, 8, batch, nzr_fwd=nzr, nzr_grad=nzr)
+    return out
+
+
+def resnet18_imagenet(batch: int = 256, nzr: float = 1.0) -> list[AccumSpec]:
+    out: list[AccumSpec] = []
+    out += conv_specs("Conv 0", 7, 3, 64, 112, 112, batch, first=True)
+    out += conv_specs("ResBlock 1", 3, 64, 64, 56, 56, batch, nzr_fwd=nzr, nzr_grad=nzr)
+    out += conv_specs("ResBlock 2", 3, 128, 128, 28, 28, batch, nzr_fwd=nzr, nzr_grad=nzr)
+    out += conv_specs("ResBlock 3", 3, 256, 256, 14, 14, batch, nzr_fwd=nzr, nzr_grad=nzr)
+    out += conv_specs("ResBlock 4", 3, 512, 512, 7, 7, batch, nzr_fwd=nzr, nzr_grad=nzr)
+    return out
+
+
+def alexnet_imagenet(batch: int = 256, nzr: float = 0.25) -> list[AccumSpec]:
+    # Paper §5: AlexNet's measured sparsity is much higher than the ResNets',
+    # which is why its GRAD precisions are *lower* despite ImageNet-sized
+    # feature maps.  nzr here is the default estimate applied to GRAD.
+    out: list[AccumSpec] = []
+    out += conv_specs("Conv 1", 11, 3, 64, 55, 55, batch, first=True)
+    out += conv_specs("Conv 2", 5, 64, 192, 27, 27, batch, nzr_grad=nzr)
+    out += conv_specs("Conv 3", 3, 192, 384, 13, 13, batch, nzr_grad=nzr)
+    out += conv_specs("Conv 4", 3, 384, 256, 13, 13, batch, nzr_grad=nzr)
+    out += conv_specs("Conv 5", 3, 256, 256, 13, 13, batch, nzr_grad=nzr)
+    out += dense_specs("FC 1", 9216, 4096, batch, nzr_grad=nzr)
+    out += dense_specs("FC 2", 4096, 4096, batch, nzr_grad=nzr)
+    return out
+
+
+# --------------------------------------------------------------------------
+# Beyond-paper: transformer-family GEMM accumulation lengths.
+# --------------------------------------------------------------------------
+
+
+def transformer_specs(
+    *,
+    d_model: int,
+    d_ff: int,
+    n_heads: int,
+    n_kv_heads: int,
+    d_head: int,
+    seq_len: int,
+    global_batch: int,
+    vocab_size: int,
+    moe_experts: int = 0,
+    moe_top_k: int = 0,
+    nzr: float = 1.0,
+) -> list[AccumSpec]:
+    tokens = global_batch * seq_len
+    out: list[AccumSpec] = []
+    out += dense_specs("attn.qkv", d_model, (n_heads + 2 * n_kv_heads) * d_head, tokens, nzr_grad=nzr)
+    out += dense_specs("attn.out", n_heads * d_head, d_model, tokens, nzr_grad=nzr)
+    # in-attention GEMMs: scores = q k^T (n = d_head), out = probs @ v (n = T)
+    out.append(AccumSpec("attn.scores", "FWD", d_head))
+    out.append(AccumSpec("attn.av", "FWD", seq_len, nzr))
+    if moe_experts:
+        tok_per_expert = max(tokens * moe_top_k // moe_experts, 1)
+        out += dense_specs("moe.up", d_model, d_ff, tok_per_expert, nzr_grad=nzr)
+        out += dense_specs("moe.down", d_ff, d_model, tok_per_expert, nzr_grad=nzr)
+        out += dense_specs("moe.router", d_model, moe_experts, tokens, nzr_grad=nzr)
+    else:
+        out += dense_specs("mlp.up", d_model, d_ff, tokens, nzr_grad=nzr)
+        out += dense_specs("mlp.down", d_ff, d_model, tokens, nzr_grad=nzr)
+    out += dense_specs("lm_head", d_model, vocab_size, tokens, nzr_grad=nzr)
+    return out

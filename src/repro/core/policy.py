@@ -1,0 +1,122 @@
+"""AccumulationPolicy — the paper's analysis as a first-class framework feature.
+
+A policy maps every GEMM in the model (identified by a layer tag and a role,
+FWD / BWD / GRAD) to an accumulator format solved by the VRR analysis for
+that GEMM's accumulation length.  The training system consumes policies via
+``repro.kernels.ops.qdot``: the forward matmul, the input-gradient matmul and
+the weight-gradient matmul each get their own (m_acc, chunk) assignment —
+exactly the three GEMMs of paper Fig. 2.
+
+``mode``:
+  * "exact"    — full-precision accumulation everywhere (the paper's baseline)
+  * "predicted"— solver output (PP = 0)
+  * "perturbed"— solver output + ``perturbation`` bits (paper's PP sweep;
+                 negative = fewer bits, used to show divergence/tightness)
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+
+from repro.core.precision import min_m_acc
+from repro.quant.formats import FPFormat
+
+__all__ = ["GEMMPrecision", "AccumulationPolicy", "plan_for_model"]
+
+
+@dataclass(frozen=True)
+class GEMMPrecision:
+    """Accumulator assignment for one GEMM (one role of one layer)."""
+
+    m_acc: int
+    e_acc: int = 6  # paper §5: 6 exponent bits for accumulations
+    chunk: int = 64  # inter/intra chunk split (0 = sequential, oracle only)
+
+    @property
+    def fmt(self) -> FPFormat:
+        return FPFormat(e=self.e_acc, m=self.m_acc)
+
+
+@dataclass(frozen=True)
+class AccumulationPolicy:
+    """Per-(layer, role) accumulator formats for a whole model."""
+
+    mode: str = "exact"  # exact | predicted | perturbed
+    m_p: int = 5  # product mantissa width ((1,5,2) x (1,5,2) -> 5 bits)
+    chunk: int = 64
+    perturbation: int = 0
+    nzr: float = 1.0
+    e_acc: int = 6
+
+    def for_length(self, n: int) -> GEMMPrecision | None:
+        """Solve the accumulator format for accumulation length ``n``.
+
+        Returns None in "exact" mode (meaning: use the hardware's native
+        wide accumulation; nothing to emulate).
+        """
+        if self.mode == "exact":
+            return None
+        m = min_m_acc(n, self.m_p, chunked=self.chunk > 0, chunk=self.chunk or 64, nzr=self.nzr)
+        if self.mode == "perturbed":
+            m = max(m + self.perturbation, 1)
+        return GEMMPrecision(m_acc=m, e_acc=self.e_acc, chunk=self.chunk)
+
+    def perturbed(self, pp: int) -> "AccumulationPolicy":
+        return replace(self, mode="perturbed", perturbation=pp)
+
+
+def plan_for_model(cfg, *, seq_len: int, global_batch: int,
+                   policy: "AccumulationPolicy"):
+    """Build a ``ModelConfig`` whose QuantPlan carries solver-assigned
+    accumulator formats for every dense GEMM type (paper Fig. 2 roles).
+
+    Accumulation lengths:
+      FWD  = fan-in of the GEMM
+      BWD  = fan-out (dy @ W^T reduces over the output features)
+      GRAD = B * T tokens (the paper's critical long accumulation)
+
+    The final projection (lm_head) follows the paper's practice of keeping
+    the last layer at 16-bit: fixed (1, 6, 9) accumulation (Wang et al.
+    2018's 16-bit format), not solver-assigned.
+
+    MoE expert einsums and the SSD scan do not route through ``dense()``;
+    their (reported) assignments come from ``repro.core.acc_lengths`` — see
+    DESIGN.md §Arch-applicability.
+    """
+    from dataclasses import replace as _replace
+
+    from repro.kernels.ops import QDotConfig
+    from repro.quant.formats import FP8_152
+
+    if policy.mode == "exact":
+        from repro.models.config import QuantPlan
+
+        return _replace(cfg, quant=QuantPlan())
+
+    tokens = seq_len * global_batch
+    repr_fmt = FP8_152
+
+    def qcfg(fan_in: int, fan_out: int) -> QDotConfig:
+        return QDotConfig(
+            fwd=policy.for_length(fan_in),
+            bwd=policy.for_length(fan_out),
+            grad=policy.for_length(int(tokens * policy.nzr) or 1),
+            repr_fmt=repr_fmt,
+        )
+
+    d = cfg.d_model
+    dh = cfg.head_dim
+    qkv_out = (cfg.n_heads + 2 * cfg.n_kv_heads) * dh
+    d_ff = cfg.d_ff or d
+    head16 = GEMMPrecision(m_acc=9, e_acc=6, chunk=policy.chunk)
+
+    from repro.models.config import QuantPlan
+
+    plan = QuantPlan(
+        attn_qkv=qcfg(d, qkv_out),
+        attn_out=qcfg(cfg.n_heads * dh, d),
+        mlp_up=qcfg(d, d_ff),
+        mlp_down=qcfg(d_ff, d),
+        lm_head=QDotConfig(fwd=head16, bwd=head16, grad=head16, repr_fmt=None),
+    )
+    return _replace(cfg, quant=plan)

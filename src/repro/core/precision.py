@@ -1,0 +1,140 @@
+"""Minimal accumulation-precision solver (paper §4.4).
+
+Given an accumulation length ``n`` (optionally sparsity-corrected and/or
+chunked), find the smallest accumulator mantissa width ``m_acc`` such that
+the normalized exponential variance lost satisfies ``v(n) < 50``
+(evaluated in log domain).
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+
+from repro.core.vrr import (
+    CUTOFF_LOG_V,
+    log_variance_lost,
+    vrr as _vrr,
+)
+
+__all__ = [
+    "min_m_acc",
+    "suitable",
+    "AccumSpec",
+    "PrecisionAssignment",
+    "assign_network",
+]
+
+
+def suitable(
+    m_acc: int,
+    m_p: int,
+    n: int,
+    *,
+    chunked: bool = False,
+    chunk: int = 64,
+    nzr: float = 1.0,
+    cutoff: float = CUTOFF_LOG_V,
+) -> bool:
+    """True iff ``m_acc`` retains enough variance for a length-``n`` sum.
+
+    For chunked accumulation each of the two stages is itself an
+    accumulation, so the paper's v(n) < 50 knee test is applied *per stage*
+    (intra-chunk at length n1, inter-chunk at length n2 with the grown
+    inter-chunk operand mantissa of Corollary 1).  This reproduces the
+    paper's Table-1 chunked column within +-1 bit; testing the product VRR
+    against the total length instead is far too strict (total n multiplies
+    the tiny intra-chunk variance loss by ~10^6 at GRAD lengths).
+    """
+    n_eff = max(int(round(nzr * n)), 1)
+    if n_eff <= 1:
+        return True
+    if chunked:
+        n1 = min(chunk, n)
+        n2 = max(math.ceil(n / n1), 1)
+        n1_eff = max(int(round(nzr * n1)), 1)
+        m_inter = min(m_acc, m_p + int(round(math.log2(max(n1_eff, 1)))))
+        intra_ok = log_variance_lost(_vrr(m_acc, m_p, n1_eff), n1_eff) < cutoff
+        inter_ok = log_variance_lost(_vrr(m_acc, m_inter, n2), n2) < cutoff
+        return intra_ok and inter_ok
+    r = _vrr(m_acc, m_p, n_eff)
+    return log_variance_lost(r, n_eff) < cutoff
+
+
+def min_m_acc(
+    n: int,
+    m_p: int,
+    *,
+    chunked: bool = False,
+    chunk: int = 64,
+    nzr: float = 1.0,
+    m_acc_lo: int = 1,
+    m_acc_hi: int = 32,
+    cutoff: float = CUTOFF_LOG_V,
+    floor: bool = True,
+) -> int:
+    """Smallest m_acc in [m_acc_lo, m_acc_hi] passing the v(n) < 50 test.
+
+    VRR is monotone non-decreasing in m_acc (more accumulator bits never
+    lose more variance), so binary search is valid; we use it because the
+    Theorem-1 sum is O(n) per evaluation and GRAD lengths reach ~10^6.
+
+    ``floor``: enforce m_acc >= m_p + 1 (normal) / m_p (chunked).  An
+    accumulator narrower than the product mantissa truncates every addend
+    even at zero exponent difference — a regime outside Theorem 1's
+    partial-swamping stages (which model bit loss via exponent shift only).
+    The paper's Table 1 exhibits exactly these floors: no normal entry is
+    below m_p + 1 = 6 and no chunked entry below m_p = 5.
+    """
+    lo, hi = m_acc_lo, m_acc_hi
+    if floor:
+        lo = max(lo, m_p if chunked else m_p + 1)
+        hi = max(hi, lo)
+    if not suitable(hi, m_p, n, chunked=chunked, chunk=chunk, nzr=nzr, cutoff=cutoff):
+        raise ValueError(f"no m_acc <= {hi} suitable for n={n}, m_p={m_p}")
+    while lo < hi:
+        mid = (lo + hi) // 2
+        if suitable(mid, m_p, n, chunked=chunked, chunk=chunk, nzr=nzr, cutoff=cutoff):
+            hi = mid
+        else:
+            lo = mid + 1
+    return lo
+
+
+@dataclass(frozen=True)
+class AccumSpec:
+    """One GEMM accumulation in a network (per role: FWD / BWD / GRAD)."""
+
+    layer: str
+    role: str  # "FWD" | "BWD" | "GRAD"
+    n: int
+    nzr: float = 1.0
+
+
+@dataclass
+class PrecisionAssignment:
+    """Solved (normal, chunked) accumulator widths for every accumulation."""
+
+    network: str
+    m_p: int
+    chunk: int
+    entries: dict[tuple[str, str], tuple[int, int]] = field(default_factory=dict)
+
+    def get(self, layer: str, role: str) -> tuple[int, int]:
+        return self.entries[(layer, role)]
+
+
+def assign_network(
+    name: str,
+    specs: list[AccumSpec],
+    *,
+    m_p: int = 5,
+    chunk: int = 64,
+) -> PrecisionAssignment:
+    """Solve Table-1-style (normal, chunked) mantissa widths for a network."""
+    out = PrecisionAssignment(network=name, m_p=m_p, chunk=chunk)
+    for s in specs:
+        normal = min_m_acc(s.n, m_p, nzr=s.nzr)
+        chunked = min_m_acc(s.n, m_p, chunked=True, chunk=chunk, nzr=s.nzr)
+        out.entries[(s.layer, s.role)] = (normal, chunked)
+    return out

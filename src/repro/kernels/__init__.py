@@ -1,0 +1,5 @@
+# Pallas TPU kernels for the paper's compute hot-spot: reduced-precision
+# chunked-accumulation GEMM + the (1,e,m) quantizer feeding it.
+from repro.kernels.ops import QDotConfig, qdot, quantize_op  # noqa: F401
+from repro.kernels.qmatmul import qmatmul_pallas  # noqa: F401
+from repro.kernels.quantize import quantize_pallas  # noqa: F401

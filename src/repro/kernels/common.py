@@ -1,0 +1,42 @@
+"""Shared helpers for the Pallas kernels."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["quantize_block", "INTERPRET"]
+
+# Pallas kernels target TPU; on any other backend (this container is
+# CPU-only) they run in interpret mode, which executes the kernel body with
+# the same block decomposition.
+INTERPRET = jax.default_backend() != "tpu"
+
+
+def quantize_block(x: jnp.ndarray, e: int, m: int) -> jnp.ndarray:
+    """(1, e, m) round-to-nearest-even quantization of a float32 block.
+
+    Same semantics as repro.quant.qnum.quantize but written against
+    lax.bitcast_convert_type so it lowers inside a Pallas kernel body.
+    Saturating (no inf), flush-to-zero subnormals, NaN propagated.
+    """
+    if m >= 23 and e >= 8:
+        return x
+    max_value = jnp.float32(2.0 ** (2 ** (e - 1) - 1) * (2.0 - 2.0 ** (-m)))
+    min_normal = jnp.float32(2.0 ** -(2 ** (e - 1) - 1))
+
+    y = jnp.abs(x)
+    if m < 23:
+        xi = jax.lax.bitcast_convert_type(y, jnp.uint32)
+        shift = jnp.uint32(23 - m)
+        lsb = (xi >> shift) & jnp.uint32(1)
+        round_bias = (jnp.uint32(1) << (shift - jnp.uint32(1))) - jnp.uint32(1) + lsb
+        xi = xi + round_bias
+        xi = xi & ~((jnp.uint32(1) << shift) - jnp.uint32(1))
+        y = jax.lax.bitcast_convert_type(xi, jnp.float32)
+
+    y = jnp.where(jnp.isinf(x), max_value, y)
+    y = jnp.minimum(y, max_value)
+    y = jnp.where(y < min_normal, jnp.float32(0.0), y)
+    y = jnp.where(jnp.signbit(x), -y, y)
+    return jnp.where(jnp.isnan(x), x, y)

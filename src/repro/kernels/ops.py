@@ -1,0 +1,96 @@
+"""Jit'd public wrappers around the Pallas kernels + the ``qdot`` autodiff op.
+
+``qdot`` is how the paper's technique enters the training system: a dense
+GEMM whose three back-propagation GEMMs (paper Fig. 2 — FWD, BWD, GRAD)
+each run with their *own* solver-assigned accumulator format, with inputs
+quantized to the representation format ((1,5,2) by default).
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.policy import GEMMPrecision
+from repro.kernels.qmatmul import qmatmul_pallas
+from repro.kernels.quantize import quantize_pallas
+from repro.quant.formats import FPFormat
+
+__all__ = ["QDotConfig", "qdot", "quantize_op"]
+
+
+def quantize_op(x: jnp.ndarray, fmt: FPFormat) -> jnp.ndarray:
+    """Quantize to (1, e, m) via the Pallas kernel."""
+    return quantize_pallas(x, e=fmt.e, m=fmt.m)
+
+
+@dataclass(frozen=True)
+class QDotConfig:
+    """Precision configuration for one logical dense layer.
+
+    ``None`` for a role means ideal (wide) accumulation for that GEMM.
+    ``repr_fmt=None`` disables input quantization (accumulation-only study,
+    as in the paper's experiments the representations are always (1,5,2)).
+    """
+
+    fwd: GEMMPrecision | None = None
+    bwd: GEMMPrecision | None = None
+    grad: GEMMPrecision | None = None
+    repr_fmt: FPFormat | None = None
+
+    @property
+    def is_exact(self) -> bool:
+        return (
+            self.fwd is None
+            and self.bwd is None
+            and self.grad is None
+            and self.repr_fmt is None
+        )
+
+
+def _mm(a: jnp.ndarray, b: jnp.ndarray, p: GEMMPrecision | None) -> jnp.ndarray:
+    if p is None:
+        return qmatmul_pallas(a, b)  # degenerate: wide accumulation
+    block_k = p.chunk if p.chunk > 0 else 128
+    return qmatmul_pallas(a, b, e_acc=p.e_acc, m_acc=p.m_acc, block_k=block_k)
+
+
+def _maybe_q(x: jnp.ndarray, fmt: FPFormat | None) -> jnp.ndarray:
+    return x if fmt is None else quantize_op(x, fmt)
+
+
+def qdot(x: jnp.ndarray, w: jnp.ndarray, cfg: QDotConfig) -> jnp.ndarray:
+    """y[..., N] = x[..., K] @ w[K, N] with per-role reduced accumulation."""
+    lead = x.shape[:-1]
+    k = x.shape[-1]
+    x2 = x.reshape(-1, k)
+    y2 = _qdot2d(x2, w, cfg)
+    return y2.reshape(*lead, w.shape[1])
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def _qdot2d(x: jnp.ndarray, w: jnp.ndarray, cfg: QDotConfig) -> jnp.ndarray:
+    return _mm(_maybe_q(x, cfg.repr_fmt), _maybe_q(w, cfg.repr_fmt), cfg.fwd)
+
+
+def _qdot2d_fwd(x, w, cfg):
+    xq = _maybe_q(x, cfg.repr_fmt)
+    wq = _maybe_q(w, cfg.repr_fmt)
+    return _mm(xq, wq, cfg.fwd), (xq, wq)
+
+
+def _qdot2d_bwd(cfg, res, g):
+    xq, wq = res
+    gq = _maybe_q(g, cfg.repr_fmt)
+    # BWD GEMM: dx[T, K] = g[T, N] @ w^T[N, K]   (accumulation length N)
+    dx = _mm(gq, wq.T, cfg.bwd)
+    # GRAD GEMM: dw[K, N] = x^T[K, T] @ g[T, N]  (accumulation length T —
+    # the long one, B*T tokens; the paper's critical case)
+    dw = _mm(xq.T, gq, cfg.grad)
+    return dx.astype(xq.dtype), dw.astype(wq.dtype)
+
+
+_qdot2d.defvjp(_qdot2d_fwd, _qdot2d_bwd)

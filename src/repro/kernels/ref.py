@@ -1,0 +1,52 @@
+"""Pure-jnp oracles for the Pallas kernels (kernel-vs-ref allclose tests)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.quant.formats import FPFormat
+from repro.quant.qnum import quantize
+
+__all__ = ["ref_quantize", "ref_qmatmul"]
+
+
+def ref_quantize(x: jnp.ndarray, *, e: int, m: int) -> jnp.ndarray:
+    """Oracle for kernels/quantize.py."""
+    return quantize(x, FPFormat(e=e, m=m))
+
+
+def ref_qmatmul(
+    a: jnp.ndarray,
+    b: jnp.ndarray,
+    *,
+    e_acc: int = 8,
+    m_acc: int = 23,
+    block_k: int = 128,
+) -> jnp.ndarray:
+    """Oracle for kernels/qmatmul.py: chunked accumulation over K.
+
+    Mirrors the kernel semantics exactly: each block_k-chunk is contracted
+    in f32 (ideal intra-chunk), the running carry is quantized to
+    (1, e_acc, m_acc) after every chunk add.  Tiling over M/N does not
+    change the result (each output element's accumulation order over K is
+    identical), so the oracle needs no M/N blocking.
+    """
+    m, k = a.shape
+    _, n = b.shape
+    fmt = FPFormat(e=e_acc, m=m_acc)
+    kp = -(-k // block_k) * block_k
+    a32 = jnp.pad(a.astype(jnp.float32), ((0, 0), (0, kp - k)))
+    b32 = jnp.pad(b.astype(jnp.float32), ((0, kp - k), (0, 0)))
+    n2 = kp // block_k
+    a_chunks = jnp.moveaxis(a32.reshape(m, n2, block_k), 1, 0)  # (n2, m, bk)
+    b_chunks = b32.reshape(n2, block_k, n)
+
+    def step(acc, ab):
+        ac, bc = ab
+        acc = quantize(acc + ac @ bc, fmt)
+        return acc, None
+
+    init = jnp.zeros((m, n), jnp.float32)
+    out, _ = jax.lax.scan(step, init, (a_chunks, b_chunks))
+    return out

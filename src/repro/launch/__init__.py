@@ -1,0 +1,5 @@
+"""Launchers: mesh builders, dry-run, trainer, server, supervisor.
+
+NOTE: ``repro.launch.dryrun`` sets the fake-device XLA flag at import —
+never import it from library code; it is an entry point only.
+"""

@@ -1,0 +1,175 @@
+"""Exact per-step cost extraction via per-layer composition.
+
+XLA's cost_analysis() counts a while-loop body ONCE, so the production
+(rolled, microbatched) dry-run under-reports FLOPs/bytes/collectives by
+~n_layers x microbatches.  Fully unrolling the real configs compiles for
+minutes per cell on this host, so instead we exploit layer additivity:
+
+    f(L) = outer + L * body        (homogeneous stacks)
+
+FLOPs, HBM bytes and collective wire bytes are all additive in the layer
+count (each layer performs its own gathers/reduces), so lowering two small
+UNROLLED variants (L=1, L=2) identifies `body` and `outer` exactly, and the
+full-depth cost is composed analytically.  Hybrid (grouped) and enc-dec
+(two stacks) use 3-point variants.  Microbatching is set to 1 for the cost
+pass (the per-step totals are the mb=1 convention; production mb>1 re-reads
+weights per microbatch — noted in EXPERIMENTS.md).  Memory *fit* numbers
+come from the production rolled pass, not from here.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.costrun --all [--multi-pod]
+  PYTHONPATH=src python -m repro.launch.costrun --arch qwen3-8b --shape train_4k
+"""
+
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("REPRO_EXTRA_XLA_FLAGS", "")
+)
+os.environ["REPRO_UNROLL_SCANS"] = "1"
+
+import argparse  # noqa: E402
+import dataclasses  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+
+from repro.configs import ALIASES, get_config, shape_cells  # noqa: E402
+from repro.launch import dryrun as DR  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+
+COLL_KEYS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+             "collective-permute", "total")
+
+
+def _measure_variant(arch_cfg, shape_name: str, mesh) -> dict:
+    """Lower+compile one reduced-depth variant; return additive costs."""
+    from repro.launch.specs import input_specs  # noqa: F401  (via build)
+
+    fn, args = DR.build_cell_cfg(arch_cfg, shape_name, mesh, microbatches=1)
+    with mesh:
+        compiled = fn.lower(*args).compile()
+    cost = DR._cost(compiled)
+    coll = DR.collective_bytes(compiled.as_text())
+    return {
+        "flops": cost.get("flops", 0.0),
+        "bytes": cost.get("bytes accessed", 0.0),
+        **{f"coll_{k}": float(coll.get(k, 0.0)) for k in COLL_KEYS},
+    }
+
+
+def _lin(f1: dict, f2: dict, L: int) -> dict:
+    """outer + L*body from measurements at depth 1 and 2.
+
+    GSPMD occasionally picks different layouts for the L=1 and L=2 variants
+    making a metric non-additive (body < 0); fall back to the per-layer
+    mean of the 2-layer module for that metric."""
+    out = {}
+    for k in f1:
+        body = f2[k] - f1[k]
+        if body < 0:
+            out[k] = (f2[k] / 2.0) * L
+            continue
+        outer = max(f1[k] - body, 0.0)
+        out[k] = outer + L * body
+    return out
+
+
+def compose_cell(arch: str, shape_name: str, mesh) -> dict:
+    cfg = get_config(arch)
+    t0 = time.time()
+    if cfg.family == "encdec":
+        f11 = _measure_variant(dataclasses.replace(cfg, encoder_layers=1, n_layers=1),
+                               shape_name, mesh)
+        f21 = _measure_variant(dataclasses.replace(cfg, encoder_layers=2, n_layers=1),
+                               shape_name, mesh)
+        f12 = _measure_variant(dataclasses.replace(cfg, encoder_layers=1, n_layers=2),
+                               shape_name, mesh)
+        est = {}
+        for k in f11:
+            enc = f21[k] - f11[k]
+            dec = f12[k] - f11[k]
+            outer = f11[k] - enc - dec
+            est[k] = max(outer + cfg.encoder_layers * enc + cfg.n_layers * dec, 0.0)
+        n_lowers = 3
+    elif cfg.family == "hybrid":
+        k = cfg.hybrid_attn_every
+        r = cfg.n_layers % k
+        fk = _measure_variant(dataclasses.replace(cfg, n_layers=k), shape_name, mesh)
+        f2k = _measure_variant(dataclasses.replace(cfg, n_layers=2 * k), shape_name, mesh)
+        est = {}
+        group = {kk: f2k[kk] - fk[kk] for kk in fk}
+        outer = {kk: fk[kk] - group[kk] for kk in fk}
+        if r:
+            fr = _measure_variant(dataclasses.replace(cfg, n_layers=r), shape_name, mesh)
+            rem = {kk: fr[kk] - outer[kk] for kk in fk}
+        else:
+            rem = {kk: 0.0 for kk in fk}
+        n_groups = cfg.n_layers // k
+        est = {kk: max(outer[kk] + n_groups * group[kk] + rem[kk], 0.0)
+               for kk in fk}
+        n_lowers = 3 if r else 2
+    else:
+        f1 = _measure_variant(dataclasses.replace(cfg, n_layers=1), shape_name, mesh)
+        f2 = _measure_variant(dataclasses.replace(cfg, n_layers=2), shape_name, mesh)
+        est = _lin(f1, f2, cfg.n_layers)
+        n_lowers = 2
+
+    n_chips = 1
+    for v in mesh.shape.values():
+        n_chips *= v
+    rec = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if "pod" in mesh.shape else "16x16",
+        "n_chips": n_chips,
+        "mode": "cost_composed",
+        "n_lowers": n_lowers,
+        "wall_s": round(time.time() - t0, 1),
+        "cost": {"flops": est["flops"], "bytes accessed": est["bytes"]},
+        "collectives": {k: est[f"coll_{k}"] for k in COLL_KEYS},
+    }
+    return rec
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
+             out_dir: str | None) -> dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rec = compose_cell(arch, shape_name, mesh)
+    print(f"== COST {arch} x {shape_name} [{rec['mesh']}] "
+          f"flops/dev={rec['cost']['flops']:.3e} "
+          f"bytes/dev={rec['cost']['bytes accessed']:.3e} "
+          f"coll/dev={rec['collectives']['total']:.3e} "
+          f"({rec['wall_s']}s, {rec['n_lowers']} lowers)", flush=True)
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        tag = (f"{arch.replace('/', '_')}__{shape_name}__"
+               f"{rec['mesh'].replace('x', '_')}__cost")
+        with open(os.path.join(out_dir, tag + ".json"), "w") as f:
+            json.dump(rec, f, indent=1)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    args = ap.parse_args()
+    if args.all:
+        for arch in ALIASES:
+            for shape in shape_cells(arch):
+                try:
+                    run_cell(arch, shape, multi_pod=args.multi_pod,
+                             out_dir=args.out)
+                except Exception as e:
+                    print(f"!! COST {arch} x {shape} FAILED: {e!r}", flush=True)
+        return
+    assert args.arch and args.shape
+    run_cell(args.arch, args.shape, multi_pod=args.multi_pod, out_dir=args.out)
+
+
+if __name__ == "__main__":
+    main()

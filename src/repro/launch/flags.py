@@ -1,0 +1,44 @@
+"""Production XLA flag sets (TPU target).
+
+The dry-run container cannot execute these, but the launcher applies them so
+a real deployment gets the intended compiler behaviour.  The two that matter
+for the roofline are the latency-hiding scheduler (overlaps the FSDP
+all-gathers / grad reduce-scatters with compute) and async collectives.
+"""
+
+from __future__ import annotations
+
+import os
+
+__all__ = ["tpu_flags", "apply_tpu_flags"]
+
+
+def tpu_flags(*, async_collectives: bool = True,
+              latency_hiding: bool = True,
+              collective_matmul: bool = True) -> list[str]:
+    f: list[str] = []
+    if latency_hiding:
+        f += [
+            "--xla_tpu_enable_latency_hiding_scheduler=true",
+            "--xla_tpu_scheduler_percent_shared_memory_limit=100",
+        ]
+    if async_collectives:
+        f += [
+            "--xla_tpu_enable_async_all_gather=true",
+            "--xla_tpu_enable_async_collective_permute=true",
+        ]
+    if collective_matmul:
+        # decompose TP all-gathers into collective-permute chains fused with
+        # the consuming matmul (hides ICI latency behind MXU work)
+        f += ["--xla_tpu_decompose_all_gather_einsum=true",
+              "--xla_tpu_decompose_einsum_reduce_scatter=true"]
+    return f
+
+
+def apply_tpu_flags(extra: list[str] | None = None) -> None:
+    """Prepend the production flag set to XLA_FLAGS (idempotent)."""
+    want = tpu_flags() + (extra or [])
+    cur = os.environ.get("XLA_FLAGS", "")
+    missing = [w for w in want if w not in cur]
+    if missing:
+        os.environ["XLA_FLAGS"] = (cur + " " + " ".join(missing)).strip()

@@ -1,0 +1,28 @@
+"""Production mesh builders.
+
+Defined as functions (module import never touches jax device state).
+The production topology is a TPU v5e pod of 16 x 16 = 256 chips
+(axes: data, model) and the multi-pod variant stacks 2 pods on a 'pod'
+axis connected by DCN (512 chips).  Axes are logical: ``pods`` scales to
+any count for 1000+-node deployments; elastic resume re-shards onto
+whatever mesh the restarted job builds.
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_smoke_mesh", "AXES"]
+
+AXES = ("pod", "data", "model")
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_smoke_mesh(n_data: int = 2, n_model: int = 2):
+    """Small mesh over however many (fake) devices a test process has."""
+    return jax.make_mesh((n_data, n_model), ("data", "model"))

@@ -1,0 +1,100 @@
+"""Batched serving driver: prefill a batch of prompts, then greedy-decode.
+
+The production shapes (decode_32k / long_500k) are exercised via the
+dry-run; this driver runs the same code paths end-to-end at any scale the
+host can execute (smoke configs on CPU, full configs on a pod).
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --smoke \
+      --batch 4 --prompt-len 32 --gen 16
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, get_smoke_config
+from repro.data.pipeline import DataConfig, SyntheticLM, with_extras
+from repro.models import encdec
+from repro.models.api import get_model
+from repro.models.layers import Dist
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="qwen2-1.5b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    model = get_model(cfg)
+    dist = Dist()
+    params = model.init_params(jax.random.PRNGKey(args.seed))
+    params = jax.tree.map(
+        lambda x: x.astype(jnp.bfloat16) if x.dtype == jnp.float32 else x, params)
+
+    data = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size,
+                                  seq_len=args.prompt_len,
+                                  global_batch=args.batch, seed=args.seed))
+    batch = with_extras(next(data), cfg, key=jax.random.PRNGKey(1))
+    max_t = args.prompt_len + args.gen
+
+    t0 = time.time()
+    if cfg.family == "encdec":
+        enc_out = encdec.encode(params, batch["frames"], cfg, dist, remat=False)
+        state = encdec.init_decode_state(cfg, args.batch, max_t,
+                                         enc_out.shape[1])
+        state = encdec.prime_cross_attention(params, enc_out, cfg, state)
+        prompt = batch["tokens"]
+        step = jax.jit(lambda p, t, s, pos: encdec.decode_step(
+            p, t, s, pos, cfg, dist))
+        # teacher-force the prompt through the decode path, then free-run
+        tok = prompt[:, :1]
+        pos = 0
+        for pos in range(prompt.shape[1]):
+            logits, state = step(params, prompt[:, pos:pos + 1], state,
+                                 jnp.int32(pos))
+        tok = jnp.argmax(logits[:, 0], axis=-1)[:, None]
+    else:
+        last_logits = model.prefill(params, batch, cfg, dist)
+        state = model.init_decode_state(cfg, args.batch, max_t)
+        # replay the prompt through decode to warm the caches
+        step = jax.jit(lambda p, t, s, pos: model.decode_step(
+            p, t, s, pos, cfg, dist))
+        prompt = batch["tokens"]
+        for pos in range(prompt.shape[1]):
+            logits, state = step(params, prompt[:, pos:pos + 1], state,
+                                 jnp.int32(pos))
+        tok = jnp.argmax(logits[:, 0], axis=-1)[:, None]
+        del last_logits
+    t_prefill = time.time() - t0
+
+    out_tokens = [tok]
+    t0 = time.time()
+    base = prompt.shape[1]
+    for i in range(args.gen - 1):
+        logits, state = step(params, tok, state, jnp.int32(base + i))
+        tok = jnp.argmax(logits[:, 0], axis=-1)[:, None]
+        out_tokens.append(tok)
+    jax.block_until_ready(tok)
+    t_decode = time.time() - t0
+
+    gen = jnp.concatenate(out_tokens, axis=1)
+    toks_per_s = args.batch * (args.gen - 1) / max(t_decode, 1e-9)
+    print(f"arch={cfg.name} batch={args.batch} prompt={args.prompt_len} "
+          f"gen={args.gen}")
+    print(f"prefill: {t_prefill:.2f}s   decode: {t_decode:.2f}s "
+          f"({toks_per_s:.1f} tok/s)")
+    print("sample generation (seq 0):", gen[0].tolist())
+    return {"tok_per_s": float(toks_per_s), "gen": gen}
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,115 @@
+"""ShapeDtypeStruct input stand-ins + shardings for every (arch x shape) cell.
+
+``input_specs`` builds weak-type-correct, shardable abstract inputs (no
+device allocation) for the function the dry-run lowers:
+  * train / prefill -> token batches (+ modality-stub inputs)
+  * decode          -> one-token batch + full decode-state (KV caches / SSM
+                       states) with cache-friendly shardings
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig, SHAPES, ShapeConfig
+from repro.sharding.specs import batch_spec
+
+__all__ = ["input_specs", "cache_specs", "train_batch_struct"]
+
+
+def _sds(shape, dtype, mesh: Mesh | None = None, spec: P | None = None):
+    if mesh is None:
+        return jax.ShapeDtypeStruct(shape, dtype)
+    return jax.ShapeDtypeStruct(shape, dtype,
+                                sharding=NamedSharding(mesh, spec or P()))
+
+
+def train_batch_struct(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh | None):
+    b, s = shape.global_batch, shape.seq_len
+    baxes = batch_spec(b, mesh) if mesh is not None else ()
+    bspec = P(baxes) if baxes else P()
+    batch = {"tokens": _sds((b, s), jnp.int32, mesh, P(*bspec, None))}
+    if cfg.vision_tokens:
+        batch["patch_embeds"] = _sds((b, cfg.vision_tokens, cfg.d_model),
+                                     jnp.float32, mesh, P(*bspec, None, None))
+    if cfg.family == "encdec":
+        s_enc = max(s // 2, 2)
+        batch["tokens"] = _sds((b, max(s // 2, 2)), jnp.int32, mesh, P(*bspec, None))
+        batch["frames"] = _sds((b, s_enc, cfg.frontend_dim), jnp.float32,
+                               mesh, P(*bspec, None, None))
+    return batch
+
+
+def _axis_fits(mesh, axis, dim):
+    return mesh is not None and axis in mesh.shape and dim % mesh.shape[axis] == 0
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh | None):
+    """Abstract decode state + shardings.
+
+    KV caches (L, B, T, kv, dh): batch over data axes when divisible; the
+    long T axis over 'model' (decode attention reduces over T, which GSPMD
+    partitions with a masked partial-softmax + cross-shard combine — the
+    flash-decoding split-KV pattern).  SSM states shard heads over 'model'.
+    """
+    b = shape.global_batch
+    t = shape.seq_len
+    baxes = batch_spec(b, mesh) if mesh is not None else ()
+    bs = baxes if baxes else None
+
+    def attn_cache(n: int):
+        kv, dh = cfg.n_kv_heads, cfg.head_dim
+        tspec = "model" if _axis_fits(mesh, "model", t) else None
+        spec = P(None, bs, tspec, None, None)
+        z = _sds((n, b, t, kv, dh), jnp.bfloat16, mesh, spec)
+        return {"k": z, "v": z}
+
+    def mamba_cache(n: int):
+        sc = cfg.ssm
+        d_inner = sc.expand * cfg.d_model
+        nh = d_inner // sc.head_dim
+        conv_ch = d_inner + 2 * sc.n_groups * sc.state_dim
+        hspec = "model" if _axis_fits(mesh, "model", nh) else None
+        cspec = "model" if _axis_fits(mesh, "model", conv_ch) else None
+        return {
+            "conv": _sds((n, b, sc.conv_kernel - 1, conv_ch), jnp.bfloat16,
+                         mesh, P(None, bs, None, cspec)),
+            "ssm": _sds((n, b, nh, sc.state_dim, sc.head_dim), jnp.float32,
+                        mesh, P(None, bs, hspec, None, None)),
+        }
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        return {"layers": attn_cache(cfg.n_layers)}
+    if cfg.family == "ssm":
+        return {"layers": mamba_cache(cfg.n_layers)}
+    if cfg.family == "hybrid":
+        n_units = cfg.n_layers // cfg.hybrid_attn_every
+        return {"layers": mamba_cache(cfg.n_layers), "shared": attn_cache(n_units)}
+    if cfg.family == "encdec":
+        kv, dh = cfg.n_kv_heads, cfg.head_dim
+        enc_len = 4096  # fixed encoder memory during decode (DESIGN.md)
+        tspec = "model" if _axis_fits(mesh, "model", t) else None
+        z = _sds((cfg.n_layers, b, t, kv, dh), jnp.bfloat16, mesh,
+                 P(None, bs, tspec, None, None))
+        x = _sds((cfg.n_layers, b, enc_len, kv, dh), jnp.bfloat16, mesh,
+                 P(None, bs, None, None, None))
+        return {"layers": {"k": z, "v": z}, "xk": x, "xv": x}
+    raise ValueError(cfg.family)
+
+
+def input_specs(cfg: ModelConfig, shape_name: str, mesh: Mesh | None):
+    """Returns (kind, abstract-args dict) for the function the cell lowers."""
+    shape = SHAPES[shape_name]
+    if shape.kind in ("train", "prefill"):
+        return shape.kind, {"batch": train_batch_struct(cfg, shape, mesh)}
+    # decode: one new token against a seq_len-deep cache
+    b = shape.global_batch
+    baxes = batch_spec(b, mesh) if mesh is not None else ()
+    bs = baxes if baxes else None
+    return "decode", {
+        "tokens": _sds((b, 1), jnp.int32, mesh, P(bs, None)),
+        "state": cache_specs(cfg, shape, mesh),
+        "pos": _sds((), jnp.int32, mesh, P()),
+    }

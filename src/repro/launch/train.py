@@ -1,0 +1,197 @@
+"""End-to-end training driver.
+
+Production posture on any device count: builds a mesh over the available
+devices, shards params/optimizer with the framework rules (FSDP + TP),
+streams the synthetic LM pipeline, applies the paper's accumulation policy
+when requested, checkpoints atomically (with data cursor + scaler state) and
+auto-resumes — including elastically onto a different device count.
+
+Examples:
+  PYTHONPATH=src python -m repro.launch.train --arch qwen2-1.5b --smoke \
+      --steps 200 --global-batch 8 --seq-len 64 --policy predicted
+  PYTHONPATH=src python -m repro.launch.train --arch qwen3-8b \
+      --steps 100 --mesh 16x16       # on a real pod
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import get_config, get_smoke_config
+from repro.core.policy import AccumulationPolicy, plan_for_model
+from repro.data.pipeline import DataConfig, SyntheticLM, with_extras
+from repro.launch.flags import apply_tpu_flags
+from repro.models.api import get_model, param_count
+from repro.models.layers import Dist
+from repro.sharding.specs import (
+    ShardingRules,
+    batch_spec,
+    build_param_specs,
+    named_shardings,
+)
+from repro.train import optimizer as O
+from repro.train.checkpoint import latest_step, restore_checkpoint, save_checkpoint
+from repro.train.loop import TrainConfig, init_train_state, make_train_step
+
+
+def parse_args(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="qwen2-1.5b")
+    ap.add_argument("--smoke", action="store_true", help="reduced config (CPU)")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=64)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--warmup", type=int, default=20)
+    ap.add_argument("--policy", choices=["exact", "predicted", "perturbed"],
+                    default="exact")
+    ap.add_argument("--pp", type=int, default=0,
+                    help="precision perturbation (bits) for --policy perturbed")
+    ap.add_argument("--chunk", type=int, default=64)
+    ap.add_argument("--loss-scaling", action="store_true")
+    ap.add_argument("--mesh", default="auto",
+                    help="'auto' (all devices as data), 'DxM', or 'PxDxM'")
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--metrics-out", default="")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--crash-at-step", type=int, default=-1,
+                    help="fault injection: hard-exit at this step (supervisor test)")
+    return ap.parse_args(argv)
+
+
+def build_mesh(spec: str):
+    n = len(jax.devices())
+    if spec == "auto":
+        if n == 1:
+            return None
+        return jax.make_mesh((n, 1), ("data", "model"))
+    dims = tuple(int(x) for x in spec.split("x"))
+    axes = ("data", "model") if len(dims) == 2 else ("pod", "data", "model")
+    return jax.make_mesh(dims, axes)
+
+
+def main(argv=None) -> dict:
+    args = parse_args(argv)
+    apply_tpu_flags() if jax.default_backend() == "tpu" else None
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    policy = AccumulationPolicy(
+        mode=args.policy, chunk=args.chunk,
+        perturbation=args.pp if args.policy == "perturbed" else 0)
+    cfg = plan_for_model(cfg, seq_len=args.seq_len,
+                         global_batch=args.global_batch, policy=policy)
+    model = get_model(cfg)
+
+    mesh = build_mesh(args.mesh)
+    dist = Dist(mesh=mesh, data_axes=("data",)) if mesh is not None else Dist()
+
+    tc = TrainConfig(
+        opt=O.OptConfig(lr=args.lr, warmup_steps=args.warmup,
+                        total_steps=args.steps),
+        microbatches=args.microbatches,
+        use_loss_scaling=args.loss_scaling,
+        scaler=O.LossScaleConfig(init_scale=1000.0, dynamic=True),
+    )
+
+    state = init_train_state(model, jax.random.PRNGKey(args.seed), tc)
+    print(f"arch={cfg.name} params={param_count(state['params'])/1e6:.1f}M "
+          f"policy={args.policy} pp={args.pp} devices={len(jax.devices())}")
+
+    data = SyntheticLM(DataConfig(
+        vocab_size=cfg.vocab_size, seq_len=args.seq_len,
+        global_batch=args.global_batch, seed=args.seed))
+
+    # ---- shardings -------------------------------------------------------
+    if mesh is not None:
+        rules = ShardingRules(mesh)
+        pspecs = build_param_specs(state["params"], rules)
+        psh = named_shardings(pspecs, mesh)
+        rep = NamedSharding(mesh, P())
+        state_sh = {
+            "params": psh,
+            "opt": {"m": psh, "v": psh, "step": rep},
+            "scaler": {"scale": rep, "good_steps": rep},
+        }
+        state = jax.device_put(state, state_sh)
+        baxes = batch_spec(args.global_batch, mesh)
+        tok_sh = NamedSharding(mesh, P(baxes if baxes else None, None))
+        step_fn = jax.jit(make_train_step(model, tc, dist),
+                          in_shardings=(state_sh, None),
+                          out_shardings=(state_sh, None),
+                          donate_argnums=(0,))
+    else:
+        state_sh = None
+        step_fn = jax.jit(make_train_step(model, tc, dist), donate_argnums=(0,))
+
+    # ---- resume ----------------------------------------------------------
+    start = 0
+    if args.ckpt_dir:
+        last = latest_step(args.ckpt_dir)
+        if last is not None:
+            like = jax.tree.map(
+                lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), state)
+            state, meta = restore_checkpoint(args.ckpt_dir, last, like,
+                                             shardings=state_sh)
+            data.load_state_dict(meta["data"])
+            start = int(meta["step"])
+            print(f"resumed from step {start} "
+                  f"(elastic onto {len(jax.devices())} devices)")
+
+    # ---- loop ------------------------------------------------------------
+    metrics_f = open(args.metrics_out, "a") if args.metrics_out else None
+    t0 = time.time()
+    last_loss = float("nan")
+    for step in range(start, args.steps):
+        if step == args.crash_at_step and start == 0:
+            # one-shot transient-fault injection: only a FRESH incarnation
+            # dies here; the supervisor's restart resumes from the latest
+            # checkpoint and must run through
+            print(f"FAULT INJECTION: dying at step {step}", flush=True)
+            os._exit(42)
+        batch = with_extras(next(data), cfg)
+        with mesh or _null():
+            state, m = step_fn(state, batch)
+        if (step + 1) % args.log_every == 0 or step + 1 == args.steps:
+            last_loss = float(m["loss"])
+            rec = {"step": step + 1, "loss": last_loss,
+                   "grad_norm": float(m["grad_norm"]),
+                   "lr": float(m["lr"]),
+                   "skipped": float(m["skipped"]),
+                   "loss_scale": float(m["loss_scale"]),
+                   "elapsed_s": round(time.time() - t0, 1)}
+            print(json.dumps(rec), flush=True)
+            if metrics_f:
+                metrics_f.write(json.dumps(rec) + "\n")
+                metrics_f.flush()
+        if args.ckpt_dir and (step + 1) % args.ckpt_every == 0:
+            save_checkpoint(args.ckpt_dir, step + 1, state,
+                            meta={"data": data.state_dict()})
+    if args.ckpt_dir:
+        save_checkpoint(args.ckpt_dir, args.steps, state,
+                        meta={"data": data.state_dict()})
+    if metrics_f:
+        metrics_f.close()
+    return {"final_loss": last_loss, "steps": args.steps}
+
+
+class _null:
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *a):
+        return False
+
+
+if __name__ == "__main__":
+    main()

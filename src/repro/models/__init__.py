@@ -1,0 +1,11 @@
+# Architecture zoo: config-driven dense / MoE / SSM / hybrid / enc-dec / VLM
+# model definitions with train, prefill and decode paths.
+from repro.models.api import Model, get_model, param_count  # noqa: F401
+from repro.models.config import (  # noqa: F401
+    SHAPES,
+    ModelConfig,
+    MoEConfig,
+    QuantPlan,
+    ShapeConfig,
+    SSMConfig,
+)

@@ -1,0 +1,48 @@
+"""Unified model API: family dispatch for the launcher / trainer / tests."""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+from repro.models import encdec, lm
+from repro.models.config import ModelConfig
+
+
+@dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    init_params: Callable
+    loss_fn: Callable
+    forward: Callable
+    prefill: Callable | None
+    decode_step: Callable | None
+    init_decode_state: Callable | None
+
+
+def get_model(cfg: ModelConfig) -> Model:
+    if cfg.family == "encdec":
+        return Model(
+            cfg=cfg,
+            init_params=lambda key: encdec.init_params(key, cfg),
+            loss_fn=encdec.loss_fn,
+            forward=encdec.forward,
+            prefill=None,  # enc-dec prefill == encode + prime_cross_attention
+            decode_step=encdec.decode_step,
+            init_decode_state=encdec.init_decode_state,
+        )
+    return Model(
+        cfg=cfg,
+        init_params=lambda key: lm.init_params(key, cfg),
+        loss_fn=lm.loss_fn,
+        forward=lm.forward,
+        prefill=lm.prefill,
+        decode_step=lm.decode_step,
+        init_decode_state=lm.init_decode_state,
+    )
+
+
+def param_count(params: Any) -> int:
+    import jax
+
+    return sum(p.size for p in jax.tree.leaves(params))

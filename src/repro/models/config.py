@@ -1,0 +1,125 @@
+"""Model/shape configuration for the assigned architecture pool.
+
+Everything is a frozen dataclass (hashable -> usable as a static jit arg).
+A ``ModelConfig`` fully determines parameter shapes; a ``ShapeConfig`` fully
+determines input shapes; the (arch x shape) grid of the brief is the cross
+product, built in ``repro.configs``.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+
+__all__ = ["MoEConfig", "SSMConfig", "QuantPlan", "ModelConfig", "ShapeConfig", "SHAPES"]
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_ff_expert: int
+    n_shared: int = 0          # shared (always-on) experts, DeepSeek style
+    capacity_factor: float = 1.25
+    aux_loss_weight: float = 0.01
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    state_dim: int = 128
+    head_dim: int = 64
+    expand: int = 2
+    n_groups: int = 1
+    conv_kernel: int = 4
+    chunk: int = 256           # SSD chunk length
+
+
+@dataclass(frozen=True)
+class QuantPlan:
+    """Per-GEMM-type reduced-accumulation configs (repro.kernels.QDotConfig).
+
+    ``None`` everywhere = exact mode (hardware-native wide accumulation) —
+    the default for dry-runs and the paper's full-precision baseline.
+    Populated by ``repro.core.policy.plan_for_model`` when running the
+    paper's emulation experiments.
+    """
+
+    attn_qkv: object = None
+    attn_out: object = None
+    mlp_up: object = None
+    mlp_down: object = None
+    lm_head: object = None
+
+    @property
+    def is_exact(self) -> bool:
+        return all(
+            getattr(self, f) is None
+            for f in ("attn_qkv", "attn_out", "mlp_up", "mlp_down", "lm_head")
+        )
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                 # dense | moe | ssm | hybrid | encdec | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    d_head: int = 0             # 0 -> d_model // n_heads
+    qk_norm: bool = False
+    attn_bias: bool = False     # qwen2-style QKV bias
+    rope_theta: float = 10_000.0
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    moe: MoEConfig | None = None
+    ssm: SSMConfig | None = None
+    # hybrid (zamba2): one shared attention+MLP block applied after every
+    # ``hybrid_attn_every`` SSM layers (params shared across applications)
+    hybrid_attn_every: int = 0
+    # encoder-decoder (seamless): number of encoder layers (decoder gets
+    # n_layers); encoder input is a precomputed-frame stub
+    encoder_layers: int = 0
+    # vlm (internvl2): number of prefix positions fed by the vision stub
+    vision_tokens: int = 0
+    # audio stub: encoder input feature dim (frames are pre-embedded)
+    frontend_dim: int = 0
+    quant: QuantPlan = field(default_factory=QuantPlan)
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_head or self.d_model // self.n_heads
+
+    @property
+    def attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    @property
+    def sub_quadratic(self) -> bool:
+        # eligible for long_500k: SSM and hybrid (decode-time attention is
+        # linear in cache length)
+        return self.family in ("ssm", "hybrid")
+
+    def with_quant(self, quant: QuantPlan) -> "ModelConfig":
+        return replace(self, quant=quant)
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                   # train | prefill | decode
+
+    @property
+    def tokens(self) -> int:
+        return self.seq_len * self.global_batch
+
+
+SHAPES: dict[str, ShapeConfig] = {
+    "train_4k": ShapeConfig("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524_288, 1, "decode"),
+}

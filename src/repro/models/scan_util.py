@@ -1,0 +1,46 @@
+"""Env-controlled scan: rolled (compact HLO) for production, fully unrolled
+for the dry-run roofline.
+
+XLA's ``cost_analysis()`` counts a while-loop body ONCE, not times its trip
+count, so a rolled layer stack under-reports FLOPs/bytes by ~n_layers x
+microbatches.  The dry-run sets REPRO_UNROLL_SCANS=1 so the lowered module
+contains every layer body and the cost analysis is exact.  (The SSD
+intra-sequence chunk scan stays rolled — its body is ~7% of an SSM cell's
+FLOPs; documented in EXPERIMENTS.md §Dry-run.)
+
+Production keeps scans rolled: compact HLO, faster compiles, identical
+runtime semantics.
+"""
+
+from __future__ import annotations
+
+import os
+
+import jax
+
+__all__ = ["scan", "unrolling_scans"]
+
+
+def scan(body, init, xs, length=None):
+    unroll = os.environ.get("REPRO_UNROLL_SCANS", "0") == "1"
+    return jax.lax.scan(body, init, xs, length=length,
+                        unroll=True if unroll else 1)
+
+
+class unrolling_scans:
+    """Context manager for tests/benchmarks."""
+
+    def __init__(self, on: bool = True):
+        self.on = on
+
+    def __enter__(self):
+        self.prev = os.environ.get("REPRO_UNROLL_SCANS")
+        os.environ["REPRO_UNROLL_SCANS"] = "1" if self.on else "0"
+        return self
+
+    def __exit__(self, *a):
+        if self.prev is None:
+            os.environ.pop("REPRO_UNROLL_SCANS", None)
+        else:
+            os.environ["REPRO_UNROLL_SCANS"] = self.prev
+        return False

@@ -1,0 +1,8 @@
+# Reduced-precision floating-point emulation substrate.
+from repro.quant.formats import BF16_LIKE, FP8_152, FP16_161, FP32_LIKE, FPFormat  # noqa: F401
+from repro.quant.qnum import quantize  # noqa: F401
+from repro.quant.accumulate import (  # noqa: F401
+    chunked_accumulate,
+    sequential_accumulate,
+    swamped_variance,
+)

@@ -1,0 +1,84 @@
+"""Software reduced-precision accumulators (the Monte-Carlo oracle).
+
+These are deliberately *sequential* emulations of the paper's FPU semantics:
+every single add rounds the partial sum to the accumulator format.  They are
+used to validate Theorem 1 / Corollary 1 against simulation (the paper's
+implicit validity claim) and to reproduce the "normal accumulation" column of
+Table 1.  The training fast path uses the chunked Pallas kernel instead.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.quant.formats import FPFormat
+from repro.quant.qnum import quantize
+
+__all__ = ["sequential_accumulate", "chunked_accumulate", "swamped_variance"]
+
+
+def sequential_accumulate(terms: jnp.ndarray, acc_fmt: FPFormat) -> jnp.ndarray:
+    """Sum ``terms`` along the last axis, rounding after every add.
+
+    terms: (..., n) float32, already representable in the product format.
+    Returns (...,) float32: the reduced-precision sum.
+    """
+
+    def step(carry, t):
+        carry = quantize(carry + t, acc_fmt)
+        return carry, None
+
+    init = jnp.zeros(terms.shape[:-1], jnp.float32)
+    out, _ = jax.lax.scan(step, init, jnp.moveaxis(terms, -1, 0))
+    return out
+
+
+def chunked_accumulate(
+    terms: jnp.ndarray, acc_fmt: FPFormat, chunk: int
+) -> jnp.ndarray:
+    """Two-level chunked accumulation (paper §4.2 semantics).
+
+    Intra-chunk and inter-chunk accumulations both run at ``acc_fmt``; the
+    intermediate (per-chunk) results are therefore naturally limited to the
+    accumulator mantissa, matching Corollary 1's min(m_acc, m_p + log2 n1).
+    """
+    n = terms.shape[-1]
+    pad = (-n) % chunk
+    if pad:
+        terms = jnp.concatenate(
+            [terms, jnp.zeros(terms.shape[:-1] + (pad,), terms.dtype)], axis=-1
+        )
+    n2 = terms.shape[-1] // chunk
+    chunks = terms.reshape(terms.shape[:-1] + (n2, chunk))
+    intra = sequential_accumulate(chunks, acc_fmt)  # (..., n2)
+    return sequential_accumulate(intra, acc_fmt)
+
+
+def swamped_variance(
+    key: jax.Array,
+    n: int,
+    acc_fmt: FPFormat,
+    prod_fmt: FPFormat,
+    *,
+    ensemble: int = 4096,
+    chunk: int = 0,
+) -> jnp.ndarray:
+    """Monte-Carlo estimate of Var(s_n) under swamping.
+
+    Draws an ensemble of length-n i.i.d. N(0,1) product streams, quantizes
+    them to the product format, accumulates in the accumulator format and
+    returns the empirical variance of the resulting sums.  Compare against
+    ``n * VRR(m_acc, m_p, n)`` (unit product variance).
+    """
+    terms = jax.random.normal(key, (ensemble, n), jnp.float32)
+    terms = quantize(terms, prod_fmt)
+    sums = (
+        chunked_accumulate(terms, acc_fmt, chunk)
+        if chunk
+        else sequential_accumulate(terms, acc_fmt)
+    )
+    # quantization of the products slightly perturbs their unit variance;
+    # normalize so the comparison isolates the accumulation effect.
+    pvar = jnp.var(terms)
+    return jnp.var(sums) / pvar

@@ -1,0 +1,58 @@
+"""(1, e, m) floating-point format descriptors (paper §2)."""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+__all__ = ["FPFormat", "FP8_152", "FP16_161", "BF16_LIKE", "FP32_LIKE"]
+
+
+@dataclass(frozen=True)
+class FPFormat:
+    """A (1, e, m) binary floating-point format.
+
+    value = (-1)^s * 2^E * (1 + M),  E in [-(2^(e-1) - 1) + 1, 2^(e-1) - 1]
+    (IEEE-style reserved exponents are *not* modelled: our emulation
+    saturates instead of producing inf, and flushes subnormals to zero —
+    consistent with the paper's "sufficient exponent precision" assumption.)
+    """
+
+    e: int
+    m: int
+
+    @property
+    def bits(self) -> int:
+        return 1 + self.e + self.m
+
+    @property
+    def bias(self) -> int:
+        return 2 ** (self.e - 1) - 1
+
+    @property
+    def max_exp(self) -> int:
+        # saturating format: all exponent codes are usable
+        return 2 ** (self.e - 1) - 1
+
+    @property
+    def min_exp(self) -> int:
+        return -(2 ** (self.e - 1) - 1)
+
+    @property
+    def max_value(self) -> float:
+        return float(2.0 ** self.max_exp * (2.0 - 2.0 ** (-self.m)))
+
+    @property
+    def min_normal(self) -> float:
+        return float(2.0 ** self.min_exp)
+
+    def __str__(self) -> str:  # matches the paper's (1,e,m) notation
+        return f"(1,{self.e},{self.m})"
+
+
+# The paper's representation format for weights/activations/gradients
+# (Wang et al. 2018 FP8) and its accumulators.
+FP8_152 = FPFormat(e=5, m=2)
+# 16-bit accumulation format from Wang et al. 2018: (1,6,9)
+FP16_161 = FPFormat(e=6, m=9)
+BF16_LIKE = FPFormat(e=8, m=7)
+FP32_LIKE = FPFormat(e=8, m=23)

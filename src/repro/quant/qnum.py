@@ -1,0 +1,47 @@
+"""Pure-jnp (1, e, m) quantizer — the numerical foundation of the emulation.
+
+Round-to-nearest-even on the float32 bit pattern (the standard "add half-ulp
+with tie-to-even correction, then truncate" trick; mantissa carries propagate
+into the exponent naturally), followed by saturating exponent clamp and
+flush-to-zero below the format's minimum normal.
+
+This is used both directly (as the reference / ops implementation for the
+Pallas quantize kernel) and inside the chunked-accumulation matmul emulation.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.quant.formats import FPFormat
+
+__all__ = ["quantize"]
+
+
+def quantize(x: jnp.ndarray, fmt: FPFormat) -> jnp.ndarray:
+    """Quantize float32 ``x`` to the (1, e, m) format, result kept in float32.
+
+    * mantissa: round-to-nearest-even to ``fmt.m`` bits
+    * overflow: saturate to +-max_value (no inf in the emulated FPU)
+    * underflow: flush to zero below the minimum normal
+    * nan: propagated unchanged
+    """
+    if fmt.m >= 23 and fmt.e >= 8:
+        return x.astype(jnp.float32)
+    x = x.astype(jnp.float32)
+    y = jnp.abs(x)
+
+    if fmt.m < 23:
+        xi = y.view(jnp.uint32)
+        shift = jnp.uint32(23 - fmt.m)
+        lsb = (xi >> shift) & jnp.uint32(1)
+        round_bias = (jnp.uint32(1) << (shift - jnp.uint32(1))) - jnp.uint32(1) + lsb
+        xi = xi + round_bias
+        xi = xi & ~((jnp.uint32(1) << shift) - jnp.uint32(1))
+        y = xi.view(jnp.float32)
+
+    y = jnp.where(jnp.isinf(x), jnp.float32(fmt.max_value), y)
+    y = jnp.minimum(y, jnp.float32(fmt.max_value))  # saturate
+    y = jnp.where(y < jnp.float32(fmt.min_normal), 0.0, y)  # flush subnormals
+    y = jnp.where(jnp.signbit(x), -y, y)
+    return jnp.where(jnp.isnan(x), x, y)

@@ -1,0 +1,123 @@
+"""Partition-spec rules: TP over 'model', FSDP over 'data', DP over 'pod'.
+
+Rules are name-based over the param pytree paths (the model zoo uses a
+stable naming scheme).  Every axis assignment is divisibility-guarded so
+the same rules serve the production meshes, the smoke meshes and single
+device runs.
+
+Scheme (leading layer-stack dims are never sharded):
+  * column-parallel GEMMs (wq/wk/wv/w_gate/w_up/in_proj/lm_head/
+    frontend_proj): last dim -> model, first dim -> data (FSDP)
+  * row-parallel GEMMs (wo/w_down/out_proj): last dim -> data, first -> model
+  * embed (V, D): vocab -> model, D -> data
+  * MoE experts (E, ...): expert dim -> model (EP), D dim -> data
+  * mamba conv/A/D/dt/norm, layer norms, router, biases: replicated
+    (biases on column-parallel outputs follow the model axis)
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["ShardingRules", "build_param_specs", "named_shardings", "batch_spec"]
+
+COLUMN = {"wq", "wk", "wv", "w_gate", "w_up", "in_proj", "lm_head", "frontend_proj"}
+ROW = {"wo", "w_down", "out_proj"}
+COLUMN_BIAS = {"bq", "bk", "bv"}
+EXPERT = {"w_gate", "w_up", "w_down"}  # under a "moe" path component
+
+
+class ShardingRules:
+    def __init__(self, mesh: Mesh, *, fsdp: bool = True,
+                 data_axes: tuple = ("pod", "data"), model_axis: str = "model"):
+        self.mesh = mesh
+        self.fsdp = fsdp
+        self.model_axis = model_axis if model_axis in mesh.shape else None
+        # FSDP shards over the in-pod data axis only (cross-pod stays pure DP
+        # for params; optimizer state additionally shards over 'pod')
+        self.fsdp_axis = "data" if (fsdp and "data" in mesh.shape) else None
+        self.data_axes = tuple(a for a in data_axes if a in mesh.shape)
+
+    def _fits(self, dim: int, axis: str | None) -> str | None:
+        if axis is None:
+            return None
+        if dim % self.mesh.shape[axis] == 0:
+            return axis
+        return None
+
+
+def _leaf_spec(rules: ShardingRules, path: tuple[str, ...], shape: tuple[int, ...]) -> P:
+    name = path[-1]
+    in_moe = "moe" in path and "shared" not in path
+    ndim = len(shape)
+    spec: list = [None] * ndim
+
+    def put(i: int, axis: str | None):
+        axis = rules._fits(shape[i], axis)
+        if axis is not None and axis not in spec:
+            spec[i] = axis
+
+    if name == "embed":
+        put(ndim - 2, rules.model_axis)
+        put(ndim - 1, rules.fsdp_axis)
+    elif in_moe and name in EXPERT and ndim >= 3:
+        put(ndim - 3, rules.model_axis)  # expert dim -> EP
+        if name in ("w_gate", "w_up"):
+            put(ndim - 2, rules.fsdp_axis)
+        else:
+            put(ndim - 1, rules.fsdp_axis)
+    elif name in COLUMN and ndim >= 2:
+        put(ndim - 1, rules.model_axis)
+        put(ndim - 2, rules.fsdp_axis)
+    elif name in ROW and ndim >= 2:
+        put(ndim - 2, rules.model_axis)
+        put(ndim - 1, rules.fsdp_axis)
+    elif name in COLUMN_BIAS:
+        put(ndim - 1, rules.model_axis)
+    # everything else (norms, router, conv, A_log, dt_bias, ...) replicated
+    return P(*spec)
+
+
+def _path_names(path) -> tuple[str, ...]:
+    out = []
+    for k in path:
+        if hasattr(k, "key"):
+            out.append(str(k.key))
+        elif hasattr(k, "idx"):
+            out.append(str(k.idx))
+        else:
+            out.append(str(k))
+    return tuple(out)
+
+
+def build_param_specs(params_or_shapes: Any, rules: ShardingRules):
+    """Pytree of PartitionSpec matching the param tree."""
+
+    def f(path, leaf):
+        shape = tuple(leaf.shape)
+        return _leaf_spec(rules, _path_names(path), shape)
+
+    return jax.tree_util.tree_map_with_path(f, params_or_shapes)
+
+
+def named_shardings(specs: Any, mesh: Mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def batch_spec(batch_size: int, mesh: Mesh,
+               data_axes: tuple = ("pod", "data")) -> tuple:
+    """Largest prefix of data axes that divides the batch."""
+    axes = []
+    prod = 1
+    for a in data_axes:
+        if a not in mesh.shape:
+            continue
+        if batch_size % (prod * mesh.shape[a]) == 0:
+            axes.append(a)
+            prod *= mesh.shape[a]
+    return tuple(axes)

@@ -1,0 +1,3 @@
+from repro.train.loop import TrainConfig, init_train_state, make_train_step  # noqa: F401
+from repro.train.optimizer import LossScaleConfig, OptConfig  # noqa: F401
+from repro.train.checkpoint import latest_step, restore_checkpoint, save_checkpoint  # noqa: F401

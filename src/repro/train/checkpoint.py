@@ -1,0 +1,84 @@
+"""Atomic, elastic checkpointing (no orbax dependency).
+
+Layout:  <dir>/step_<N>/arrays.npz + meta.json, written to a tmp dir and
+``os.rename``d into place (atomic on POSIX) so a crash mid-write never
+corrupts the latest checkpoint.  Arrays are stored as global (unsharded)
+numpy — restore re-shards onto whatever mesh the resumed job has (elastic:
+the device count may differ across restarts).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+from typing import Any
+
+import jax
+import numpy as np
+
+__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step"]
+
+
+def _flatten_with_paths(tree: Any) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(
+            str(getattr(k, "key", getattr(k, "idx", k))) for k in path
+        )
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save_checkpoint(ckpt_dir: str, step: int, state: Any, meta: dict | None = None) -> str:
+    os.makedirs(ckpt_dir, exist_ok=True)
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    arrays = _flatten_with_paths(state)
+    np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+    with open(os.path.join(tmp, "meta.json"), "w") as f:
+        json.dump({"step": step, **(meta or {})}, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    return final
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [
+        int(d.split("_")[1])
+        for d in os.listdir(ckpt_dir)
+        if d.startswith("step_") and not d.endswith(".tmp")
+    ]
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(
+    ckpt_dir: str,
+    step: int,
+    like: Any,
+    shardings: Any = None,
+) -> tuple[Any, dict]:
+    """Restore into the structure of ``like``; optionally placing each array
+    with the given shardings (elastic re-shard on a new mesh)."""
+    d = os.path.join(ckpt_dir, f"step_{step:08d}")
+    data = np.load(os.path.join(d, "arrays.npz"))
+    with open(os.path.join(d, "meta.json")) as f:
+        meta = json.load(f)
+
+    flat_like = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    for path, leaf in flat_like[0]:
+        key = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+        arr = data[key]
+        assert arr.shape == tuple(leaf.shape), f"{key}: {arr.shape} vs {leaf.shape}"
+        leaves.append(arr.astype(leaf.dtype))
+    state = jax.tree_util.tree_unflatten(flat_like[1], leaves)
+    if shardings is not None:
+        state = jax.tree.map(lambda x, s: jax.device_put(x, s), state, shardings)
+    return state, meta

@@ -1,0 +1,66 @@
+"""Int8 gradient compression with error feedback, for the thin cross-pod
+link (DCN).  Cross-pod gradient reduction is the only collective that
+leaves the ICI domain in the production mesh, so it is the one worth
+compressing: 4x fewer bytes on the slowest link at <1% accuracy cost when
+error feedback is enabled (1-bit/8-bit SGD literature).
+
+``compressed_psum`` is a shard_map-level collective: quantize locally to
+int8 with a per-tensor scale, psum the int32 accumulator, dequantize.  The
+quantization residual is returned so the caller can carry it into the next
+step (error feedback).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["quantize_int8", "dequantize_int8", "compressed_psum", "ef_compress_tree"]
+
+
+def quantize_int8(x: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    amax = jnp.max(jnp.abs(x)) + 1e-12
+    scale = amax / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def compressed_psum(x: jnp.ndarray, axis: str) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """psum(x) over ``axis`` with int8 payload. Returns (sum, residual).
+
+    Every rank quantizes its own shard, so the scale must be SHARED or the
+    int32 payload sum is meaningless: a pmax over the per-rank amax (4
+    bytes on the wire) fixes one global scale, then int8 payloads sum
+    exactly.  Residual (vs the shared-scale reconstruction) is returned
+    for error feedback.
+    """
+    amax = jax.lax.pmax(jnp.max(jnp.abs(x)), axis) + 1e-12
+    scale = amax / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    residual = x - q.astype(jnp.float32) * scale
+    # int32 accumulator avoids overflow for up to 2^24 participants
+    total = jax.lax.psum(q.astype(jnp.int32), axis).astype(jnp.float32) * scale
+    return total, residual
+
+
+def ef_compress_tree(grads: Any, errors: Any) -> tuple[Any, Any]:
+    """Error-feedback compression of a gradient pytree (local part — the
+    psum itself is inserted by the caller's shard_map).  Returns
+    (quantized-reconstructed grads, new error state)."""
+
+    def one(g, e):
+        g = g + e
+        q, scale = quantize_int8(g)
+        recon = dequantize_int8(q, scale)
+        return recon, g - recon
+
+    out = jax.tree.map(one, grads, errors)
+    recon = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    err = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    return recon, err

@@ -1,0 +1,141 @@
+"""Training step builder + fault-tolerant outer loop.
+
+* microbatch gradient accumulation (lax.scan) — the activation-memory knob
+* dynamic loss scaling with skip-on-overflow (no host sync)
+* checkpoint/restart with data-cursor + scaler state
+* NaN-step rejection is free (the skip path); hardware fault recovery is the
+  supervisor's job (repro.launch.supervisor re-execs the trainer, which
+  resumes from the latest atomic checkpoint — elastic across device counts)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import scan_util
+from repro.models.api import Model
+from repro.models.layers import Dist
+from repro.train import optimizer as O
+
+__all__ = ["TrainConfig", "TrainState", "make_train_step", "init_train_state"]
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    opt: O.OptConfig = O.OptConfig()
+    scaler: O.LossScaleConfig = O.LossScaleConfig(dynamic=True)
+    microbatches: int = 1
+    use_loss_scaling: bool = False  # bf16 training rarely needs it; fp8 does
+    # Cast f32 master params to bf16 ONCE per step, before the microbatch
+    # loop, so FSDP weight all-gathers move bf16 (half the wire bytes) and
+    # the per-use f32->bf16 converts disappear.  Autodiff through the cast
+    # still yields f32 grads; AdamW keeps f32 masters.  (§Perf iteration.)
+    cast_params_bf16: bool = True
+
+
+def init_train_state(model: Model, key, train_cfg: TrainConfig) -> dict:
+    params = model.init_params(key)
+    return {
+        "params": params,
+        "opt": O.init_opt_state(params),
+        "scaler": O.init_scaler(train_cfg.scaler),
+    }
+
+
+def make_train_step(
+    model: Model,
+    train_cfg: TrainConfig,
+    dist: Dist = Dist(),
+) -> Callable[[dict, dict], tuple[dict, dict]]:
+    """Returns train_step(state, batch) -> (state, metrics); jit-ready."""
+    cfg = model.cfg
+    nmb = train_cfg.microbatches
+
+    def loss_for(params, batch, scale):
+        loss, metrics = model.loss_fn(params, batch, cfg, dist)
+        return loss * scale, metrics
+
+    grad_fn = jax.value_and_grad(loss_for, has_aux=True)
+
+    def cast_compute(params):
+        """bf16 compute copy of the matrix params (vectors/scalars — norms,
+        biases, SSM time constants — stay f32 for numerical robustness).
+        d(cast)/dp is identity-with-convert, so differentiating w.r.t. the
+        cast tree and converting the grads back is exact."""
+        if not train_cfg.cast_params_bf16:
+            return params
+        return jax.tree.map(
+            lambda p: p.astype(jnp.bfloat16)
+            if (p.dtype == jnp.float32 and p.ndim >= 2) else p,
+            params)
+
+    def microbatched_grads(params, batch, scale):
+        params = cast_compute(params)  # once per step, outside the mb loop
+        if nmb == 1:
+            (loss, metrics), grads = grad_fn(params, batch, scale)
+            grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+            return loss, metrics, grads
+
+        def split(x):
+            b = x.shape[0]
+            return x.reshape(nmb, b // nmb, *x.shape[1:])
+
+        mb = jax.tree.map(split, batch)
+
+        def body(acc, mbatch):
+            (loss, metrics), grads = grad_fn(params, mbatch, scale)
+            acc_loss, acc_grads = acc
+            # f32 accumulator regardless of the (possibly bf16) grad dtype
+            acc_grads = jax.tree.map(
+                lambda a, g: a + g.astype(jnp.float32), acc_grads, grads)
+            return (acc_loss + loss, acc_grads), metrics
+
+        zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (loss, grads), metrics = scan_util.scan(body, (jnp.zeros(()), zero), mb)
+        inv = 1.0 / nmb
+        return loss * inv, jax.tree.map(lambda m: m[-1], metrics), jax.tree.map(
+            lambda g: g * inv, grads)
+
+    def train_step(state: dict, batch: dict) -> tuple[dict, dict]:
+        scale = state["scaler"]["scale"] if train_cfg.use_loss_scaling else jnp.float32(1.0)
+        loss, metrics, grads = microbatched_grads(state["params"], batch, scale)
+
+        if train_cfg.use_loss_scaling:
+            grads, scaler, skip = O.unscale_and_check(grads, state["scaler"], train_cfg.scaler)
+            loss = loss / state["scaler"]["scale"]
+        else:
+            scaler = state["scaler"]
+            finite = jnp.array(True)
+            for g in jax.tree.leaves(grads):
+                finite = jnp.logical_and(finite, jnp.all(jnp.isfinite(g)))
+            skip = jnp.logical_not(finite)
+            grads = jax.tree.map(lambda g: jnp.where(skip, jnp.zeros_like(g), g), grads)
+
+        params, opt, stats = O.adamw_update(
+            state["params"], grads, state["opt"], train_cfg.opt, skip=skip)
+        new_state = {"params": params, "opt": opt, "scaler": scaler}
+        out_metrics = {
+            "loss": loss,
+            "skipped": skip.astype(jnp.float32),
+            "loss_scale": scaler["scale"],
+            **stats,
+        }
+        return new_state, out_metrics
+
+    return train_step
+
+
+def make_jitted_train_step(model: Model, train_cfg: TrainConfig, dist: Dist,
+                           state_shardings=None, batch_sharding=None):
+    step = make_train_step(model, train_cfg, dist)
+    return jax.jit(
+        step,
+        in_shardings=(state_shardings, batch_sharding) if state_shardings else None,
+        out_shardings=(state_shardings, None) if state_shardings else None,
+        donate_argnums=(0,),
+    )

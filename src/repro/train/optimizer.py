@@ -1,0 +1,139 @@
+"""AdamW with global-norm clipping, warmup-cosine schedule and dynamic loss
+scaling — self-contained (no optax in this container).
+
+Loss scaling context: the paper trains with (1,5,2) representations and a
+*static* scale of 1000 (§5); production FP8/FP16 pipelines need the dynamic
+variant (double-on-stable / halve-on-overflow), so both are provided and the
+scaler state is checkpointed.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["OptConfig", "init_opt_state", "adamw_update", "LossScaleConfig",
+           "init_scaler", "scale_loss", "unscale_and_check"]
+
+
+@dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+
+
+def schedule(cfg: OptConfig, step: jnp.ndarray) -> jnp.ndarray:
+    step = step.astype(jnp.float32)
+    warm = step / jnp.maximum(cfg.warmup_steps, 1)
+    frac = (step - cfg.warmup_steps) / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1)
+    frac = jnp.clip(frac, 0.0, 1.0)
+    cos = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+    return cfg.lr * jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def init_opt_state(params: Any) -> dict:
+    zeros = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+    return {"m": zeros, "v": jax.tree.map(jnp.copy, zeros),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def global_norm(tree: Any) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def adamw_update(params: Any, grads: Any, opt: dict, cfg: OptConfig,
+                 *, skip: jnp.ndarray | None = None) -> tuple[Any, dict, dict]:
+    """One AdamW step.  ``skip`` (bool scalar) makes the whole update a no-op
+    (used by the dynamic loss scaler on overflow) while still advancing the
+    compiled graph — no host round-trip."""
+    step = opt["step"] + 1
+    lr = schedule(cfg, step)
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-12))
+
+    b1, b2 = cfg.beta1, cfg.beta2
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m2 = b1 * m + (1 - b1) * g
+        v2 = b2 * v + (1 - b2) * g * g
+        update = (m2 / c1) / (jnp.sqrt(v2 / c2) + cfg.eps)
+        update = update + cfg.weight_decay * p.astype(jnp.float32)
+        p2 = p.astype(jnp.float32) - lr * update
+        return p2.astype(p.dtype), m2, v2
+
+    out = jax.tree.map(upd, params, grads, opt["m"], opt["v"])
+    new_params = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out, is_leaf=lambda x: isinstance(x, tuple))
+
+    if skip is not None:
+        keep = lambda new, old: jnp.where(skip, old, new)  # noqa: E731
+        new_params = jax.tree.map(keep, new_params, params)
+        new_m = jax.tree.map(keep, new_m, opt["m"])
+        new_v = jax.tree.map(keep, new_v, opt["v"])
+        step = jnp.where(skip, opt["step"], step)
+
+    return new_params, {"m": new_m, "v": new_v, "step": step}, {
+        "grad_norm": gnorm, "lr": lr}
+
+
+# ------------------------------ loss scaling -------------------------------
+
+
+@dataclass(frozen=True)
+class LossScaleConfig:
+    init_scale: float = 1000.0   # the paper's static value
+    dynamic: bool = True
+    growth_interval: int = 200
+    growth_factor: float = 2.0
+    backoff_factor: float = 0.5
+    max_scale: float = 2.0 ** 24
+
+
+def init_scaler(cfg: LossScaleConfig) -> dict:
+    return {"scale": jnp.asarray(cfg.init_scale, jnp.float32),
+            "good_steps": jnp.zeros((), jnp.int32)}
+
+
+def scale_loss(loss: jnp.ndarray, scaler: dict) -> jnp.ndarray:
+    return loss * scaler["scale"]
+
+
+def unscale_and_check(grads: Any, scaler: dict, cfg: LossScaleConfig):
+    """Unscale grads; detect overflow; update scaler state.
+
+    Returns (grads, new_scaler, skip) where skip is True on non-finite grads.
+    """
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32) / scaler["scale"], grads)
+    finite = jnp.array(True)
+    for g in jax.tree.leaves(grads):
+        finite = jnp.logical_and(finite, jnp.all(jnp.isfinite(g)))
+    skip = jnp.logical_not(finite)
+    if not cfg.dynamic:
+        return grads, scaler, skip
+    good = jnp.where(skip, 0, scaler["good_steps"] + 1)
+    grow = good >= cfg.growth_interval
+    scale = jnp.where(
+        skip,
+        jnp.maximum(scaler["scale"] * cfg.backoff_factor, 1.0),
+        jnp.where(grow, jnp.minimum(scaler["scale"] * cfg.growth_factor, cfg.max_scale),
+                  scaler["scale"]),
+    )
+    good = jnp.where(grow, 0, good)
+    # zero the grads on overflow so the (skipped) update math stays finite
+    grads = jax.tree.map(lambda g: jnp.where(skip, jnp.zeros_like(g), g), grads)
+    return grads, {"scale": scale, "good_steps": good}, skip

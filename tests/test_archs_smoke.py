@@ -1,0 +1,212 @@
+"""Per-architecture smoke tests: reduced same-family configs, one forward +
+one train step on CPU, asserting output shapes and finiteness; plus
+decode-path parity tests (cache correctness) for each family."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ALIASES, get_config, get_smoke_config, shape_cells
+from repro.data.pipeline import DataConfig, SyntheticLM, with_extras
+from repro.models import encdec, lm
+from repro.models.api import get_model
+from repro.models.layers import LOCAL
+from repro.train.loop import TrainConfig, init_train_state, make_train_step
+
+ARCHS = list(ALIASES)
+
+
+def _batch(cfg, b=2, s=32):
+    data = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size, seq_len=s, global_batch=b))
+    return with_extras(next(data), cfg, key=jax.random.PRNGKey(11))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_shapes_and_finite(arch):
+    cfg = get_smoke_config(arch)
+    model = get_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    batch = _batch(cfg)
+    logits, _aux = model.forward(params, batch, cfg, LOCAL)
+    b, s = batch["tokens"].shape
+    assert logits.shape == (b, s, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_train_step_runs_and_is_finite(arch):
+    cfg = get_smoke_config(arch)
+    model = get_model(cfg)
+    tc = TrainConfig()
+    state = init_train_state(model, jax.random.PRNGKey(1), tc)
+    step = jax.jit(make_train_step(model, tc, LOCAL))
+    batch = _batch(cfg)
+    state, metrics = step(state, batch)
+    assert float(metrics["loss"]) > 0
+    assert not bool(metrics["skipped"])
+    for leaf in jax.tree.leaves(state["params"]):
+        assert bool(jnp.all(jnp.isfinite(leaf.astype(jnp.float32)))), arch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_full_config_matches_brief(arch):
+    # the FULL configs must carry the exact assigned hyperparameters
+    brief = {
+        "internvl2-2b": (24, 2048, 16, 8, 8192, 92553),
+        "qwen2-1.5b": (28, 1536, 12, 2, 8960, 151936),
+        "qwen3-8b": (36, 4096, 32, 8, 12288, 151936),
+        "llama3.2-3b": (28, 3072, 24, 8, 8192, 128256),
+        "granite-8b": (36, 4096, 32, 8, 14336, 49152),
+        "seamless-m4t-large-v2": (24, 1024, 16, 16, 8192, 256206),
+        "moonshot-v1-16b-a3b": (48, 2048, 16, 16, 1408, 163840),
+        "llama4-maverick-400b-a17b": (48, 5120, 40, 8, 8192, 202048),
+        "zamba2-7b": (81, 3584, 32, 32, 14336, 32000),
+        "mamba2-1.3b": (48, 2048, None, None, 0, 50280),
+    }
+    L, D, H, KV, FF, V = brief[arch]
+    cfg = get_config(arch)
+    assert cfg.n_layers == L and cfg.d_model == D and cfg.vocab_size == V
+    assert cfg.d_ff == FF
+    if H is not None:
+        assert cfg.n_heads == H and cfg.n_kv_heads == KV
+    if arch == "moonshot-v1-16b-a3b":
+        assert cfg.moe.n_experts == 64 and cfg.moe.top_k == 6
+    if arch == "llama4-maverick-400b-a17b":
+        assert cfg.moe.n_experts == 128 and cfg.moe.top_k == 1
+    if arch == "zamba2-7b":
+        assert cfg.ssm.state_dim == 64
+    if arch == "mamba2-1.3b":
+        assert cfg.ssm.state_dim == 128
+    if arch == "qwen3-8b":
+        assert cfg.qk_norm
+    if arch == "qwen2-1.5b":
+        assert cfg.attn_bias
+
+
+def test_shape_cells_skip_rules():
+    # long_500k only for sub-quadratic archs; decode everywhere else
+    assert "long_500k" in shape_cells("mamba2-1.3b")
+    assert "long_500k" in shape_cells("zamba2-7b")
+    assert "long_500k" not in shape_cells("qwen3-8b")
+    for a in ARCHS:
+        assert {"train_4k", "prefill_32k", "decode_32k"} <= set(shape_cells(a))
+
+
+# ------------------------- decode-path parity ------------------------------
+
+
+def _greedy_from_forward(model, params, cfg, tokens):
+    logits, _ = model.forward(params, {"tokens": tokens}, cfg, LOCAL, remat=False)
+    return jnp.argmax(logits, axis=-1)
+
+
+@pytest.mark.parametrize("arch", ["qwen2-1.5b", "mamba2-1.3b", "zamba2-7b",
+                                  "moonshot-v1-16b-a3b"])
+def test_decode_matches_forward(arch):
+    """Token-by-token decode with caches must reproduce the full forward.
+
+    Dense / pure-SSM paths agree argmax-exactly.  Hybrid and MoE recompute
+    through different bf16 reduction orders (and MoE capacity is evaluated
+    per decode token vs jointly at prefill), so near-tie logits may flip:
+    require numeric closeness everywhere + >= 90% argmax agreement, and
+    exactness for the strict families."""
+    cfg = get_smoke_config(arch)
+    model = get_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(2))
+    b, s = 2, 12
+    tokens = jax.random.randint(jax.random.PRNGKey(3), (b, s), 0, cfg.vocab_size)
+
+    full, _ = model.forward(params, {"tokens": tokens}, cfg, LOCAL, remat=False)
+    want = jnp.argmax(full, axis=-1)
+
+    state = model.init_decode_state(cfg, b, s)
+    got, lg_all = [], []
+    step = jax.jit(
+        lambda p, t, st, pos: model.decode_step(p, t, st, pos, cfg, LOCAL))
+    for i in range(s):
+        logits, state = step(params, tokens[:, i : i + 1], state, jnp.int32(i))
+        got.append(jnp.argmax(logits[:, 0], axis=-1))
+        lg_all.append(logits[:, 0])
+    got = jnp.stack(got, axis=1)
+    lg_all = jnp.stack(lg_all, axis=1).astype(jnp.float32)
+
+    agree = float(jnp.mean((got == want).astype(jnp.float32)))
+    if arch in ("qwen2-1.5b", "mamba2-1.3b"):
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    else:
+        assert agree >= 0.9, agree
+        np.testing.assert_allclose(
+            np.asarray(lg_all), np.asarray(full.astype(jnp.float32)),
+            atol=2.5, rtol=0.5)  # bounded numeric drift, no cache bug
+
+
+def test_encdec_decode_matches_forward():
+    cfg = get_smoke_config("seamless-m4t-large-v2")
+    params = encdec.init_params(jax.random.PRNGKey(4), cfg)
+    b, s_dec, s_enc = 2, 10, 8
+    frames = jax.random.normal(jax.random.PRNGKey(5), (b, s_enc, cfg.frontend_dim))
+    tokens = jax.random.randint(jax.random.PRNGKey(6), (b, s_dec), 0, cfg.vocab_size)
+
+    logits, _ = encdec.forward(params, {"frames": frames, "tokens": tokens},
+                               cfg, LOCAL, remat=False)
+    want = np.asarray(jnp.argmax(logits, axis=-1))
+
+    enc_out = encdec.encode(params, frames, cfg, LOCAL, remat=False)
+    state = encdec.init_decode_state(cfg, b, s_dec, s_enc)
+    state = encdec.prime_cross_attention(params, enc_out, cfg, state)
+    got = []
+    for i in range(s_dec):
+        lg, state = encdec.decode_step(params, tokens[:, i : i + 1], state,
+                                       jnp.int32(i), cfg, LOCAL)
+        got.append(np.asarray(jnp.argmax(lg[:, 0], axis=-1)))
+    np.testing.assert_array_equal(np.stack(got, axis=1), want)
+
+
+def test_mamba_chunked_scan_matches_recurrence():
+    """SSD chunked scan (training path) vs the step-by-step recurrence
+    (decode path) on the same weights — the two independent implementations
+    must agree."""
+    cfg = get_smoke_config("mamba2-1.3b")
+    model = get_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(7))
+    b, s = 2, 9
+    tokens = jax.random.randint(jax.random.PRNGKey(8), (b, s), 0, cfg.vocab_size)
+
+    logits, _ = model.forward(params, {"tokens": tokens}, cfg, LOCAL, remat=False)
+    state = model.init_decode_state(cfg, b, s)
+    for i in range(s):
+        lg, state = model.decode_step(params, tokens[:, i : i + 1], state,
+                                      jnp.int32(i), cfg, LOCAL)
+        np.testing.assert_allclose(
+            np.asarray(lg[:, 0].astype(jnp.float32)),
+            np.asarray(logits[:, i].astype(jnp.float32)),
+            rtol=0.12, atol=0.12)  # bf16 compute; two very different orders
+
+
+def test_prefill_returns_last_position_logits():
+    cfg = get_smoke_config("qwen3-8b")
+    model = get_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(9))
+    tokens = jax.random.randint(jax.random.PRNGKey(10), (2, 16), 0, cfg.vocab_size)
+    full, _ = model.forward(params, {"tokens": tokens}, cfg, LOCAL, remat=False)
+    last = model.prefill(params, {"tokens": tokens}, cfg, LOCAL)
+    np.testing.assert_allclose(
+        np.asarray(last.astype(jnp.float32)),
+        np.asarray(full[:, -1].astype(jnp.float32)), rtol=1e-2, atol=1e-2)
+
+
+def test_vlm_patch_embeds_enter_sequence():
+    cfg = get_smoke_config("internvl2-2b")
+    model = get_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(12))
+    batch = _batch(cfg, b=2, s=32)
+    assert "patch_embeds" in batch and batch["patch_embeds"].shape[1] == cfg.vision_tokens
+    logits, _ = model.forward(params, batch, cfg, LOCAL)
+    # changing a patch embedding must change logits (the stub is wired in)
+    batch2 = dict(batch)
+    batch2["patch_embeds"] = batch["patch_embeds"] + 1.0
+    logits2, _ = model.forward(params, batch2, cfg, LOCAL)
+    assert not np.allclose(np.asarray(logits), np.asarray(logits2))

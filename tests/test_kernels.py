@@ -1,0 +1,141 @@
+"""Pallas kernel vs pure-jnp oracle: shape/dtype sweeps in interpret mode,
+plus the qdot autodiff wrapper (per-role accumulator formats)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.policy import GEMMPrecision
+from repro.kernels.ops import QDotConfig, qdot
+from repro.kernels.qmatmul import qmatmul_pallas
+from repro.kernels.ref import ref_qmatmul, ref_quantize
+from repro.quant.formats import FP8_152
+from repro.quant.qnum import quantize
+
+
+SHAPES = [(128, 128, 128), (64, 256, 32), (100, 300, 50), (8, 8, 8), (1, 512, 1)]
+
+
+@pytest.mark.parametrize("m,k,n", SHAPES)
+@pytest.mark.parametrize("m_acc,block_k", [(23, 128), (10, 128), (5, 64), (7, 256)])
+def test_qmatmul_matches_ref(m, k, n, m_acc, block_k):
+    rng = np.random.RandomState(hash((m, k, n, m_acc)) % 2**32)
+    # inputs quantized to the paper's (1,5,2): products then carry <= 5
+    # mantissa bits, so for narrow accumulators kernel and oracle must agree
+    # BIT-EXACTLY (the per-chunk rounding absorbs f32 reduction-order noise)
+    a = np.asarray(quantize(jnp.asarray(
+        rng.standard_normal((m, k)).astype(np.float32)), FP8_152))
+    b = np.asarray(quantize(jnp.asarray(
+        rng.standard_normal((k, n)).astype(np.float32)), FP8_152))
+    e_acc = 8 if m_acc == 23 else 6
+    got = np.asarray(qmatmul_pallas(a, b, e_acc=e_acc, m_acc=m_acc, block_k=block_k))
+    want = np.asarray(ref_qmatmul(a, b, e_acc=e_acc, m_acc=m_acc, block_k=block_k))
+    if m_acc < 23:
+        np.testing.assert_array_equal(got, want)
+    else:
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_qmatmul_wide_equals_plain_matmul(dtype):
+    # degenerate path: (1,8,23) carry == ordinary f32-accumulated matmul
+    rng = np.random.RandomState(0)
+    a = rng.standard_normal((96, 384)).astype(np.float32)
+    b = rng.standard_normal((384, 64)).astype(np.float32)
+    got = np.asarray(qmatmul_pallas(jnp.asarray(a, dtype), jnp.asarray(b, dtype)))
+    want = np.asarray(a.astype(np.float32) @ b.astype(np.float32)) if dtype == jnp.float32 \
+        else np.asarray(jnp.asarray(a, dtype).astype(jnp.float32) @ jnp.asarray(b, dtype).astype(jnp.float32))
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+def test_narrow_accumulator_swamps_long_k():
+    # the emulation actually exhibits swamping: a long-K matmul with a
+    # narrow carry loses output variance vs exact (the paper's Figure 1
+    # failure mode).  NOTE chunking (block_k=128) already mitigates — the
+    # paper's Corollary 1 — so the collapse needs a very narrow carry.
+    rng = np.random.RandomState(1)
+    a = rng.standard_normal((8, 65536)).astype(np.float32)
+    b = rng.standard_normal((65536, 8)).astype(np.float32)
+    exact = np.asarray(qmatmul_pallas(a, b))
+    v = {m: np.var(np.asarray(
+        qmatmul_pallas(a, b, e_acc=6, m_acc=m, block_k=128)))
+        for m in (2, 3, 4)}
+    assert v[2] < 0.6 * np.var(exact)  # collapsed (64-sample var estimate)
+    assert v[2] < v[3] < v[4] * 1.02   # retention monotone in carry width
+
+
+def test_quantize_ref_is_qnum():
+    rng = np.random.RandomState(2)
+    x = jnp.asarray(rng.standard_normal((64, 64)).astype(np.float32))
+    np.testing.assert_array_equal(
+        np.asarray(ref_quantize(x, e=5, m=2)), np.asarray(quantize(x, FP8_152)))
+
+
+# --------------------------------- qdot ------------------------------------
+
+
+def test_qdot_exact_mode_matches_matmul_and_grads():
+    cfg = QDotConfig()  # exact
+    rng = np.random.RandomState(3)
+    x = jnp.asarray(rng.standard_normal((4, 32, 48)).astype(np.float32))
+    w = jnp.asarray(rng.standard_normal((48, 24)).astype(np.float32))
+
+    def f_q(x, w):
+        return jnp.sum(jnp.sin(qdot(x, w, cfg)))
+
+    def f_ref(x, w):
+        return jnp.sum(jnp.sin(x @ w))
+
+    gq = jax.grad(f_q, argnums=(0, 1))(x, w)
+    gr = jax.grad(f_ref, argnums=(0, 1))(x, w)
+    for a, b in zip(gq, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-3, atol=1e-4)
+
+
+def test_qdot_per_role_precisions_applied():
+    # FWD narrow / BWD+GRAD wide: forward output must equal the narrow
+    # kernel's, grads must equal the wide path's (up to repr quantization)
+    rng = np.random.RandomState(4)
+    x = jnp.asarray(rng.standard_normal((64, 256)).astype(np.float32))
+    w = jnp.asarray(rng.standard_normal((256, 32)).astype(np.float32))
+    narrow = GEMMPrecision(m_acc=4, e_acc=6, chunk=64)
+    cfg = QDotConfig(fwd=narrow, bwd=None, grad=None, repr_fmt=None)
+
+    y = qdot(x, w, cfg)
+    want = qmatmul_pallas(x, w, e_acc=6, m_acc=4, block_k=64)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(want), rtol=1e-6)
+
+    g = jax.grad(lambda x, w: jnp.sum(qdot(x, w, cfg)), argnums=(0, 1))(x, w)
+    g_ref = jax.grad(lambda x, w: jnp.sum(x @ w), argnums=(0, 1))(x, w)
+    for a, b in zip(g, g_ref):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-5)
+
+
+def test_qdot_repr_quantization_fp8():
+    # with (1,5,2) representation quantization the forward equals
+    # matmul(quantize(x), quantize(w)) under the same chunked accumulation
+    rng = np.random.RandomState(5)
+    x = jnp.asarray(rng.standard_normal((32, 128)).astype(np.float32))
+    w = jnp.asarray(rng.standard_normal((128, 16)).astype(np.float32))
+    p = GEMMPrecision(m_acc=9, e_acc=6, chunk=64)
+    cfg = QDotConfig(fwd=p, bwd=p, grad=p, repr_fmt=FP8_152)
+    y = qdot(x, w, cfg)
+    xq, wq = quantize(x, FP8_152), quantize(w, FP8_152)
+    want = qmatmul_pallas(xq, wq, e_acc=6, m_acc=9, block_k=64)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(want), rtol=1e-6)
+    # grads flow and stay finite
+    g = jax.grad(lambda x: jnp.sum(qdot(x, w, cfg)))(x)
+    assert bool(jnp.all(jnp.isfinite(g)))
+
+
+def test_qdot_batched_leading_dims():
+    rng = np.random.RandomState(6)
+    x = jnp.asarray(rng.standard_normal((2, 3, 5, 64)).astype(np.float32))
+    w = jnp.asarray(rng.standard_normal((64, 8)).astype(np.float32))
+    y = qdot(x, w, QDotConfig())
+    assert y.shape == (2, 3, 5, 8)
+    np.testing.assert_allclose(
+        np.asarray(y), np.asarray(x @ w), rtol=2e-5, atol=2e-5)

@@ -1,0 +1,112 @@
+"""Hypothesis property tests on system invariants (brief requirement):
+accumulation emulation, policy solver, kernels and checkpoint round-trips
+under generated shapes/values."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.policy import AccumulationPolicy, plan_for_model
+from repro.core.precision import min_m_acc
+from repro.kernels.qmatmul import qmatmul_pallas
+from repro.quant.accumulate import chunked_accumulate, sequential_accumulate
+from repro.quant.formats import FP32_LIKE, FPFormat
+from repro.quant.qnum import quantize
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(min_value=2, max_value=300), st.integers(min_value=0, max_value=2**31 - 1))
+def test_wide_accumulator_is_exact(n, seed):
+    # sequential emulation with a wide format == plain sum (f32 order)
+    x = jax.random.normal(jax.random.PRNGKey(seed), (4, n), jnp.float32)
+    got = sequential_accumulate(x, FP32_LIKE)
+    want = jnp.cumsum(x, axis=-1)[:, -1]
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(min_value=2, max_value=200),
+       st.integers(min_value=4, max_value=64),
+       st.integers(min_value=3, max_value=9))
+def test_chunked_never_worse_retention(n, chunk, m_acc):
+    # Corollary 1's claim, on the software emulation: chunked retains at
+    # least ~as much ensemble variance as sequential
+    key = jax.random.PRNGKey(n * 1000 + chunk)
+    x = quantize(jax.random.normal(key, (256, n), jnp.float32), FPFormat(e=5, m=5))
+    fmt = FPFormat(e=6, m=m_acc)
+    vs = float(jnp.var(sequential_accumulate(x, fmt)))
+    vc = float(jnp.var(chunked_accumulate(x, fmt, chunk)))
+    assert vc >= 0.8 * vs  # allow MC noise; chunking must not collapse
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(min_value=1, max_value=64),
+       st.integers(min_value=1, max_value=300),
+       st.integers(min_value=1, max_value=48))
+def test_qmatmul_zero_padding_invariant(m, k, n):
+    # zero-padding K must not change the chunked-quantized result
+    rng = np.random.RandomState(m * 7 + k * 3 + n)
+    a = rng.standard_normal((m, k)).astype(np.float32)
+    b = rng.standard_normal((k, n)).astype(np.float32)
+    base = np.asarray(qmatmul_pallas(a, b, e_acc=6, m_acc=8, block_k=64))
+    ap = np.pad(a, ((0, 0), (0, 32)))
+    bp = np.pad(b, ((0, 32), (0, 0)))
+    padded = np.asarray(qmatmul_pallas(ap, bp, e_acc=6, m_acc=8, block_k=64))
+    np.testing.assert_array_equal(base, padded)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(min_value=2, max_value=2_000_000),
+       st.floats(min_value=0.01, max_value=1.0))
+def test_solver_monotone_in_sparsity(n, nzr):
+    # sparser operands never need MORE accumulator bits
+    assert min_m_acc(n, 5, nzr=nzr) <= min_m_acc(n, 5, nzr=1.0)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(min_value=2, max_value=2_000_000))
+def test_solver_chunked_never_needs_more(n):
+    assert min_m_acc(n, 5, chunked=True) <= min_m_acc(n, 5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(min_value=32, max_value=4096),
+       st.integers(min_value=1, max_value=64))
+def test_policy_plan_scales_with_tokens(seq, batch):
+    # the assigned GRAD precision is monotone in the token count
+    from repro.configs import get_smoke_config
+
+    cfg = get_smoke_config("qwen2-1.5b")
+    pol = AccumulationPolicy(mode="predicted")
+    small = plan_for_model(cfg, seq_len=seq, global_batch=batch, policy=pol)
+    big = plan_for_model(cfg, seq_len=seq * 2, global_batch=batch, policy=pol)
+    assert (big.quant.mlp_up.grad.m_acc
+            >= small.quant.mlp_up.grad.m_acc)
+    # FWD precision is token-count independent
+    assert big.quant.mlp_up.fwd.m_acc == small.quant.mlp_up.fwd.m_acc
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.lists(st.integers(min_value=1, max_value=7), min_size=1, max_size=4),
+       st.integers(min_value=0, max_value=2**31 - 1))
+def test_checkpoint_roundtrip_arbitrary_pytrees(dims, seed):
+    import tempfile
+
+    from repro.train.checkpoint import restore_checkpoint, save_checkpoint
+
+    d = tempfile.mkdtemp(prefix="ck_prop_")
+    key = jax.random.PRNGKey(seed)
+    tree = {
+        "a": jax.random.normal(key, tuple(dims), jnp.float32),
+        "nested": {"b": jnp.arange(int(np.prod(dims)), dtype=jnp.int32),
+                   "c": jnp.asarray(seed % 97, jnp.int32)},
+    }
+    save_checkpoint(str(d), 1, tree)
+    like = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+    back, _ = restore_checkpoint(str(d), 1, like)
+    for x, y in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))

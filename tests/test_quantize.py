@@ -1,0 +1,135 @@
+"""Bit-exactness properties of the (1, e, m) quantizer — the numerical
+foundation every emulation result rests on."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.quant.formats import BF16_LIKE, FP8_152, FPFormat
+from repro.quant.qnum import quantize
+
+
+def q(x, e, m):
+    return np.asarray(quantize(jnp.asarray(np.asarray(x, np.float32)), FPFormat(e=e, m=m)))
+
+
+# ----------------------------- hard oracles --------------------------------
+
+
+def test_bf16_oracle_bitexact():
+    # (1,8,7) RNE == numpy/jax bfloat16 rounding for finite normals
+    rng = np.random.RandomState(0)
+    x = np.concatenate([
+        rng.uniform(-1e30, 1e30, 2048),
+        rng.uniform(-1, 1, 2048),
+        rng.uniform(-1e-30, 1e-30, 1024),
+    ]).astype(np.float32)
+    x = x[np.abs(x) >= float(BF16_LIKE.min_normal)]
+    expect = x.astype(jnp.bfloat16).astype(np.float32)
+    np.testing.assert_array_equal(q(x, 8, 7), expect)
+
+
+def test_fp16_oracle_bitexact():
+    # (1,5,10) == IEEE float16 for the normal range (ours flushes subnormals
+    # and saturates instead of inf — restrict to the common domain)
+    rng = np.random.RandomState(1)
+    x = (rng.uniform(2.0 ** -14, 60000.0, 8192)
+         * rng.choice([-1.0, 1.0], 8192)).astype(np.float32)
+    expect = x.astype(np.float16).astype(np.float32)
+    got = q(x, 5, 10)
+    keep = np.abs(expect) >= 2.0 ** -14  # RNE at the bottom may produce subnormals
+    np.testing.assert_array_equal(got[keep], expect[keep])
+
+
+def test_known_values_fp8_152():
+    # hand-computed (1,5,2) values: mantissa grid is {1, 1.25, 1.5, 1.75}*2^E
+    cases = {
+        1.0: 1.0,
+        1.1: 1.0,
+        1.125: 1.0,    # tie -> even (mantissa .00)
+        1.2: 1.25,
+        1.375: 1.5,    # tie -> even (.10)
+        1.6: 1.5,
+        1.7: 1.75,
+        3.5: 3.5,
+        -2.5: -2.5,
+        0.0: 0.0,
+    }
+    for x, want in cases.items():
+        assert q([x], 5, 2)[0] == np.float32(want), (x, want)
+
+
+# ------------------------------ properties ---------------------------------
+
+
+def test_idempotent():
+    rng = np.random.RandomState(2)
+    x = rng.standard_normal(4096).astype(np.float32) * 100
+    y = q(x, 5, 2)
+    np.testing.assert_array_equal(q(y, 5, 2), y)
+
+
+def test_sign_symmetry():
+    rng = np.random.RandomState(3)
+    x = rng.standard_normal(1024).astype(np.float32)
+    np.testing.assert_array_equal(q(-x, 5, 2), -q(x, 5, 2))
+
+
+def test_saturation_and_flush():
+    fmt = FP8_152
+    big = np.array([1e30, -1e30, np.inf, -np.inf], np.float32)
+    out = q(big, 5, 2)
+    np.testing.assert_array_equal(np.abs(out), np.float32(fmt.max_value))
+    tiny = np.array([1e-20, -1e-20, 2.0 ** -16], np.float32)
+    np.testing.assert_array_equal(q(tiny, 5, 2), np.zeros(3, np.float32))
+
+
+def test_nan_propagates():
+    out = q([np.nan, 1.0], 5, 2)
+    assert np.isnan(out[0]) and out[1] == 1.0
+
+
+def test_wide_format_is_identity():
+    rng = np.random.RandomState(4)
+    x = rng.standard_normal(512).astype(np.float32)
+    np.testing.assert_array_equal(q(x, 8, 23), x)
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.floats(min_value=1e-3, max_value=1e3, allow_nan=False))
+def test_relative_error_bound(v):
+    # RNE to m bits: |q(x) - x| <= 2^-(m+1) * 2^E <= 2^-(m+1) * |x|... up to
+    # the mantissa factor; use the safe bound ulp/2 = 2^(E - m - 1) <= |x| 2^-m-1
+    for m in (2, 5, 9):
+        x = np.float32(v)
+        y = q([x], 6, m)[0]
+        assert abs(y - x) <= abs(x) * 2.0 ** (-m - 1) * (1 + 1e-6)
+
+
+@settings(max_examples=100, deadline=None)
+@given(
+    st.integers(min_value=2, max_value=10),
+    st.floats(min_value=-1e4, max_value=1e4, allow_nan=False),
+)
+def test_monotone_nondecreasing(m, v):
+    # quantization preserves order: q(x) <= q(x') for x <= x'
+    x = np.float32(v)
+    eps = abs(x) * 1e-3 + 1e-6
+    a, b = q([x], 6, m)[0], q([x + eps], 6, m)[0]
+    assert a <= b
+
+
+def test_quantize_pallas_matches_qnum():
+    # the Pallas elementwise kernel (interpret mode) against the pure-jnp ref
+    from repro.kernels.quantize import quantize_pallas
+
+    rng = np.random.RandomState(5)
+    for shape in [(7,), (128,), (33, 65), (256, 128), (3, 5, 7)]:
+        x = (rng.standard_normal(shape) * 50).astype(np.float32)
+        for e, m in [(5, 2), (6, 9), (8, 7), (4, 3)]:
+            want = np.asarray(quantize(jnp.asarray(x), FPFormat(e=e, m=m)))
+            got = np.asarray(quantize_pallas(jnp.asarray(x), e=e, m=m))
+            np.testing.assert_array_equal(got, want, err_msg=f"{shape} ({e},{m})")

@@ -1,0 +1,166 @@
+"""Training-substrate behaviour: convergence, microbatching equivalence,
+loss-scaling skip logic, checkpoint/restart determinism."""
+
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.models.api import get_model
+from repro.models.layers import LOCAL
+from repro.train import optimizer as O
+from repro.train.checkpoint import latest_step, restore_checkpoint, save_checkpoint
+from repro.train.loop import TrainConfig, init_train_state, make_train_step
+
+
+def _setup(arch="qwen2-1.5b", **tc_kw):
+    cfg = get_smoke_config(arch)
+    model = get_model(cfg)
+    tc = TrainConfig(**tc_kw)
+    state = init_train_state(model, jax.random.PRNGKey(0), tc)
+    step = jax.jit(make_train_step(model, tc, LOCAL))
+    data = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size, seq_len=64,
+                                  global_batch=8, noise=0.02))
+    return model, state, step, data
+
+
+def test_loss_decreases():
+    _, state, step, data = _setup(
+        opt=O.OptConfig(lr=3e-3, warmup_steps=5, total_steps=80))
+    losses = []
+    for _ in range(60):
+        state, m = step(state, next(data))
+        losses.append(float(m["loss"]))
+    assert np.mean(losses[-10:]) < 0.55 * np.mean(losses[:5]), losses[::10]
+
+
+def test_microbatch_equivalence():
+    # gradient accumulation over 4 microbatches == single big batch
+    model, state1, step1, data = _setup(microbatches=1)
+    _, _, step4, _ = _setup(microbatches=4)
+    state4 = jax.tree.map(jnp.copy, state1)
+    batch = next(data)
+    s1, m1 = step1(state1, batch)
+    s4, m4 = step4(state4, batch)
+    assert float(m1["loss"]) == pytest.approx(float(m4["loss"]), rel=1e-5)
+    for a, b in zip(jax.tree.leaves(s1["params"]), jax.tree.leaves(s4["params"])):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-4, atol=2e-5)
+
+
+def test_nonfinite_grad_step_is_skipped():
+    model, state, _, data = _setup()
+    tc = TrainConfig()
+    step = jax.jit(make_train_step(model, tc, LOCAL))
+    batch = next(data)
+    # poison the params so grads go non-finite
+    bad = jax.tree.map(jnp.copy, state)
+    bad["params"]["embed"] = bad["params"]["embed"].at[0, 0].set(jnp.inf)
+    new, m = step(bad, batch)
+    assert bool(m["skipped"])
+    # optimizer state untouched on skip
+    assert int(new["opt"]["step"]) == int(state["opt"]["step"])
+
+
+def test_dynamic_loss_scaler_backoff_and_growth():
+    cfg = O.LossScaleConfig(init_scale=1024.0, dynamic=True, growth_interval=2)
+    scaler = O.init_scaler(cfg)
+    good = {"g": jnp.ones((4,))}
+    bad = {"g": jnp.array([1.0, jnp.inf, 1.0, 1.0])}
+    # overflow -> halve
+    _, s1, skip = O.unscale_and_check(bad, scaler, cfg)
+    assert bool(skip) and float(s1["scale"]) == 512.0
+    # two good steps -> double
+    _, s2, k2 = O.unscale_and_check(good, s1, cfg)
+    _, s3, _ = O.unscale_and_check(good, s2, cfg)
+    assert not bool(k2) and float(s3["scale"]) == 1024.0
+
+
+def test_lr_schedule_shape():
+    cfg = O.OptConfig(lr=1e-3, warmup_steps=10, total_steps=100, min_lr_ratio=0.1)
+    lrs = [float(O.schedule(cfg, jnp.int32(s))) for s in (0, 5, 10, 55, 100, 200)]
+    assert lrs[0] == 0.0
+    assert lrs[1] == pytest.approx(5e-4)
+    assert lrs[2] == pytest.approx(1e-3)
+    assert lrs[2] > lrs[3] > lrs[4]
+    assert lrs[4] == pytest.approx(1e-4, rel=1e-3)
+    assert lrs[5] == pytest.approx(1e-4, rel=1e-3)  # floor after total_steps
+
+
+# ------------------------------ checkpointing ------------------------------
+
+
+def test_checkpoint_roundtrip_bitexact(tmp_path):
+    _, state, step, data = _setup()
+    for _ in range(3):
+        state, _ = step(state, next(data))
+    save_checkpoint(str(tmp_path), 3, state, meta={"data": data.state_dict()})
+    assert latest_step(str(tmp_path)) == 3
+
+    like = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), state)
+    restored, meta = restore_checkpoint(str(tmp_path), 3, like)
+    assert meta["step"] == 3 and meta["data"]["step"] == data.state_dict()["step"]
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_resume_continues_identically(tmp_path):
+    """Crash/restart determinism: train 6 steps straight vs train 3 +
+    checkpoint + restore + 3 — parameters must match bitwise."""
+    _, state, step, data = _setup()
+
+    straight = jax.tree.map(jnp.copy, state)
+    d1 = SyntheticLM(data.cfg)
+    for _ in range(6):
+        straight, _ = step(straight, next(d1))
+
+    d2 = SyntheticLM(data.cfg)
+    for _ in range(3):
+        state, _ = step(state, next(d2))
+    save_checkpoint(str(tmp_path), 3, state, meta={"data": d2.state_dict()})
+
+    like = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), state)
+    resumed, meta = restore_checkpoint(str(tmp_path), 3, like)
+    d3 = SyntheticLM(d2.cfg)
+    d3.load_state_dict(meta["data"])
+    for _ in range(3):
+        resumed, _ = step(resumed, next(d3))
+
+    for a, b in zip(jax.tree.leaves(straight["params"]),
+                    jax.tree.leaves(resumed["params"])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_atomic_checkpoint_no_partial_dirs(tmp_path):
+    _, state, _, _ = _setup()
+    p = save_checkpoint(str(tmp_path), 1, state)
+    assert os.path.isdir(p)
+    assert not any(d.endswith(".tmp") for d in os.listdir(tmp_path))
+    # overwrite same step is safe
+    save_checkpoint(str(tmp_path), 1, state)
+    assert latest_step(str(tmp_path)) == 1
+
+
+# ------------------------- gradient compression ----------------------------
+
+
+def test_int8_compression_roundtrip_and_error_feedback():
+    from repro.train.compression import dequantize_int8, quantize_int8
+
+    rng = np.random.RandomState(0)
+    x = jnp.asarray(rng.standard_normal(4096).astype(np.float32))
+    q, scale = quantize_int8(x)
+    recon = dequantize_int8(q, scale)
+    # error feedback: residual carried forward -> two-step sum nearly exact
+    residual = x - recon
+    q2, s2 = quantize_int8(x + residual)
+    recon2 = dequantize_int8(q2, s2)
+    err1 = float(jnp.max(jnp.abs(recon - x)))
+    err2 = float(jnp.max(jnp.abs((recon + recon2) - 2 * x)))
+    assert err2 < 2 * err1  # EF keeps the accumulated error bounded
+    assert q.dtype == jnp.int8

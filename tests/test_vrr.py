@@ -1,0 +1,229 @@
+"""Analytic properties of the VRR formulas (Lemma 1 / Theorem 1 / Corollary 1).
+
+These test the paper's own extremal-behaviour claims (§4.1) plus the
+numerical machinery (quadrature path, monotonicity) that the solver relies
+on.  No simulation here — see test_vrr_montecarlo.py for theory-vs-sim.
+"""
+
+from __future__ import annotations
+
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import sys
+
+from repro.core.vrr import (
+    CUTOFF_LOG_V,
+    log_variance_lost,
+    qfunc,
+    vrr,
+    vrr_chunked,
+    vrr_chunked_sparse,
+    vrr_full_swamping,
+    vrr_sparse,
+)
+
+# ``repro.core.__init__`` re-exports the *function* ``vrr``, shadowing the
+# submodule attribute — fetch the module itself for monkeypatching.
+_vrr_module = sys.modules["repro.core.vrr"]
+
+
+# ------------------------------- Q-function -------------------------------
+
+
+def test_qfunc_values():
+    assert qfunc(0.0) == pytest.approx(0.5)
+    assert qfunc(1.6448536269514722) == pytest.approx(0.05, abs=1e-6)
+    assert qfunc(30.0) < 1e-100
+    x = np.linspace(-3, 3, 13)
+    np.testing.assert_allclose(qfunc(x) + qfunc(-x), 1.0, atol=1e-12)
+
+
+def test_qfunc_vectorized_shape():
+    assert qfunc(np.ones((3, 4))).shape == (3, 4)
+
+
+# --------------------------- extremal behaviour ----------------------------
+
+
+@pytest.mark.parametrize("n", [2, 64, 4096, 262144])
+def test_high_precision_vrr_is_one(n):
+    # paper §4.1: very large m_acc -> VRR -> 1
+    assert vrr(23, 5, n) == pytest.approx(1.0, abs=1e-6)
+    assert vrr_full_swamping(23, n) == pytest.approx(1.0, abs=1e-6)
+
+
+def test_low_precision_long_sum_vrr_collapses():
+    """Paper §4.1 claims VRR -> 0 as n -> inf at fixed m_acc.  The formula's
+    true limit is 1/3 (q_i ~ c/sqrt(i) makes sum(i*q_i)/(k*n) -> 1/3) —
+    documented erratum in DESIGN.md.  Either way the variance-lost criterion
+    explodes (1 - VRR >= 2/3), so the solver is unaffected: we assert the
+    collapse to the plateau and the v(n) explosion."""
+    v1m = vrr(4, 5, 1_000_000)
+    assert v1m < 0.4
+    assert abs(vrr(4, 5, 100_000_000) - 1.0 / 3.0) < 0.02
+    assert log_variance_lost(v1m, 1_000_000) > 1e5  # v(n) astronomically > 50
+
+
+def test_vrr_bounded_unit_interval():
+    for m_acc in (2, 5, 8, 12, 23):
+        for n in (2, 10, 1000, 100_000):
+            r = vrr(m_acc, 5, n)
+            assert 0.0 <= r <= 1.0
+
+
+def test_vrr_trivial_lengths():
+    assert vrr(5, 5, 1) == 1.0
+    assert vrr(5, 5, 0) == 1.0
+    assert vrr_full_swamping(5, 1) == 1.0
+
+
+# ------------------------------ monotonicity -------------------------------
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    m_acc=st.integers(min_value=3, max_value=16),
+    n=st.integers(min_value=2, max_value=50_000),
+)
+def test_vrr_monotone_in_m_acc(m_acc, n):
+    # more accumulator bits never lose more variance (solver's bisection
+    # correctness hinges on this)
+    assert vrr(m_acc + 1, 5, n) >= vrr(m_acc, 5, n) - 1e-9
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    m_acc=st.integers(min_value=4, max_value=14),
+    m_p=st.integers(min_value=2, max_value=9),
+    n=st.integers(min_value=2, max_value=50_000),
+)
+def test_vrr_in_unit_interval_hypothesis(m_acc, m_p, n):
+    r = vrr(m_acc, m_p, n)
+    assert 0.0 <= r <= 1.0
+
+
+def test_vrr_knee_monotone_decreasing_in_n():
+    # VRR for fixed precision decreases (weakly) with accumulation length
+    # across the knee (paper Fig. 5 structure).
+    ns = [256, 1024, 4096, 16384, 65536]
+    vals = [vrr(7, 5, n) for n in ns]
+    assert all(a >= b - 1e-6 for a, b in zip(vals, vals[1:]))
+    assert vals[0] > 0.95 and vals[-1] < 0.8  # spans the knee
+
+
+# --------------------------- partial swamping ------------------------------
+
+
+def test_theorem_tracks_lemma():
+    # Theorem 1 refines Lemma 1 with partial-swamping corrections; the two
+    # stay close across the knee (the correction redistributes probability
+    # mass, it does not change the regime).  NOTE: Theorem 1 is NOT always
+    # below Lemma 1 — the alpha-indicator excludes early-swamping events,
+    # which can raise the normalized retention.
+    for m_acc in (6, 8, 10):
+        for n in (512, 4096, 32768):
+            assert abs(vrr(m_acc, 5, n) - vrr_full_swamping(m_acc, n)) < 0.1
+
+
+def test_partial_swamping_threshold_alpha():
+    # the alpha threshold moves with 2^(m_acc - 3 m_p): sanity of magnitude
+    from repro.core.vrr import _alpha_partial
+
+    a = _alpha_partial(8, 5, 5)
+    assert 100 < a < 300  # ~189 for the paper's (1,5,2) products
+    assert _alpha_partial(10, 5, 5) == pytest.approx(4 * a)
+
+
+# ------------------------------- chunking ----------------------------------
+
+
+def test_chunked_single_chunk_degenerates():
+    # n2 = 1: inter-chunk accumulation of one term is exact
+    assert vrr_chunked(8, 5, 4096, 1) == pytest.approx(vrr(8, 5, 4096), rel=1e-9)
+
+
+def test_chunking_improves_vrr():
+    # paper Fig. 5b/c: chunking raises the VRR toward 1
+    m_acc, n = 7, 65536
+    plain = vrr(m_acc, 5, n)
+    chunked = vrr_chunked(m_acc, 5, 64, n // 64)
+    assert chunked > plain
+    assert chunked > 0.99
+
+
+def test_chunk_size_flat_region():
+    # paper Fig. 5c: VRR is flat in chunk size over a wide middle range,
+    # and degrades when the chunk is too small (n2 approaches n)
+    m_acc, n = 8, 262144
+    vals = [vrr_chunked(m_acc, 5, n1, n // n1) for n1 in (64, 128, 256)]
+    assert max(vals) - min(vals) < 0.01
+    assert min(vals) > 0.99
+    assert vrr_chunked(7, 5, 16, 262144 // 16) < vrr_chunked(7, 5, 128, 262144 // 128)
+
+
+# -------------------------------- sparsity ---------------------------------
+
+
+def test_sparsity_identity_at_nzr_one():
+    assert vrr_sparse(8, 5, 4096, 1.0) == pytest.approx(vrr(8, 5, 4096))
+
+
+def test_sparsity_shortens_effective_length():
+    # eq. (4): sparse inputs behave like a shorter accumulation
+    n = 65536
+    assert vrr_sparse(7, 5, n, 0.1) == pytest.approx(vrr(7, 5, 6554), rel=1e-9)
+    assert vrr_sparse(7, 5, n, 0.1) > vrr(7, 5, n)
+
+
+def test_chunked_sparse_consistency():
+    v = vrr_chunked_sparse(7, 5, 64, 1024, 1.0)
+    assert v == pytest.approx(vrr_chunked(7, 5, 64, 1024), rel=1e-9)
+
+
+# --------------------------- v(n) / cutoff rule -----------------------------
+
+
+def test_log_variance_lost_cutoff():
+    assert CUTOFF_LOG_V == pytest.approx(math.log(50.0))
+    # high precision: essentially no variance lost
+    assert log_variance_lost(vrr(16, 5, 4096), 4096) < 0.01
+    # hopeless precision: v(n) astronomically over the cutoff
+    assert log_variance_lost(vrr(4, 5, 65536), 65536) > 1e3
+
+
+def test_knee_sharpness():
+    # the v(n) < 50 boundary moves ~4x per extra mantissa bit (2^2 because
+    # the swamping threshold 2^m_acc enters through sqrt(n))
+    def knee(m_acc):
+        n = 2
+        while log_variance_lost(vrr(m_acc, 5, n), n) < CUTOFF_LOG_V:
+            n *= 2
+        return n
+
+    k8, k9, k10 = knee(8), knee(9), knee(10)
+    assert 2 <= k9 / k8 <= 8
+    assert 2 <= k10 / k9 <= 8
+
+
+# ------------------------- quadrature consistency ---------------------------
+
+
+def test_quadrature_matches_exact_sum(monkeypatch):
+    # force the geometric-grid path at a length the exact path can check
+    n, m_acc = 16384, 8
+    exact = vrr(m_acc, 5, n)
+    monkeypatch.setattr(_vrr_module, "_EXACT_SUM_MAX", 100)
+    approx = vrr(m_acc, 5, n)
+    assert approx == pytest.approx(exact, rel=2e-3)
+
+
+def test_quadrature_matches_exact_sum_lemma(monkeypatch):
+    n, m_acc = 10000, 7
+    exact = vrr_full_swamping(m_acc, n)
+    monkeypatch.setattr(_vrr_module, "_EXACT_SUM_MAX", 100)
+    approx = vrr_full_swamping(m_acc, n)
+    assert approx == pytest.approx(exact, rel=2e-3)
