@@ -17,16 +17,22 @@ from repro.core.policy import AccumulationPolicy, plan_for_model
 from repro.data.pipeline import DataConfig, SyntheticLM
 from repro.models.api import get_model
 from repro.train import optimizer as O
-from repro.train.loop import TrainConfig, init_train_state, make_train_step
+from repro.train.loop import (TrainConfig, init_train_state, make_train_step,
+                              warmup_gemm_autotune)
 
 
 def train_once(arch: str, policy_mode: str, pp: int, *, steps: int,
-               seq: int = 64, batch: int = 8, seed: int = 0) -> list[float]:
+               seq: int = 64, batch: int = 8, seed: int = 0,
+               autotune: bool = False) -> list[float]:
     cfg = get_smoke_config(arch)
     pol = AccumulationPolicy(
         mode=policy_mode, perturbation=pp if policy_mode == "perturbed" else 0)
     cfg = plan_for_model(cfg, seq_len=seq, global_batch=batch, policy=pol)
     model = get_model(cfg)
+    if autotune and policy_mode != "exact":
+        # fill the tuning table so the jit trace below picks tuned blocks
+        # for every fused GEMM (FWD/BWD/GRAD of each dense shape)
+        warmup_gemm_autotune(model, seq_len=seq, global_batch=batch)
     tc = TrainConfig(opt=O.OptConfig(lr=3e-3, warmup_steps=10,
                                      total_steps=steps))
     state = init_train_state(model, jax.random.PRNGKey(seed), tc)
@@ -40,7 +46,8 @@ def train_once(arch: str, policy_mode: str, pp: int, *, steps: int,
     return losses
 
 
-def run(csv=False, steps: int = 60, arch: str = "qwen2-1.5b"):
+def run(csv=False, steps: int = 60, arch: str = "qwen2-1.5b",
+        autotune: bool = True):
     runs = {
         "exact": ("exact", 0),
         "PP= 0": ("predicted", 0),
@@ -50,7 +57,7 @@ def run(csv=False, steps: int = 60, arch: str = "qwen2-1.5b"):
     print(f"### Fig 6 analogue: {arch} smoke, {steps} steps, synthetic LM")
     final = {}
     for name, (mode, pp) in runs.items():
-        losses = train_once(arch, mode, pp, steps=steps)
+        losses = train_once(arch, mode, pp, steps=steps, autotune=autotune)
         tail = float(np.mean(losses[-10:]))
         final[name] = tail
         marks = " ".join(f"{losses[i]:.2f}" for i in

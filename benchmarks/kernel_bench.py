@@ -2,31 +2,34 @@
 
 Wall-times here are *not* TPU numbers (Pallas interpret mode executes the
 kernel body in Python); the quantities that transfer are the block
-decompositions, VMEM working sets, and the numerical agreement with the
-pure-jnp oracle.  The TPU-relevant accumulator-width -> area trade is the
-subject of the paper's Figure 1b, reproduced analytically in fpu_area().
+decompositions, VMEM working sets, the pallas_call (= HBM round-trip)
+counts, and the numerical agreement with the pure-jnp oracle.  The
+TPU-relevant accumulator-width -> area trade is the subject of the paper's
+Figure 1b, reproduced analytically in fpu_area().
+
+Timing runs through ``repro.kernels.autotune.time_kernel`` — the same
+harness the block autotuner ranks candidates with — and the results are
+also written to ``BENCH_kernels.json`` so the fused-vs-unfused trajectory
+is machine-readable across PRs.
 """
 
 from __future__ import annotations
 
-import time
+import json
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.policy import GEMMPrecision
+from repro.kernels.autotune import time_kernel
+from repro.kernels.common import count_pallas_calls
+from repro.kernels.fused import qmatmul_fused
+from repro.kernels.ops import QDotConfig, qdot
 from repro.kernels.qmatmul import qmatmul_pallas
 from repro.kernels.quantize import quantize_pallas
 from repro.kernels.ref import ref_qmatmul, ref_quantize
-
-
-def _time(fn, *args, reps=3):
-    fn(*args)  # compile
-    t0 = time.perf_counter()
-    for _ in range(reps):
-        out = fn(*args)
-    jax.block_until_ready(out)
-    return (time.perf_counter() - t0) / reps * 1e6  # us
+from repro.quant.formats import FP8_152
 
 
 def fpu_area(e: int, m: int) -> float:
@@ -39,31 +42,81 @@ def fpu_area(e: int, m: int) -> float:
     return (mult + acc + exp) / fp32
 
 
-def run(csv=False):
-    rng = np.random.RandomState(0)
-    rows = []
-
+def _bench_quantize(rng, results):
     x = jnp.asarray(rng.standard_normal((256, 128)).astype(np.float32))
-    t_q = _time(lambda a: quantize_pallas(a, e=5, m=2), x)
-    t_qr = _time(lambda a: ref_quantize(a, e=5, m=2), x)
+    t_q = time_kernel(lambda a: quantize_pallas(a, e=5, m=2), x)
+    t_qr = time_kernel(lambda a: ref_quantize(a, e=5, m=2), x)
     match = np.array_equal(np.asarray(quantize_pallas(x, e=5, m=2)),
                            np.asarray(ref_quantize(x, e=5, m=2)))
-    rows.append(("quantize_pallas_256x128", t_q, f"ref_us={t_qr:.0f};bitexact={match}"))
+    results.append({"name": "quantize_pallas_256x128", "us": t_q,
+                    "ref_us": t_qr, "bitexact": bool(match)})
 
-    a = jnp.asarray(rng.standard_normal((128, 512)).astype(np.float32))
-    b = jnp.asarray(rng.standard_normal((512, 128)).astype(np.float32))
-    t_m = _time(lambda a, b: qmatmul_pallas(a, b, e_acc=6, m_acc=9, block_k=128), a, b)
-    t_mr = _time(lambda a, b: ref_qmatmul(a, b, e_acc=6, m_acc=9, block_k=128), a, b)
-    err = float(jnp.max(jnp.abs(
-        qmatmul_pallas(a, b, e_acc=6, m_acc=9, block_k=128)
-        - ref_qmatmul(a, b, e_acc=6, m_acc=9, block_k=128))))
-    rows.append(("qmatmul_pallas_128x512x128", t_m, f"ref_us={t_mr:.0f};maxerr={err:.2e}"))
+
+def _bench_fused_vs_unfused(rng, results):
+    """The PR-1 tentpole measurement: the fused quantize+GEMM pipeline vs
+    the 3-pass composition, same numerics, 1/3 of the pallas passes."""
+    m, k, n = 128, 512, 128
+    a = jnp.asarray(rng.standard_normal((m, k)).astype(np.float32))
+    b = jnp.asarray(rng.standard_normal((k, n)).astype(np.float32))
+    kw = dict(e_acc=6, m_acc=9, block_k=128)
+
+    def unfused(a, b):
+        return qmatmul_pallas(quantize_pallas(a, e=5, m=2),
+                              quantize_pallas(b, e=5, m=2), **kw)
+
+    def fused(a, b):
+        return qmatmul_fused(a, b, repr_fmt=FP8_152, **kw)
+
+    t_unf = time_kernel(unfused, a, b)
+    t_fus = time_kernel(fused, a, b)
+    t_ref = time_kernel(
+        lambda a, b: ref_qmatmul(ref_quantize(a, e=5, m=2),
+                                 ref_quantize(b, e=5, m=2), **kw), a, b)
+    bitexact = np.array_equal(np.asarray(fused(a, b)),
+                              np.asarray(unfused(a, b)))
+    passes_unf = count_pallas_calls(unfused, a, b)
+    passes_fus = count_pallas_calls(fused, a, b)
+    results.append({
+        "name": f"qmatmul_q152_{m}x{k}x{n}",
+        "fused_us": t_fus, "unfused_us": t_unf, "ref_us": t_ref,
+        "fused_passes": passes_fus, "unfused_passes": passes_unf,
+        "bitexact": bool(bitexact),
+    })
+
+    # the full qdot training op: FWD + BWD + GRAD pallas passes
+    p = GEMMPrecision(m_acc=9, e_acc=6, chunk=64)
+    for fused_flag in (True, False):
+        cfg = QDotConfig(fwd=p, bwd=p, grad=p, repr_fmt=FP8_152,
+                         fused=fused_flag)
+
+        # jit the whole step: time the cached executable, not the per-call
+        # retrace of the custom_vjp plumbing
+        step = jax.jit(lambda a, b, _cfg=cfg: jax.value_and_grad(
+            lambda x, w: jnp.sum(qdot(x, w, _cfg)), argnums=(0, 1))(a, b))
+
+        t = time_kernel(step, a, b)
+        results.append({
+            "name": f"qdot_train_{'fused' if fused_flag else 'unfused'}_{m}x{k}x{n}",
+            "us": t, "passes": count_pallas_calls(step, a, b),
+        })
+
+
+def run(csv=False, json_path="BENCH_kernels.json"):
+    rng = np.random.RandomState(0)
+    results: list[dict] = []
+
+    _bench_quantize(rng, results)
+    _bench_fused_vs_unfused(rng, results)
 
     print("### kernel micro-bench (interpret mode on CPU — correctness proxy)")
-    for name, us, derived in rows:
-        print(f"{name:30s} {us:10.0f}us  {derived}")
+    for r in results:
+        us = r.get("us", r.get("fused_us", 0.0))
+        derived = ";".join(f"{k}={v:.0f}" if isinstance(v, float) else f"{k}={v}"
+                           for k, v in r.items() if k not in ("name",))
+        print(f"{r['name']:34s} {us:10.0f}us  {derived}")
 
     print("\n### FPU area model (paper Fig. 1b): relative area vs FP32 MAC")
+    areas = {}
     for label, e, m_in, m_acc in [
         ("FP32/FP32 (baseline)", 8, 23, 23),
         ("FP16/FP32 (MPT)", 5, 10, 23),
@@ -78,11 +131,21 @@ def run(csv=False):
         exp = 8 * e
         fp32 = 24 ** 2 + 4 * 24 + 8 * 8
         area = (mult + acc + exp) / fp32
+        areas[label] = round(area, 4)
         print(f"  {label:42s} {area:6.3f}x")
-        rows.append((f"area_{label.split()[0]}", 0.0, f"{area:.3f}x"))
     print("=> narrowing ONLY the accumulator (FP8/FP16 -> FP8/FP11) buys the "
           "paper's extra ~1.5-2.2x FPU area reduction")
-    return rows
+
+    if json_path:
+        payload = {"results": results, "fpu_area": areas}
+        with open(json_path, "w") as f:
+            json.dump(payload, f, indent=1)
+        print(f"\nwrote {json_path}")
+
+    gemm = next(r for r in results if r["name"].startswith("qmatmul_q152"))
+    return {"fused_passes": gemm["fused_passes"],
+            "unfused_passes": gemm["unfused_passes"],
+            "bitexact": gemm["bitexact"]}
 
 
 if __name__ == "__main__":

@@ -1,0 +1,362 @@
+"""Kernel registry + block-size autotuner with a persistent JSON tuning table.
+
+The Pallas GEMMs are parameterized by an MXU block decomposition
+(block_m, block_n, block_k).  Only block_m / block_n are free perf knobs;
+block_k is *numerics*: for a narrow accumulator it IS the paper's chunk
+length n1 (the carry is rounded once per K-tile), and even for the wide
+degenerate path it fixes the f32 partial-sum grouping — so the tuner pins
+it (to the policy's chunk, or 128 for wide) and results never depend on
+what is in the tuning table.
+
+Components:
+
+* a **kernel registry** — kernels self-register by name at import time
+  (``@register_kernel("qmatmul_fused")``) so benchmarks/tools can enumerate
+  and fetch them without hard-coding imports;
+* ``candidate_blocks`` — MXU-aligned (block_m, block_n, block_k) triples
+  constrained by the VMEM working-set budget (A-tile + B-tile + output tile
+  + f32 carry scratch, plus the quantized-operand tiles when the fused
+  kernel emits residuals) and by the chunk length as above;
+* ``time_kernel`` — the wall-clock harness (compile once, then average over
+  reps); ``benchmarks/kernel_bench.py`` uses this same function so tuner
+  decisions and reported numbers come from one measurement path;
+* ``TuningTable`` — a JSON file mapping a problem key (shape + chunk +
+  accumulator/representation formats + per-operand quantization + residual
+  emission) to the winning blocks; ``blocks_for`` is the trace-time consult
+  used by
+  ``repro.kernels.ops.qdot`` (shape tuples are static under jit, so the
+  lookup is pure Python at trace time and free at run time).
+
+On this CPU container the timings run in Pallas interpret mode — a proxy
+that ranks by work per block decomposition, not TPU silicon truth (see
+ROADMAP open items for on-device validation).  The table format is the
+contract; re-tuning on real hardware just rewrites the JSON.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+import time
+from typing import Any, Callable
+
+import jax
+
+__all__ = [
+    "register_kernel",
+    "get_kernel",
+    "registered_kernels",
+    "vmem_block_bytes",
+    "candidate_blocks",
+    "time_kernel",
+    "TuningTable",
+    "get_table",
+    "set_table_path",
+    "blocks_for",
+    "fmt_tuple",
+    "autotune_qmatmul",
+]
+
+# --------------------------------------------------------------------------
+# kernel registry
+# --------------------------------------------------------------------------
+
+_REGISTRY: dict[str, Callable] = {}
+
+
+def register_kernel(name: str):
+    """Decorator: publish a kernel callable under ``name``."""
+
+    def deco(fn: Callable) -> Callable:
+        _REGISTRY[name] = fn
+        return fn
+
+    return deco
+
+
+def get_kernel(name: str) -> Callable:
+    import repro.kernels  # noqa: F401  (importing the package populates the registry)
+
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown kernel {name!r}; registered: {sorted(_REGISTRY)}")
+    return _REGISTRY[name]
+
+
+def registered_kernels() -> dict[str, Callable]:
+    import repro.kernels  # noqa: F401
+
+    return dict(_REGISTRY)
+
+
+# --------------------------------------------------------------------------
+# candidate enumeration
+# --------------------------------------------------------------------------
+
+# Default VMEM working-set budget for one grid step.  ~16MB per TPU core;
+# half is left for Pallas's double-buffered pipeline and the carry scratch.
+VMEM_BUDGET_BYTES = int(os.environ.get("REPRO_VMEM_BUDGET", 8 * 2**20))
+
+# MXU-aligned tile edges the tuner considers (lane width 128 and multiples).
+_TILE_EDGES = (128, 256, 512)
+
+
+def vmem_block_bytes(block_m: int, block_n: int, block_k: int,
+                     *, emit_quantized: bool = False) -> int:
+    """f32 VMEM working set of one fused-GEMM grid step: A + B + out tiles
+    plus the carry scratch (same shape as out); with ``emit_quantized`` the
+    quantized-operand output tiles are also resident."""
+    elems = block_m * block_k + block_k * block_n + 2 * block_m * block_n
+    if emit_quantized:
+        elems += block_m * block_k + block_k * block_n
+    return 4 * elems
+
+
+def candidate_blocks(m: int, k: int, n: int, *, chunk: int = 0,
+                     emit_quantized: bool = False,
+                     vmem_budget: int = VMEM_BUDGET_BYTES) -> list[tuple[int, int, int]]:
+    """MXU-aligned (block_m, block_n, block_k) candidates for an M*K*N GEMM.
+
+    block_k is always pinned, never swept: for a narrow accumulator it is
+    the rounding cadence n1 (``chunk``; moving it changes the *result*), and
+    for wide accumulation it still fixes the f32 partial-sum grouping, so
+    pinning it at 128 keeps results reproducible across machines with
+    different tuning tables.  Only block_m / block_n — provably
+    schedule-only (the per-output-element reduction order over K is
+    untouched) — are tuned.
+    """
+
+    def edges(dim: int) -> list[int]:
+        padded = max(-(-dim // 128) * 128, 128)
+        return [t for t in _TILE_EDGES if t <= padded] or [128]
+
+    bk = chunk if chunk > 0 else 128
+    out = [
+        (bm, bn, bk)
+        for bm in edges(m)
+        for bn in edges(n)
+        if vmem_block_bytes(bm, bn, bk, emit_quantized=emit_quantized) <= vmem_budget
+    ]
+    return out or [(128, 128, bk)]
+
+
+# --------------------------------------------------------------------------
+# timing harness (shared with benchmarks/kernel_bench.py)
+# --------------------------------------------------------------------------
+
+
+def time_kernel(fn: Callable, *args, reps: int = 3) -> float:
+    """Mean wall-time of ``fn(*args)`` in microseconds, after one warm-up
+    call that absorbs compilation."""
+    jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+# --------------------------------------------------------------------------
+# tuning table
+# --------------------------------------------------------------------------
+
+DEFAULT_TABLE_PATH = os.environ.get(
+    "REPRO_AUTOTUNE_TABLE",
+    os.path.join(os.path.expanduser("~"), ".cache", "repro", "autotune.json"),
+)
+
+
+def fmt_tuple(repr_fmt) -> tuple[int, int] | None:
+    """Normalize an FPFormat / (e, m) tuple / None to a plain tuple — the
+    single normalization used by table keys, the warmup, and qdot."""
+    if repr_fmt is None:
+        return None
+    if isinstance(repr_fmt, tuple):
+        return (int(repr_fmt[0]), int(repr_fmt[1]))
+    return (int(repr_fmt.e), int(repr_fmt.m))
+
+
+def _table_key(m: int, k: int, n: int, chunk: int, e_acc: int, m_acc: int,
+               repr_fmt, emit_quantized: bool,
+               quantize_a: bool, quantize_b: bool) -> str:
+    """Problem key: shape AND the full kernel configuration — accumulator
+    format, representation format, per-operand quantization, residual
+    emission — so differently configured GEMMs over the same shape never
+    share an entry."""
+    r = fmt_tuple(repr_fmt)
+    if r is None:
+        # no representation format: the quantize flags are inert — fold
+        # them to the canonical value so equivalent kernels share one entry
+        quantize_a = quantize_b = True
+    rs = "none" if r is None else f"{r[0]}.{r[1]}"
+    return (f"{m}x{k}x{n}:c{chunk}:acc{e_acc}.{m_acc}:r{rs}"
+            f":qa{int(bool(quantize_a))}qb{int(bool(quantize_b))}"
+            f":e{int(bool(emit_quantized))}")
+
+
+class TuningTable:
+    """JSON-backed map from GEMM problem key to the winning block triple.
+
+    Entries: ``{"block_m", "block_n", "block_k", "us", "candidates"}``.
+    ``save`` re-reads the file and merges before the atomic tmp+rename
+    write, so concurrent tuners neither tear the file nor drop each
+    other's entries (last writer wins only on identical keys); reads are
+    cached in memory for the trace-time fast path.
+    """
+
+    def __init__(self, path: str | None = None):
+        self.path = path or DEFAULT_TABLE_PATH
+        self._entries: dict[str, dict] | None = None
+
+    def entries(self) -> dict[str, dict]:
+        if self._entries is None:
+            try:
+                with open(self.path) as f:
+                    self._entries = json.load(f)
+            except (FileNotFoundError, json.JSONDecodeError):
+                self._entries = {}
+        return self._entries
+
+    def get(self, m: int, k: int, n: int, chunk: int, *, e_acc: int = 8,
+            m_acc: int = 23, repr_fmt=None, emit_quantized: bool = False,
+            quantize_a: bool = True, quantize_b: bool = True) -> dict | None:
+        return self.entries().get(
+            _table_key(m, k, n, chunk, e_acc, m_acc, repr_fmt,
+                       emit_quantized, quantize_a, quantize_b))
+
+    def put(self, m: int, k: int, n: int, chunk: int, entry: dict, *,
+            e_acc: int = 8, m_acc: int = 23, repr_fmt=None,
+            emit_quantized: bool = False, quantize_a: bool = True,
+            quantize_b: bool = True, persist: bool = True) -> None:
+        key = _table_key(m, k, n, chunk, e_acc, m_acc, repr_fmt,
+                         emit_quantized, quantize_a, quantize_b)
+        self.entries()[key] = entry
+        if persist:
+            self.save()
+
+    def save(self) -> None:
+        # merge-on-save: pick up entries another process tuned since we
+        # last read, preferring our own on key collisions
+        try:
+            with open(self.path) as f:
+                merged = json.load(f)
+        except (FileNotFoundError, json.JSONDecodeError):
+            merged = {}
+        merged.update(self.entries())
+        self._entries = merged
+        d = os.path.dirname(os.path.abspath(self.path))
+        os.makedirs(d, exist_ok=True)
+        fd, tmp = tempfile.mkstemp(dir=d, suffix=".tmp")
+        with os.fdopen(fd, "w") as f:
+            json.dump(merged, f, indent=1, sort_keys=True)
+        os.replace(tmp, self.path)
+
+
+_TABLE: TuningTable | None = None
+
+
+def get_table() -> TuningTable:
+    global _TABLE
+    if _TABLE is None:
+        _TABLE = TuningTable()
+    return _TABLE
+
+
+def set_table_path(path: str | None) -> TuningTable:
+    """Point the process-global table at ``path`` (tests, custom caches)."""
+    global _TABLE
+    _TABLE = TuningTable(path)
+    return _TABLE
+
+
+def blocks_for(m: int, k: int, n: int, chunk: int = 0, *, e_acc: int = 8,
+               m_acc: int = 23, repr_fmt=None, emit_quantized: bool = False,
+               quantize_a: bool = True,
+               quantize_b: bool = True) -> tuple[int, int, int]:
+    """Trace-time consult: tuned blocks for this GEMM configuration, or the
+    safe default (128, 128, chunk-or-128) when it has not been tuned.
+
+    block_k is ALWAYS the pinned cadence (chunk, or 128 for wide) — never
+    taken from the table — so qdot numerics cannot depend on tuning state.
+    """
+    bk = chunk if chunk > 0 else 128
+    e = get_table().get(m, k, n, chunk, e_acc=e_acc, m_acc=m_acc,
+                        repr_fmt=repr_fmt, emit_quantized=emit_quantized,
+                        quantize_a=quantize_a, quantize_b=quantize_b)
+    if e is not None:
+        return (int(e["block_m"]), int(e["block_n"]), bk)
+    return (128, 128, bk)
+
+
+# --------------------------------------------------------------------------
+# the tuner
+# --------------------------------------------------------------------------
+
+
+def autotune_qmatmul(
+    m: int,
+    k: int,
+    n: int,
+    *,
+    chunk: int = 0,
+    e_acc: int = 8,
+    m_acc: int = 23,
+    repr_fmt: Any = None,
+    emit_quantized: bool = False,
+    quantize_a: bool = True,
+    quantize_b: bool = True,
+    reps: int = 2,
+    seed: int = 0,
+    table: TuningTable | None = None,
+    persist: bool = True,
+    verbose: bool = False,
+) -> dict:
+    """Time every admissible block decomposition of the fused GEMM on random
+    data and record the winner in the tuning table.
+
+    Returns the table entry.  Re-tuning an already-tuned shape overwrites it
+    (the table is a cache, not an append log).
+    """
+    import jax.numpy as jnp
+
+    from repro.kernels.fused import qmatmul_fused  # late: avoid import cycle
+
+    repr_fmt = fmt_tuple(repr_fmt)
+    cfg_key = dict(e_acc=e_acc, m_acc=m_acc, repr_fmt=repr_fmt,
+                   emit_quantized=emit_quantized,
+                   quantize_a=quantize_a, quantize_b=quantize_b)
+    table = table or get_table()
+    cached = table.get(m, k, n, chunk, **cfg_key)
+    if cached is not None and cached.get("reps", 0) >= reps:
+        return cached
+
+    key = jax.random.PRNGKey(seed)
+    ka, kb = jax.random.split(key)
+    a = jax.random.normal(ka, (m, k), jnp.float32)
+    b = jax.random.normal(kb, (k, n), jnp.float32)
+
+    cands = candidate_blocks(m, k, n, chunk=chunk, emit_quantized=emit_quantized)
+    best: tuple[float, tuple[int, int, int]] | None = None
+    for bm, bn, bk in cands:
+        def run(a, b, _bm=bm, _bn=bn, _bk=bk):
+            return qmatmul_fused(
+                a, b, repr_fmt=repr_fmt, e_acc=e_acc, m_acc=m_acc,
+                block_m=_bm, block_n=_bn, block_k=_bk,
+                quantize_a=quantize_a, quantize_b=quantize_b,
+                return_quantized=emit_quantized,
+            )
+
+        us = time_kernel(run, a, b, reps=reps)
+        if verbose:
+            print(f"  autotune {m}x{k}x{n} c{chunk}: "
+                  f"({bm},{bn},{bk}) -> {us:.0f}us")
+        if best is None or us < best[0]:
+            best = (us, (bm, bn, bk))
+
+    us, (bm, bn, bk) = best
+    entry = {
+        "block_m": bm, "block_n": bn, "block_k": bk,
+        "us": round(us, 1), "candidates": len(cands), "reps": reps,
+    }
+    table.put(m, k, n, chunk, entry, persist=persist, **cfg_key)
+    return entry

@@ -5,12 +5,59 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-__all__ = ["quantize_block", "INTERPRET"]
+__all__ = ["quantize_block", "INTERPRET", "pad2d", "count_pallas_calls"]
 
 # Pallas kernels target TPU; on any other backend (this container is
 # CPU-only) they run in interpret mode, which executes the kernel body with
 # the same block decomposition.
 INTERPRET = jax.default_backend() != "tpu"
+
+
+def pad2d(x: jnp.ndarray, rows: int, cols: int) -> jnp.ndarray:
+    """Zero-pad a 2D float array up to (rows, cols) multiples, as float32.
+
+    Zero padding composes exactly with the (1, e, m) quantizer (q(0) = 0) and
+    with the chunked carry update (adding an all-zero chunk product leaves the
+    already-quantized carry unchanged), so padded and unpadded GEMMs agree
+    bit-for-bit on the valid region.
+    """
+    r, c = x.shape
+    rp = -(-r // rows) * rows
+    cp = -(-c // cols) * cols
+    return jnp.pad(x.astype(jnp.float32), ((0, rp - r), (0, cp - c)))
+
+
+def count_pallas_calls(fn, *args, **kwargs) -> int:
+    """Number of ``pallas_call`` equations in ``jax.make_jaxpr(fn)(*args)``,
+    including nested sub-jaxprs (custom_vjp bodies, scans, cond branches).
+
+    This is the unit the fused-GEMM work is accounted in: one pallas_call ==
+    one HBM round-trip over its operands.
+    """
+    import functools
+
+    jaxpr = jax.make_jaxpr(functools.partial(fn, **kwargs))(*args)
+    return _count_eqns(jaxpr.jaxpr)
+
+
+def _count_eqns(jaxpr) -> int:
+    n = 0
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == "pallas_call":
+            n += 1
+        for v in eqn.params.values():
+            n += _count_in_param(v)
+    return n
+
+
+def _count_in_param(v) -> int:
+    if hasattr(v, "jaxpr"):  # ClosedJaxpr
+        return _count_eqns(v.jaxpr)
+    if hasattr(v, "eqns"):  # raw Jaxpr
+        return _count_eqns(v)
+    if isinstance(v, (list, tuple)):
+        return sum(_count_in_param(x) for x in v)
+    return 0
 
 
 def quantize_block(x: jnp.ndarray, e: int, m: int) -> jnp.ndarray:

@@ -1,0 +1,190 @@
+"""Pallas TPU kernel: fused representation-quantization + chunked GEMM.
+
+The paper's MAC unit is ONE datapath: (1,5,2)-quantized operands feed a
+multiplier whose running sum lives in a narrow (1, e_acc, m_acc) chunked
+accumulator.  The unfused software realization (quantize_pallas on A, on B,
+then qmatmul_pallas) pays two extra HBM round-trips per GEMM just to
+materialize the quantized operands.  This kernel moves the representation
+quantization of each A/B tile *inside* the matmul body — operands are
+quantized on the VPU right after the tile lands in VMEM, then contracted on
+the MXU — so one ``pallas_call`` covers the whole datapath.
+
+Bit-exactness contract: ``quantize_block`` is elementwise and zero-padding
+is a fixed point of the quantizer, so quantizing per-tile inside the kernel
+produces exactly the values the standalone pre-pass would have written to
+HBM; the chunked-carry rounding then sees identical inputs in an identical
+order.  ``tests/test_fused.py`` pins this (assert_array_equal against the
+unfused composition, ragged shapes included).
+
+The tile quantization is recomputed per grid step (an A-tile is re-quantized
+once per N-tile visit).  That is VPU work overlapped with the MXU contraction
+and is the standard fusion trade: redundant on-chip compute for eliminated
+HBM traffic.
+
+``return_quantized=True`` additionally emits the quantized operands as
+outputs — the training path saves them as residuals so the backward GEMMs
+consume already-quantized tensors and re-quantization is free (the quantizer
+is idempotent; ``quantize_a=False``/``quantize_b=False`` skip it outright).
+Caveat: the residual out_specs revisit blocks (aq ignores the j grid axis,
+bq ignores i), so on compiled TPU each residual block is written back once
+per revisit, not once — for very wide N (lm_head-scale) that write traffic
+can rival the pre-pass the fusion removed.  The pallas-pass count reported
+by the benchmarks is therefore not a pure HBM-traffic proxy for the emitq
+variant; see the ROADMAP open item on restructuring residual emission.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.autotune import fmt_tuple, register_kernel
+from repro.kernels.common import INTERPRET, pad2d, quantize_block
+
+__all__ = ["qmatmul_fused"]
+
+# identity quantization (folds away inside quantize_block at trace time)
+_WIDE = (8, 23)
+
+
+def _fused_kernel(a_ref, b_ref, o_ref, acc_ref, *, e_r, m_r, qa, qb,
+                  e_acc, m_acc):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # representation quantization of the operand tiles, in VMEM (VPU)
+    a = quantize_block(a_ref[...], e_r, m_r) if qa else a_ref[...]
+    b = quantize_block(b_ref[...], e_r, m_r) if qb else b_ref[...]
+    # intra-chunk: one MXU tile contraction, ideal (f32) accumulation
+    partial = jnp.dot(a, b, preferred_element_type=jnp.float32)
+    # inter-chunk: carry update rounded to the (1, e_acc, m_acc) format
+    acc_ref[...] = quantize_block(acc_ref[...] + partial, e_acc, m_acc)
+
+    @pl.when(pl.program_id(2) == pl.num_programs(2) - 1)
+    def _emit():
+        o_ref[...] = acc_ref[...]
+
+
+def _fused_kernel_emitq(a_ref, b_ref, o_ref, aq_ref, bq_ref, acc_ref, *,
+                        e_r, m_r, qa, qb, e_acc, m_acc):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    a = quantize_block(a_ref[...], e_r, m_r) if qa else a_ref[...]
+    b = quantize_block(b_ref[...], e_r, m_r) if qb else b_ref[...]
+    # residual emission: revisited blocks rewrite the same deterministic
+    # values, so the grid order over j is immaterial
+    aq_ref[...] = a
+    bq_ref[...] = b
+    partial = jnp.dot(a, b, preferred_element_type=jnp.float32)
+    acc_ref[...] = quantize_block(acc_ref[...] + partial, e_acc, m_acc)
+
+    @pl.when(pl.program_id(2) == pl.num_programs(2) - 1)
+    def _emit():
+        o_ref[...] = acc_ref[...]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("e_r", "m_r", "e_acc", "m_acc", "block_m", "block_n",
+                     "block_k", "qa", "qb", "emitq", "interpret"),
+)
+def _qmatmul_fused(a, b, *, e_r, m_r, e_acc, m_acc, block_m, block_n,
+                   block_k, qa, qb, emitq, interpret):
+    m, k = a.shape
+    _, n = b.shape
+    a32 = pad2d(a, block_m, block_k)
+    b32 = pad2d(b, block_k, block_n)
+    mp, kp = a32.shape
+    np_ = b32.shape[1]
+    grid = (mp // block_m, np_ // block_n, kp // block_k)
+
+    kw = dict(e_r=e_r, m_r=m_r, qa=qa, qb=qb, e_acc=e_acc, m_acc=m_acc)
+    in_specs = [
+        pl.BlockSpec((block_m, block_k), lambda i, j, kk: (i, kk)),
+        pl.BlockSpec((block_k, block_n), lambda i, j, kk: (kk, j)),
+    ]
+    o_spec = pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j))
+    o_shape = jax.ShapeDtypeStruct((mp, np_), jnp.float32)
+    # f32 VMEM carry tile: storage of the emulated narrow accumulator (its
+    # value is always exactly representable in (1, e_acc, m_acc) after the
+    # per-chunk rounding)
+    scratch = [pltpu.VMEM((block_m, block_n), jnp.float32)]
+
+    if not emitq:
+        out = pl.pallas_call(
+            functools.partial(_fused_kernel, **kw),
+            grid=grid,
+            in_specs=in_specs,
+            out_specs=o_spec,
+            out_shape=o_shape,
+            scratch_shapes=scratch,
+            interpret=interpret,
+        )(a32, b32)
+        return out[:m, :n]
+
+    out, aq, bq = pl.pallas_call(
+        functools.partial(_fused_kernel_emitq, **kw),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=[
+            o_spec,
+            pl.BlockSpec((block_m, block_k), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((block_k, block_n), lambda i, j, kk: (kk, j)),
+        ],
+        out_shape=[
+            o_shape,
+            jax.ShapeDtypeStruct((mp, kp), jnp.float32),
+            jax.ShapeDtypeStruct((kp, np_), jnp.float32),
+        ],
+        scratch_shapes=scratch,
+        interpret=interpret,
+    )(a32, b32)
+    return out[:m, :n], aq[:m, :k], bq[:k, :n]
+
+
+@register_kernel("qmatmul_fused")
+def qmatmul_fused(
+    a: jnp.ndarray,
+    b: jnp.ndarray,
+    *,
+    repr_fmt=None,
+    e_acc: int = 8,
+    m_acc: int = 23,
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 128,
+    quantize_a: bool = True,
+    quantize_b: bool = True,
+    return_quantized: bool = False,
+    interpret: bool = INTERPRET,
+):
+    """C[M, N] = Q(A)[M, K] @ Q(B)[K, N] with chunked (1, e_acc, m_acc)
+    accumulation, quantization fused into the GEMM (one ``pallas_call``).
+
+    * ``repr_fmt`` — representation format for the in-kernel operand
+      quantization: an ``FPFormat``, an ``(e, m)`` tuple, or None for no
+      quantization (then this is exactly ``qmatmul_pallas``).
+    * ``quantize_a`` / ``quantize_b`` — per-operand opt-out, used by the
+      backward pass where residuals are already stored quantized.
+    * ``block_k`` is the chunk length n1; ``block_m``/``block_n`` are
+      schedule-only (any choice is bit-identical — the per-output-element
+      reduction order over K is fixed).
+    * ``return_quantized=True`` returns ``(c, q_a, q_b)``: the quantized
+      operands are emitted from the same kernel for residual saving.
+    """
+    if a.ndim != 2 or b.ndim != 2 or a.shape[1] != b.shape[0]:
+        raise ValueError(f"bad shapes {a.shape} @ {b.shape}")
+    e_r, m_r = fmt_tuple(repr_fmt) or _WIDE
+    return _qmatmul_fused(
+        a, b, e_r=int(e_r), m_r=int(m_r), e_acc=e_acc, m_acc=m_acc,
+        block_m=block_m, block_n=block_n, block_k=block_k,
+        qa=quantize_a, qb=quantize_b, emitq=return_quantized,
+        interpret=interpret,
+    )

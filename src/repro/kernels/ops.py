@@ -4,6 +4,18 @@
 GEMM whose three back-propagation GEMMs (paper Fig. 2 — FWD, BWD, GRAD)
 each run with their *own* solver-assigned accumulator format, with inputs
 quantized to the representation format ((1,5,2) by default).
+
+Pipeline shape (the PR-1 tentpole): every GEMM on the qdot path is exactly
+ONE ``pallas_call`` — representation quantization happens inside the fused
+kernel (``repro.kernels.fused``), not as a standalone pre-pass, so the
+quantized operands never make an extra HBM round-trip.  The forward kernel
+emits the quantized operands as residuals; the backward GEMMs consume them
+with their in-kernel quantization switched off (free — the quantizer is
+idempotent anyway).  Block decompositions are consulted from the autotuner's
+JSON tuning table at trace time (``repro.kernels.autotune.blocks_for``).
+
+``QDotConfig(fused=False)`` keeps the original three-pass composition
+(quantize A, quantize B, chunked matmul) as a bit-exact reference oracle.
 """
 
 from __future__ import annotations
@@ -15,15 +27,17 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.policy import GEMMPrecision
+from repro.kernels.autotune import blocks_for, fmt_tuple
+from repro.kernels.fused import qmatmul_fused
 from repro.kernels.qmatmul import qmatmul_pallas
 from repro.kernels.quantize import quantize_pallas
 from repro.quant.formats import FPFormat
 
-__all__ = ["QDotConfig", "qdot", "quantize_op"]
+__all__ = ["QDotConfig", "qdot", "quantize_op", "qdot_gemm_variants"]
 
 
 def quantize_op(x: jnp.ndarray, fmt: FPFormat) -> jnp.ndarray:
-    """Quantize to (1, e, m) via the Pallas kernel."""
+    """Quantize to (1, e, m) via the standalone Pallas kernel."""
     return quantize_pallas(x, e=fmt.e, m=fmt.m)
 
 
@@ -34,12 +48,15 @@ class QDotConfig:
     ``None`` for a role means ideal (wide) accumulation for that GEMM.
     ``repr_fmt=None`` disables input quantization (accumulation-only study,
     as in the paper's experiments the representations are always (1,5,2)).
+    ``fused=False`` falls back to the unfused quantize->quantize->matmul
+    composition (reference oracle; 3 pallas_calls per GEMM instead of 1).
     """
 
     fwd: GEMMPrecision | None = None
     bwd: GEMMPrecision | None = None
     grad: GEMMPrecision | None = None
     repr_fmt: FPFormat | None = None
+    fused: bool = True
 
     @property
     def is_exact(self) -> bool:
@@ -49,6 +66,71 @@ class QDotConfig:
             and self.grad is None
             and self.repr_fmt is None
         )
+
+
+def _acc_params(p: GEMMPrecision | None) -> tuple[int, int, int]:
+    """(e_acc, m_acc, chunk) for a role; chunk=0 means wide/schedule-only."""
+    if p is None:
+        return 8, 23, 0
+    return p.e_acc, p.m_acc, p.chunk if p.chunk > 0 else 0
+
+
+def qdot_gemm_variants(cfg: QDotConfig, t: int, k: int, n: int) -> dict[str, dict]:
+    """The fused-kernel variants one ``qdot`` of x[t, k] @ w[k, n] traces,
+    keyed by role, as ``autotune_qmatmul`` keyword dicts.
+
+    This is the single source of truth the warmup autotuner keys its table
+    from — the (shape, accumulator format, quantize flags, residual
+    emission) tuples here mirror the ``_mm_fused`` call sites below, so the
+    tuned entries are exactly the ones ``blocks_for`` looks up at trace
+    time.
+    """
+    fmt = fmt_tuple(cfg.repr_fmt)
+    roles = {
+        # role: (m, k, n, precision, quantize_a, quantize_b, emit_quantized)
+        "fwd": (t, k, n, cfg.fwd, True, True, fmt is not None),
+        "fwd_eval": (t, k, n, cfg.fwd, True, True, False),
+        "bwd": (t, n, k, cfg.bwd, True, False, False),
+        "grad": (k, t, n, cfg.grad, False, True, False),
+    }
+    out = {}
+    for role, (m_, k_, n_, p, qa, qb, emitq) in roles.items():
+        e_acc, m_acc, chunk = _acc_params(p)
+        out[role] = dict(m=m_, k=k_, n=n_, chunk=chunk, e_acc=e_acc,
+                         m_acc=m_acc, repr_fmt=fmt, quantize_a=qa,
+                         quantize_b=qb, emit_quantized=emitq)
+    return out
+
+
+def _mm_fused(
+    a: jnp.ndarray,
+    b: jnp.ndarray,
+    p: GEMMPrecision | None,
+    repr_fmt: FPFormat | None,
+    *,
+    quantize_a: bool = True,
+    quantize_b: bool = True,
+    return_quantized: bool = False,
+):
+    """One fused pallas_call: Q(a) @ Q(b) under role-``p`` accumulation,
+    block decomposition consulted from the autotune table at trace time."""
+    e_acc, m_acc, chunk = _acc_params(p)
+    fmt = fmt_tuple(repr_fmt)
+    bm, bn, bk = blocks_for(
+        a.shape[0], a.shape[1], b.shape[1], chunk,
+        e_acc=e_acc, m_acc=m_acc, repr_fmt=fmt,
+        emit_quantized=return_quantized,
+        quantize_a=quantize_a, quantize_b=quantize_b)
+    return qmatmul_fused(
+        a, b,
+        repr_fmt=repr_fmt, e_acc=e_acc, m_acc=m_acc,
+        block_m=bm, block_n=bn, block_k=bk,
+        quantize_a=quantize_a, quantize_b=quantize_b,
+        return_quantized=return_quantized,
+    )
+
+
+# ------------------------- unfused reference oracle -------------------------
 
 
 def _mm(a: jnp.ndarray, b: jnp.ndarray, p: GEMMPrecision | None) -> jnp.ndarray:
@@ -62,6 +144,9 @@ def _maybe_q(x: jnp.ndarray, fmt: FPFormat | None) -> jnp.ndarray:
     return x if fmt is None else quantize_op(x, fmt)
 
 
+# --------------------------------- qdot ------------------------------------
+
+
 def qdot(x: jnp.ndarray, w: jnp.ndarray, cfg: QDotConfig) -> jnp.ndarray:
     """y[..., N] = x[..., K] @ w[K, N] with per-role reduced accumulation."""
     lead = x.shape[:-1]
@@ -73,23 +158,40 @@ def qdot(x: jnp.ndarray, w: jnp.ndarray, cfg: QDotConfig) -> jnp.ndarray:
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
 def _qdot2d(x: jnp.ndarray, w: jnp.ndarray, cfg: QDotConfig) -> jnp.ndarray:
-    return _mm(_maybe_q(x, cfg.repr_fmt), _maybe_q(w, cfg.repr_fmt), cfg.fwd)
+    if not cfg.fused:
+        return _mm(_maybe_q(x, cfg.repr_fmt), _maybe_q(w, cfg.repr_fmt), cfg.fwd)
+    return _mm_fused(x, w, cfg.fwd, cfg.repr_fmt)
 
 
 def _qdot2d_fwd(x, w, cfg):
-    xq = _maybe_q(x, cfg.repr_fmt)
-    wq = _maybe_q(w, cfg.repr_fmt)
-    return _mm(xq, wq, cfg.fwd), (xq, wq)
+    if not cfg.fused:
+        xq = _maybe_q(x, cfg.repr_fmt)
+        wq = _maybe_q(w, cfg.repr_fmt)
+        return _mm(xq, wq, cfg.fwd), (xq, wq)
+    if cfg.repr_fmt is None:
+        # nothing to quantize: residuals are the raw operands
+        return _mm_fused(x, w, cfg.fwd, None), (x, w)
+    # one pallas_call: FWD GEMM + quantized residual emission
+    y, xq, wq = _mm_fused(x, w, cfg.fwd, cfg.repr_fmt, return_quantized=True)
+    return y, (xq, wq)
 
 
 def _qdot2d_bwd(cfg, res, g):
     xq, wq = res
-    gq = _maybe_q(g, cfg.repr_fmt)
+    if not cfg.fused:
+        gq = _maybe_q(g, cfg.repr_fmt)
+        dx = _mm(gq, wq.T, cfg.bwd)
+        dw = _mm(xq.T, gq, cfg.grad)
+        return dx.astype(xq.dtype), dw.astype(wq.dtype)
+    # Residuals are stored already-quantized, so only the incoming gradient
+    # needs in-kernel quantization — still one pallas_call per GEMM.
     # BWD GEMM: dx[T, K] = g[T, N] @ w^T[N, K]   (accumulation length N)
-    dx = _mm(gq, wq.T, cfg.bwd)
+    dx = _mm_fused(g, wq.T, cfg.bwd, cfg.repr_fmt,
+                   quantize_a=True, quantize_b=False)
     # GRAD GEMM: dw[K, N] = x^T[K, T] @ g[T, N]  (accumulation length T —
     # the long one, B*T tokens; the paper's critical case)
-    dw = _mm(xq.T, gq, cfg.grad)
+    dw = _mm_fused(xq.T, g, cfg.grad, cfg.repr_fmt,
+                   quantize_a=False, quantize_b=True)
     return dx.astype(xq.dtype), dw.astype(wq.dtype)
 
 

@@ -22,7 +22,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.common import INTERPRET, quantize_block
+from repro.kernels.autotune import register_kernel
+from repro.kernels.common import INTERPRET, pad2d, quantize_block
 
 __all__ = ["qmatmul_pallas"]
 
@@ -44,6 +45,7 @@ def _qmatmul_kernel(a_ref, b_ref, o_ref, acc_ref, *, e_acc: int, m_acc: int):
         o_ref[...] = acc_ref[...]
 
 
+@register_kernel("qmatmul")
 @functools.partial(
     jax.jit,
     static_argnames=("e_acc", "m_acc", "block_m", "block_n", "block_k", "interpret"),
@@ -71,11 +73,10 @@ def qmatmul_pallas(
     m, k = a.shape
     _, n = b.shape
 
-    mp = -(-m // block_m) * block_m
-    kp = -(-k // block_k) * block_k
-    np_ = -(-n // block_n) * block_n
-    a32 = jnp.pad(a.astype(jnp.float32), ((0, mp - m), (0, kp - k)))
-    b32 = jnp.pad(b.astype(jnp.float32), ((0, kp - k), (0, np_ - n)))
+    a32 = pad2d(a, block_m, block_k)
+    b32 = pad2d(b, block_k, block_n)
+    mp, kp = a32.shape
+    np_ = b32.shape[1]
 
     out = pl.pallas_call(
         functools.partial(_qmatmul_kernel, e_acc=e_acc, m_acc=m_acc),

@@ -13,6 +13,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.autotune import register_kernel
 from repro.kernels.common import INTERPRET, quantize_block
 
 __all__ = ["quantize_pallas"]
@@ -22,6 +23,7 @@ def _quantize_kernel(x_ref, o_ref, *, e: int, m: int):
     o_ref[...] = quantize_block(x_ref[...].astype(jnp.float32), e, m)
 
 
+@register_kernel("quantize")
 @functools.partial(jax.jit, static_argnames=("e", "m", "block_rows", "interpret"))
 def quantize_pallas(
     x: jnp.ndarray,

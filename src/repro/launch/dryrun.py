@@ -175,6 +175,14 @@ def _memory(compiled) -> dict:
                 out[k] = v
         except Exception:
             pass
+    if "peak_memory_in_bytes" not in out:
+        # older jax CompiledMemoryStats has no peak field; the device
+        # working set is bounded by args + outputs + temps + code
+        parts = [out.get(k, 0) for k in (
+            "argument_size_in_bytes", "output_size_in_bytes",
+            "temp_size_in_bytes", "generated_code_size_in_bytes")]
+        if any(parts):
+            out["peak_memory_in_bytes"] = sum(parts)
     return out
 
 

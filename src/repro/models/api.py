@@ -46,3 +46,49 @@ def param_count(params: Any) -> int:
     import jax
 
     return sum(p.size for p in jax.tree.leaves(params))
+
+
+def dense_gemm_shapes(
+    cfg: ModelConfig, *, seq_len: int, global_batch: int
+) -> list[tuple[str, int, int, int, Any]]:
+    """Every quantized dense GEMM of the model as (tag, M, K, N, qcfg).
+
+    M is the token count (the fused kernel sees x flattened to 2D), K/N the
+    layer fan-in/fan-out, ``qcfg`` the layer's QDotConfig from the QuantPlan.
+    This is the work-list the autotuner warms its tuning table with
+    (``repro.train.loop.warmup_gemm_autotune``) so the subsequent jit trace
+    of the training step picks tuned block decompositions for the FWD GEMM
+    and both backward GEMMs of each shape.
+
+    Only GEMMs the family actually routes through ``dense()`` with a qcfg
+    are listed: pure-SSM models have no attention/MLP dense blocks (their
+    in/out projections take no QuantPlan entry), so for them only the
+    lm_head remains — tuning phantom shapes would waste warmup wall-clock
+    and fill the table with dead entries.
+    """
+    t = seq_len * global_batch
+    d, dh = cfg.d_model, cfg.head_dim
+    h, kv = cfg.n_heads, cfg.n_kv_heads
+    q = cfg.quant
+    entries = [("lm_head", t, d, cfg.vocab_size, q.lm_head)]
+    if cfg.family != "ssm":
+        entries += [
+            ("attn_q", t, d, h * dh, q.attn_qkv),
+            ("attn_k", t, d, kv * dh, q.attn_qkv),
+            ("attn_v", t, d, kv * dh, q.attn_qkv),
+            ("attn_out", t, h * dh, d, q.attn_out),
+        ]
+        # MoE blocks route their expert MLPs through unquantized einsums;
+        # the only dense() MLP they trace is the shared expert, whose
+        # d_ff is n_shared * d_ff_expert — not cfg.d_ff
+        if cfg.family == "moe" and cfg.moe is not None:
+            f = cfg.moe.n_shared * cfg.moe.d_ff_expert
+        else:
+            f = cfg.d_ff or d
+        if f:
+            entries += [
+                ("mlp_gate", t, d, f, q.mlp_up),
+                ("mlp_up", t, d, f, q.mlp_up),
+                ("mlp_down", t, f, d, q.mlp_down),
+            ]
+    return [e for e in entries if e[4] is not None and not e[4].is_exact]

@@ -19,6 +19,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.kernels.ops import QDotConfig, qdot
 from repro.models.config import ModelConfig, MoEConfig, SSMConfig
+from repro.sharding.compat import shard_map
 
 Params = dict[str, Any]
 
@@ -66,7 +67,10 @@ def dense(x: jnp.ndarray, w: jnp.ndarray, qcfg: QDotConfig | None = None,
     """y = x @ w (+ bias); bf16 compute, f32 accumulation.
 
     With a QDotConfig, runs the paper's reduced-accumulation Pallas path
-    (f32 carrier values, quantized per the config).
+    (f32 carrier values, quantized per the config) — one fused pallas_call
+    per GEMM: representation quantization happens inside the kernel, and
+    block decompositions come from the autotune tuning table (pre-fill it
+    with repro.train.loop.warmup_gemm_autotune for tuned blocks).
     """
     if qcfg is not None and not qcfg.is_exact:
         y = qdot(x.astype(jnp.float32), w.astype(jnp.float32), qcfg)
@@ -427,7 +431,7 @@ def moe_apply(
             aux = jax.lax.pmean(aux, axis)
             return y.reshape(bl, sl, dl), aux
 
-        out, aux = jax.shard_map(
+        out, aux = shard_map(
             local_fn,
             mesh=dist.mesh,
             in_specs=(P(), P(axis), P(axis), P(axis), P(dist.data_axes)),

@@ -1,0 +1,25 @@
+"""jax API compatibility shims for the sharding layer.
+
+The codebase targets the modern ``jax.shard_map`` entry point (with its
+``check_vma`` flag); older jax releases (< 0.5) only ship
+``jax.experimental.shard_map.shard_map`` whose equivalent flag is spelled
+``check_rep``.  ``shard_map`` below presents the modern signature on both.
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["shard_map"]
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool | None = None):
+    if hasattr(jax, "shard_map"):
+        kw = {} if check_vma is None else {"check_vma": check_vma}
+        return jax.shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw
+        )
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    kw = {} if check_vma is None else {"check_rep": check_vma}
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw)

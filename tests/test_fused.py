@@ -1,0 +1,177 @@
+"""Fused quantize+GEMM kernel: bit-exact equivalence against the unfused
+quantize_pallas -> qmatmul_pallas composition and the pure-jnp oracle, plus
+the pipeline accounting (exactly ONE pallas_call per GEMM on the qdot path).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.policy import GEMMPrecision
+from repro.kernels.common import count_pallas_calls
+from repro.kernels.fused import qmatmul_fused
+from repro.kernels.ops import QDotConfig, qdot
+from repro.kernels.qmatmul import qmatmul_pallas
+from repro.kernels.quantize import quantize_pallas
+from repro.kernels.ref import ref_qmatmul
+from repro.quant.formats import FP8_152
+from repro.quant.qnum import quantize
+
+# ragged/padded shapes exercise every block-edge case of the M/N/K padding
+SHAPES = [(128, 128, 128), (64, 256, 32), (100, 300, 50), (8, 8, 8),
+          (1, 512, 1), (130, 257, 61)]
+
+
+def _rand(m, k, n, seed):
+    rng = np.random.RandomState(seed)
+    a = jnp.asarray(rng.standard_normal((m, k)).astype(np.float32))
+    b = jnp.asarray(rng.standard_normal((k, n)).astype(np.float32))
+    return a, b
+
+
+# ------------------------- kernel-level equivalence -------------------------
+
+
+@pytest.mark.parametrize("m,k,n", SHAPES)
+@pytest.mark.parametrize("m_acc,block_k", [(5, 64), (9, 128)])
+def test_fused_matches_unfused_composition_bitexact(m, k, n, m_acc, block_k):
+    a, b = _rand(m, k, n, hash((m, k, n, m_acc)) % 2**32)
+    got = np.asarray(qmatmul_fused(
+        a, b, repr_fmt=FP8_152, e_acc=6, m_acc=m_acc, block_k=block_k))
+    want = np.asarray(qmatmul_pallas(
+        quantize_pallas(a, e=5, m=2), quantize_pallas(b, e=5, m=2),
+        e_acc=6, m_acc=m_acc, block_k=block_k))
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("m,k,n", SHAPES)
+def test_fused_matches_ref_oracle_bitexact(m, k, n):
+    a, b = _rand(m, k, n, hash((m, k, n)) % 2**32)
+    got = np.asarray(qmatmul_fused(
+        a, b, repr_fmt=FP8_152, e_acc=6, m_acc=7, block_k=64))
+    want = np.asarray(ref_qmatmul(
+        quantize(a, FP8_152), quantize(b, FP8_152),
+        e_acc=6, m_acc=7, block_k=64))
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("m,k,n", [(96, 384, 64), (100, 300, 50)])
+def test_fused_wide_degenerate_path(m, k, n):
+    # no repr quantization + (1,8,23) carry: the fused kernel IS the plain
+    # tiled matmul, bit-identical to qmatmul_pallas
+    a, b = _rand(m, k, n, 7)
+    got = np.asarray(qmatmul_fused(a, b))
+    np.testing.assert_array_equal(got, np.asarray(qmatmul_pallas(a, b)))
+    np.testing.assert_allclose(got, np.asarray(a) @ np.asarray(b),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("blocks", [(128, 128), (256, 128), (128, 256),
+                                    (256, 256)])
+def test_fused_mn_blocking_is_schedule_only(blocks):
+    # block_m/block_n must not change numerics: the per-output-element
+    # reduction order over K is fixed by block_k alone
+    bm, bn = blocks
+    a, b = _rand(300, 256, 200, 11)
+    base = np.asarray(qmatmul_fused(
+        a, b, repr_fmt=FP8_152, e_acc=6, m_acc=6, block_k=64))
+    got = np.asarray(qmatmul_fused(
+        a, b, repr_fmt=FP8_152, e_acc=6, m_acc=6,
+        block_m=bm, block_n=bn, block_k=64))
+    np.testing.assert_array_equal(got, base)
+
+
+def test_fused_emits_quantized_residuals():
+    a, b = _rand(100, 300, 50, 13)
+    y, aq, bq = qmatmul_fused(a, b, repr_fmt=FP8_152, e_acc=6, m_acc=7,
+                              block_k=64, return_quantized=True)
+    np.testing.assert_array_equal(
+        np.asarray(aq), np.asarray(quantize_pallas(a, e=5, m=2)))
+    np.testing.assert_array_equal(
+        np.asarray(bq), np.asarray(quantize_pallas(b, e=5, m=2)))
+    np.testing.assert_array_equal(
+        np.asarray(y),
+        np.asarray(qmatmul_fused(a, b, repr_fmt=FP8_152, e_acc=6, m_acc=7,
+                                 block_k=64)))
+
+
+def test_fused_requantization_is_free():
+    # quantizer idempotence: feeding already-quantized operands with
+    # quantization ON equals feeding them with quantization OFF — the
+    # backward pass relies on this to skip residual re-quantization
+    a, b = _rand(64, 128, 32, 17)
+    aq, bq = quantize(a, FP8_152), quantize(b, FP8_152)
+    on = np.asarray(qmatmul_fused(aq, bq, repr_fmt=FP8_152,
+                                  e_acc=6, m_acc=5, block_k=64))
+    off = np.asarray(qmatmul_fused(aq, bq, repr_fmt=FP8_152, e_acc=6,
+                                   m_acc=5, block_k=64,
+                                   quantize_a=False, quantize_b=False))
+    np.testing.assert_array_equal(on, off)
+
+
+# --------------------------- qdot pipeline shape ----------------------------
+
+
+def _cfg(fused=True, repr_fmt=FP8_152):
+    p = GEMMPrecision(m_acc=9, e_acc=6, chunk=64)
+    return QDotConfig(fwd=p, bwd=p, grad=p, repr_fmt=repr_fmt, fused=fused)
+
+
+def test_qdot_exactly_one_pallas_call_per_gemm():
+    x, w = _rand(32, 128, 16, 19)
+    fwd = count_pallas_calls(lambda x, w: qdot(x, w, _cfg()), x, w)
+    assert fwd == 1  # FWD GEMM, quantization fused in
+    n3 = count_pallas_calls(
+        lambda x, w: jax.value_and_grad(
+            lambda x, w: jnp.sum(qdot(x, w, _cfg())), argnums=(0, 1))(x, w),
+        x, w)
+    assert n3 == 3  # FWD + BWD + GRAD, nothing else
+    # the unfused reference composition pays 3 calls for the forward alone
+    unfused = count_pallas_calls(
+        lambda x, w: qdot(x, w, _cfg(fused=False)), x, w)
+    assert unfused == 3
+
+
+def test_qdot_fused_equals_unfused_reference_bitexact():
+    x, w = _rand(48, 256, 24, 23)
+    y_f = qdot(x, w, _cfg())
+    y_u = qdot(x, w, _cfg(fused=False))
+    np.testing.assert_array_equal(np.asarray(y_f), np.asarray(y_u))
+
+    def loss(cfg):
+        return lambda x, w: jnp.sum(jnp.sin(qdot(x, w, cfg)))
+
+    g_f = jax.grad(loss(_cfg()), argnums=(0, 1))(x, w)
+    g_u = jax.grad(loss(_cfg(fused=False)), argnums=(0, 1))(x, w)
+    for a, b in zip(g_f, g_u):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_qdot_fused_no_repr_fmt_keeps_accumulation_semantics():
+    # accumulation-only study: no input quantization, narrow carry only
+    x, w = _rand(64, 256, 32, 29)
+    cfg = QDotConfig(fwd=GEMMPrecision(m_acc=4, e_acc=6, chunk=64),
+                     repr_fmt=None)
+    y = qdot(x, w, cfg)
+    want = qmatmul_pallas(x, w, e_acc=6, m_acc=4, block_k=64)
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(want))
+    # grads flow through the wide BWD/GRAD paths
+    g = jax.grad(lambda x, w: jnp.sum(qdot(x, w, cfg)), argnums=(0, 1))(x, w)
+    g_ref = jax.grad(lambda x, w: jnp.sum(x @ w), argnums=(0, 1))(x, w)
+    for a, b in zip(g, g_ref):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-5)
+
+
+def test_qdot_batched_leading_dims_fused():
+    rng = np.random.RandomState(31)
+    x = jnp.asarray(rng.standard_normal((2, 3, 5, 64)).astype(np.float32))
+    w = jnp.asarray(rng.standard_normal((64, 8)).astype(np.float32))
+    y = qdot(x, w, _cfg())
+    assert y.shape == (2, 3, 5, 8)
+    x2 = x.reshape(-1, 64)
+    want = qdot(x2, w, _cfg()).reshape(2, 3, 5, 8)
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(want))

@@ -51,6 +51,7 @@ def test_qmatmul_wide_equals_plain_matmul(dtype):
     np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
 
 
+@pytest.mark.slow
 def test_narrow_accumulator_swamps_long_k():
     # the emulation actually exhibits swamping: a long-K matmul with a
     # narrow carry loses output variance vs exact (the paper's Figure 1

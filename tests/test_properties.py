@@ -7,6 +7,11 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+# gate, don't hard-import: keeps collection clean in environments without
+# the test extra (CI installs `.[test]` and runs these for real)
+pytest.importorskip("hypothesis", reason="needs `pip install -e .[test]`")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.policy import AccumulationPolicy, plan_for_model

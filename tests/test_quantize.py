@@ -6,6 +6,8 @@ from __future__ import annotations
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis", reason="needs `pip install -e .[test]`")
 from hypothesis import given, settings, strategies as st
 
 from repro.quant.formats import BF16_LIKE, FP8_152, FPFormat

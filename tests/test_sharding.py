@@ -147,6 +147,7 @@ def test_compressed_psum_matches_plain():
         """
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import PartitionSpec as P
+from repro.sharding.compat import shard_map
 from repro.train.compression import compressed_psum
 
 mesh = jax.make_mesh((4,), ("pod",))
@@ -157,7 +158,7 @@ def f(xs):
     return s, res
 
 with mesh:
-    out, res = jax.jit(jax.shard_map(f, mesh=mesh, in_specs=P("pod", None),
+    out, res = jax.jit(shard_map(f, mesh=mesh, in_specs=P("pod", None),
                                  out_specs=(P("pod", None), P("pod", None))))(x)
 want = jnp.sum(x, axis=0)
 got = out[0]

@@ -11,6 +11,8 @@ import math
 
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis", reason="needs `pip install -e .[test]`")
 from hypothesis import given, settings, strategies as st
 
 import sys

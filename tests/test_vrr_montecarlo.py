@@ -38,7 +38,12 @@ def mc_vrr(m_acc: int, n: int, *, chunk: int = 0, ensemble: int = 2048,
 
 @pytest.mark.parametrize(
     "m_acc,n",
-    [(8, 1024), (10, 16384), (12, 65536), (14, 65536)],
+    [
+        (8, 1024),
+        pytest.param(10, 16384, marks=pytest.mark.slow),
+        pytest.param(12, 65536, marks=pytest.mark.slow),
+        pytest.param(14, 65536, marks=pytest.mark.slow),
+    ],
 )
 def test_high_vrr_regime_tight(m_acc, n):
     th = vrr(m_acc, 5, n)
@@ -48,7 +53,15 @@ def test_high_vrr_regime_tight(m_acc, n):
     assert mc == pytest.approx(th, abs=0.08)
 
 
-@pytest.mark.parametrize("m_acc,n", [(5, 1024), (6, 2048), (7, 4096), (9, 65536)])
+@pytest.mark.parametrize(
+    "m_acc,n",
+    [
+        (5, 1024),
+        (6, 2048),
+        (7, 4096),
+        pytest.param(9, 65536, marks=pytest.mark.slow),
+    ],
+)
 def test_knee_region_theory_conservative(m_acc, n):
     th = vrr(m_acc, 5, n)
     mc = mc_vrr(m_acc, n)
