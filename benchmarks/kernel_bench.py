@@ -83,11 +83,17 @@ def _bench_fused_vs_unfused(rng, results):
         "bitexact": bool(bitexact),
     })
 
-    # the full qdot training op: FWD + BWD + GRAD pallas passes
+    # the full qdot training op — three pipeline generations:
+    #   packed:  FWD(+int8 residual epilogue) + one-pass backward pair = 2
+    #   fused:   same pass structure, f32 residual carriers (4x HBM)   = 2
+    #   unfused: standalone quantize passes + 3 GEMMs                  = 6
     p = GEMMPrecision(m_acc=9, e_acc=6, chunk=64)
-    for fused_flag in (True, False):
-        cfg = QDotConfig(fwd=p, bwd=p, grad=p, repr_fmt=FP8_152,
-                         fused=fused_flag)
+    for label, kwargs in (
+        ("packed", dict(fused=True, pack_residuals=True)),
+        ("fused", dict(fused=True, pack_residuals=False)),
+        ("unfused", dict(fused=False)),
+    ):
+        cfg = QDotConfig(fwd=p, bwd=p, grad=p, repr_fmt=FP8_152, **kwargs)
 
         # jit the whole step: time the cached executable, not the per-call
         # retrace of the custom_vjp plumbing
@@ -96,8 +102,37 @@ def _bench_fused_vs_unfused(rng, results):
 
         t = time_kernel(step, a, b)
         results.append({
-            "name": f"qdot_train_{'fused' if fused_flag else 'unfused'}_{m}x{k}x{n}",
+            "name": f"qdot_train_{label}_{m}x{k}x{n}",
             "us": t, "passes": count_pallas_calls(step, a, b),
+        })
+
+
+def _bench_residual_bytes(results):
+    """Activation-residual HBM per dense layer: int8-packed QTensor payloads
+    vs f32 carriers, measured on the residual pytree the custom_vjp saves
+    (jax.eval_shape — no FLOPs, so production shapes are free to price)."""
+    from repro.kernels.ops import _qdot2d_fwd
+
+    p = GEMMPrecision(m_acc=9, e_acc=6, chunk=64)
+    for tag, t, k, n in [
+        ("mlp_up_512x1024x4096", 512, 1024, 4096),
+        ("attn_qkv_8192x4096x4096", 8192, 4096, 4096),
+        ("bench_128x512x128", 128, 512, 128),
+    ]:
+        x = jax.ShapeDtypeStruct((t, k), jnp.float32)
+        w = jax.ShapeDtypeStruct((k, n), jnp.float32)
+
+        def nbytes(pack):
+            cfg = QDotConfig(fwd=p, bwd=p, grad=p, repr_fmt=FP8_152,
+                             pack_residuals=pack)
+            _, res = jax.eval_shape(lambda x, w: _qdot2d_fwd(x, w, cfg), x, w)
+            return sum(l.size * l.dtype.itemsize for l in jax.tree.leaves(res))
+
+        packed, carrier = nbytes(True), nbytes(False)
+        results.append({
+            "name": f"residual_bytes_{tag}",
+            "packed_bytes": packed, "f32_carrier_bytes": carrier,
+            "ratio": round(carrier / packed, 2),
         })
 
 
@@ -107,6 +142,7 @@ def run(csv=False, json_path="BENCH_kernels.json"):
 
     _bench_quantize(rng, results)
     _bench_fused_vs_unfused(rng, results)
+    _bench_residual_bytes(results)
 
     print("### kernel micro-bench (interpret mode on CPU — correctness proxy)")
     for r in results:

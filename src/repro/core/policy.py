@@ -39,7 +39,15 @@ class GEMMPrecision:
 
 @dataclass(frozen=True)
 class AccumulationPolicy:
-    """Per-(layer, role) accumulator formats for a whole model."""
+    """Per-(layer, role) accumulator formats for a whole model.
+
+    ``quantize_outputs=True`` additionally rounds every quantized GEMM's
+    OUTPUT to the representation format in the kernel epilogue (the paper's
+    scheme stores activations in (1,5,2) too) — threaded to the kernels as
+    the ``out_fmt`` consumer hint, so the rounding costs no extra pallas
+    pass and downstream consumers of the unchanged tensor can skip their
+    input quantization bit-exactly.
+    """
 
     mode: str = "exact"  # exact | predicted | perturbed
     m_p: int = 5  # product mantissa width ((1,5,2) x (1,5,2) -> 5 bits)
@@ -47,6 +55,7 @@ class AccumulationPolicy:
     perturbation: int = 0
     nzr: float = 1.0
     e_acc: int = 6
+    quantize_outputs: bool = False
 
     def for_length(self, n: int) -> GEMMPrecision | None:
         """Solve the accumulator format for accumulation length ``n``.
@@ -102,6 +111,7 @@ def plan_for_model(cfg, *, seq_len: int, global_batch: int,
             bwd=policy.for_length(fan_out),
             grad=policy.for_length(int(tokens * policy.nzr) or 1),
             repr_fmt=repr_fmt,
+            out_fmt=repr_fmt if policy.quantize_outputs else None,
         )
 
     d = cfg.d_model

@@ -22,10 +22,11 @@ Components:
   decisions and reported numbers come from one measurement path;
 * ``TuningTable`` — a JSON file mapping a problem key (shape + chunk +
   accumulator/representation formats + per-operand quantization + residual
-  emission) to the winning blocks; ``blocks_for`` is the trace-time consult
-  used by
-  ``repro.kernels.ops.qdot`` (shape tuples are static under jit, so the
-  lookup is pure Python at trace time and free at run time).
+  emission/packing + operand dtype + the VMEM ceiling of the target TPU
+  generation) to the winning blocks; ``blocks_for`` / ``pair_blocks_for``
+  are the trace-time consults used by ``repro.kernels.ops.qdot`` (shape
+  tuples are static under jit, so the lookup is pure Python at trace time
+  and free at run time).
 
 On this CPU container the timings run in Pallas interpret mode — a proxy
 that ranks by work per block decomposition, not TPU silicon truth (see
@@ -47,6 +48,8 @@ __all__ = [
     "register_kernel",
     "get_kernel",
     "registered_kernels",
+    "VMEM_PER_GENERATION",
+    "vmem_budget",
     "vmem_block_bytes",
     "candidate_blocks",
     "time_kernel",
@@ -54,8 +57,11 @@ __all__ = [
     "get_table",
     "set_table_path",
     "blocks_for",
+    "pair_blocks_for",
     "fmt_tuple",
+    "operand_dtype",
     "autotune_qmatmul",
+    "autotune_bwd_pair",
 ]
 
 # --------------------------------------------------------------------------
@@ -93,28 +99,62 @@ def registered_kernels() -> dict[str, Callable]:
 # candidate enumeration
 # --------------------------------------------------------------------------
 
-# Default VMEM working-set budget for one grid step.  ~16MB per TPU core;
-# half is left for Pallas's double-buffered pipeline and the carry scratch.
-VMEM_BUDGET_BYTES = int(os.environ.get("REPRO_VMEM_BUDGET", 8 * 2**20))
+# VMEM per core by TPU generation.  The tuning budget is HALF of it — the
+# other half is left for Pallas's double-buffered pipeline.  Tables tuned
+# under different ceilings never share entries (the ceiling is in the key),
+# so a table produced on a v4 host cannot hand a v6e-sized working set to a
+# v4 core after the fleet mixes generations.
+VMEM_PER_GENERATION = {
+    "v4": 16 * 2**20,
+    "v5e": 16 * 2**20,
+    "v5p": 16 * 2**20,
+    "v6e": 32 * 2**20,
+}
+
+
+def vmem_budget(generation: str | None = None) -> int:
+    """The VMEM working-set budget for one grid step: half the generation's
+    VMEM (REPRO_TPU_GENERATION, default v4), or REPRO_VMEM_BUDGET verbatim
+    when set."""
+    env = os.environ.get("REPRO_VMEM_BUDGET")
+    if env:
+        return int(env)
+    gen = generation or os.environ.get("REPRO_TPU_GENERATION", "v4")
+    return VMEM_PER_GENERATION.get(gen, VMEM_PER_GENERATION["v4"]) // 2
+
+
+# alias for functions whose keyword argument shadows the name
+_vmem_budget = vmem_budget
+
+# import-time snapshot, kept for callers that want a plain constant; code
+# in this package resolves vmem_budget() dynamically so REPRO_TPU_GENERATION
+# set after import is still honored
+VMEM_BUDGET_BYTES = vmem_budget()
 
 # MXU-aligned tile edges the tuner considers (lane width 128 and multiples).
 _TILE_EDGES = (128, 256, 512)
 
 
 def vmem_block_bytes(block_m: int, block_n: int, block_k: int,
-                     *, emit_quantized: bool = False) -> int:
-    """f32 VMEM working set of one fused-GEMM grid step: A + B + out tiles
-    plus the carry scratch (same shape as out); with ``emit_quantized`` the
-    quantized-operand output tiles are also resident."""
-    elems = block_m * block_k + block_k * block_n + 2 * block_m * block_n
+                     *, emit_quantized: bool = False,
+                     operand_bytes: int = 4,
+                     residual_bytes: int = 4) -> int:
+    """VMEM working set of one fused-GEMM grid step: A + B + out tiles plus
+    the carry scratch (same shape as out); with ``emit_quantized`` the
+    quantized-operand output tiles are also resident.  ``operand_bytes`` /
+    ``residual_bytes`` price int8-packed carriers (1 byte) vs f32 (4)."""
+    b = operand_bytes * (block_m * block_k + block_k * block_n)
+    b += 4 * 2 * block_m * block_n
     if emit_quantized:
-        elems += block_m * block_k + block_k * block_n
-    return 4 * elems
+        b += residual_bytes * (block_m * block_k + block_k * block_n)
+    return b
 
 
 def candidate_blocks(m: int, k: int, n: int, *, chunk: int = 0,
                      emit_quantized: bool = False,
-                     vmem_budget: int = VMEM_BUDGET_BYTES) -> list[tuple[int, int, int]]:
+                     operand_bytes: int = 4,
+                     residual_bytes: int = 4,
+                     vmem_budget: int | None = None) -> list[tuple[int, int, int]]:
     """MXU-aligned (block_m, block_n, block_k) candidates for an M*K*N GEMM.
 
     block_k is always pinned, never swept: for a narrow accumulator it is
@@ -124,7 +164,12 @@ def candidate_blocks(m: int, k: int, n: int, *, chunk: int = 0,
     different tuning tables.  Only block_m / block_n — provably
     schedule-only (the per-output-element reduction order over K is
     untouched) — are tuned.
+
+    ``vmem_budget=None`` resolves the generation ceiling at call time, so
+    REPRO_TPU_GENERATION set after import is honored.
     """
+    if vmem_budget is None:
+        vmem_budget = _vmem_budget()
 
     def edges(dim: int) -> list[int]:
         padded = max(-(-dim // 128) * 128, 128)
@@ -135,7 +180,9 @@ def candidate_blocks(m: int, k: int, n: int, *, chunk: int = 0,
         (bm, bn, bk)
         for bm in edges(m)
         for bn in edges(n)
-        if vmem_block_bytes(bm, bn, bk, emit_quantized=emit_quantized) <= vmem_budget
+        if vmem_block_bytes(bm, bn, bk, emit_quantized=emit_quantized,
+                            operand_bytes=operand_bytes,
+                            residual_bytes=residual_bytes) <= vmem_budget
     ]
     return out or [(128, 128, bk)]
 
@@ -166,6 +213,16 @@ DEFAULT_TABLE_PATH = os.environ.get(
 )
 
 
+def operand_dtype(a_packed: bool = False, b_packed: bool = False) -> str:
+    """Canonical operand-dtype key string: "f32" when both operands are f32
+    carriers, else the per-operand pair (e.g. "f32i8" = f32 A, packed-int8
+    B).  The single normalization shared by the tuner and qdot's trace-time
+    consult, so keys cannot drift between the two."""
+    if not a_packed and not b_packed:
+        return "f32"
+    return ("i8" if a_packed else "f32") + ("i8" if b_packed else "f32")
+
+
 def fmt_tuple(repr_fmt) -> tuple[int, int] | None:
     """Normalize an FPFormat / (e, m) tuple / None to a plain tuple — the
     single normalization used by table keys, the warmup, and qdot."""
@@ -178,20 +235,43 @@ def fmt_tuple(repr_fmt) -> tuple[int, int] | None:
 
 def _table_key(m: int, k: int, n: int, chunk: int, e_acc: int, m_acc: int,
                repr_fmt, emit_quantized: bool,
-               quantize_a: bool, quantize_b: bool) -> str:
+               quantize_a: bool, quantize_b: bool,
+               dtype: str = "f32", vmem: int | None = None,
+               pack_residuals: bool = False) -> str:
     """Problem key: shape AND the full kernel configuration — accumulator
-    format, representation format, per-operand quantization, residual
-    emission — so differently configured GEMMs over the same shape never
-    share an entry."""
+    format, representation format, per-operand quantization/packing, residual
+    emission, operand dtype, and the VMEM ceiling the candidates were
+    enumerated under — so differently configured GEMMs over the same shape
+    (or the same GEMM tuned for a different TPU generation) never share an
+    entry.  The output epilogue (out_fmt) is deliberately NOT keyed:
+    epilogue quantization is schedule-neutral VPU work."""
     r = fmt_tuple(repr_fmt)
     if r is None:
         # no representation format: the quantize flags are inert — fold
         # them to the canonical value so equivalent kernels share one entry
         quantize_a = quantize_b = True
     rs = "none" if r is None else f"{r[0]}.{r[1]}"
+    vm = vmem if vmem is not None else vmem_budget()
+    emit = 2 if (emit_quantized and pack_residuals) else int(bool(emit_quantized))
     return (f"{m}x{k}x{n}:c{chunk}:acc{e_acc}.{m_acc}:r{rs}"
             f":qa{int(bool(quantize_a))}qb{int(bool(quantize_b))}"
-            f":e{int(bool(emit_quantized))}")
+            f":e{emit}:d{dtype}:v{vm >> 20}")
+
+
+def _pair_key(t: int, k: int, n: int, bwd_chunk: int, grad_chunk: int,
+              bwd_acc: tuple[int, int], grad_acc: tuple[int, int],
+              repr_fmt, packed: bool, dtype: str = "f32",
+              vmem: int | None = None) -> str:
+    """Problem key for the fused backward-pair kernel (dx+dw in one pass):
+    shape, both chunk lengths, both accumulator formats, the representation
+    format, the residual carrier (packed int8 vs f32), operand dtype and
+    the VMEM ceiling."""
+    r = fmt_tuple(repr_fmt)
+    rs = "none" if r is None else f"{r[0]}.{r[1]}"
+    vm = vmem if vmem is not None else vmem_budget()
+    return (f"pair:{t}x{k}x{n}:cb{bwd_chunk}.cg{grad_chunk}"
+            f":accb{bwd_acc[0]}.{bwd_acc[1]}.accg{grad_acc[0]}.{grad_acc[1]}"
+            f":r{rs}:p{int(bool(packed))}:d{dtype}:v{vm >> 20}")
 
 
 class TuningTable:
@@ -217,22 +297,34 @@ class TuningTable:
                 self._entries = {}
         return self._entries
 
+    def get_key(self, key: str) -> dict | None:
+        return self.entries().get(key)
+
+    def put_key(self, key: str, entry: dict, *, persist: bool = True) -> None:
+        self.entries()[key] = entry
+        if persist:
+            self.save()
+
     def get(self, m: int, k: int, n: int, chunk: int, *, e_acc: int = 8,
             m_acc: int = 23, repr_fmt=None, emit_quantized: bool = False,
-            quantize_a: bool = True, quantize_b: bool = True) -> dict | None:
-        return self.entries().get(
+            quantize_a: bool = True, quantize_b: bool = True,
+            dtype: str = "f32", vmem: int | None = None,
+            pack_residuals: bool = False) -> dict | None:
+        return self.get_key(
             _table_key(m, k, n, chunk, e_acc, m_acc, repr_fmt,
-                       emit_quantized, quantize_a, quantize_b))
+                       emit_quantized, quantize_a, quantize_b,
+                       dtype=dtype, vmem=vmem, pack_residuals=pack_residuals))
 
     def put(self, m: int, k: int, n: int, chunk: int, entry: dict, *,
             e_acc: int = 8, m_acc: int = 23, repr_fmt=None,
             emit_quantized: bool = False, quantize_a: bool = True,
-            quantize_b: bool = True, persist: bool = True) -> None:
+            quantize_b: bool = True, dtype: str = "f32",
+            vmem: int | None = None, pack_residuals: bool = False,
+            persist: bool = True) -> None:
         key = _table_key(m, k, n, chunk, e_acc, m_acc, repr_fmt,
-                         emit_quantized, quantize_a, quantize_b)
-        self.entries()[key] = entry
-        if persist:
-            self.save()
+                         emit_quantized, quantize_a, quantize_b,
+                         dtype=dtype, vmem=vmem, pack_residuals=pack_residuals)
+        self.put_key(key, entry, persist=persist)
 
     def save(self) -> None:
         # merge-on-save: pick up entries another process tuned since we
@@ -271,8 +363,9 @@ def set_table_path(path: str | None) -> TuningTable:
 
 def blocks_for(m: int, k: int, n: int, chunk: int = 0, *, e_acc: int = 8,
                m_acc: int = 23, repr_fmt=None, emit_quantized: bool = False,
-               quantize_a: bool = True,
-               quantize_b: bool = True) -> tuple[int, int, int]:
+               quantize_a: bool = True, quantize_b: bool = True,
+               dtype: str = "f32", vmem: int | None = None,
+               pack_residuals: bool = False) -> tuple[int, int, int]:
     """Trace-time consult: tuned blocks for this GEMM configuration, or the
     safe default (128, 128, chunk-or-128) when it has not been tuned.
 
@@ -282,15 +375,48 @@ def blocks_for(m: int, k: int, n: int, chunk: int = 0, *, e_acc: int = 8,
     bk = chunk if chunk > 0 else 128
     e = get_table().get(m, k, n, chunk, e_acc=e_acc, m_acc=m_acc,
                         repr_fmt=repr_fmt, emit_quantized=emit_quantized,
-                        quantize_a=quantize_a, quantize_b=quantize_b)
+                        quantize_a=quantize_a, quantize_b=quantize_b,
+                        dtype=dtype, vmem=vmem, pack_residuals=pack_residuals)
     if e is not None:
         return (int(e["block_m"]), int(e["block_n"]), bk)
     return (128, 128, bk)
 
 
+def pair_blocks_for(t: int, k: int, n: int, *, bwd_chunk: int = 0,
+                    grad_chunk: int = 0, bwd_acc=(8, 23), grad_acc=(8, 23),
+                    repr_fmt=None, packed: bool = True, dtype: str = "f32",
+                    vmem: int | None = None) -> tuple[int, int, int]:
+    """Trace-time consult for the backward-pair kernel: (block_t, block_k,
+    block_n).  block_t / block_n are the two rounding cadences (grad / bwd
+    chunks — numerics, pinned); only block_k comes from the table."""
+    bt = grad_chunk if grad_chunk > 0 else 128
+    bn = bwd_chunk if bwd_chunk > 0 else 128
+    e = get_table().get_key(_pair_key(
+        t, k, n, bn, bt, tuple(bwd_acc), tuple(grad_acc), repr_fmt,
+        packed, dtype=dtype, vmem=vmem))
+    bk = int(e["block_k"]) if e is not None else 128
+    return (bt, bk, bn)
+
+
 # --------------------------------------------------------------------------
 # the tuner
 # --------------------------------------------------------------------------
+
+
+def _rand_operand(key, shape, packed: bool, repr_fmt):
+    """Random f32 timing data; packed operands are materialized as the int8
+    codes the timed kernel actually DMAs."""
+    import jax.numpy as jnp
+
+    x = jax.random.normal(key, shape, jnp.float32)
+    if not packed:
+        return x
+    if repr_fmt is None:
+        raise ValueError("packed operands need repr_fmt to encode")
+    from repro.quant.formats import FPFormat
+    from repro.quant.qtensor import QTensor
+
+    return QTensor.pack(x, FPFormat(e=repr_fmt[0], m=repr_fmt[1])).payload
 
 
 def autotune_qmatmul(
@@ -305,6 +431,11 @@ def autotune_qmatmul(
     emit_quantized: bool = False,
     quantize_a: bool = True,
     quantize_b: bool = True,
+    a_packed: bool = False,
+    b_packed: bool = False,
+    pack_residuals: bool = False,
+    dtype: str | None = None,
+    vmem: int | None = None,
     reps: int = 2,
     seed: int = 0,
     table: TuningTable | None = None,
@@ -315,27 +446,39 @@ def autotune_qmatmul(
     data and record the winner in the tuning table.
 
     Returns the table entry.  Re-tuning an already-tuned shape overwrites it
-    (the table is a cache, not an append log).
+    (the table is a cache, not an append log).  The operand dtype ("i8" for
+    packed residual inputs) and the VMEM ceiling are part of the key.
     """
-    import jax.numpy as jnp
-
     from repro.kernels.fused import qmatmul_fused  # late: avoid import cycle
 
     repr_fmt = fmt_tuple(repr_fmt)
+    dtype = dtype or operand_dtype(a_packed, b_packed)
+    budget = vmem if vmem is not None else vmem_budget()
     cfg_key = dict(e_acc=e_acc, m_acc=m_acc, repr_fmt=repr_fmt,
                    emit_quantized=emit_quantized,
-                   quantize_a=quantize_a, quantize_b=quantize_b)
+                   quantize_a=quantize_a, quantize_b=quantize_b,
+                   dtype=dtype, vmem=budget, pack_residuals=pack_residuals)
     table = table or get_table()
     cached = table.get(m, k, n, chunk, **cfg_key)
     if cached is not None and cached.get("reps", 0) >= reps:
         return cached
 
+    # NOTE: a non-default ``dtype`` (e.g. "bf16" for the MoE expert-einsum
+    # shapes) labels the KEY only — the fused kernel itself computes on f32
+    # carriers (pad2d casts on entry), so the timing is the same f32
+    # interpret-mode proxy as every other entry.  The label reserves the
+    # table slot the einsum path will consult if/when it routes through the
+    # fused kernel; a silicon re-tune overwrites the numbers in place.
     key = jax.random.PRNGKey(seed)
     ka, kb = jax.random.split(key)
-    a = jax.random.normal(ka, (m, k), jnp.float32)
-    b = jax.random.normal(kb, (k, n), jnp.float32)
+    a = _rand_operand(ka, (m, k), a_packed, repr_fmt)
+    b = _rand_operand(kb, (k, n), b_packed, repr_fmt)
 
-    cands = candidate_blocks(m, k, n, chunk=chunk, emit_quantized=emit_quantized)
+    cands = candidate_blocks(
+        m, k, n, chunk=chunk, emit_quantized=emit_quantized,
+        operand_bytes=1 if (a_packed and b_packed) else 4,
+        residual_bytes=1 if pack_residuals else 4,
+        vmem_budget=budget)
     best: tuple[float, tuple[int, int, int]] | None = None
     for bm, bn, bk in cands:
         def run(a, b, _bm=bm, _bn=bn, _bk=bk):
@@ -343,7 +486,9 @@ def autotune_qmatmul(
                 a, b, repr_fmt=repr_fmt, e_acc=e_acc, m_acc=m_acc,
                 block_m=_bm, block_n=_bn, block_k=_bk,
                 quantize_a=quantize_a, quantize_b=quantize_b,
+                a_packed=a_packed, b_packed=b_packed,
                 return_quantized=emit_quantized,
+                pack_residuals=pack_residuals,
             )
 
         us = time_kernel(run, a, b, reps=reps)
@@ -359,4 +504,74 @@ def autotune_qmatmul(
         "us": round(us, 1), "candidates": len(cands), "reps": reps,
     }
     table.put(m, k, n, chunk, entry, persist=persist, **cfg_key)
+    return entry
+
+
+def autotune_bwd_pair(
+    t: int,
+    k: int,
+    n: int,
+    *,
+    bwd_chunk: int = 0,
+    grad_chunk: int = 0,
+    bwd_acc: tuple[int, int] = (8, 23),
+    grad_acc: tuple[int, int] = (8, 23),
+    repr_fmt: Any = None,
+    packed: bool = True,
+    vmem: int | None = None,
+    reps: int = 2,
+    seed: int = 0,
+    table: TuningTable | None = None,
+    persist: bool = True,
+    verbose: bool = False,
+) -> dict:
+    """Tune block_k of the fused backward-pair kernel (block_t / block_n are
+    the two rounding cadences — numerics, never swept)."""
+    import jax.numpy as jnp
+
+    from repro.kernels.bwd_pair import pair_vmem_bytes, qmatmul_bwd_pair
+
+    repr_fmt = fmt_tuple(repr_fmt)
+    if packed and repr_fmt is None:
+        raise ValueError("packed residuals need repr_fmt to decode "
+                         "(pass repr_fmt, or packed=False for f32 carriers)")
+    budget = vmem if vmem is not None else vmem_budget()
+    bt = grad_chunk if grad_chunk > 0 else 128
+    bn = bwd_chunk if bwd_chunk > 0 else 128
+    key_str = _pair_key(t, k, n, bn, bt, tuple(bwd_acc), tuple(grad_acc),
+                        repr_fmt, packed, dtype="f32", vmem=budget)
+    table = table or get_table()
+    cached = table.get_key(key_str)
+    if cached is not None and cached.get("reps", 0) >= reps:
+        return cached
+
+    rk = jax.random.PRNGKey(seed)
+    kg, kx, kw = jax.random.split(rk, 3)
+    g = jax.random.normal(kg, (t, n), jnp.float32)
+    xq = _rand_operand(kx, (t, k), packed, repr_fmt)
+    wq = _rand_operand(kw, (k, n), packed, repr_fmt)
+
+    np_ = max(-(-n // bn) * bn, bn)
+    cands = [bk for bk in _TILE_EDGES
+             if bk <= max(-(-k // 128) * 128, 128)
+             and pair_vmem_bytes(bt, bk, bn, np_, packed=packed) <= budget]
+    cands = cands or [128]
+    best: tuple[float, int] | None = None
+    for bk in cands:
+        def run(g, xq, wq, _bk=bk):
+            return qmatmul_bwd_pair(
+                g, xq, wq, repr_fmt=repr_fmt, bwd_acc=tuple(bwd_acc),
+                grad_acc=tuple(grad_acc), block_t=bt, block_k=_bk,
+                block_n=bn, packed=packed)
+
+        us = time_kernel(run, g, xq, wq, reps=reps)
+        if verbose:
+            print(f"  autotune pair {t}x{k}x{n}: bk={bk} -> {us:.0f}us")
+        if best is None or us < best[0]:
+            best = (us, bk)
+
+    us, bk = best
+    entry = {"block_t": bt, "block_k": bk, "block_n": bn,
+             "us": round(us, 1), "candidates": len(cands), "reps": reps}
+    table.put_key(key_str, entry, persist=persist)
     return entry

@@ -1,0 +1,212 @@
+"""Pallas TPU kernel: BOTH backward GEMMs of one dense layer in ONE pass.
+
+The backward of y = Q(x) @ Q(w) runs two GEMMs that share the incoming
+gradient g (paper Fig. 2):
+
+    dx[T, K] = Q(g)[T, N] @ Q(w)^T[N, K]   (BWD  — accumulation length N)
+    dw[K, N] = Q(x)^T[K, T] @ Q(g)[T, N]   (GRAD — accumulation length T,
+                                            B*T tokens: the paper's critical
+                                            long accumulation)
+
+Run separately, g makes two full HBM round-trips and is
+representation-quantized twice per use.  This kernel fuses the pair: one
+grid (j over K, i over T, l over N); within each K-block sweep a g tile is
+DMA'd once, quantized once on the VPU, and contracted twice on the MXU (g
+is still revisited once per K-block, j being the outer axis — the same
+revisit economics as the forward kernel's A-tiles), and the whole backward
+of the layer is one pallas_call, cutting the qdot train step from 3 pallas
+passes to 2.
+
+Residual operands arrive exactly as the forward kernel emitted them —
+int8-packed ``(1, e_r, m_r)`` codes (``repro.quant.qtensor`` layout) — and
+are unpacked in VMEM; no standalone decode pass, and neither residual is
+ever transposed in HBM (the contractions index x as [T, K] and w as [K, N]
+directly via dot_general dimension numbers).
+
+Chunked-accumulation semantics are IDENTICAL to the two separate fused
+GEMMs, bit for bit:
+
+* dx accumulates over the innermost grid axis l in a scratch tile, carry
+  rounded to (1, e_bwd, m_bwd) once per N-chunk — ``block_n`` IS the BWD
+  chunk length n1, in the same N order as ``qmatmul_fused(g, w.T)``.
+* dw accumulates over the middle axis i in a (block_k, N_padded) scratch
+  slab, carry rounded to (1, e_grad, m_grad) once per T-chunk — ``block_t``
+  IS the GRAD chunk length, in the same T order as ``qmatmul_fused(x.T, g)``.
+  The slab makes VMEM cost grow with N: ``pair_vmem_bytes`` prices it and
+  ``repro.kernels.ops`` falls back to the two-call path when the budget
+  (``repro.kernels.autotune.vmem_budget``) is exceeded.
+
+dw blocks are emitted on the final T-chunk only (``pl.when(i == last)``) —
+same single-write-per-block discipline as the forward residual emission,
+with the same compiled-TPU copy-back caveat (see fused.py docstring).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.autotune import fmt_tuple, register_kernel
+from repro.kernels.common import INTERPRET, pad2d, quantize_block
+from repro.quant.qtensor import unpack_block
+
+__all__ = ["qmatmul_bwd_pair", "pair_vmem_bytes"]
+
+_WIDE = (8, 23)
+
+
+def pair_vmem_bytes(block_t: int, block_k: int, block_n: int, n_padded: int,
+                    *, packed: bool = True) -> int:
+    """VMEM working set of one grid step: g/x/w tiles + dx/dw output tiles
+    + dx carry tile + the (block_k, N_padded) dw carry slab."""
+    opb = 1 if packed else 4  # residual operand tiles: int8 codes or f32
+    tiles = (4 * block_t * block_n            # g tile (f32)
+             + opb * block_t * block_k        # x residual tile
+             + opb * block_k * block_n        # w residual tile
+             + 4 * block_t * block_k          # dx out tile
+             + 4 * block_k * block_n          # dw out tile
+             + 4 * block_t * block_k)         # dx carry scratch
+    return tiles + 4 * block_k * n_padded     # dw carry slab
+
+
+def _pair_kernel(g_ref, x_ref, w_ref, dx_ref, dw_ref, dx_acc, dw_acc, *,
+                 e_r, m_r, qg, packed, e_bwd, m_bwd, e_grad, m_grad, block_n):
+    i = pl.program_id(1)
+    l = pl.program_id(2)
+
+    # one VMEM landing of the g tile feeds BOTH contractions; quantized
+    # once per landing
+    g = quantize_block(g_ref[...], e_r, m_r) if qg else g_ref[...]
+    if packed:
+        x = unpack_block(x_ref[...], e_r, m_r)
+        w = unpack_block(w_ref[...], e_r, m_r)
+    else:
+        x, w = x_ref[...], w_ref[...]
+
+    # ---- dx: carry over l (innermost), chunk = block_n, N order fixed ----
+    @pl.when(l == 0)
+    def _init_dx():
+        dx_acc[...] = jnp.zeros_like(dx_acc)
+
+    # g[t, n] . w[k, n] contracted over n — w is NOT transposed in memory
+    pdx = jax.lax.dot_general(g, w, (((1,), (1,)), ((), ())),
+                              preferred_element_type=jnp.float32)
+    dx_acc[...] = quantize_block(dx_acc[...] + pdx, e_bwd, m_bwd)
+
+    @pl.when(l == pl.num_programs(2) - 1)
+    def _emit_dx():
+        dx_ref[...] = dx_acc[...]
+
+    # ---- dw: carry over i (middle), chunk = block_t, T order fixed ----
+    sl = pl.dslice(l * block_n, block_n)
+    # x[t, k] . g[t, n] contracted over t — x is NOT transposed in memory
+    pdw = jax.lax.dot_general(x, g, (((0,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)
+    prev = jnp.where(i == 0, jnp.zeros_like(pdw), dw_acc[:, sl])
+    dw_acc[:, sl] = quantize_block(prev + pdw, e_grad, m_grad)
+
+    @pl.when(i == pl.num_programs(1) - 1)
+    def _emit_dw():
+        dw_ref[...] = dw_acc[:, sl]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("e_r", "m_r", "qg", "packed", "e_bwd", "m_bwd",
+                     "e_grad", "m_grad", "block_t", "block_k", "block_n",
+                     "interpret"),
+)
+def _bwd_pair(g, xq, wq, *, e_r, m_r, qg, packed, e_bwd, m_bwd, e_grad,
+              m_grad, block_t, block_k, block_n, interpret):
+    t, n = g.shape
+    k = xq.shape[1]
+    rdt = jnp.int8 if packed else jnp.float32
+    g2 = pad2d(g, block_t, block_n)
+    x2 = pad2d(xq, block_t, block_k, dtype=rdt)
+    w2 = pad2d(wq, block_k, block_n, dtype=rdt)
+    tp, np_ = g2.shape
+    kp = x2.shape[1]
+    grid = (kp // block_k, tp // block_t, np_ // block_n)
+
+    dx, dw = pl.pallas_call(
+        functools.partial(_pair_kernel, e_r=e_r, m_r=m_r, qg=qg,
+                          packed=packed, e_bwd=e_bwd, m_bwd=m_bwd,
+                          e_grad=e_grad, m_grad=m_grad, block_n=block_n),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_t, block_n), lambda j, i, l: (i, l)),  # g
+            pl.BlockSpec((block_t, block_k), lambda j, i, l: (i, j)),  # x
+            pl.BlockSpec((block_k, block_n), lambda j, i, l: (j, l)),  # w
+        ],
+        out_specs=[
+            pl.BlockSpec((block_t, block_k), lambda j, i, l: (i, j)),  # dx
+            pl.BlockSpec((block_k, block_n), lambda j, i, l: (j, l)),  # dw
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((tp, kp), jnp.float32),
+            jax.ShapeDtypeStruct((kp, np_), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((block_t, block_k), jnp.float32),  # dx carry
+            pltpu.VMEM((block_k, np_), jnp.float32),      # dw carry slab
+        ],
+        interpret=interpret,
+    )(g2, x2, w2)
+    return dx[:t, :k], dw[:k, :n]
+
+
+@register_kernel("qmatmul_bwd_pair")
+def qmatmul_bwd_pair(
+    g: jnp.ndarray,
+    xq: jnp.ndarray,
+    wq: jnp.ndarray,
+    *,
+    repr_fmt=None,
+    bwd_acc: tuple[int, int] = _WIDE,
+    grad_acc: tuple[int, int] = _WIDE,
+    block_t: int = 128,
+    block_k: int = 128,
+    block_n: int = 128,
+    packed: bool = True,
+    quantize_g: bool = True,
+    interpret: bool = INTERPRET,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """(dx, dw) of one dense layer in a single ``pallas_call``.
+
+    * ``g`` — incoming gradient [T, N], f32, quantized to ``repr_fmt``
+      in-kernel (once, shared by both contractions).
+    * ``xq`` [T, K] / ``wq`` [K, N] — the forward's residuals, int8-packed
+      codes when ``packed`` (unpacked in VMEM) else already-quantized f32.
+    * ``bwd_acc`` / ``grad_acc`` — (e_acc, m_acc) accumulator formats.
+    * ``block_n`` is the BWD chunk length (numerics), ``block_t`` the GRAD
+      chunk length (numerics); only ``block_k`` is schedule-only.
+    """
+    if g.ndim != 2 or xq.ndim != 2 or wq.ndim != 2:
+        raise ValueError("2D operands required")
+    if xq.shape[0] != g.shape[0] or wq.shape[1] != g.shape[1] \
+            or wq.shape[0] != xq.shape[1]:
+        raise ValueError(
+            f"bad shapes g{g.shape} x{xq.shape} w{wq.shape}")
+    fmt = fmt_tuple(repr_fmt)
+    if fmt is None:
+        if packed:
+            raise ValueError("packed residuals need repr_fmt to decode")
+        e_r, m_r = _WIDE
+        quantize_g = False
+    else:
+        e_r, m_r = fmt
+    if packed and (xq.dtype != jnp.int8 or wq.dtype != jnp.int8):
+        raise ValueError(
+            f"packed=True expects int8 codes, got {xq.dtype}/{wq.dtype} "
+            "(f32 carriers would be silently value-truncated)")
+    (e_b, m_b), (e_g, m_g) = bwd_acc, grad_acc
+    return _bwd_pair(
+        g, xq, wq, e_r=int(e_r), m_r=int(m_r), qg=quantize_g, packed=packed,
+        e_bwd=int(e_b), m_bwd=int(m_b), e_grad=int(e_g), m_grad=int(m_g),
+        block_t=block_t, block_k=block_k, block_n=block_n,
+        interpret=interpret,
+    )

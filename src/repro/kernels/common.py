@@ -13,18 +13,20 @@ __all__ = ["quantize_block", "INTERPRET", "pad2d", "count_pallas_calls"]
 INTERPRET = jax.default_backend() != "tpu"
 
 
-def pad2d(x: jnp.ndarray, rows: int, cols: int) -> jnp.ndarray:
-    """Zero-pad a 2D float array up to (rows, cols) multiples, as float32.
+def pad2d(x: jnp.ndarray, rows: int, cols: int,
+          dtype: jnp.dtype = jnp.float32) -> jnp.ndarray:
+    """Zero-pad a 2D array up to (rows, cols) multiples, as ``dtype``.
 
     Zero padding composes exactly with the (1, e, m) quantizer (q(0) = 0) and
     with the chunked carry update (adding an all-zero chunk product leaves the
     already-quantized carry unchanged), so padded and unpadded GEMMs agree
-    bit-for-bit on the valid region.
+    bit-for-bit on the valid region.  For int8-packed operands the same holds:
+    code 0 decodes to +0.0.
     """
     r, c = x.shape
     rp = -(-r // rows) * rows
     cp = -(-c // cols) * cols
-    return jnp.pad(x.astype(jnp.float32), ((0, rp - r), (0, cp - c)))
+    return jnp.pad(x.astype(dtype), ((0, rp - r), (0, cp - c)))
 
 
 def count_pallas_calls(fn, *args, **kwargs) -> int:

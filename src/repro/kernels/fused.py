@@ -21,16 +21,28 @@ once per N-tile visit).  That is VPU work overlapped with the MXU contraction
 and is the standard fusion trade: redundant on-chip compute for eliminated
 HBM traffic.
 
-``return_quantized=True`` additionally emits the quantized operands as
-outputs — the training path saves them as residuals so the backward GEMMs
-consume already-quantized tensors and re-quantization is free (the quantizer
-is idempotent; ``quantize_a=False``/``quantize_b=False`` skip it outright).
-Caveat: the residual out_specs revisit blocks (aq ignores the j grid axis,
-bq ignores i), so on compiled TPU each residual block is written back once
-per revisit, not once — for very wide N (lm_head-scale) that write traffic
-can rival the pre-pass the fusion removed.  The pallas-pass count reported
-by the benchmarks is therefore not a pure HBM-traffic proxy for the emitq
-variant; see the ROADMAP open item on restructuring residual emission.
+Epilogues and carriers (this file is where every quantized value changes
+representation, so all three conversions live in the kernel body, never as a
+standalone elementwise pass):
+
+* ``return_quantized=True`` emits the quantized operands as residuals —
+  with ``pack_residuals=True`` as int8 ``(1, e_r, m_r)`` codes
+  (``repro.quant.qtensor`` layout), 1/4 the HBM of the f32 carrier.  Each
+  residual block is written on its FIRST grid visit only (``pl.when`` on the
+  orthogonal grid axis), so emission costs one HBM write per block, not one
+  per revisit, and the pallas-pass count is a faithful HBM-traffic proxy.
+  (Caveat for compiled TPU: predicated-out revisits rely on Mosaic eliding
+  the copy-back of untouched output windows; re-validate on silicon together
+  with the interpret-mode timing proxy — see the ROADMAP TPU item.)
+* ``a_packed`` / ``b_packed`` accept int8-packed operands and unpack them in
+  VMEM right after the tile DMA — the backward GEMMs consume the packed
+  residuals with no standalone decode pass.
+* ``out_fmt`` folds the CONSUMER's representation quantization into the
+  output epilogue: the emitted tile is already ``(1, e_out, m_out)``, so the
+  next kernel can skip its in-kernel operand quantization (idempotence makes
+  skipping bit-exact) and no separate output-path dequant/requant pass
+  exists.  ``pack_out=True`` additionally emits the output itself as int8
+  codes for transport/storage consumers (serve-path activations, the wire).
 """
 
 from __future__ import annotations
@@ -44,6 +56,7 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.autotune import fmt_tuple, register_kernel
 from repro.kernels.common import INTERPRET, pad2d, quantize_block
+from repro.quant.qtensor import pack_block, unpack_block
 
 __all__ = ["qmatmul_fused"]
 
@@ -51,15 +64,36 @@ __all__ = ["qmatmul_fused"]
 _WIDE = (8, 23)
 
 
+def _load_operand(ref, *, packed: bool, q: bool, e_r: int, m_r: int):
+    """One operand tile, as quantized f32 values in VMEM: unpack int8 codes,
+    or quantize the f32 carrier in-kernel (both VPU work overlapped with the
+    MXU contraction)."""
+    if packed:
+        return unpack_block(ref[...], e_r, m_r)
+    x = ref[...]
+    return quantize_block(x, e_r, m_r) if q else x
+
+
+def _emit_output(o_ref, acc, *, e_o: int, m_o: int, pack_out: bool):
+    """Output epilogue: fold the consumer's representation quantization (and
+    optionally the int8 packing) into the same kernel."""
+    out = acc
+    if (e_o, m_o) != _WIDE:
+        out = quantize_block(out, e_o, m_o)
+    if pack_out:
+        out = pack_block(out, e_o, m_o)
+    o_ref[...] = out
+
+
 def _fused_kernel(a_ref, b_ref, o_ref, acc_ref, *, e_r, m_r, qa, qb,
-                  e_acc, m_acc):
+                  e_acc, m_acc, a_packed, b_packed, e_o, m_o, pack_out):
     @pl.when(pl.program_id(2) == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    # representation quantization of the operand tiles, in VMEM (VPU)
-    a = quantize_block(a_ref[...], e_r, m_r) if qa else a_ref[...]
-    b = quantize_block(b_ref[...], e_r, m_r) if qb else b_ref[...]
+    # representation quantization / unpacking of the operand tiles (VPU)
+    a = _load_operand(a_ref, packed=a_packed, q=qa, e_r=e_r, m_r=m_r)
+    b = _load_operand(b_ref, packed=b_packed, q=qb, e_r=e_r, m_r=m_r)
     # intra-chunk: one MXU tile contraction, ideal (f32) accumulation
     partial = jnp.dot(a, b, preferred_element_type=jnp.float32)
     # inter-chunk: carry update rounded to the (1, e_acc, m_acc) format
@@ -67,51 +101,64 @@ def _fused_kernel(a_ref, b_ref, o_ref, acc_ref, *, e_r, m_r, qa, qb,
 
     @pl.when(pl.program_id(2) == pl.num_programs(2) - 1)
     def _emit():
-        o_ref[...] = acc_ref[...]
+        _emit_output(o_ref, acc_ref[...], e_o=e_o, m_o=m_o, pack_out=pack_out)
 
 
 def _fused_kernel_emitq(a_ref, b_ref, o_ref, aq_ref, bq_ref, acc_ref, *,
-                        e_r, m_r, qa, qb, e_acc, m_acc):
+                        e_r, m_r, qa, qb, e_acc, m_acc, packr,
+                        e_o, m_o, pack_out):
     @pl.when(pl.program_id(2) == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
     a = quantize_block(a_ref[...], e_r, m_r) if qa else a_ref[...]
     b = quantize_block(b_ref[...], e_r, m_r) if qb else b_ref[...]
-    # residual emission: revisited blocks rewrite the same deterministic
-    # values, so the grid order over j is immaterial
-    aq_ref[...] = a
-    bq_ref[...] = b
+
+    # residual emission on the FIRST visit only: the aq block ignores the j
+    # grid axis (bq ignores i), so without the predicate every revisit
+    # rewrites the same deterministic values — pure write amplification
+    @pl.when(pl.program_id(1) == 0)
+    def _store_a():
+        aq_ref[...] = pack_block(a, e_r, m_r) if packr else a
+
+    @pl.when(pl.program_id(0) == 0)
+    def _store_b():
+        bq_ref[...] = pack_block(b, e_r, m_r) if packr else b
+
     partial = jnp.dot(a, b, preferred_element_type=jnp.float32)
     acc_ref[...] = quantize_block(acc_ref[...] + partial, e_acc, m_acc)
 
     @pl.when(pl.program_id(2) == pl.num_programs(2) - 1)
     def _emit():
-        o_ref[...] = acc_ref[...]
+        _emit_output(o_ref, acc_ref[...], e_o=e_o, m_o=m_o, pack_out=pack_out)
 
 
 @functools.partial(
     jax.jit,
     static_argnames=("e_r", "m_r", "e_acc", "m_acc", "block_m", "block_n",
-                     "block_k", "qa", "qb", "emitq", "interpret"),
+                     "block_k", "qa", "qb", "emitq", "packr", "a_packed",
+                     "b_packed", "e_o", "m_o", "pack_out", "interpret"),
 )
 def _qmatmul_fused(a, b, *, e_r, m_r, e_acc, m_acc, block_m, block_n,
-                   block_k, qa, qb, emitq, interpret):
+                   block_k, qa, qb, emitq, packr, a_packed, b_packed,
+                   e_o, m_o, pack_out, interpret):
     m, k = a.shape
     _, n = b.shape
-    a32 = pad2d(a, block_m, block_k)
-    b32 = pad2d(b, block_k, block_n)
+    a32 = pad2d(a, block_m, block_k, dtype=jnp.int8 if a_packed else jnp.float32)
+    b32 = pad2d(b, block_k, block_n, dtype=jnp.int8 if b_packed else jnp.float32)
     mp, kp = a32.shape
     np_ = b32.shape[1]
     grid = (mp // block_m, np_ // block_n, kp // block_k)
 
-    kw = dict(e_r=e_r, m_r=m_r, qa=qa, qb=qb, e_acc=e_acc, m_acc=m_acc)
+    kw = dict(e_r=e_r, m_r=m_r, qa=qa, qb=qb, e_acc=e_acc, m_acc=m_acc,
+              e_o=e_o, m_o=m_o, pack_out=pack_out)
     in_specs = [
         pl.BlockSpec((block_m, block_k), lambda i, j, kk: (i, kk)),
         pl.BlockSpec((block_k, block_n), lambda i, j, kk: (kk, j)),
     ]
     o_spec = pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j))
-    o_shape = jax.ShapeDtypeStruct((mp, np_), jnp.float32)
+    o_shape = jax.ShapeDtypeStruct((mp, np_),
+                                   jnp.int8 if pack_out else jnp.float32)
     # f32 VMEM carry tile: storage of the emulated narrow accumulator (its
     # value is always exactly representable in (1, e_acc, m_acc) after the
     # per-chunk rounding)
@@ -119,7 +166,8 @@ def _qmatmul_fused(a, b, *, e_r, m_r, e_acc, m_acc, block_m, block_n,
 
     if not emitq:
         out = pl.pallas_call(
-            functools.partial(_fused_kernel, **kw),
+            functools.partial(_fused_kernel, a_packed=a_packed,
+                              b_packed=b_packed, **kw),
             grid=grid,
             in_specs=in_specs,
             out_specs=o_spec,
@@ -129,8 +177,9 @@ def _qmatmul_fused(a, b, *, e_r, m_r, e_acc, m_acc, block_m, block_n,
         )(a32, b32)
         return out[:m, :n]
 
+    rdt = jnp.int8 if packr else jnp.float32
     out, aq, bq = pl.pallas_call(
-        functools.partial(_fused_kernel_emitq, **kw),
+        functools.partial(_fused_kernel_emitq, packr=packr, **kw),
         grid=grid,
         in_specs=in_specs,
         out_specs=[
@@ -140,8 +189,8 @@ def _qmatmul_fused(a, b, *, e_r, m_r, e_acc, m_acc, block_m, block_n,
         ],
         out_shape=[
             o_shape,
-            jax.ShapeDtypeStruct((mp, kp), jnp.float32),
-            jax.ShapeDtypeStruct((kp, np_), jnp.float32),
+            jax.ShapeDtypeStruct((mp, kp), rdt),
+            jax.ShapeDtypeStruct((kp, np_), rdt),
         ],
         scratch_shapes=scratch,
         interpret=interpret,
@@ -163,6 +212,11 @@ def qmatmul_fused(
     quantize_a: bool = True,
     quantize_b: bool = True,
     return_quantized: bool = False,
+    pack_residuals: bool = False,
+    a_packed: bool = False,
+    b_packed: bool = False,
+    out_fmt=None,
+    pack_out: bool = False,
     interpret: bool = INTERPRET,
 ):
     """C[M, N] = Q(A)[M, K] @ Q(B)[K, N] with chunked (1, e_acc, m_acc)
@@ -173,18 +227,42 @@ def qmatmul_fused(
       quantization (then this is exactly ``qmatmul_pallas``).
     * ``quantize_a`` / ``quantize_b`` — per-operand opt-out, used by the
       backward pass where residuals are already stored quantized.
+    * ``a_packed`` / ``b_packed`` — the operand arrives as int8 ``(1, e_r,
+      m_r)`` codes (a ``QTensor`` payload) and is unpacked in VMEM; implies
+      the operand needs no quantization.
     * ``block_k`` is the chunk length n1; ``block_m``/``block_n`` are
       schedule-only (any choice is bit-identical — the per-output-element
       reduction order over K is fixed).
     * ``return_quantized=True`` returns ``(c, q_a, q_b)``: the quantized
-      operands are emitted from the same kernel for residual saving.
+      operands are emitted from the same kernel for residual saving, as int8
+      codes when ``pack_residuals=True`` (each block written on its first
+      grid visit only).
+    * ``out_fmt`` — consumer-format hint: the output tile is quantized to
+      this (1, e, m) format in the epilogue, so a downstream kernel that
+      would quantize this tensor to the same format can skip it (bit-exact
+      by idempotence).  ``pack_out=True`` emits the output as int8 codes.
     """
     if a.ndim != 2 or b.ndim != 2 or a.shape[1] != b.shape[0]:
         raise ValueError(f"bad shapes {a.shape} @ {b.shape}")
     e_r, m_r = fmt_tuple(repr_fmt) or _WIDE
+    if (a_packed or b_packed) and fmt_tuple(repr_fmt) is None:
+        raise ValueError("packed operands need repr_fmt to decode")
+    if a_packed and a.dtype != jnp.int8:
+        raise ValueError(f"a_packed expects int8 codes, got {a.dtype}")
+    if b_packed and b.dtype != jnp.int8:
+        raise ValueError(f"b_packed expects int8 codes, got {b.dtype}")
+    if (a_packed or b_packed) and return_quantized:
+        raise ValueError("residual emission is a forward-only epilogue; "
+                         "packed operands are a backward-only input")
+    e_o, m_o = fmt_tuple(out_fmt) or _WIDE
+    if pack_out and fmt_tuple(out_fmt) is None:
+        raise ValueError("pack_out needs out_fmt to define the code layout")
     return _qmatmul_fused(
         a, b, e_r=int(e_r), m_r=int(m_r), e_acc=e_acc, m_acc=m_acc,
         block_m=block_m, block_n=block_n, block_k=block_k,
-        qa=quantize_a, qb=quantize_b, emitq=return_quantized,
+        qa=quantize_a and not a_packed, qb=quantize_b and not b_packed,
+        emitq=return_quantized, packr=pack_residuals,
+        a_packed=a_packed, b_packed=b_packed,
+        e_o=int(e_o), m_o=int(m_o), pack_out=pack_out,
         interpret=interpret,
     )

@@ -5,17 +5,31 @@ GEMM whose three back-propagation GEMMs (paper Fig. 2 — FWD, BWD, GRAD)
 each run with their *own* solver-assigned accumulator format, with inputs
 quantized to the representation format ((1,5,2) by default).
 
-Pipeline shape (the PR-1 tentpole): every GEMM on the qdot path is exactly
-ONE ``pallas_call`` — representation quantization happens inside the fused
-kernel (``repro.kernels.fused``), not as a standalone pre-pass, so the
-quantized operands never make an extra HBM round-trip.  The forward kernel
-emits the quantized operands as residuals; the backward GEMMs consume them
-with their in-kernel quantization switched off (free — the quantizer is
-idempotent anyway).  Block decompositions are consulted from the autotuner's
-JSON tuning table at trace time (``repro.kernels.autotune.blocks_for``).
+Pipeline shape (PR-1 fused the quantization into the GEMM; PR-2 packs the
+carried values): the forward GEMM is one ``pallas_call`` that also emits its
+quantized operands as **int8-packed residuals** (``repro.quant.QTensor`` —
+1/4 the activation-residual HBM of the f32 carrier), and the entire backward
+— both the input-gradient and the weight-gradient GEMM — is ONE more
+``pallas_call`` (``repro.kernels.bwd_pair``): each landing of the incoming
+gradient in VMEM is quantized once and contracted twice, and the packed
+residuals are decoded in-kernel.  Two pallas passes per quantized layer per
+train step, and no quantized value ever travels in an f32 carrier between
+them.
 
-``QDotConfig(fused=False)`` keeps the original three-pass composition
-(quantize A, quantize B, chunked matmul) as a bit-exact reference oracle.
+When the backward-pair working set exceeds the VMEM budget (the dw carry
+slab grows with N — lm_head-scale fan-outs), the backward falls back to two
+fused GEMMs that still consume the packed residuals in-kernel.  Block
+decompositions are consulted from the autotuner's JSON tuning table at
+trace time (``blocks_for`` / ``pair_blocks_for``).
+
+``QDotConfig.out_fmt`` is the consumer-format hint threaded down from
+``models.layers.dense``: the forward epilogue rounds the output to the
+consumer's representation format, closing the output-path dequant ROADMAP
+item (the backward treats the rounding as straight-through, identically in
+fused and oracle modes).
+
+``QDotConfig(fused=False)`` keeps the original composition — standalone
+quantize passes, f32 carriers everywhere — as a bit-exact reference oracle.
 """
 
 from __future__ import annotations
@@ -27,13 +41,22 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.policy import GEMMPrecision
-from repro.kernels.autotune import blocks_for, fmt_tuple
+from repro.kernels.autotune import (
+    blocks_for,
+    fmt_tuple,
+    operand_dtype,
+    pair_blocks_for,
+    vmem_budget,
+)
+from repro.kernels.bwd_pair import pair_vmem_bytes, qmatmul_bwd_pair
 from repro.kernels.fused import qmatmul_fused
 from repro.kernels.qmatmul import qmatmul_pallas
 from repro.kernels.quantize import quantize_pallas
 from repro.quant.formats import FPFormat
+from repro.quant.qtensor import QTensor
 
-__all__ = ["QDotConfig", "qdot", "quantize_op", "qdot_gemm_variants"]
+__all__ = ["QDotConfig", "qdot", "qdot_packed", "quantize_op",
+           "qdot_gemm_variants", "bwd_pair_fits"]
 
 
 def quantize_op(x: jnp.ndarray, fmt: FPFormat) -> jnp.ndarray:
@@ -49,7 +72,12 @@ class QDotConfig:
     ``repr_fmt=None`` disables input quantization (accumulation-only study,
     as in the paper's experiments the representations are always (1,5,2)).
     ``fused=False`` falls back to the unfused quantize->quantize->matmul
-    composition (reference oracle; 3 pallas_calls per GEMM instead of 1).
+    composition (reference oracle; f32 carriers, 3+ pallas_calls per GEMM).
+    ``pack_residuals`` carries the fused path's activation residuals as
+    int8-packed ``QTensor`` payloads (only possible when ``repr_fmt`` fits
+    in 8 bits; silently kept f32 otherwise, e.g. the (1,6,9) lm_head).
+    ``out_fmt`` is the consumer-format hint: the forward output is rounded
+    to this format in the GEMM epilogue (straight-through in the backward).
     """
 
     fwd: GEMMPrecision | None = None
@@ -57,6 +85,8 @@ class QDotConfig:
     grad: GEMMPrecision | None = None
     repr_fmt: FPFormat | None = None
     fused: bool = True
+    pack_residuals: bool = True
+    out_fmt: FPFormat | None = None
 
     @property
     def is_exact(self) -> bool:
@@ -65,7 +95,14 @@ class QDotConfig:
             and self.bwd is None
             and self.grad is None
             and self.repr_fmt is None
+            and self.out_fmt is None
         )
+
+    @property
+    def packs(self) -> bool:
+        """Whether this config actually carries packed residuals."""
+        return (self.fused and self.pack_residuals
+                and self.repr_fmt is not None and self.repr_fmt.bits <= 8)
 
 
 def _acc_params(p: GEMMPrecision | None) -> tuple[int, int, int]:
@@ -75,30 +112,67 @@ def _acc_params(p: GEMMPrecision | None) -> tuple[int, int, int]:
     return p.e_acc, p.m_acc, p.chunk if p.chunk > 0 else 0
 
 
+def bwd_pair_fits(cfg: QDotConfig, t: int, k: int, n: int,
+                  *, vmem: int | None = None) -> bool:
+    """Whether the one-pass backward-pair kernel's working set — dominated
+    by the (block_k, N_padded) dw carry slab — fits the VMEM budget for this
+    layer shape (``vmem=None`` resolves the generation ceiling at call
+    time).  The same predicate gates the trace in ``_qdot2d_bwd`` and the
+    warmup tuner's work-list, so tuned entries are exactly the kernels qdot
+    traces."""
+    if not cfg.fused:
+        return False
+    if vmem is None:
+        vmem = vmem_budget()
+    _, _, bwd_chunk = _acc_params(cfg.bwd)
+    _, _, grad_chunk = _acc_params(cfg.grad)
+    bt = grad_chunk if grad_chunk > 0 else 128
+    bn = bwd_chunk if bwd_chunk > 0 else 128
+    np_ = max(-(-n // bn) * bn, bn)
+    return pair_vmem_bytes(bt, 128, bn, np_, packed=cfg.packs) <= vmem
+
+
 def qdot_gemm_variants(cfg: QDotConfig, t: int, k: int, n: int) -> dict[str, dict]:
-    """The fused-kernel variants one ``qdot`` of x[t, k] @ w[k, n] traces,
-    keyed by role, as ``autotune_qmatmul`` keyword dicts.
+    """The kernel variants one ``qdot`` of x[t, k] @ w[k, n] traces, keyed
+    by role, as autotuner keyword dicts (``kernel`` selects the tuner:
+    "gemm" -> autotune_qmatmul, "bwd_pair" -> autotune_bwd_pair).
 
     This is the single source of truth the warmup autotuner keys its table
-    from — the (shape, accumulator format, quantize flags, residual
-    emission) tuples here mirror the ``_mm_fused`` call sites below, so the
-    tuned entries are exactly the ones ``blocks_for`` looks up at trace
-    time.
+    from — the (shape, accumulator format, quantize/pack flags, residual
+    emission) tuples here mirror the call sites below, so the tuned entries
+    are exactly the ones ``blocks_for``/``pair_blocks_for`` look up at
+    trace time.
     """
     fmt = fmt_tuple(cfg.repr_fmt)
-    roles = {
+    packs = cfg.packs
+    out = {}
+    for role, (m_, k_, n_, p, qa, qb, emitq) in {
         # role: (m, k, n, precision, quantize_a, quantize_b, emit_quantized)
         "fwd": (t, k, n, cfg.fwd, True, True, fmt is not None),
         "fwd_eval": (t, k, n, cfg.fwd, True, True, False),
-        "bwd": (t, n, k, cfg.bwd, True, False, False),
-        "grad": (k, t, n, cfg.grad, False, True, False),
-    }
-    out = {}
-    for role, (m_, k_, n_, p, qa, qb, emitq) in roles.items():
+    }.items():
         e_acc, m_acc, chunk = _acc_params(p)
-        out[role] = dict(m=m_, k=k_, n=n_, chunk=chunk, e_acc=e_acc,
-                         m_acc=m_acc, repr_fmt=fmt, quantize_a=qa,
-                         quantize_b=qb, emit_quantized=emitq)
+        out[role] = dict(kernel="gemm", m=m_, k=k_, n=n_, chunk=chunk,
+                         e_acc=e_acc, m_acc=m_acc, repr_fmt=fmt,
+                         quantize_a=qa, quantize_b=qb, emit_quantized=emitq,
+                         pack_residuals=packs and emitq)
+    eb, mb, cb = _acc_params(cfg.bwd)
+    eg, mg, cg = _acc_params(cfg.grad)
+    if bwd_pair_fits(cfg, t, k, n):
+        out["bwd_pair"] = dict(kernel="bwd_pair", t=t, k=k, n=n,
+                               bwd_chunk=cb, grad_chunk=cg,
+                               bwd_acc=(eb, mb), grad_acc=(eg, mg),
+                               repr_fmt=fmt, packed=packs)
+    else:
+        # two-call fallback: residuals consumed packed, in-kernel
+        out["bwd"] = dict(kernel="gemm", m=t, k=n, n=k, chunk=cb,
+                          e_acc=eb, m_acc=mb, repr_fmt=fmt,
+                          quantize_a=True, quantize_b=False,
+                          b_packed=packs, emit_quantized=False)
+        out["grad"] = dict(kernel="gemm", m=k, k=t, n=n, chunk=cg,
+                           e_acc=eg, m_acc=mg, repr_fmt=fmt,
+                           quantize_a=False, quantize_b=True,
+                           a_packed=packs, emit_quantized=False)
     return out
 
 
@@ -110,7 +184,12 @@ def _mm_fused(
     *,
     quantize_a: bool = True,
     quantize_b: bool = True,
+    a_packed: bool = False,
+    b_packed: bool = False,
     return_quantized: bool = False,
+    pack_residuals: bool = False,
+    out_fmt: FPFormat | None = None,
+    pack_out: bool = False,
 ):
     """One fused pallas_call: Q(a) @ Q(b) under role-``p`` accumulation,
     block decomposition consulted from the autotune table at trace time."""
@@ -120,13 +199,17 @@ def _mm_fused(
         a.shape[0], a.shape[1], b.shape[1], chunk,
         e_acc=e_acc, m_acc=m_acc, repr_fmt=fmt,
         emit_quantized=return_quantized,
-        quantize_a=quantize_a, quantize_b=quantize_b)
+        quantize_a=quantize_a, quantize_b=quantize_b,
+        dtype=operand_dtype(a_packed, b_packed),
+        pack_residuals=pack_residuals)
     return qmatmul_fused(
         a, b,
         repr_fmt=repr_fmt, e_acc=e_acc, m_acc=m_acc,
         block_m=bm, block_n=bn, block_k=bk,
         quantize_a=quantize_a, quantize_b=quantize_b,
-        return_quantized=return_quantized,
+        a_packed=a_packed, b_packed=b_packed,
+        return_quantized=return_quantized, pack_residuals=pack_residuals,
+        out_fmt=out_fmt, pack_out=pack_out,
     )
 
 
@@ -156,23 +239,47 @@ def qdot(x: jnp.ndarray, w: jnp.ndarray, cfg: QDotConfig) -> jnp.ndarray:
     return y2.reshape(*lead, w.shape[1])
 
 
+def qdot_packed(x: jnp.ndarray, w: jnp.ndarray, cfg: QDotConfig) -> QTensor:
+    """Inference-only ``qdot`` whose output leaves the kernel as int8 codes
+    of ``cfg.out_fmt`` — the serve-path / wire carrier (no f32 activation
+    ever reaches HBM).  Not differentiable; training uses ``qdot``."""
+    if cfg.out_fmt is None or cfg.out_fmt.bits > 8:
+        raise ValueError("qdot_packed needs an out_fmt with <= 8 bits")
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    if not cfg.fused:
+        y = _mm(_maybe_q(x2, cfg.repr_fmt), _maybe_q(w, cfg.repr_fmt), cfg.fwd)
+        return QTensor.pack(y.reshape(*lead, w.shape[1]), cfg.out_fmt)
+    codes = _mm_fused(x2, w, cfg.fwd, cfg.repr_fmt,
+                      out_fmt=cfg.out_fmt, pack_out=True)
+    return QTensor(codes.reshape(*lead, w.shape[1]), fmt=cfg.out_fmt)
+
+
 @functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
 def _qdot2d(x: jnp.ndarray, w: jnp.ndarray, cfg: QDotConfig) -> jnp.ndarray:
     if not cfg.fused:
-        return _mm(_maybe_q(x, cfg.repr_fmt), _maybe_q(w, cfg.repr_fmt), cfg.fwd)
-    return _mm_fused(x, w, cfg.fwd, cfg.repr_fmt)
+        y = _mm(_maybe_q(x, cfg.repr_fmt), _maybe_q(w, cfg.repr_fmt), cfg.fwd)
+        return _maybe_q(y, cfg.out_fmt)
+    return _mm_fused(x, w, cfg.fwd, cfg.repr_fmt, out_fmt=cfg.out_fmt)
 
 
 def _qdot2d_fwd(x, w, cfg):
     if not cfg.fused:
         xq = _maybe_q(x, cfg.repr_fmt)
         wq = _maybe_q(w, cfg.repr_fmt)
-        return _mm(xq, wq, cfg.fwd), (xq, wq)
+        y = _maybe_q(_mm(xq, wq, cfg.fwd), cfg.out_fmt)
+        return y, (xq, wq)
     if cfg.repr_fmt is None:
         # nothing to quantize: residuals are the raw operands
-        return _mm_fused(x, w, cfg.fwd, None), (x, w)
-    # one pallas_call: FWD GEMM + quantized residual emission
-    y, xq, wq = _mm_fused(x, w, cfg.fwd, cfg.repr_fmt, return_quantized=True)
+        return _mm_fused(x, w, cfg.fwd, None, out_fmt=cfg.out_fmt), (x, w)
+    # one pallas_call: FWD GEMM + residual emission from the epilogue —
+    # int8-packed QTensor payloads when the format fits in 8 bits
+    packs = cfg.packs
+    y, xq, wq = _mm_fused(x, w, cfg.fwd, cfg.repr_fmt,
+                          return_quantized=True, pack_residuals=packs,
+                          out_fmt=cfg.out_fmt)
+    if packs:
+        return y, (QTensor(xq, fmt=cfg.repr_fmt), QTensor(wq, fmt=cfg.repr_fmt))
     return y, (xq, wq)
 
 
@@ -182,17 +289,38 @@ def _qdot2d_bwd(cfg, res, g):
         gq = _maybe_q(g, cfg.repr_fmt)
         dx = _mm(gq, wq.T, cfg.bwd)
         dw = _mm(xq.T, gq, cfg.grad)
-        return dx.astype(xq.dtype), dw.astype(wq.dtype)
-    # Residuals are stored already-quantized, so only the incoming gradient
-    # needs in-kernel quantization — still one pallas_call per GEMM.
+        return dx.astype(wq.dtype), dw.astype(wq.dtype)
+    # out_fmt's epilogue rounding is straight-through: g passes unscaled
+    # (identically in the oracle above, so fused == oracle bit-for-bit)
+    packed = isinstance(xq, QTensor)
+    xp = xq.payload if packed else xq
+    wp = wq.payload if packed else wq
+    t, k = xp.shape
+    n = wp.shape[1]
+    eb, mb, cb = _acc_params(cfg.bwd)
+    eg, mg, cg = _acc_params(cfg.grad)
+    if bwd_pair_fits(cfg, t, k, n):
+        # the whole backward in ONE pallas_call: g lands in VMEM once, is
+        # quantized once, residuals are unpacked in-kernel
+        bt, bk, bn = pair_blocks_for(
+            t, k, n, bwd_chunk=cb, grad_chunk=cg, bwd_acc=(eb, mb),
+            grad_acc=(eg, mg), repr_fmt=fmt_tuple(cfg.repr_fmt),
+            packed=packed)
+        dx, dw = qmatmul_bwd_pair(
+            g, xp, wp, repr_fmt=cfg.repr_fmt, bwd_acc=(eb, mb),
+            grad_acc=(eg, mg), block_t=bt, block_k=bk, block_n=bn,
+            packed=packed, quantize_g=cfg.repr_fmt is not None)
+        return dx, dw
+    # VMEM fallback: two fused GEMMs, residuals still consumed packed
+    # (the int8 transpose is an XLA copy, not a pallas pass)
     # BWD GEMM: dx[T, K] = g[T, N] @ w^T[N, K]   (accumulation length N)
-    dx = _mm_fused(g, wq.T, cfg.bwd, cfg.repr_fmt,
-                   quantize_a=True, quantize_b=False)
+    dx = _mm_fused(g, wp.T, cfg.bwd, cfg.repr_fmt,
+                   quantize_a=True, quantize_b=False, b_packed=packed)
     # GRAD GEMM: dw[K, N] = x^T[K, T] @ g[T, N]  (accumulation length T —
     # the long one, B*T tokens; the paper's critical case)
-    dw = _mm_fused(xq.T, g, cfg.grad, cfg.repr_fmt,
-                   quantize_a=False, quantize_b=True)
-    return dx.astype(xq.dtype), dw.astype(wq.dtype)
+    dw = _mm_fused(xp.T, g, cfg.grad, cfg.repr_fmt,
+                   quantize_a=False, quantize_b=True, a_packed=packed)
+    return dx, dw
 
 
 _qdot2d.defvjp(_qdot2d_fwd, _qdot2d_bwd)

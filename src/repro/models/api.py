@@ -92,3 +92,30 @@ def dense_gemm_shapes(
                 ("mlp_down", t, f, d, q.mlp_down),
             ]
     return [e for e in entries if e[4] is not None and not e[4].is_exact]
+
+
+def moe_expert_gemm_shapes(
+    cfg: ModelConfig, *, seq_len: int, global_batch: int, ep_size: int = 1
+) -> list[tuple[str, int, int, int]]:
+    """The per-expert GEMM shapes of the MoE expert einsums as
+    (tag, M, K, N) — M is the expert capacity (tokens per expert buffer),
+    K/N the expert fan-in/fan-out.
+
+    These einsums run unquantized (bf16), so no QDotConfig applies, but they
+    are GEMMs on the hot path and the autotuner warms block entries for them
+    (keyed with dtype "bf16") so that a future routing of expert compute
+    through the fused kernel — or an on-silicon re-tune — starts from a
+    covered table rather than untuned shapes (ROADMAP "autotune coverage").
+    Empty for non-MoE families.
+    """
+    if cfg.family != "moe" or cfg.moe is None:
+        return []
+    mc = cfg.moe
+    t = seq_len * global_batch // max(ep_size, 1)
+    cap = max(int(mc.capacity_factor * mc.top_k * t / mc.n_experts), 1)
+    d, f = cfg.d_model, mc.d_ff_expert
+    return [
+        ("moe_expert_gate", cap, d, f),
+        ("moe_expert_up", cap, d, f),
+        ("moe_expert_down", cap, f, d),
+    ]

@@ -63,16 +63,27 @@ def _constrain(x: jnp.ndarray, dist: Dist, spec: P) -> jnp.ndarray:
 
 
 def dense(x: jnp.ndarray, w: jnp.ndarray, qcfg: QDotConfig | None = None,
-          bias: jnp.ndarray | None = None) -> jnp.ndarray:
+          bias: jnp.ndarray | None = None,
+          out_fmt=None) -> jnp.ndarray:
     """y = x @ w (+ bias); bf16 compute, f32 accumulation.
 
-    With a QDotConfig, runs the paper's reduced-accumulation Pallas path
-    (f32 carrier values, quantized per the config) — one fused pallas_call
-    per GEMM: representation quantization happens inside the kernel, and
-    block decompositions come from the autotune tuning table (pre-fill it
-    with repro.train.loop.warmup_gemm_autotune for tuned blocks).
+    With a QDotConfig, runs the paper's reduced-accumulation Pallas path —
+    one fused pallas_call for the forward GEMM (representation quantization
+    in-kernel, int8-packed QTensor residuals from the epilogue) and one for
+    the whole backward (repro.kernels.bwd_pair); block decompositions come
+    from the autotune tuning table (pre-fill it with
+    repro.train.loop.warmup_gemm_autotune for tuned blocks).
+
+    ``out_fmt`` is the consumer-format hint, threaded into the GEMM's
+    output epilogue: pass the (1, e, m) representation format of the op
+    that ingests y UNCHANGED (no nonlinearity/norm in between) and the
+    rounding the consumer would apply happens inside this GEMM instead —
+    the consumer can then skip its own input quantization bit-exactly
+    (idempotence).  Backward treats the rounding as straight-through.
     """
     if qcfg is not None and not qcfg.is_exact:
+        if out_fmt is not None and out_fmt != qcfg.out_fmt:
+            qcfg = dataclasses.replace(qcfg, out_fmt=out_fmt)
         y = qdot(x.astype(jnp.float32), w.astype(jnp.float32), qcfg)
         y = y.astype(COMPUTE_DTYPE)
     else:

@@ -1,6 +1,13 @@
 # Reduced-precision floating-point emulation substrate.
 from repro.quant.formats import BF16_LIKE, FP8_152, FP16_161, FP32_LIKE, FPFormat  # noqa: F401
 from repro.quant.qnum import quantize  # noqa: F401
+from repro.quant.qtensor import (  # noqa: F401
+    QTensor,
+    pack_block,
+    pack_tree,
+    unpack_block,
+    unpack_tree,
+)
 from repro.quant.accumulate import (  # noqa: F401
     chunked_accumulate,
     sequential_accumulate,

@@ -1,0 +1,193 @@
+"""Packed quantized-tensor container: int8-carried (1, e, m) values.
+
+Every value the paper's pipeline quantizes to a ≤8-bit (1, e, m) format
+carries at most 8 bits of information, yet the emulation historically stored
+it in a float32 carrier — 4x the HBM, memory bandwidth and wire bytes the
+arithmetic actually needs.  ``QTensor`` is the one representation those
+values travel in between kernels: an int8 code payload plus the ``FPFormat``
+that interprets it, registered as a pytree so it flows through custom_vjp
+residuals, shard_map collectives and checkpoints unchanged.
+
+Code layout (low ``1 + e + m`` bits of each int8, high bits zero)::
+
+    [ sign (1) | exponent field (e) | mantissa field (m) ]
+
+* exponent field 0 encodes zero (the emulated formats flush subnormals, so
+  zero is the only sub-normal value); the sign bit is kept, so ±0.0
+  round-trips exactly.
+* exponent field ``b`` in [1, 2^e - 1] encodes E = b - 1 - bias, covering
+  the format's full saturating range [min_exp, max_exp] with no reserved
+  codes (the emulation has no inf).
+* NaN is not representable: ``pack`` maps non-finite values to zero (the
+  quantizer saturates inf to ±max_value *before* packing, so only NaN is
+  affected).
+
+``pack_block`` / ``unpack_block`` are written against integer shifts and
+``lax.bitcast_convert_type`` only, so they lower inside a Pallas TPU kernel
+body — the fused GEMM packs residuals in its epilogue and the backward
+kernels unpack operand tiles in VMEM; no standalone elementwise pass ever
+touches a packed tensor.
+
+A second, *linear* mode (``payload * scale`` with a per-tensor f32 scale)
+covers the DCN gradient-compression path, whose int8 codes must remain
+additively meaningful for the psum of payloads (``train/compression.py``).
+
+The round-trip contract — ``unpack(pack(x)) == x`` bit-exactly for every x
+already representable in the format, subnormal flush, ±max clamp and signed
+zero included — is pinned by ``tests/test_qtensor.py`` (hypothesis, over
+every (1, e, m) with ≤8 total bits).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.quant.formats import FPFormat
+from repro.quant.qnum import quantize
+
+__all__ = ["QTensor", "pack_block", "unpack_block", "pack_tree", "unpack_tree"]
+
+
+def _check_packable(e: int, m: int) -> None:
+    if 1 + e + m > 8:
+        raise ValueError(
+            f"(1,{e},{m}) needs {1 + e + m} bits; int8 packing requires <= 8")
+
+
+def pack_block(x: jnp.ndarray, e: int, m: int) -> jnp.ndarray:
+    """Encode (1, e, m)-quantized float32 values as int8 codes.
+
+    ``x`` must already be representable in the format (i.e. a fixed point of
+    the quantizer): the mantissa is truncated, not rounded.  Elementwise,
+    integer-only after one bitcast — lowers inside Pallas kernel bodies.
+    Non-finite inputs map to (signed) zero.
+    """
+    _check_packable(e, m)
+    bias = 2 ** (e - 1) - 1
+    xi = jax.lax.bitcast_convert_type(x.astype(jnp.float32), jnp.uint32)
+    sign = (xi >> jnp.uint32(31)) & jnp.uint32(1)
+    ieee_exp = (xi >> jnp.uint32(23)) & jnp.uint32(0xFF)
+    man = (xi >> jnp.uint32(23 - m)) & jnp.uint32(2**m - 1)
+    # quantized values are ±0 (ieee_exp == 0 after flush-to-zero) or normal;
+    # NaN/inf have no code — map them to zero
+    normal = (ieee_exp != 0) & jnp.isfinite(x)
+    exp_field = jnp.where(normal, ieee_exp - jnp.uint32(127 - bias - 1),
+                          jnp.uint32(0))
+    man = jnp.where(normal, man, jnp.uint32(0))
+    code = (sign << jnp.uint32(e + m)) | (exp_field << jnp.uint32(m)) | man
+    # two's-complement reinterpretation uint8 -> int8, without relying on
+    # out-of-range convert_element_type behavior
+    ci = code.astype(jnp.int32)
+    return jnp.where(ci >= 128, ci - 256, ci).astype(jnp.int8)
+
+
+def unpack_block(code: jnp.ndarray, e: int, m: int) -> jnp.ndarray:
+    """Decode int8 codes back to the exact float32 values ``pack_block``
+    consumed.  Bijective with ``pack_block`` on representable values."""
+    _check_packable(e, m)
+    bias = 2 ** (e - 1) - 1
+    c = code.astype(jnp.int32)
+    c = jnp.where(c < 0, c + 256, c).astype(jnp.uint32)
+    sign = (c >> jnp.uint32(e + m)) & jnp.uint32(1)
+    exp_field = (c >> jnp.uint32(m)) & jnp.uint32(2**e - 1)
+    man = c & jnp.uint32(2**m - 1)
+    ieee_exp = exp_field + jnp.uint32(127 - bias - 1)
+    mag_bits = jnp.where(exp_field > 0,
+                         (ieee_exp << jnp.uint32(23)) | (man << jnp.uint32(23 - m)),
+                         jnp.uint32(0))
+    bits = (sign << jnp.uint32(31)) | mag_bits
+    return jax.lax.bitcast_convert_type(bits, jnp.float32)
+
+
+@jax.tree_util.register_pytree_with_keys_class
+@dataclass(frozen=True)
+class QTensor:
+    """int8 payload + the metadata that interprets it.
+
+    Two modes:
+
+    * **packed** (``fmt`` set, ``scale`` None): each int8 holds one
+      (1, e, m) code; ``unpack`` is the exact inverse of ``pack``.
+    * **linear** (``fmt`` None, ``scale`` set): value = payload * scale,
+      the DCN-compression affine code whose payloads sum exactly in int32.
+    """
+
+    payload: jnp.ndarray
+    fmt: FPFormat | None = None
+    scale: jnp.ndarray | None = None
+
+    # -- pytree protocol (fmt is static metadata; payload/scale are leaves) --
+    def tree_flatten_with_keys(self):
+        return ((jax.tree_util.GetAttrKey("payload"), self.payload),
+                (jax.tree_util.GetAttrKey("scale"), self.scale)), self.fmt
+
+    @classmethod
+    def tree_unflatten(cls, fmt, children):
+        payload, scale = children
+        return cls(payload=payload, fmt=fmt, scale=scale)
+
+    # ------------------------------ properties ------------------------------
+    @property
+    def shape(self) -> tuple[int, ...]:
+        return tuple(self.payload.shape)
+
+    @property
+    def ndim(self) -> int:
+        return self.payload.ndim
+
+    @property
+    def nbytes(self) -> int:
+        return int(self.payload.size)  # 1 byte per element
+
+    # ------------------------------ packed mode -----------------------------
+    @classmethod
+    def pack(cls, x: jnp.ndarray, fmt: FPFormat, *,
+             assume_quantized: bool = False) -> "QTensor":
+        """Quantize ``x`` to ``fmt`` (skipped when ``assume_quantized``; the
+        quantizer is idempotent, so this is an optimization, not a semantic
+        switch) and pack the result into int8 codes."""
+        if not assume_quantized:
+            x = quantize(x, fmt)
+        return cls(payload=pack_block(x, fmt.e, fmt.m), fmt=fmt)
+
+    # ------------------------------ linear mode -----------------------------
+    @classmethod
+    def pack_linear(cls, x: jnp.ndarray, scale: jnp.ndarray | None = None) -> "QTensor":
+        """Affine int8 code: round(x / scale) clipped to [-127, 127].  With
+        ``scale=None`` the per-tensor amax scale is computed locally; pass an
+        explicit (e.g. pmax-shared) scale when payloads must sum across
+        ranks."""
+        if scale is None:
+            scale = (jnp.max(jnp.abs(x)) + 1e-12) / 127.0
+        q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+        return cls(payload=q, scale=jnp.asarray(scale, jnp.float32))
+
+    # -------------------------------- decode --------------------------------
+    def unpack(self) -> jnp.ndarray:
+        if self.fmt is not None:
+            return unpack_block(self.payload, self.fmt.e, self.fmt.m)
+        if self.scale is not None:
+            return self.payload.astype(jnp.float32) * self.scale
+        raise ValueError("QTensor with neither fmt nor scale")
+
+
+def _is_qt(x: Any) -> bool:
+    return isinstance(x, QTensor)
+
+
+def pack_tree(tree: Any, fmt: FPFormat, *, assume_quantized: bool = False) -> Any:
+    """Replace every array leaf with a packed ``QTensor`` (lossy unless the
+    leaves are already quantized to ``fmt``)."""
+    return jax.tree.map(
+        lambda x: QTensor.pack(x, fmt, assume_quantized=assume_quantized), tree)
+
+
+def unpack_tree(tree: Any) -> Any:
+    """Inverse of ``pack_tree``: decode every ``QTensor`` node to float32,
+    leaving other leaves untouched."""
+    return jax.tree.map(lambda x: x.unpack() if _is_qt(x) else x, tree,
+                        is_leaf=_is_qt)

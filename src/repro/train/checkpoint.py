@@ -5,6 +5,14 @@ Layout:  <dir>/step_<N>/arrays.npz + meta.json, written to a tmp dir and
 corrupts the latest checkpoint.  Arrays are stored as global (unsharded)
 numpy — restore re-shards onto whatever mesh the resumed job has (elastic:
 the device count may differ across restarts).
+
+Packed tensors: ``QTensor`` nodes in the state (packed activation
+residuals, error-feedback codes) serialize as their int8 payload — the
+checkpoint stores exactly the bytes the arithmetic needs, not an f32
+inflation of them — and ``meta.json`` records each packed leaf's (1, e, m)
+format under ``"qtensors"`` so a checkpoint is self-describing even without
+the restoring job's ``like`` tree.  Round-trip is bit-exact (int8 codes are
+copied verbatim).
 """
 
 from __future__ import annotations
@@ -17,17 +25,37 @@ from typing import Any
 import jax
 import numpy as np
 
+from repro.quant.qtensor import QTensor
+
 __all__ = ["save_checkpoint", "restore_checkpoint", "latest_step"]
+
+
+def _path_str(path) -> str:
+    return "/".join(
+        str(getattr(k, "key", getattr(k, "idx", getattr(k, "name", k))))
+        for k in path
+    )
 
 
 def _flatten_with_paths(tree: Any) -> dict[str, np.ndarray]:
     flat = {}
     for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
-        key = "/".join(
-            str(getattr(k, "key", getattr(k, "idx", k))) for k in path
-        )
-        flat[key] = np.asarray(leaf)
+        flat[_path_str(path)] = np.asarray(leaf)
     return flat
+
+
+def _qtensor_meta(tree: Any) -> dict[str, dict]:
+    """{path: {"e", "m"} | {"linear": true}} for every QTensor node — the
+    self-describing format record written to meta.json."""
+    metas: dict[str, dict] = {}
+    nodes = jax.tree_util.tree_flatten_with_path(
+        tree, is_leaf=lambda v: isinstance(v, QTensor))[0]
+    for path, leaf in nodes:
+        if isinstance(leaf, QTensor):
+            metas[_path_str(path)] = (
+                {"e": leaf.fmt.e, "m": leaf.fmt.m} if leaf.fmt is not None
+                else {"linear": True})
+    return metas
 
 
 def save_checkpoint(ckpt_dir: str, step: int, state: Any, meta: dict | None = None) -> str:
@@ -39,8 +67,12 @@ def save_checkpoint(ckpt_dir: str, step: int, state: Any, meta: dict | None = No
     os.makedirs(tmp)
     arrays = _flatten_with_paths(state)
     np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+    qt = _qtensor_meta(state)
+    payload = {"step": step, **(meta or {})}
+    if qt:
+        payload["qtensors"] = qt
     with open(os.path.join(tmp, "meta.json"), "w") as f:
-        json.dump({"step": step, **(meta or {})}, f)
+        json.dump(payload, f)
     if os.path.exists(final):
         shutil.rmtree(final)
     os.rename(tmp, final)
@@ -71,10 +103,22 @@ def restore_checkpoint(
     with open(os.path.join(d, "meta.json")) as f:
         meta = json.load(f)
 
+    # packed payloads are int8 codes whose meaning is the (1, e, m) format
+    # they were written under: refuse to reinterpret them under a drifted
+    # format from the resuming job's ``like`` tree (meta.json is the truth)
+    saved_fmts = meta.get("qtensors", {})
+    for key, like_fmt in _qtensor_meta(like).items():
+        want = saved_fmts.get(key)
+        if want is not None and want != like_fmt:
+            raise ValueError(
+                f"checkpoint {d}: packed leaf {key!r} was saved as {want} "
+                f"but would be restored as {like_fmt}; int8 codes are not "
+                "portable across formats")
+
     flat_like = jax.tree_util.tree_flatten_with_path(like)
     leaves = []
     for path, leaf in flat_like[0]:
-        key = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+        key = _path_str(path)
         arr = data[key]
         assert arr.shape == tuple(leaf.shape), f"{key}: {arr.shape} vs {leaf.shape}"
         leaves.append(arr.astype(leaf.dtype))

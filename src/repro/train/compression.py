@@ -1,13 +1,23 @@
-"""Int8 gradient compression with error feedback, for the thin cross-pod
-link (DCN).  Cross-pod gradient reduction is the only collective that
-leaves the ICI domain in the production mesh, so it is the one worth
-compressing: 4x fewer bytes on the slowest link at <1% accuracy cost when
-error feedback is enabled (1-bit/8-bit SGD literature).
+"""Gradient compression for the thin cross-pod link (DCN), carried in the
+same ``QTensor`` container as every other quantized value in the system.
 
-``compressed_psum`` is a shard_map-level collective: quantize locally to
-int8 with a per-tensor scale, psum the int32 accumulator, dequantize.  The
-quantization residual is returned so the caller can carry it into the next
-step (error feedback).
+Cross-pod gradient reduction is the only collective that leaves the ICI
+domain in the production mesh, so it is the one worth compressing: 4x fewer
+bytes on the slowest link at <1% accuracy cost when error feedback is
+enabled (1-bit/8-bit SGD literature).
+
+The wire code here is ``QTensor``'s *linear* mode (int8 payload x per-tensor
+f32 scale), not the packed (1, e, m) mode: summing is the whole point of a
+psum, and affine codes sum exactly in an int32 accumulator while packed
+floating-point codes do not.  Both modes share one container, one payload
+dtype and one decode entry point (``QTensor.unpack``), so residual
+compression, checkpoint packing and DCN transport are a single
+representation with two interpretations.
+
+``compressed_psum`` is a shard_map-level collective: pack locally to a
+linear QTensor under a pmax-shared scale, psum the int32 payload,
+dequantize.  The quantization residual is returned so the caller can carry
+it into the next step (error feedback).
 """
 
 from __future__ import annotations
@@ -17,22 +27,27 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
-__all__ = ["quantize_int8", "dequantize_int8", "compressed_psum", "ef_compress_tree"]
+from repro.quant.qtensor import QTensor
+
+__all__ = ["quantize_int8", "dequantize_int8", "compressed_psum",
+           "ef_compress_tree"]
 
 
 def quantize_int8(x: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
-    amax = jnp.max(jnp.abs(x)) + 1e-12
-    scale = amax / 127.0
-    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
-    return q, scale
+    """Linear int8 code of ``x`` under its per-tensor amax scale, as the
+    (payload, scale) pair — thin wrapper over ``QTensor.pack_linear`` kept
+    for callers that ship payload and scale separately."""
+    qt = QTensor.pack_linear(x)
+    return qt.payload, qt.scale
 
 
 def dequantize_int8(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
-    return q.astype(jnp.float32) * scale
+    return QTensor(q, scale=scale).unpack()
 
 
 def compressed_psum(x: jnp.ndarray, axis: str) -> tuple[jnp.ndarray, jnp.ndarray]:
-    """psum(x) over ``axis`` with int8 payload. Returns (sum, residual).
+    """psum(x) over ``axis`` with an int8 QTensor payload on the wire.
+    Returns (sum, residual).
 
     Every rank quantizes its own shard, so the scale must be SHARED or the
     int32 payload sum is meaningless: a pmax over the per-rank amax (4
@@ -41,23 +56,22 @@ def compressed_psum(x: jnp.ndarray, axis: str) -> tuple[jnp.ndarray, jnp.ndarray
     for error feedback.
     """
     amax = jax.lax.pmax(jnp.max(jnp.abs(x)), axis) + 1e-12
-    scale = amax / 127.0
-    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
-    residual = x - q.astype(jnp.float32) * scale
+    qt = QTensor.pack_linear(x, scale=amax / 127.0)
+    residual = x - qt.unpack()
     # int32 accumulator avoids overflow for up to 2^24 participants
-    total = jax.lax.psum(q.astype(jnp.int32), axis).astype(jnp.float32) * scale
+    total = jax.lax.psum(qt.payload.astype(jnp.int32), axis).astype(jnp.float32) * qt.scale
     return total, residual
 
 
 def ef_compress_tree(grads: Any, errors: Any) -> tuple[Any, Any]:
     """Error-feedback compression of a gradient pytree (local part — the
-    psum itself is inserted by the caller's shard_map).  Returns
-    (quantized-reconstructed grads, new error state)."""
+    psum itself is inserted by the caller's shard_map).  Each leaf ships as
+    a linear ``QTensor``; returns (quantized-reconstructed grads, new error
+    state)."""
 
     def one(g, e):
         g = g + e
-        q, scale = quantize_int8(g)
-        recon = dequantize_int8(q, scale)
+        recon = QTensor.pack_linear(g).unpack()
         return recon, g - recon
 
     out = jax.tree.map(one, grads, errors)

@@ -64,25 +64,44 @@ def warmup_gemm_autotune(
     table entries are keyed on that M.  ``qdot`` consults the table at
     trace time, so tuned entries change the emitted block decomposition
     with zero run-time cost.  Shapes already in the table are not re-timed.
+
+    Coverage: every dense-layer qdot variant (FWD train/eval, the one-pass
+    backward pair or its two-GEMM VMEM fallback) plus — for MoE families —
+    the expert einsum GEMM shapes (bf16-keyed; ROADMAP "autotune coverage").
     """
     from repro.kernels import autotune
     from repro.kernels.ops import qdot_gemm_variants
-    from repro.models.api import dense_gemm_shapes
+    from repro.models.api import dense_gemm_shapes, moe_expert_gemm_shapes
 
     table = autotune.get_table()
     results: dict[str, dict] = {}
+    mb_batch = max(global_batch // max(microbatches, 1), 1)
     for tag, t, k, n, qcfg in dense_gemm_shapes(
-        model.cfg, seq_len=seq_len,
-        global_batch=max(global_batch // max(microbatches, 1), 1),
+        model.cfg, seq_len=seq_len, global_batch=mb_batch,
     ):
-        # the GEMM variants qdot will trace for this layer shape (FWD in
-        # train and eval flavors, BWD, GRAD) — keys come from ops.py so
-        # they cannot drift from what blocks_for looks up at trace time
+        # the kernel variants qdot will trace for this layer shape (FWD in
+        # train and eval flavors, the backward pair or the bwd/grad
+        # fallback) — keys come from ops.py so they cannot drift from what
+        # blocks_for / pair_blocks_for look up at trace time
         for role, kw in qdot_gemm_variants(qcfg, t, k, n).items():
-            results[f"{tag}:{role}"] = autotune.autotune_qmatmul(
-                kw.pop("m"), kw.pop("k"), kw.pop("n"), **kw,
-                table=table, persist=False, reps=reps, verbose=verbose,
-            )
+            kind = kw.pop("kernel")
+            if kind == "bwd_pair":
+                results[f"{tag}:{role}"] = autotune.autotune_bwd_pair(
+                    kw.pop("t"), kw.pop("k"), kw.pop("n"), **kw,
+                    table=table, persist=False, reps=reps, verbose=verbose,
+                )
+            else:
+                results[f"{tag}:{role}"] = autotune.autotune_qmatmul(
+                    kw.pop("m"), kw.pop("k"), kw.pop("n"), **kw,
+                    table=table, persist=False, reps=reps, verbose=verbose,
+                )
+    for tag, m, k, n in moe_expert_gemm_shapes(
+        model.cfg, seq_len=seq_len, global_batch=mb_batch,
+    ):
+        results[tag] = autotune.autotune_qmatmul(
+            m, k, n, dtype="bf16",
+            table=table, persist=False, reps=reps, verbose=verbose,
+        )
     table.save()  # one atomic merge-write for the whole warmup
     return results
 

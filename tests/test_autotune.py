@@ -130,6 +130,7 @@ def test_warmup_gemm_autotune_fills_table(tmp_table):
 
     from repro.configs import get_smoke_config
     from repro.core.policy import AccumulationPolicy, plan_for_model
+    from repro.kernels.ops import qdot_gemm_variants
     from repro.models.api import dense_gemm_shapes, get_model
     from repro.train.loop import warmup_gemm_autotune
 
@@ -140,17 +141,90 @@ def test_warmup_gemm_autotune_fills_table(tmp_table):
     assert shapes, "smoke config must expose quantized dense GEMMs"
     model = get_model(cfg)
     results = warmup_gemm_autotune(model, seq_len=8, global_batch=1, reps=1)
-    # every (layer, role) GEMM got a table entry (fwd is tuned in both its
-    # train variant — residual emission on — and its eval variant)
-    assert len(results) == 4 * len(shapes)
+    # every (layer, role) kernel variant got a table entry — FWD in train
+    # (packed residual emission) and eval flavors, plus the one-pass
+    # backward pair (or its two-GEMM fallback); the role list comes from
+    # qdot_gemm_variants, the same source ops.py traces from
+    want = sum(len(qdot_gemm_variants(qcfg, t, k, n))
+               for _, t, k, n, qcfg in shapes)
+    assert len(results) == want
     for tag, t, k, n, qcfg in shapes:
         p = qcfg.fwd
         chunk = p.chunk if p is not None and p.chunk > 0 else 0
         e_acc, m_acc = (8, 23) if p is None else (p.e_acc, p.m_acc)
         fmt = (None if qcfg.repr_fmt is None
                else (qcfg.repr_fmt.e, qcfg.repr_fmt.m))
-        # the FWD role is tuned with residual emission on — the exact
-        # kernel variant the training step traces
+        # the FWD role is tuned with packed residual emission on — the
+        # exact kernel variant the training step traces
         assert autotune.get_table().get(
             t, k, n, chunk, e_acc=e_acc, m_acc=m_acc, repr_fmt=fmt,
-            emit_quantized=fmt is not None) is not None
+            emit_quantized=fmt is not None,
+            pack_residuals=qcfg.packs) is not None
+        roles = qdot_gemm_variants(qcfg, t, k, n)
+        if "bwd_pair" in roles:
+            kw = dict(roles["bwd_pair"])
+            kw.pop("kernel")
+            bt, bk, bn = autotune.pair_blocks_for(
+                kw.pop("t"), kw.pop("k"), kw.pop("n"), **kw)
+            assert f"{tag}:bwd_pair" in results
+            assert bk == results[f"{tag}:bwd_pair"]["block_k"]
+
+
+def test_table_key_carries_dtype_and_vmem_ceiling(tmp_table):
+    # the same shape tuned under a different operand dtype or VMEM ceiling
+    # must not share an entry — a v6e-tuned table cannot leak v6e-sized
+    # working sets onto a v4 core, nor i8-operand blocks onto f32 GEMMs
+    e = autotune.autotune_qmatmul(64, 256, 64, chunk=64, e_acc=6, m_acc=5,
+                                  repr_fmt=(5, 2), reps=1)
+    assert autotune.blocks_for(
+        64, 256, 64, 64, e_acc=6, m_acc=5, repr_fmt=(5, 2)
+    ) == (e["block_m"], e["block_n"], 64)
+    # same shape, packed-B operand: distinct key -> untuned default
+    assert autotune.blocks_for(
+        64, 256, 64, 64, e_acc=6, m_acc=5, repr_fmt=(5, 2),
+        quantize_b=False, dtype=autotune.operand_dtype(False, True)
+    ) == (128, 128, 64)
+    # same shape, other-generation ceiling: distinct key -> untuned default
+    assert autotune.blocks_for(
+        64, 256, 64, 64, e_acc=6, m_acc=5, repr_fmt=(5, 2),
+        vmem=autotune.VMEM_PER_GENERATION["v6e"] // 2
+    ) == (128, 128, 64)
+
+
+def test_vmem_budget_per_generation(monkeypatch):
+    monkeypatch.delenv("REPRO_VMEM_BUDGET", raising=False)
+    monkeypatch.setenv("REPRO_TPU_GENERATION", "v6e")
+    assert autotune.vmem_budget() == autotune.VMEM_PER_GENERATION["v6e"] // 2
+    monkeypatch.setenv("REPRO_TPU_GENERATION", "v4")
+    assert autotune.vmem_budget() == autotune.VMEM_PER_GENERATION["v4"] // 2
+    assert autotune.vmem_budget("v6e") == autotune.VMEM_PER_GENERATION["v6e"] // 2
+    monkeypatch.setenv("REPRO_VMEM_BUDGET", "12345")
+    assert autotune.vmem_budget() == 12345
+
+
+def test_vmem_accounting_prices_packed_carriers():
+    plain = autotune.vmem_block_bytes(128, 128, 128)
+    packed_ops = autotune.vmem_block_bytes(128, 128, 128, operand_bytes=1)
+    assert plain - packed_ops == 3 * (2 * 128 * 128)
+    emit_f32 = autotune.vmem_block_bytes(128, 128, 128, emit_quantized=True)
+    emit_i8 = autotune.vmem_block_bytes(128, 128, 128, emit_quantized=True,
+                                        residual_bytes=1)
+    assert emit_f32 - emit_i8 == 3 * (2 * 128 * 128)
+
+
+def test_autotune_bwd_pair_roundtrip(tmp_table):
+    # pair tuning sweeps only block_k (block_t/block_n are the two rounding
+    # cadences) and the consult returns the tuned winner
+    entry = autotune.autotune_bwd_pair(
+        64, 256, 64, bwd_chunk=64, grad_chunk=64, bwd_acc=(6, 5),
+        grad_acc=(6, 8), repr_fmt=(5, 2), packed=True, reps=1)
+    assert entry["block_t"] == 64 and entry["block_n"] == 64
+    bt, bk, bn = autotune.pair_blocks_for(
+        64, 256, 64, bwd_chunk=64, grad_chunk=64, bwd_acc=(6, 5),
+        grad_acc=(6, 8), repr_fmt=(5, 2), packed=True)
+    assert (bt, bk, bn) == (64, entry["block_k"], 64)
+    # cache hit on re-tune
+    again = autotune.autotune_bwd_pair(
+        64, 256, 64, bwd_chunk=64, grad_chunk=64, bwd_acc=(6, 5),
+        grad_acc=(6, 8), repr_fmt=(5, 2), packed=True, reps=1)
+    assert again == entry

@@ -177,3 +177,25 @@ def test_moe_expert_grad_shorter_than_dense():
     am = assign_network("moe", moe, m_p=5)
     # per-expert token count B*T*k/E << B*T  =>  fewer GRAD bits needed
     assert am.get("moe.up", "GRAD")[0] < ad.get("mlp.up", "GRAD")[0]
+
+
+def test_plan_threads_output_quantization_hint():
+    # quantize_outputs: the plan carries the consumer-format hint on every
+    # quantized GEMM (the paper stores activations in (1,5,2) too); the
+    # epilogue rounding is bit-identical to a post-hoc quantize pass
+    # (tests/test_fused.py::test_qdot_out_fmt_fused_equals_oracle)
+    from repro.configs import get_smoke_config
+    from repro.core.policy import AccumulationPolicy, plan_for_model
+    from repro.quant.formats import FP8_152
+
+    cfg = get_smoke_config("qwen2-1.5b")
+    on = plan_for_model(cfg, seq_len=8, global_batch=1,
+                        policy=AccumulationPolicy(mode="predicted",
+                                                  quantize_outputs=True))
+    off = plan_for_model(cfg, seq_len=8, global_batch=1,
+                         policy=AccumulationPolicy(mode="predicted"))
+    assert on.quant.mlp_up.out_fmt == FP8_152
+    assert on.quant.attn_qkv.out_fmt == FP8_152
+    assert off.quant.mlp_up.out_fmt is None
+    # the 16-bit lm_head is never output-quantized
+    assert on.quant.lm_head.out_fmt is None

@@ -1,0 +1,203 @@
+"""QTensor: the int8-carried (1, e, m) representation.
+
+Unit tests pin the bit-layout invariants (signed zero, ±max clamp, flush
+region, NaN policy, pytree/checkpoint plumbing); the hypothesis suite
+(tier-gated like test_properties.py) proves pack/unpack is the identity on
+quantized values for EVERY format with <= 8 total bits.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.quant.formats import FP8_152, FP16_161, FPFormat
+from repro.quant.qnum import quantize
+from repro.quant.qtensor import (
+    QTensor,
+    pack_block,
+    pack_tree,
+    unpack_block,
+    unpack_tree,
+)
+
+# every (1, e, m) that fits an int8 code (e >= 1 for a non-degenerate
+# exponent; m >= 0 covers the pure-exponent corner)
+PACKABLE = [(e, m) for e in range(1, 8) for m in range(0, 8) if 1 + e + m <= 8]
+
+
+def _bits(x: np.ndarray) -> np.ndarray:
+    return np.asarray(x, np.float32).view(np.uint32)
+
+
+# ------------------------------ unit tests ---------------------------------
+
+
+@pytest.mark.parametrize("e,m", [(5, 2), (4, 3), (2, 5), (6, 1)])
+def test_roundtrip_identity_on_quantized_values(e, m):
+    fmt = FPFormat(e=e, m=m)
+    rng = np.random.RandomState(e * 10 + m)
+    x = rng.standard_normal(4096).astype(np.float32)
+    x *= np.logspace(-15, 15, 4096).astype(np.float32)  # sweep the range
+    xq = np.asarray(quantize(jnp.asarray(x), fmt))
+    rt = np.asarray(unpack_block(pack_block(jnp.asarray(xq), e, m), e, m))
+    # bit-level equality: signed zero included
+    np.testing.assert_array_equal(_bits(rt), _bits(xq))
+
+
+def test_signed_zero_and_extremes():
+    fmt = FP8_152
+    specials = np.array(
+        [0.0, -0.0, fmt.max_value, -fmt.max_value, fmt.min_normal,
+         -fmt.min_normal], np.float32)
+    rt = np.asarray(unpack_block(pack_block(jnp.asarray(specials), 5, 2), 5, 2))
+    np.testing.assert_array_equal(_bits(rt), _bits(specials))
+
+
+def test_subnormal_inputs_flush_through_pack():
+    # values below min_normal quantize to zero; packing the quantized value
+    # must reproduce that exact zero (sign preserved)
+    fmt = FP8_152
+    tiny = np.array([fmt.min_normal * 0.49, -fmt.min_normal * 0.49], np.float32)
+    qt = QTensor.pack(jnp.asarray(tiny), fmt)
+    np.testing.assert_array_equal(
+        _bits(np.asarray(qt.unpack())),
+        _bits(np.array([0.0, -0.0], np.float32)))
+
+
+def test_nonfinite_policy():
+    # quantize saturates inf to ±max_value before packing; NaN (no code in
+    # a fully-used exponent space) packs to zero
+    fmt = FP8_152
+    x = jnp.asarray(np.array([np.inf, -np.inf, np.nan], np.float32))
+    out = np.asarray(QTensor.pack(x, fmt).unpack())
+    np.testing.assert_array_equal(
+        out, np.array([fmt.max_value, -fmt.max_value, 0.0], np.float32))
+
+
+def test_wide_formats_are_rejected():
+    with pytest.raises(ValueError):
+        pack_block(jnp.zeros((4,)), FP16_161.e, FP16_161.m)
+    with pytest.raises(ValueError):
+        QTensor.pack(jnp.zeros((4,)), FP16_161)
+
+
+def test_payload_is_int8_and_4x_smaller():
+    x = jnp.asarray(np.random.RandomState(0).standard_normal((64, 32)),
+                    dtype=jnp.float32)
+    qt = QTensor.pack(x, FP8_152)
+    assert qt.payload.dtype == jnp.int8
+    assert qt.shape == (64, 32)
+    assert qt.nbytes * 4 == x.size * 4  # 1 byte/elem vs 4
+
+
+def test_linear_mode_matches_int8_compression():
+    x = jnp.asarray(np.random.RandomState(1).standard_normal(257),
+                    dtype=jnp.float32)
+    qt = QTensor.pack_linear(x)
+    got = np.asarray(qt.unpack())
+    scale = float(qt.scale)
+    np.testing.assert_allclose(got, np.asarray(x), atol=scale * 0.5 + 1e-7)
+    assert np.max(np.abs(np.asarray(qt.payload))) <= 127
+
+
+def test_qtensor_is_a_pytree():
+    x = jnp.asarray(np.random.RandomState(2).standard_normal((8, 8)),
+                    dtype=jnp.float32)
+    qt = QTensor.pack(x, FP8_152)
+    leaves, treedef = jax.tree_util.tree_flatten(qt)
+    assert [l.dtype for l in leaves] == [jnp.int8]
+    back = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert back.fmt == FP8_152
+    # survives jit boundaries (residuals cross them in the custom_vjp)
+    out = jax.jit(lambda q: q.unpack())(qt)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(qt.unpack()))
+
+
+def test_pack_tree_unpack_tree():
+    rng = np.random.RandomState(3)
+    tree = {"a": jnp.asarray(rng.standard_normal((4, 4)), dtype=jnp.float32),
+            "b": {"c": jnp.asarray(rng.standard_normal(7), dtype=jnp.float32)}}
+    packed = pack_tree(tree, FP8_152)
+    assert all(isinstance(l, QTensor)
+               for l in jax.tree.leaves(packed, is_leaf=lambda x: isinstance(x, QTensor)))
+    out = unpack_tree(packed)
+    want = jax.tree.map(lambda x: quantize(x, FP8_152), tree)
+    for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(want)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_roundtrip_packed_payloads(tmp_path):
+    from repro.train.checkpoint import restore_checkpoint, save_checkpoint
+
+    rng = np.random.RandomState(4)
+    x = jnp.asarray(rng.standard_normal((16, 8)), dtype=jnp.float32)
+    state = {"w": x, "resid": QTensor.pack(x, FP8_152),
+             "ef": QTensor.pack_linear(x)}
+    save_checkpoint(str(tmp_path), 1, state)
+    like = jax.tree.map(lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), state)
+    back, meta = restore_checkpoint(str(tmp_path), 1, like)
+    assert isinstance(back["resid"], QTensor)
+    np.testing.assert_array_equal(np.asarray(back["resid"].payload),
+                                  np.asarray(state["resid"].payload))
+    np.testing.assert_array_equal(_bits(np.asarray(back["resid"].unpack())),
+                                  _bits(np.asarray(state["resid"].unpack())))
+    np.testing.assert_array_equal(np.asarray(back["ef"].unpack()),
+                                  np.asarray(state["ef"].unpack()))
+    # the checkpoint is self-describing: formats recorded in meta.json
+    assert meta["qtensors"]["resid"] == {"e": 5, "m": 2}
+    assert meta["qtensors"]["ef"] == {"linear": True}
+    # ...and restore refuses to reinterpret codes under a drifted format
+    drifted = dict(like)
+    drifted["resid"] = QTensor(
+        jax.ShapeDtypeStruct(state["resid"].payload.shape, jnp.int8),
+        fmt=FPFormat(e=4, m=3))
+    with pytest.raises(ValueError, match="not .*portable|portable"):
+        restore_checkpoint(str(tmp_path), 1, drifted)
+
+
+# --------------------------- hypothesis suite -------------------------------
+
+pytest.importorskip("hypothesis", reason="needs `pip install -e .[test]`")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.sampled_from(PACKABLE),
+       st.integers(min_value=0, max_value=2**31 - 1))
+def test_pack_unpack_bijection_every_packable_format(em, seed):
+    e, m = em
+    fmt = FPFormat(e=e, m=m)
+    rng = np.random.RandomState(seed)
+    x = rng.standard_normal(512).astype(np.float32)
+    # scale into and beyond the format's dynamic range: exercises clamp,
+    # flush and both signs; splice in the exact corner values
+    x *= np.float32(4.0) ** rng.randint(-8, 8)
+    x[:6] = [0.0, -0.0, fmt.max_value, -fmt.max_value,
+             fmt.min_normal, -fmt.min_normal]
+    xq = np.asarray(quantize(jnp.asarray(x), fmt))
+    rt = np.asarray(unpack_block(pack_block(jnp.asarray(xq), e, m), e, m))
+    np.testing.assert_array_equal(_bits(rt), _bits(xq))
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.sampled_from(PACKABLE),
+       st.integers(min_value=0, max_value=255))
+def test_every_int8_code_decodes_to_a_fixed_point(em, code):
+    # unpack is a right inverse everywhere: any code the wire could carry
+    # decodes to a value the quantizer maps to itself (so re-packing is
+    # stable and malformed payloads cannot smuggle unrepresentable values)
+    e, m = em
+    fmt = FPFormat(e=e, m=m)
+    # mask to the format's used bits — higher bits are never emitted
+    code = code & ((1 << (1 + e + m)) - 1)
+    c = jnp.asarray(np.array([code], np.uint8).view(np.int8))
+    v = unpack_block(c, e, m)
+    vq = quantize(v, fmt)
+    np.testing.assert_array_equal(_bits(np.asarray(v)), _bits(np.asarray(vq)))
+    rt = np.asarray(pack_block(v, e, m)).view(np.uint8)
+    # canonical codes re-pack to themselves; the only non-canonical codes
+    # are zeros with a junk mantissa field, which re-pack to canonical ±0
+    assert int(rt[0]) == code or float(v[0]) == 0.0
