@@ -43,6 +43,7 @@ def main(argv=None):
         llm_precisions,
         roofline,
         table1_precisions,
+        telemetry_loop,
     )
 
     bench("table1_precisions", table1_precisions.run)
@@ -52,6 +53,7 @@ def main(argv=None):
           steps=30 if fast else 60)
     bench("llm_precisions", llm_precisions.run)
     bench("kernel_bench", kernel_bench.run)
+    bench("telemetry_loop", telemetry_loop.run)
     if "--skip-roofline" not in argv:
         bench("roofline_baseline_16x16", roofline.run, mesh="16x16")
         bench("roofline_optimized_16x16", roofline.run, mesh="16x16",

@@ -1,0 +1,118 @@
+"""Swamping telemetry: measured-vs-predicted VRR sweep + closed-loop demo.
+
+Part 1 (fig-5 analogue, measured): sweep the accumulator mantissa width
+over a synthetic Gaussian layer and put the IN-KERNEL measured VRR (the
+stats epilogue of ``qmatmul_fused``) next to the ``repro.core.vrr`` closed
+forms — ``predicted_kernel_vrr`` (inter-chunk stage, ideal f32 intra, the
+kernels' true semantics) and Corollary 1's full chunked product.  This is
+the paper's Figure 5 knee, measured live instead of derived.
+
+Part 2 (the closed loop): start a deliberately under-provisioned policy
+(solver bound − 2 bits) on the same layer and let the telemetry controller
+bump ``m_acc`` from its own probes until the knee test passes.  Every probe
+and decision is appended to ``TELEMETRY_demo.jsonl`` — the artifact CI
+uploads, and whose final event CI gates on (controller must end within
+1 bit of the closed-form bound).
+
+Run:  PYTHONPATH=src python benchmarks/telemetry_loop.py
+"""
+
+from __future__ import annotations
+
+import json
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.policy import AccumulationPolicy, GEMMPrecision
+from repro.core.precision import min_m_acc
+from repro.core.vrr import CUTOFF_LOG_V, vrr_chunked
+from repro.quant.formats import FP8_152
+from repro.telemetry.controller import (
+    ControllerConfig,
+    GemmProbe,
+    PrecisionController,
+)
+from repro.telemetry.stats import gemm_stats, predicted_kernel_vrr
+
+# synthetic layer: accumulation length n1 * n2 with chunk (= block_k) n1.
+# n2 = 512 keeps the interpret-mode sweep in seconds while the knee test is
+# detectable from measurement alone (v(n2) can only reach ln 50 for
+# n2 >~ 75 — see repro.telemetry.controller).
+N1, N2 = 64, 512
+M_OUT, N_OUT = 32, 32  # output ensemble: 1024 dot products
+M_P = 5
+
+
+def _measure(x, w, m_acc):
+    _, st = gemm_stats(
+        x, w, precision=GEMMPrecision(m_acc=m_acc, e_acc=6, chunk=N1),
+        repr_fmt=FP8_152)
+    return st
+
+
+def run(csv=False, jsonl_path="TELEMETRY_demo.jsonl"):
+    k_len = N1 * N2
+    m_pred = min_m_acc(k_len, M_P, chunked=True, chunk=N1)
+    x = jax.random.normal(jax.random.PRNGKey(0), (M_OUT, k_len), jnp.float32)
+    w = jax.random.normal(jax.random.PRNGKey(1), (k_len, N_OUT), jnp.float32)
+
+    with open(jsonl_path, "w"):
+        pass  # fresh artifact per run
+
+    print(f"### measured vs predicted VRR, n = {N1}x{N2} = {k_len}, "
+          f"chunk n1 = {N1} (solver bound m_acc = {m_pred})")
+    print(f"{'m_acc':>6s} {'measured':>9s} {'kernel-pred':>12s} "
+          f"{'chunked-pred':>13s} {'v_meas(n2)':>11s} {'swamp%':>7s}  verdict")
+    sweep = {}
+    for m in range(m_pred - 2, m_pred + 2):
+        st = _measure(x, w, m)
+        meas = float(st.measured_vrr)
+        pred = predicted_kernel_vrr(m, M_P, N1, N2)
+        cor1 = vrr_chunked(m, M_P, N1, N2)
+        v_meas = st.measured_log_v(N2)
+        verdict = "suitable" if v_meas < CUTOFF_LOG_V else "SWAMPED"
+        print(f"{m:6d} {meas:9.4f} {pred:12.4f} {cor1:13.4f} "
+              f"{v_meas:11.2f} {float(st.swamp_rate) * 100:6.2f}%  {verdict}")
+        sweep[m] = {"kind": "sweep", "m_acc": m, "measured_vrr": meas,
+                    "kernel_predicted_vrr": pred, "chunked_predicted_vrr": cor1,
+                    "log_v_measured": v_meas, "n1": N1, "n2": N2,
+                    "swamp_rate": float(st.swamp_rate)}
+    with open(jsonl_path, "a") as f:
+        for row in sweep.values():
+            f.write(json.dumps(row) + "\n")
+
+    print(f"\n### closed loop: start at solver bound - 2 = {m_pred - 2}, "
+          f"controller probes until the knee test passes")
+    policy = AccumulationPolicy(mode="predicted", chunk=N1)
+    ctl = PrecisionController(
+        policy, ControllerConfig(cadence=1, hysteresis=1),
+        log_path=jsonl_path)
+    m = m_pred - 2
+    trajectory = [m]
+    for step in range(1, 9):
+        st = _measure(x, w, m)
+        ev = ctl.observe(step, {
+            ("demo_layer", "grad"): GemmProbe(stats=st, n=k_len, n1=N1,
+                                              m_acc=m)})[0]
+        print(f"  tick {step}: m_acc={m} -> {ev['event']}"
+              f"{'(' + str(ev['source']) + ')' if ev['source'] else ''}"
+              f"  v_meas={ev['log_v']:.2f} v_pred={ev['log_v_pred']:.2f} "
+              f"cutoff={ev['cutoff']:.2f}")
+        m = ev["m_acc"]
+        trajectory.append(m)
+        if ev["event"] == "ok":
+            break
+    converged = abs(m - m_pred) <= 1
+    print(f"=> trajectory {trajectory}, closed-form bound {m_pred}: "
+          f"{'CONVERGED' if converged else 'DID NOT CONVERGE'}")
+    print(f"wrote {jsonl_path}")
+    return {"final_m_acc": m, "m_pred": m_pred, "converged": converged,
+            "ticks": len(trajectory) - 1}
+
+
+if __name__ == "__main__":
+    out = run()
+    assert out["converged"], (
+        f"controller ended at m_acc={out['final_m_acc']}, "
+        f"more than 1 bit from the closed-form bound {out['m_pred']}")

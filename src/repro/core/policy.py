@@ -57,17 +57,25 @@ class AccumulationPolicy:
     e_acc: int = 6
     quantize_outputs: bool = False
 
+    # The emulation carries the narrow accumulator in an f32 VMEM tile, so
+    # m_acc beyond f32's 23 mantissa bits is not a representable format —
+    # perturbations and controller bumps clamp here instead of constructing
+    # an invalid FPFormat that only fails deep inside the kernel.
+    M_ACC_CARRIER = 23
+
     def for_length(self, n: int) -> GEMMPrecision | None:
         """Solve the accumulator format for accumulation length ``n``.
 
         Returns None in "exact" mode (meaning: use the hardware's native
-        wide accumulation; nothing to emulate).
+        wide accumulation; nothing to emulate).  Perturbed widths are
+        clamped to [1, M_ACC_CARRIER]: a positive PP sweep (or a telemetry
+        controller bump) can never exceed the f32 carrier width.
         """
         if self.mode == "exact":
             return None
         m = min_m_acc(n, self.m_p, chunked=self.chunk > 0, chunk=self.chunk or 64, nzr=self.nzr)
         if self.mode == "perturbed":
-            m = max(m + self.perturbation, 1)
+            m = min(max(m + self.perturbation, 1), self.M_ACC_CARRIER)
         return GEMMPrecision(m_acc=m, e_acc=self.e_acc, chunk=self.chunk)
 
     def perturbed(self, pp: int) -> "AccumulationPolicy":

@@ -51,12 +51,29 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.autotune import fmt_tuple, register_kernel
-from repro.kernels.common import INTERPRET, pad2d, quantize_block
+from repro.kernels.common import (
+    INTERPRET,
+    N_STATS,
+    pad2d,
+    quantize_block,
+    stats_delta_row,
+    stats_update,
+)
 from repro.quant.qtensor import unpack_block
 
-__all__ = ["qmatmul_bwd_pair", "pair_vmem_bytes"]
+__all__ = ["qmatmul_bwd_pair", "qmatmul_bwd_pair_nsplit", "pair_vmem_bytes",
+           "pair_segment_width"]
 
 _WIDE = (8, 23)
+
+
+def pair_segment_width(n: int, n_split: int, block_n: int) -> int:
+    """block_n-aligned width of one N segment when splitting ``n`` columns
+    into ``n_split`` segments — the single formula shared by the nsplit
+    kernel wrapper, the VMEM gate (``repro.kernels.ops.pair_n_segments``)
+    and the warmup autotuner, so tuned entries match the traced shapes."""
+    raw = -(-n // n_split)
+    return max(-(-raw // block_n) * block_n, block_n)
 
 
 def pair_vmem_bytes(block_t: int, block_k: int, block_n: int, n_padded: int,
@@ -114,14 +131,135 @@ def _pair_kernel(g_ref, x_ref, w_ref, dx_ref, dw_ref, dx_acc, dw_acc, *,
         dw_ref[...] = dw_acc[:, sl]
 
 
+def _pair_kernel_seg(g_ref, x_ref, w_ref, dxc_ref, dx_ref, dw_ref, dx_acc,
+                     dw_acc, *, e_r, m_r, qg, packed, e_bwd, m_bwd, e_grad,
+                     m_grad, block_n):
+    """N-split segment body: identical to ``_pair_kernel`` except the dx
+    carry RESUMES from ``dxc_ref`` — the running dx of the previous N
+    segment — instead of zero.  Chaining segments in N order reproduces the
+    unsplit kernel's chunked dx accumulation bit-for-bit: the carry values
+    handed between segments are exact (1, e_bwd, m_bwd) points carried in
+    f32, and the per-``block_n`` rounding cadence is unchanged because
+    segment widths are block_n-aligned."""
+    i = pl.program_id(1)
+    l = pl.program_id(2)
+
+    g = quantize_block(g_ref[...], e_r, m_r) if qg else g_ref[...]
+    if packed:
+        x = unpack_block(x_ref[...], e_r, m_r)
+        w = unpack_block(w_ref[...], e_r, m_r)
+    else:
+        x, w = x_ref[...], w_ref[...]
+
+    @pl.when(l == 0)
+    def _init_dx():
+        dx_acc[...] = dxc_ref[...]
+
+    pdx = jax.lax.dot_general(g, w, (((1,), (1,)), ((), ())),
+                              preferred_element_type=jnp.float32)
+    dx_acc[...] = quantize_block(dx_acc[...] + pdx, e_bwd, m_bwd)
+
+    @pl.when(l == pl.num_programs(2) - 1)
+    def _emit_dx():
+        dx_ref[...] = dx_acc[...]
+
+    sl = pl.dslice(l * block_n, block_n)
+    pdw = jax.lax.dot_general(x, g, (((0,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)
+    prev = jnp.where(i == 0, jnp.zeros_like(pdw), dw_acc[:, sl])
+    dw_acc[:, sl] = quantize_block(prev + pdw, e_grad, m_grad)
+
+    @pl.when(i == pl.num_programs(1) - 1)
+    def _emit_dw():
+        dw_ref[...] = dw_acc[:, sl]
+
+
+def _pair_kernel_stats(g_ref, x_ref, w_ref, dx_ref, dw_ref, stats_ref,
+                       dx_acc, dw_acc, dxi_acc, dwi_acc, stats_acc, *,
+                       e_r, m_r, qg, packed, e_bwd, m_bwd, e_grad, m_grad,
+                       t, k, n, block_t, block_k, block_n):
+    """Swamping-telemetry variant of ``_pair_kernel``: the same two chunked
+    accumulations plus wide (f32) shadow carries and a (2, N_STATS) stats
+    reduction — row 0 for dx (the BWD accumulator), row 1 for dw (GRAD, the
+    paper's critical long accumulation).  dx/dw outputs are bit-identical to
+    the stats-off kernel."""
+    j, i, l = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+    last_i = i == pl.num_programs(1) - 1
+    last_l = l == pl.num_programs(2) - 1
+
+    @pl.when((j == 0) & (i == 0) & (l == 0))
+    def _init_stats():
+        stats_acc[...] = jnp.zeros_like(stats_acc)
+
+    g = quantize_block(g_ref[...], e_r, m_r) if qg else g_ref[...]
+    if packed:
+        x = unpack_block(x_ref[...], e_r, m_r)
+        w = unpack_block(w_ref[...], e_r, m_r)
+    else:
+        x, w = x_ref[...], w_ref[...]
+
+    # ---- dx: carry over l (innermost), chunk = block_n ----
+    @pl.when(l == 0)
+    def _init_dx():
+        dx_acc[...] = jnp.zeros_like(dx_acc)
+        dxi_acc[...] = jnp.zeros_like(dxi_acc)
+
+    pdx = jax.lax.dot_general(g, w, (((1,), (1,)), ((), ())),
+                              preferred_element_type=jnp.float32)
+    prev_dx = dx_acc[...]
+    new_dx = quantize_block(prev_dx + pdx, e_bwd, m_bwd)
+    dx_acc[...] = new_dx
+    dxi = dxi_acc[...] + pdx
+    dxi_acc[...] = dxi
+
+    mask_dx = ((i * block_t + jax.lax.broadcasted_iota(
+        jnp.int32, (block_t, block_k), 0) < t)
+        & (j * block_k + jax.lax.broadcasted_iota(
+            jnp.int32, (block_t, block_k), 1) < k))
+    dx_delta, dx_max = stats_delta_row(new_dx, prev_dx, dxi, pdx, mask_dx,
+                                       last_l)
+
+    @pl.when(last_l)
+    def _emit_dx():
+        dx_ref[...] = dx_acc[...]
+
+    # ---- dw: carry over i (middle), chunk = block_t ----
+    sl = pl.dslice(l * block_n, block_n)
+    pdw = jax.lax.dot_general(x, g, (((0,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)
+    prev_dw = jnp.where(i == 0, jnp.zeros_like(pdw), dw_acc[:, sl])
+    new_dw = quantize_block(prev_dw + pdw, e_grad, m_grad)
+    dw_acc[:, sl] = new_dw
+    dwi = jnp.where(i == 0, jnp.zeros_like(pdw), dwi_acc[:, sl]) + pdw
+    dwi_acc[:, sl] = dwi
+
+    mask_dw = ((j * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, (block_k, block_n), 0) < k)
+        & (l * block_n + jax.lax.broadcasted_iota(
+            jnp.int32, (block_k, block_n), 1) < n))
+    dw_delta, dw_max = stats_delta_row(new_dw, prev_dw, dwi, pdw, mask_dw,
+                                       last_i)
+    stats_update(stats_acc, jnp.stack([dx_delta, dw_delta]),
+                 jnp.stack([dx_max, dw_max]))
+
+    @pl.when(last_i)
+    def _emit_dw():
+        dw_ref[...] = dw_acc[:, sl]
+
+    @pl.when((j == pl.num_programs(0) - 1) & last_i & last_l)
+    def _emit_stats():
+        stats_ref[...] = stats_acc[...]
+
+
 @functools.partial(
     jax.jit,
     static_argnames=("e_r", "m_r", "qg", "packed", "e_bwd", "m_bwd",
                      "e_grad", "m_grad", "block_t", "block_k", "block_n",
-                     "interpret"),
+                     "collect_stats", "interpret"),
 )
 def _bwd_pair(g, xq, wq, *, e_r, m_r, qg, packed, e_bwd, m_bwd, e_grad,
-              m_grad, block_t, block_k, block_n, interpret):
+              m_grad, block_t, block_k, block_n, collect_stats=False,
+              interpret=False):
     t, n = g.shape
     k = xq.shape[1]
     rdt = jnp.int8 if packed else jnp.float32
@@ -131,6 +269,40 @@ def _bwd_pair(g, xq, wq, *, e_r, m_r, qg, packed, e_bwd, m_bwd, e_grad,
     tp, np_ = g2.shape
     kp = x2.shape[1]
     grid = (kp // block_k, tp // block_t, np_ // block_n)
+
+    if collect_stats:
+        dx, dw, stats = pl.pallas_call(
+            functools.partial(_pair_kernel_stats, e_r=e_r, m_r=m_r, qg=qg,
+                              packed=packed, e_bwd=e_bwd, m_bwd=m_bwd,
+                              e_grad=e_grad, m_grad=m_grad, t=t, k=k, n=n,
+                              block_t=block_t, block_k=block_k,
+                              block_n=block_n),
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((block_t, block_n), lambda j, i, l: (i, l)),
+                pl.BlockSpec((block_t, block_k), lambda j, i, l: (i, j)),
+                pl.BlockSpec((block_k, block_n), lambda j, i, l: (j, l)),
+            ],
+            out_specs=[
+                pl.BlockSpec((block_t, block_k), lambda j, i, l: (i, j)),
+                pl.BlockSpec((block_k, block_n), lambda j, i, l: (j, l)),
+                pl.BlockSpec((2, N_STATS), lambda j, i, l: (0, 0)),
+            ],
+            out_shape=[
+                jax.ShapeDtypeStruct((tp, kp), jnp.float32),
+                jax.ShapeDtypeStruct((kp, np_), jnp.float32),
+                jax.ShapeDtypeStruct((2, N_STATS), jnp.float32),
+            ],
+            scratch_shapes=[
+                pltpu.VMEM((block_t, block_k), jnp.float32),  # dx carry
+                pltpu.VMEM((block_k, np_), jnp.float32),      # dw carry slab
+                pltpu.VMEM((block_t, block_k), jnp.float32),  # dx ideal
+                pltpu.VMEM((block_k, np_), jnp.float32),      # dw ideal slab
+                pltpu.VMEM((2, N_STATS), jnp.float32),        # stats rows
+            ],
+            interpret=interpret,
+        )(g2, x2, w2)
+        return dx[:t, :k], dw[:k, :n], stats
 
     dx, dw = pl.pallas_call(
         functools.partial(_pair_kernel, e_r=e_r, m_r=m_r, qg=qg,
@@ -159,6 +331,55 @@ def _bwd_pair(g, xq, wq, *, e_r, m_r, qg, packed, e_bwd, m_bwd, e_grad,
     return dx[:t, :k], dw[:k, :n]
 
 
+@functools.partial(
+    jax.jit,
+    static_argnames=("e_r", "m_r", "qg", "packed", "e_bwd", "m_bwd",
+                     "e_grad", "m_grad", "block_t", "block_k", "block_n",
+                     "interpret"),
+)
+def _bwd_pair_seg(g, xq, wq, dxc, *, e_r, m_r, qg, packed, e_bwd, m_bwd,
+                  e_grad, m_grad, block_t, block_k, block_n, interpret):
+    """One N segment of the split backward pair: dx carry in, dx carry (or
+    final dx) + this segment's dw columns out."""
+    t, n = g.shape
+    k = xq.shape[1]
+    rdt = jnp.int8 if packed else jnp.float32
+    g2 = pad2d(g, block_t, block_n)
+    x2 = pad2d(xq, block_t, block_k, dtype=rdt)
+    w2 = pad2d(wq, block_k, block_n, dtype=rdt)
+    c2 = pad2d(dxc, block_t, block_k)
+    tp, np_ = g2.shape
+    kp = x2.shape[1]
+    grid = (kp // block_k, tp // block_t, np_ // block_n)
+
+    dx, dw = pl.pallas_call(
+        functools.partial(_pair_kernel_seg, e_r=e_r, m_r=m_r, qg=qg,
+                          packed=packed, e_bwd=e_bwd, m_bwd=m_bwd,
+                          e_grad=e_grad, m_grad=m_grad, block_n=block_n),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_t, block_n), lambda j, i, l: (i, l)),  # g
+            pl.BlockSpec((block_t, block_k), lambda j, i, l: (i, j)),  # x
+            pl.BlockSpec((block_k, block_n), lambda j, i, l: (j, l)),  # w
+            pl.BlockSpec((block_t, block_k), lambda j, i, l: (i, j)),  # dxc
+        ],
+        out_specs=[
+            pl.BlockSpec((block_t, block_k), lambda j, i, l: (i, j)),  # dx
+            pl.BlockSpec((block_k, block_n), lambda j, i, l: (j, l)),  # dw
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((tp, kp), jnp.float32),
+            jax.ShapeDtypeStruct((kp, np_), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((block_t, block_k), jnp.float32),  # dx carry
+            pltpu.VMEM((block_k, np_), jnp.float32),      # dw carry slab
+        ],
+        interpret=interpret,
+    )(g2, x2, w2, c2)
+    return dx[:t, :k], dw[:k, :n]
+
+
 @register_kernel("qmatmul_bwd_pair")
 def qmatmul_bwd_pair(
     g: jnp.ndarray,
@@ -173,6 +394,7 @@ def qmatmul_bwd_pair(
     block_n: int = 128,
     packed: bool = True,
     quantize_g: bool = True,
+    collect_stats: bool = False,
     interpret: bool = INTERPRET,
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """(dx, dw) of one dense layer in a single ``pallas_call``.
@@ -184,6 +406,11 @@ def qmatmul_bwd_pair(
     * ``bwd_acc`` / ``grad_acc`` — (e_acc, m_acc) accumulator formats.
     * ``block_n`` is the BWD chunk length (numerics), ``block_t`` the GRAD
       chunk length (numerics); only ``block_k`` is schedule-only.
+    * ``collect_stats=True`` returns ``(dx, dw, stats)`` with ``stats`` a
+      (2, N_STATS) raw telemetry block — row 0 the dx (BWD) accumulator,
+      row 1 the dw (GRAD) accumulator; dx/dw stay bit-identical.  Roughly
+      doubles the VMEM working set (wide shadow carries), which is why the
+      telemetry probe, not the train step, is the caller.
     """
     if g.ndim != 2 or xq.ndim != 2 or wq.ndim != 2:
         raise ValueError("2D operands required")
@@ -208,5 +435,67 @@ def qmatmul_bwd_pair(
         g, xq, wq, e_r=int(e_r), m_r=int(m_r), qg=quantize_g, packed=packed,
         e_bwd=int(e_b), m_bwd=int(m_b), e_grad=int(e_g), m_grad=int(m_g),
         block_t=block_t, block_k=block_k, block_n=block_n,
-        interpret=interpret,
+        collect_stats=collect_stats, interpret=interpret,
     )
+
+
+@register_kernel("qmatmul_bwd_pair_nsplit")
+def qmatmul_bwd_pair_nsplit(
+    g: jnp.ndarray,
+    xq: jnp.ndarray,
+    wq: jnp.ndarray,
+    *,
+    n_split: int,
+    repr_fmt=None,
+    bwd_acc: tuple[int, int] = _WIDE,
+    grad_acc: tuple[int, int] = _WIDE,
+    block_t: int = 128,
+    block_k: int = 128,
+    block_n: int = 128,
+    packed: bool = True,
+    quantize_g: bool = True,
+    interpret: bool = INTERPRET,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """The backward pair split into ``n_split`` N segments (wide-N layers
+    whose (block_k, N_padded) dw carry slab busts the VMEM budget,
+    lm_head-scale fan-outs) — ROADMAP "bwd-pair VMEM scaling".
+
+    Each segment is one pallas_call over its N slice: dw columns are emitted
+    per segment (the dw accumulation runs over T, untouched by the split)
+    and the dx chunked accumulation CONTINUES across segments via an
+    explicit carry tensor, in the same N order and block_n rounding cadence
+    as the unsplit kernel — bit-identical results (pinned in
+    tests/test_fused.py).  Against the two-call fallback this keeps the
+    pair's traffic shape: g and w are still read once in total (each segment
+    reads only its N slice) where the fallback re-reads and re-quantizes g
+    for each GEMM; the price is one x re-read plus one dx carry round-trip
+    per extra segment.
+    """
+    if n_split < 2:
+        raise ValueError("n_split >= 2; use qmatmul_bwd_pair for one pass")
+    t, n = g.shape
+    k = xq.shape[1]
+    fmt = fmt_tuple(repr_fmt)
+    if fmt is None:
+        if packed:
+            raise ValueError("packed residuals need repr_fmt to decode")
+        e_r, m_r = _WIDE
+        quantize_g = False
+    else:
+        e_r, m_r = fmt
+    (e_b, m_b), (e_g, m_g) = bwd_acc, grad_acc
+    # block_n-aligned segment edges: the global chunk sequence over N is the
+    # unsplit kernel's (padding chunks are carry no-ops: q(c + 0) == c)
+    seg = pair_segment_width(n, n_split, block_n)
+    dx = jnp.zeros((t, k), jnp.float32)
+    dws = []
+    for lo in range(0, n, seg):
+        hi = min(lo + seg, n)
+        dx, dw_s = _bwd_pair_seg(
+            g[:, lo:hi], xq, wq[:, lo:hi], dx,
+            e_r=int(e_r), m_r=int(m_r), qg=quantize_g, packed=packed,
+            e_bwd=int(e_b), m_bwd=int(m_b), e_grad=int(e_g),
+            m_grad=int(m_g), block_t=block_t, block_k=block_k,
+            block_n=block_n, interpret=interpret)
+        dws.append(dw_s)
+    return dx, jnp.concatenate(dws, axis=1)

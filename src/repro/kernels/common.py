@@ -5,7 +5,23 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-__all__ = ["quantize_block", "INTERPRET", "pad2d", "count_pallas_calls"]
+__all__ = [
+    "quantize_block",
+    "INTERPRET",
+    "pad2d",
+    "count_pallas_calls",
+    "N_STATS",
+    "STAT_COUNT",
+    "STAT_SUM_Q",
+    "STAT_SUMSQ_Q",
+    "STAT_SUM_I",
+    "STAT_SUMSQ_I",
+    "STAT_MAX_ABS",
+    "STAT_SWAMPED",
+    "STAT_ADDS",
+    "stats_delta_row",
+    "stats_update",
+]
 
 # Pallas kernels target TPU; on any other backend (this container is
 # CPU-only) they run in interpret mode, which executes the kernel body with
@@ -60,6 +76,65 @@ def _count_in_param(v) -> int:
     if isinstance(v, (list, tuple)):
         return sum(_count_in_param(x) for x in v)
     return 0
+
+
+# --------------------------------------------------------------------------
+# swamping-telemetry stats epilogue (repro.telemetry)
+# --------------------------------------------------------------------------
+#
+# Raw in-kernel stats vector: one f32 row of N_STATS slots per monitored
+# accumulator, reduced over the whole GEMM grid in a VMEM scratch and
+# emitted as a small extra output when ``collect_stats=True``.  The layout
+# is the kernel<->telemetry contract; ``repro.telemetry.stats.EnsembleStats``
+# is the only consumer.  Counters are f32 (exact up to 2^24 events; beyond
+# that the swamp *rate* stays accurate, which is all the controller reads).
+
+N_STATS = 8
+(
+    STAT_COUNT,     # valid output elements (the ensemble size)
+    STAT_SUM_Q,     # sum of reduced-precision outputs
+    STAT_SUMSQ_Q,   # sum of squared reduced-precision outputs
+    STAT_SUM_I,     # sum of ideal (f32-accumulated) outputs
+    STAT_SUMSQ_I,   # sum of squared ideal outputs
+    STAT_MAX_ABS,   # max |carry| over all chunk updates (exponent proxy)
+    STAT_SWAMPED,   # chunk-carry adds fully absorbed: q(c + p) == c, p != 0
+    STAT_ADDS,      # chunk-carry adds with a non-zero addend
+) = range(N_STATS)
+
+
+def stats_delta_row(new, prev, ideal, partial, mask, emit_out):
+    """Per-grid-step stats contribution for one chunk-carry update.
+
+    ``new``/``prev`` are the carry tile after/before ``quantize(prev +
+    partial)``, ``ideal`` the wide (f32) carry, ``mask`` the valid-region
+    mask of the tile, ``emit_out`` a traced bool — True on the tile's final
+    chunk, when the carry IS the output and its ensemble moments are taken.
+    Returns ``(delta, step_max)``: an (N_STATS,) additive contribution
+    (zero in the MAX_ABS slot) and the step's max |carry| for the max-merge.
+    """
+    one = jnp.float32(1.0)
+    zero = jnp.float32(0.0)
+    nz = (partial != 0.0) & mask
+    swamped = jnp.sum(jnp.where((new == prev) & nz, one, zero))
+    adds = jnp.sum(jnp.where(nz, one, zero))
+    om = mask & emit_out
+    q = jnp.where(om, new, 0.0)
+    w = jnp.where(om, ideal, 0.0)
+    cnt = jnp.sum(jnp.where(om, one, zero))
+    delta = jnp.stack([cnt, jnp.sum(q), jnp.sum(q * q),
+                       jnp.sum(w), jnp.sum(w * w), zero, swamped, adds])
+    step_max = jnp.max(jnp.where(mask, jnp.abs(new), 0.0))
+    return delta, step_max
+
+
+def stats_update(stats_acc, deltas, maxes):
+    """Accumulate per-step contributions into the (R, N_STATS) stats scratch:
+    every slot adds, except MAX_ABS which max-merges."""
+    cur = stats_acc[...]
+    col = jax.lax.broadcasted_iota(jnp.int32, cur.shape, 1)
+    stats_acc[...] = jnp.where(col == STAT_MAX_ABS,
+                               jnp.maximum(cur, maxes[:, None]),
+                               cur + deltas)
 
 
 def quantize_block(x: jnp.ndarray, e: int, m: int) -> jnp.ndarray:

@@ -55,7 +55,14 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.autotune import fmt_tuple, register_kernel
-from repro.kernels.common import INTERPRET, pad2d, quantize_block
+from repro.kernels.common import (
+    INTERPRET,
+    N_STATS,
+    pad2d,
+    quantize_block,
+    stats_delta_row,
+    stats_update,
+)
 from repro.quant.qtensor import pack_block, unpack_block
 
 __all__ = ["qmatmul_fused"]
@@ -133,15 +140,73 @@ def _fused_kernel_emitq(a_ref, b_ref, o_ref, aq_ref, bq_ref, acc_ref, *,
         _emit_output(o_ref, acc_ref[...], e_o=e_o, m_o=m_o, pack_out=pack_out)
 
 
+def _fused_kernel_stats(a_ref, b_ref, o_ref, stats_ref, acc_ref, ideal_ref,
+                        stats_acc, *, e_r, m_r, qa, qb, e_acc, m_acc,
+                        a_packed, b_packed, e_o, m_o, pack_out,
+                        m, n, block_m, block_n):
+    """The swamping-telemetry variant (``collect_stats=True``): the SAME
+    chunked accumulation — identical values, identical order — plus a wide
+    (f32) shadow carry and an (1, N_STATS) stats reduction (see
+    ``repro.kernels.common``).  The measured-VRR numerator/denominator are
+    the reduced-precision and ideal accumulations of the *same* quantized
+    products, so the ratio isolates the accumulation effect exactly as the
+    paper's VRR does.  Stats live in a scratch row reduced across the whole
+    grid; the stats output block maps every grid step to block (0, 0) and is
+    written once, on the final step (same single-write discipline — and the
+    same compiled-TPU copy-back caveat — as the residual emission)."""
+    i, j, kk = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+    last_k = kk == pl.num_programs(2) - 1
+
+    @pl.when((i == 0) & (j == 0) & (kk == 0))
+    def _init_stats():
+        stats_acc[...] = jnp.zeros_like(stats_acc)
+
+    @pl.when(kk == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        ideal_ref[...] = jnp.zeros_like(ideal_ref)
+
+    a = _load_operand(a_ref, packed=a_packed, q=qa, e_r=e_r, m_r=m_r)
+    b = _load_operand(b_ref, packed=b_packed, q=qb, e_r=e_r, m_r=m_r)
+    partial = jnp.dot(a, b, preferred_element_type=jnp.float32)
+
+    prev = acc_ref[...]
+    new = quantize_block(prev + partial, e_acc, m_acc)
+    acc_ref[...] = new
+    ideal = ideal_ref[...] + partial
+    ideal_ref[...] = ideal
+
+    # valid-region mask: zero-padding is a fixed point of the whole pipeline
+    # (the padded outputs are exact), but including them in the ensemble
+    # would bias the variance estimate toward zero
+    rows = i * block_m + jax.lax.broadcasted_iota(
+        jnp.int32, (block_m, block_n), 0)
+    cols = j * block_n + jax.lax.broadcasted_iota(
+        jnp.int32, (block_m, block_n), 1)
+    mask = (rows < m) & (cols < n)
+    delta, step_max = stats_delta_row(new, prev, ideal, partial, mask, last_k)
+    stats_update(stats_acc, delta[None, :], step_max[None])
+
+    @pl.when(last_k)
+    def _emit():
+        _emit_output(o_ref, acc_ref[...], e_o=e_o, m_o=m_o, pack_out=pack_out)
+
+    @pl.when((i == pl.num_programs(0) - 1) & (j == pl.num_programs(1) - 1)
+             & last_k)
+    def _emit_stats():
+        stats_ref[...] = stats_acc[...]
+
+
 @functools.partial(
     jax.jit,
     static_argnames=("e_r", "m_r", "e_acc", "m_acc", "block_m", "block_n",
                      "block_k", "qa", "qb", "emitq", "packr", "a_packed",
-                     "b_packed", "e_o", "m_o", "pack_out", "interpret"),
+                     "b_packed", "e_o", "m_o", "pack_out", "collect_stats",
+                     "interpret"),
 )
 def _qmatmul_fused(a, b, *, e_r, m_r, e_acc, m_acc, block_m, block_n,
                    block_k, qa, qb, emitq, packr, a_packed, b_packed,
-                   e_o, m_o, pack_out, interpret):
+                   e_o, m_o, pack_out, collect_stats=False, interpret=False):
     m, k = a.shape
     _, n = b.shape
     a32 = pad2d(a, block_m, block_k, dtype=jnp.int8 if a_packed else jnp.float32)
@@ -163,6 +228,29 @@ def _qmatmul_fused(a, b, *, e_r, m_r, e_acc, m_acc, block_m, block_n,
     # value is always exactly representable in (1, e_acc, m_acc) after the
     # per-chunk rounding)
     scratch = [pltpu.VMEM((block_m, block_n), jnp.float32)]
+
+    if collect_stats:
+        out, stats = pl.pallas_call(
+            functools.partial(_fused_kernel_stats, a_packed=a_packed,
+                              b_packed=b_packed, m=m, n=n,
+                              block_m=block_m, block_n=block_n, **kw),
+            grid=grid,
+            in_specs=in_specs,
+            out_specs=[
+                o_spec,
+                pl.BlockSpec((1, N_STATS), lambda i, j, kk: (0, 0)),
+            ],
+            out_shape=[
+                o_shape,
+                jax.ShapeDtypeStruct((1, N_STATS), jnp.float32),
+            ],
+            scratch_shapes=scratch + [
+                pltpu.VMEM((block_m, block_n), jnp.float32),  # ideal carry
+                pltpu.VMEM((1, N_STATS), jnp.float32),        # stats row
+            ],
+            interpret=interpret,
+        )(a32, b32)
+        return out[:m, :n], stats[0]
 
     if not emitq:
         out = pl.pallas_call(
@@ -217,6 +305,7 @@ def qmatmul_fused(
     b_packed: bool = False,
     out_fmt=None,
     pack_out: bool = False,
+    collect_stats: bool = False,
     interpret: bool = INTERPRET,
 ):
     """C[M, N] = Q(A)[M, K] @ Q(B)[K, N] with chunked (1, e_acc, m_acc)
@@ -241,6 +330,13 @@ def qmatmul_fused(
       this (1, e, m) format in the epilogue, so a downstream kernel that
       would quantize this tensor to the same format can skip it (bit-exact
       by idempotence).  ``pack_out=True`` emits the output as int8 codes.
+    * ``collect_stats=True`` returns ``(c, stats)``: the swamping-telemetry
+      epilogue reduces the raw (N_STATS,) stats vector (see
+      ``repro.kernels.common``) alongside the GEMM — ``c`` itself is
+      bit-identical to the stats-off call.  Interpret with
+      ``repro.telemetry.stats.EnsembleStats.from_raw``.  Mutually exclusive
+      with ``return_quantized`` (the telemetry probe path never needs
+      residuals).
     """
     if a.ndim != 2 or b.ndim != 2 or a.shape[1] != b.shape[0]:
         raise ValueError(f"bad shapes {a.shape} @ {b.shape}")
@@ -257,6 +353,9 @@ def qmatmul_fused(
     e_o, m_o = fmt_tuple(out_fmt) or _WIDE
     if pack_out and fmt_tuple(out_fmt) is None:
         raise ValueError("pack_out needs out_fmt to define the code layout")
+    if collect_stats and return_quantized:
+        raise ValueError("collect_stats is a probe-path epilogue; residual "
+                         "emission is a train-path epilogue — pick one")
     return _qmatmul_fused(
         a, b, e_r=int(e_r), m_r=int(m_r), e_acc=e_acc, m_acc=m_acc,
         block_m=block_m, block_n=block_n, block_k=block_k,
@@ -264,5 +363,6 @@ def qmatmul_fused(
         emitq=return_quantized, packr=pack_residuals,
         a_packed=a_packed, b_packed=b_packed,
         e_o=int(e_o), m_o=int(m_o), pack_out=pack_out,
+        collect_stats=collect_stats,
         interpret=interpret,
     )

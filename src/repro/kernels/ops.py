@@ -17,8 +17,12 @@ train step, and no quantized value ever travels in an f32 carrier between
 them.
 
 When the backward-pair working set exceeds the VMEM budget (the dw carry
-slab grows with N — lm_head-scale fan-outs), the backward falls back to two
-fused GEMMs that still consume the packed residuals in-kernel.  Block
+slab grows with N — lm_head-scale fan-outs), the backward SPLITS the pair
+over N segments (``qmatmul_bwd_pair_nsplit``: dw columns per segment, the
+dx chunked carry chained across segments — bit-identical to the unsplit
+kernel, g still landed/quantized once per tile in total); only when even
+``MAX_PAIR_SEGMENTS`` single-chunk-wide segments bust the budget does it
+fall back to two fused GEMMs that re-read and re-quantize g.  Block
 decompositions are consulted from the autotuner's JSON tuning table at
 trace time (``blocks_for`` / ``pair_blocks_for``).
 
@@ -48,15 +52,25 @@ from repro.kernels.autotune import (
     pair_blocks_for,
     vmem_budget,
 )
-from repro.kernels.bwd_pair import pair_vmem_bytes, qmatmul_bwd_pair
+from repro.kernels.bwd_pair import (
+    pair_segment_width,
+    pair_vmem_bytes,
+    qmatmul_bwd_pair,
+    qmatmul_bwd_pair_nsplit,
+)
 from repro.kernels.fused import qmatmul_fused
 from repro.kernels.qmatmul import qmatmul_pallas
 from repro.kernels.quantize import quantize_pallas
 from repro.quant.formats import FPFormat
 from repro.quant.qtensor import QTensor
+from repro.telemetry import capture as _capture
 
 __all__ = ["QDotConfig", "qdot", "qdot_packed", "quantize_op",
-           "qdot_gemm_variants", "bwd_pair_fits"]
+           "qdot_gemm_variants", "bwd_pair_fits", "pair_n_segments"]
+
+# beyond this many N segments the split pair's x re-reads and dx carry
+# round-trips stop paying for the saved g re-read; fall back to two GEMMs
+MAX_PAIR_SEGMENTS = 16
 
 
 def quantize_op(x: jnp.ndarray, fmt: FPFormat) -> jnp.ndarray:
@@ -112,24 +126,45 @@ def _acc_params(p: GEMMPrecision | None) -> tuple[int, int, int]:
     return p.e_acc, p.m_acc, p.chunk if p.chunk > 0 else 0
 
 
-def bwd_pair_fits(cfg: QDotConfig, t: int, k: int, n: int,
-                  *, vmem: int | None = None) -> bool:
-    """Whether the one-pass backward-pair kernel's working set — dominated
-    by the (block_k, N_padded) dw carry slab — fits the VMEM budget for this
-    layer shape (``vmem=None`` resolves the generation ceiling at call
-    time).  The same predicate gates the trace in ``_qdot2d_bwd`` and the
-    warmup tuner's work-list, so tuned entries are exactly the kernels qdot
-    traces."""
-    if not cfg.fused:
-        return False
-    if vmem is None:
-        vmem = vmem_budget()
+def _pair_chunks(cfg: QDotConfig) -> tuple[int, int]:
+    """(block_t, block_n) rounding cadences of the backward pair."""
     _, _, bwd_chunk = _acc_params(cfg.bwd)
     _, _, grad_chunk = _acc_params(cfg.grad)
     bt = grad_chunk if grad_chunk > 0 else 128
     bn = bwd_chunk if bwd_chunk > 0 else 128
-    np_ = max(-(-n // bn) * bn, bn)
-    return pair_vmem_bytes(bt, 128, bn, np_, packed=cfg.packs) <= vmem
+    return bt, bn
+
+
+def pair_n_segments(cfg: QDotConfig, t: int, k: int, n: int,
+                    *, vmem: int | None = None) -> int:
+    """How many N segments the backward-pair kernel needs for this layer
+    shape: 1 = the unsplit one-pass kernel fits the VMEM budget, s > 1 =
+    the N-split pair (s pallas_calls, dx carry chained), 0 = even
+    ``MAX_PAIR_SEGMENTS`` segments leave the per-segment (block_k, N_seg)
+    dw carry slab over budget — fall back to two separate GEMMs.  The same
+    predicate gates the trace in ``_qdot2d_bwd`` and the warmup tuner's
+    work-list, so tuned entries are exactly the kernels qdot traces."""
+    if not cfg.fused:
+        return 0
+    if vmem is None:
+        vmem = vmem_budget()
+    bt, bn = _pair_chunks(cfg)
+    for s in range(1, MAX_PAIR_SEGMENTS + 1):
+        seg = pair_segment_width(n, s, bn)
+        if pair_vmem_bytes(bt, 128, bn, seg, packed=cfg.packs) <= vmem:
+            return s
+        if seg == bn:  # already a single chunk wide; no smaller segment
+            break
+    return 0
+
+
+def bwd_pair_fits(cfg: QDotConfig, t: int, k: int, n: int,
+                  *, vmem: int | None = None) -> bool:
+    """Whether the UNSPLIT one-pass backward-pair kernel's working set —
+    dominated by the (block_k, N_padded) dw carry slab — fits the VMEM
+    budget for this layer shape (``vmem=None`` resolves the generation
+    ceiling at call time)."""
+    return pair_n_segments(cfg, t, k, n, vmem=vmem) == 1
 
 
 def qdot_gemm_variants(cfg: QDotConfig, t: int, k: int, n: int) -> dict[str, dict]:
@@ -158,8 +193,12 @@ def qdot_gemm_variants(cfg: QDotConfig, t: int, k: int, n: int) -> dict[str, dic
                          pack_residuals=packs and emitq)
     eb, mb, cb = _acc_params(cfg.bwd)
     eg, mg, cg = _acc_params(cfg.grad)
-    if bwd_pair_fits(cfg, t, k, n):
-        out["bwd_pair"] = dict(kernel="bwd_pair", t=t, k=k, n=n,
+    segs = pair_n_segments(cfg, t, k, n)
+    if segs >= 1:
+        # the N-split pair traces segment-width kernels; tune those shapes
+        _, bn = _pair_chunks(cfg)
+        n_tune = n if segs == 1 else pair_segment_width(n, segs, bn)
+        out["bwd_pair"] = dict(kernel="bwd_pair", t=t, k=k, n=n_tune,
                                bwd_chunk=cb, grad_chunk=cg,
                                bwd_acc=(eb, mb), grad_acc=(eg, mg),
                                repr_fmt=fmt, packed=packs)
@@ -235,6 +274,14 @@ def qdot(x: jnp.ndarray, w: jnp.ndarray, cfg: QDotConfig) -> jnp.ndarray:
     lead = x.shape[:-1]
     k = x.shape[-1]
     x2 = x.reshape(-1, k)
+    if (_capture.active() and not cfg.is_exact
+            and not isinstance(x2, jax.core.Tracer)
+            and not isinstance(w, jax.core.Tracer)):
+        # telemetry probe (repro.telemetry.probe): an EAGER forward pass
+        # records each quantized GEMM's concrete operands + config so the
+        # stats kernels can replay them with collect_stats=True; traced
+        # (jit/grad) executions never record
+        _capture.record(x=x2, w=w, cfg=cfg)
     y2 = _qdot2d(x2, w, cfg)
     return y2.reshape(*lead, w.shape[1])
 
@@ -299,17 +346,25 @@ def _qdot2d_bwd(cfg, res, g):
     n = wp.shape[1]
     eb, mb, cb = _acc_params(cfg.bwd)
     eg, mg, cg = _acc_params(cfg.grad)
-    if bwd_pair_fits(cfg, t, k, n):
-        # the whole backward in ONE pallas_call: g lands in VMEM once, is
-        # quantized once, residuals are unpacked in-kernel
+    segs = pair_n_segments(cfg, t, k, n)
+    if segs >= 1:
+        # the whole backward in ONE pallas_call (or, for wide-N layers whose
+        # dw carry slab busts VMEM, ``segs`` segment calls with the dx carry
+        # chained — bit-identical, still one g landing per tile in total):
+        # g is quantized once per landing, residuals are unpacked in-kernel
+        seg_n = n if segs == 1 else pair_segment_width(
+            n, segs, _pair_chunks(cfg)[1])
         bt, bk, bn = pair_blocks_for(
-            t, k, n, bwd_chunk=cb, grad_chunk=cg, bwd_acc=(eb, mb),
+            t, k, seg_n, bwd_chunk=cb, grad_chunk=cg, bwd_acc=(eb, mb),
             grad_acc=(eg, mg), repr_fmt=fmt_tuple(cfg.repr_fmt),
             packed=packed)
-        dx, dw = qmatmul_bwd_pair(
-            g, xp, wp, repr_fmt=cfg.repr_fmt, bwd_acc=(eb, mb),
-            grad_acc=(eg, mg), block_t=bt, block_k=bk, block_n=bn,
-            packed=packed, quantize_g=cfg.repr_fmt is not None)
+        kw = dict(repr_fmt=cfg.repr_fmt, bwd_acc=(eb, mb),
+                  grad_acc=(eg, mg), block_t=bt, block_k=bk, block_n=bn,
+                  packed=packed, quantize_g=cfg.repr_fmt is not None)
+        if segs == 1:
+            dx, dw = qmatmul_bwd_pair(g, xp, wp, **kw)
+        else:
+            dx, dw = qmatmul_bwd_pair_nsplit(g, xp, wp, n_split=segs, **kw)
         return dx, dw
     # VMEM fallback: two fused GEMMs, residuals still consumed packed
     # (the int8 transpose is an XLA copy, not a pallas pass)

@@ -57,6 +57,13 @@ def parse_args(argv=None):
     ap.add_argument("--pp", type=int, default=0,
                     help="precision perturbation (bits) for --policy perturbed")
     ap.add_argument("--chunk", type=int, default=64)
+    ap.add_argument("--telemetry-cadence", type=int, default=0,
+                    help="steps between swamping-telemetry probes (0 = off); "
+                         "the closed-loop controller bumps/trims per-GEMM "
+                         "m_acc from the measurements (repro.telemetry)")
+    ap.add_argument("--telemetry-log", default="",
+                    help="JSONL event-log path (default <ckpt-dir>/telemetry"
+                         ".jsonl, or ./telemetry.jsonl without a ckpt dir)")
     ap.add_argument("--loss-scaling", action="store_true")
     ap.add_argument("--mesh", default="auto",
                     help="'auto' (all devices as data), 'DxM', or 'PxDxM'")
@@ -93,6 +100,19 @@ def main(argv=None) -> dict:
                          global_batch=args.global_batch, policy=policy)
     model = get_model(cfg)
 
+    controller = None
+    if args.telemetry_cadence > 0 and args.policy != "exact":
+        from repro.telemetry.controller import (
+            ControllerConfig,
+            PrecisionController,
+        )
+
+        log_path = args.telemetry_log or os.path.join(
+            args.ckpt_dir or ".", "telemetry.jsonl")
+        controller = PrecisionController(
+            policy, ControllerConfig(cadence=args.telemetry_cadence),
+            log_path=log_path)
+
     mesh = build_mesh(args.mesh)
     dist = Dist(mesh=mesh, data_axes=("data",)) if mesh is not None else Dist()
 
@@ -126,13 +146,19 @@ def main(argv=None) -> dict:
         state = jax.device_put(state, state_sh)
         baxes = batch_spec(args.global_batch, mesh)
         tok_sh = NamedSharding(mesh, P(baxes if baxes else None, None))
-        step_fn = jax.jit(make_train_step(model, tc, dist),
-                          in_shardings=(state_sh, None),
-                          out_shardings=(state_sh, None),
-                          donate_argnums=(0,))
+
+        def jit_step(m):
+            return jax.jit(make_train_step(m, tc, dist),
+                           in_shardings=(state_sh, None),
+                           out_shardings=(state_sh, None),
+                           donate_argnums=(0,))
     else:
         state_sh = None
-        step_fn = jax.jit(make_train_step(model, tc, dist), donate_argnums=(0,))
+
+        def jit_step(m):
+            return jax.jit(make_train_step(m, tc, dist), donate_argnums=(0,))
+
+    step_fn = jit_step(model)
 
     # ---- resume ----------------------------------------------------------
     start = 0
@@ -147,6 +173,19 @@ def main(argv=None) -> dict:
             start = int(meta["step"])
             print(f"resumed from step {start} "
                   f"(elastic onto {len(jax.devices())} devices)")
+            if controller is not None and meta.get("precision_schedule"):
+                # reproduce the realized precision trajectory: the restored
+                # run must train under the widths the controller had reached
+                from repro.telemetry.controller import apply_schedule
+
+                controller.restore_meta(meta["precision_schedule"])
+                cfg = apply_schedule(cfg, policy, controller.schedule(),
+                                     seq_len=args.seq_len,
+                                     global_batch=args.global_batch)
+                model = get_model(cfg)
+                step_fn = jit_step(model)
+                print(f"restored precision schedule: "
+                      f"{meta['precision_schedule']}")
 
     # ---- loop ------------------------------------------------------------
     metrics_f = open(args.metrics_out, "a") if args.metrics_out else None
@@ -162,6 +201,22 @@ def main(argv=None) -> dict:
         batch = with_extras(next(data), cfg)
         with mesh or _null():
             state, m = step_fn(state, batch)
+        if controller is not None and controller.due(step + 1):
+            from repro.train.loop import run_telemetry_tick
+
+            events, new_model = run_telemetry_tick(
+                controller, model, state, batch, dist, step=step + 1,
+                key=jax.random.PRNGKey(args.seed * 1000003 + step + 1),
+                seq_len=args.seq_len, global_batch=args.global_batch)
+            for e in events:
+                if e["event"] != "ok":
+                    print(json.dumps({"telemetry": e}), flush=True)
+            if new_model is not None:
+                # the controller changed some m_acc: re-plan, re-warm the
+                # autotune entries the new widths key to, re-jit (rare —
+                # hysteresis-gated)
+                model, cfg = new_model, new_model.cfg
+                step_fn = jit_step(model)
         if (step + 1) % args.log_every == 0 or step + 1 == args.steps:
             last_loss = float(m["loss"])
             rec = {"step": step + 1, "loss": last_loss,
@@ -176,10 +231,14 @@ def main(argv=None) -> dict:
                 metrics_f.flush()
         if args.ckpt_dir and (step + 1) % args.ckpt_every == 0:
             save_checkpoint(args.ckpt_dir, step + 1, state,
-                            meta={"data": data.state_dict()})
+                            meta={"data": data.state_dict()},
+                            precision_schedule=controller.to_meta()
+                            if controller else None)
     if args.ckpt_dir:
         save_checkpoint(args.ckpt_dir, args.steps, state,
-                        meta={"data": data.state_dict()})
+                        meta={"data": data.state_dict()},
+                        precision_schedule=controller.to_meta()
+                        if controller else None)
     if metrics_f:
         metrics_f.close()
     return {"final_loss": last_loss, "steps": args.steps}

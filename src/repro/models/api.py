@@ -119,3 +119,37 @@ def moe_expert_gemm_shapes(
         ("moe_expert_up", cap, d, f),
         ("moe_expert_down", cap, f, d),
     ]
+
+
+def ssm_scan_gemm_shapes(
+    cfg: ModelConfig, *, seq_len: int, global_batch: int
+) -> list[tuple[str, int, int, int]]:
+    """The per-(batch, chunk) GEMM shapes inside the chunked SSD scan
+    (``repro.models.layers.ssd_chunked`` / Mamba-2) as (tag, M, K, N) —
+    the four einsum contractions of one chunk step, at the padded chunk
+    length L the scan actually runs:
+
+      * ``ssd_cb``           C_i . B_j      — (L, state_dim) x (state_dim, L)
+      * ``ssd_intra``        W . X          — (L, L) x (L, head_dim)
+      * ``ssd_state_out``    C . state      — (L, state_dim) x (state_dim, head_dim)
+      * ``ssd_state_update`` B^T . (dt X)   — (state_dim, L) x (L, head_dim)
+
+    Like the MoE expert einsums these run unquantized (bf16) through XLA,
+    so no QDotConfig applies, but they are hot-path GEMMs and the warmup
+    autotuner covers them (dtype "bf16" keys) so an SSD routing through the
+    fused kernel — or an on-silicon re-tune — starts from a covered table
+    (ROADMAP "autotune coverage").  Empty for families without an SSM stack.
+    Shapes are per (batch, head, chunk) instance and independent of
+    seq_len/global_batch (those scale the instance COUNT, not the tiles).
+    """
+    del seq_len, global_batch  # shape-relevant only through the chunk count
+    if cfg.ssm is None:
+        return []
+    sc = cfg.ssm
+    ell = sc.chunk
+    return [
+        ("ssd_cb", ell, sc.state_dim, ell),
+        ("ssd_intra", ell, ell, sc.head_dim),
+        ("ssd_state_out", ell, sc.state_dim, sc.head_dim),
+        ("ssd_state_update", sc.state_dim, ell, sc.head_dim),
+    ]

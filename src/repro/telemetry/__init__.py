@@ -1,0 +1,38 @@
+# Online swamping telemetry + the closed-loop accumulation-precision
+# controller: measure the paper's variance-retention LIVE (stats epilogues
+# in the Pallas kernels), compare against the closed-form VRR prediction,
+# and feed the verdict back into the AccumulationPolicy.
+#
+# ``capture`` is imported eagerly (it is dependency-free and consulted by
+# ``repro.kernels.ops.qdot`` on every eager call); the heavier submodules —
+# ``stats`` (EnsembleStats + measured-VRR estimator), ``controller``
+# (hysteresis loop + JSONL event log) and ``probe`` (model-level stats
+# sweep) — load lazily to keep kernel import time flat and to avoid import
+# cycles with the model stack.
+from repro.telemetry import capture  # noqa: F401
+
+_LAZY = {
+    "EnsembleStats": "repro.telemetry.stats",
+    "gemm_stats": "repro.telemetry.stats",
+    "bwd_pair_stats": "repro.telemetry.stats",
+    "predicted_kernel_vrr": "repro.telemetry.stats",
+    "ControllerConfig": "repro.telemetry.controller",
+    "PrecisionController": "repro.telemetry.controller",
+    "apply_schedule": "repro.telemetry.controller",
+    "probe_model_stats": "repro.telemetry.probe",
+    "stats": "repro.telemetry.stats",
+    "controller": "repro.telemetry.controller",
+    "probe": "repro.telemetry.probe",
+}
+
+__all__ = ["capture", *sorted(set(_LAZY))]
+
+
+def __getattr__(name: str):
+    mod = _LAZY.get(name)
+    if mod is None:
+        raise AttributeError(f"module 'repro.telemetry' has no attribute {name!r}")
+    import importlib
+
+    module = importlib.import_module(mod)
+    return module if name == mod.rsplit(".", 1)[1] else getattr(module, name)

@@ -1,0 +1,45 @@
+"""GEMM-operand capture for the telemetry probe.
+
+A forward pass run EAGERLY (no jit, no grad) inside ``capture_gemms()``
+makes every quantized ``qdot`` record its concrete 2D operands and
+``QDotConfig`` here; the probe then replays each recorded GEMM through the
+stats-epilogue kernels (``collect_stats=True``) to measure swamping on the
+*actual* training-time operand distributions.  This sidesteps threading
+stats outputs through every model apply-fn signature: the model code is
+untouched, and the probe pays one eager forward per telemetry cadence tick
+instead of a per-step tax on the jitted train step.
+
+This module is deliberately dependency-free (stdlib only): it is imported
+by ``repro.kernels.ops`` at module load, so it must not pull in the kernel
+or model stack.
+"""
+
+from __future__ import annotations
+
+from contextlib import contextmanager
+from typing import Any, Iterator
+
+__all__ = ["capture_gemms", "active", "record"]
+
+_STACK: list[list[dict[str, Any]]] = []
+
+
+@contextmanager
+def capture_gemms() -> Iterator[list[dict[str, Any]]]:
+    """Collect ``{"x": (T, K) array, "w": (K, N) array, "cfg": QDotConfig}``
+    records from every eagerly-executed quantized ``qdot`` in the body."""
+    buf: list[dict[str, Any]] = []
+    _STACK.append(buf)
+    try:
+        yield buf
+    finally:
+        _STACK.pop()
+
+
+def active() -> bool:
+    return bool(_STACK)
+
+
+def record(**entry: Any) -> None:
+    if _STACK:
+        _STACK[-1].append(entry)

@@ -1,0 +1,147 @@
+"""Model-level telemetry probe: measure swamping on live operands.
+
+``probe_model_stats`` runs ONE eager forward pass of the model inside
+``capture.capture_gemms()`` — every quantized ``qdot`` records its concrete
+(x, w, QDotConfig) — then replays each recorded GEMM through the
+stats-epilogue kernels for all three back-propagation roles:
+
+* **FWD**  — Q(x) @ Q(w), the captured operands verbatim;
+* **BWD**  — Q(g) @ Q(w)^T over the fan-out (accumulation length N);
+* **GRAD** — Q(x)^T @ Q(g) over the token axis (the paper's critical long
+  accumulation).
+
+The backward roles use a unit-variance synthetic gradient ``g ~ N(0, 1)``:
+true gradients exist only inside autodiff traces (where concrete capture is
+impossible), and the paper's VRR model is itself an i.i.d.-Gaussian-product
+model in which swamping is governed by the accumulation length and formats
+— which the probe takes from the real layer geometry.  x and w ARE the live
+training tensors, so operand sparsity/scale effects on the FWD and GRAD
+ensembles are real.
+
+Records are attributed to their QuantPlan field (attn_qkv, mlp_up, ...) by
+config identity; layers sharing a field merge their stats windows (they
+share one precision assignment, so one verdict applies).  GEMMs the eager
+pass cannot capture concretely — the per-layer blocks run under
+``lax.scan``/remat, where operands are tracers — are probed on synthetic
+unit-Gaussian operands at the exact geometry ``dense_gemm_shapes`` reports
+for them (the paper's own i.i.d. product model), so every plan field gets a
+verdict either way.  Probe cost is one eager forward plus three stats GEMMs
+per monitored shape, paid once per telemetry cadence tick — not on the
+jitted train-step path.
+"""
+
+from __future__ import annotations
+
+from dataclasses import replace
+
+import jax
+import jax.numpy as jnp
+
+from repro.telemetry import capture
+from repro.telemetry.controller import PLAN_FIELDS, GemmProbe
+from repro.telemetry.stats import gemm_stats
+
+__all__ = ["probe_model_stats", "probe_gemm"]
+
+# dense_gemm_shapes tag -> QuantPlan field (for the synthetic fallback)
+_TAG_FIELD = {
+    "attn_q": "attn_qkv", "attn_k": "attn_qkv", "attn_v": "attn_qkv",
+    "attn_out": "attn_out", "mlp_gate": "mlp_up", "mlp_up": "mlp_up",
+    "mlp_down": "mlp_down", "lm_head": "lm_head",
+}
+
+
+def _plan_field(plan, qcfg) -> str | None:
+    """Which QuantPlan field this captured QDotConfig came from (out_fmt is
+    ignored: ``dense()`` may rewrite it with the consumer hint)."""
+    anon = replace(qcfg, out_fmt=None)
+    for name in PLAN_FIELDS:
+        f = getattr(plan, name, None)
+        if f is not None and replace(f, out_fmt=None) == anon:
+            return name
+    return None
+
+
+def _chunk(p) -> int:
+    return p.chunk if (p is not None and p.chunk > 0) else 128
+
+
+def probe_gemm(x: jnp.ndarray, w: jnp.ndarray, qcfg, *,
+               key: jax.Array) -> dict[str, GemmProbe]:
+    """Stats for all three roles of one dense GEMM x[T, K] @ w[K, N]."""
+    t, k = x.shape
+    n = w.shape[1]
+    out: dict[str, GemmProbe] = {}
+    if qcfg.fwd is not None:
+        _, st = gemm_stats(x, w, precision=qcfg.fwd, repr_fmt=qcfg.repr_fmt)
+        out["fwd"] = GemmProbe(stats=st, n=k, n1=_chunk(qcfg.fwd),
+                               m_acc=qcfg.fwd.m_acc)
+    if qcfg.bwd is None and qcfg.grad is None:
+        return out
+    g = jax.random.normal(key, (t, n), jnp.float32)
+    if qcfg.repr_fmt is not None:
+        from repro.quant.qnum import quantize
+
+        xq, wq = quantize(x, qcfg.repr_fmt), quantize(w, qcfg.repr_fmt)
+    else:
+        xq, wq = x, w
+    if qcfg.bwd is not None:
+        _, st = gemm_stats(g, wq.T, precision=qcfg.bwd,
+                           repr_fmt=qcfg.repr_fmt, quantize_b=False)
+        out["bwd"] = GemmProbe(stats=st, n=n, n1=_chunk(qcfg.bwd),
+                               m_acc=qcfg.bwd.m_acc)
+    if qcfg.grad is not None:
+        _, st = gemm_stats(xq.T, g, precision=qcfg.grad,
+                           repr_fmt=qcfg.repr_fmt, quantize_a=False)
+        out["grad"] = GemmProbe(stats=st, n=t, n1=_chunk(qcfg.grad),
+                                m_acc=qcfg.grad.m_acc)
+    return out
+
+
+def probe_model_stats(model, params, batch, dist=None, *,
+                      key: jax.Array) -> dict[tuple[str, str], GemmProbe]:
+    """One telemetry tick: capture every quantized GEMM of an eager forward
+    pass and measure its three accumulators.  Returns
+    ``{(plan_field, role): GemmProbe}`` with same-field layers merged."""
+    if dist is None:
+        from repro.models.layers import LOCAL as dist  # noqa: N813
+    cfg = model.cfg
+    with capture.capture_gemms() as buf:
+        model.loss_fn(params, batch, cfg, dist)
+
+    probes: dict[tuple[str, str], GemmProbe] = {}
+
+    def ingest(name, x, w, qcfg, sub):
+        for role, p in probe_gemm(x, w, qcfg, key=sub).items():
+            prev = probes.get((name, role))
+            if prev is None:
+                probes[(name, role)] = p
+            else:
+                # same plan field ⇒ same precision assignment: merge the
+                # ensembles, keep the longest accumulation (it dominates)
+                probes[(name, role)] = GemmProbe(
+                    stats=prev.stats.merge(p.stats),
+                    n=max(prev.n, p.n), n1=prev.n1, m_acc=prev.m_acc)
+
+    for rec in buf:
+        name = _plan_field(cfg.quant, rec["cfg"])
+        if name is None:
+            continue
+        key, sub = jax.random.split(key)
+        ingest(name, rec["x"], rec["w"], rec["cfg"], sub)
+
+    # synthetic fallback for plan fields the eager pass could not capture
+    # concretely (scanned/remat'd layer blocks execute as tracers)
+    from repro.models.api import dense_gemm_shapes
+
+    seen = {name for name, _ in probes}
+    gb, sl = batch["tokens"].shape[0], batch["tokens"].shape[1]
+    for tag, t, k, n, qcfg in dense_gemm_shapes(cfg, seq_len=sl,
+                                                global_batch=gb):
+        name = _TAG_FIELD.get(tag)
+        if name is None or name in seen:
+            continue
+        key, kx, kw, sub = jax.random.split(key, 4)
+        ingest(name, jax.random.normal(kx, (t, k), jnp.float32),
+               jax.random.normal(kw, (k, n), jnp.float32), qcfg, sub)
+    return probes

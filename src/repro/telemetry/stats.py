@@ -1,0 +1,258 @@
+"""EnsembleStats — streaming swamping statistics + the measured-VRR estimator.
+
+The stats-epilogue kernels (``qmatmul_fused`` / ``qmatmul_bwd_pair`` with
+``collect_stats=True``) reduce, per monitored accumulator, a raw
+``N_STATS``-slot vector (``repro.kernels.common``): the ensemble moments of
+the reduced-precision AND the ideal (f32) accumulation of the *same*
+quantized products, the max carry magnitude, and the swamped-add counters.
+``EnsembleStats`` holds those reductions in Welford form (count / mean /
+M2), so windows can be
+
+* **merged across steps** (Chan's parallel-Welford combine — associative,
+  so any telemetry cadence or restart boundary composes exactly), and
+* **psum'd across the mesh** (``psum(axis)`` reduces the moment algebra
+  with ``jax.lax.psum``/``pmax``, usable inside shard_map'd probes).
+
+The headline quantity is ``measured_vrr`` — Var(quantized sums) /
+Var(ideal sums) over the ensemble of output elements, the Monte-Carlo
+analogue of the paper's VRR evaluated on live operands instead of synthetic
+Gaussians — directly comparable to the ``repro.core.vrr`` closed forms:
+
+* ``predicted_kernel_vrr`` is the prediction matching the kernels' actual
+  semantics (ideal f32 intra-chunk, quantized inter-chunk carry): the
+  inter-chunk stage of Corollary 1, ``vrr(m_acc, m_inter, n2)``.
+* ``vrr_chunked_sparse`` (Eq. 5) bounds it from below (it also charges the
+  intra-chunk stage the kernel does not pay).
+
+``tests/test_vrr_montecarlo.py`` pins measured-vs-closed-form agreement on
+synthetic Gaussian dot products, suitable and unsuitable ``m_acc`` both.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.vrr import CUTOFF_LOG_V, vrr
+from repro.kernels.common import (
+    STAT_ADDS,
+    STAT_COUNT,
+    STAT_MAX_ABS,
+    STAT_SUM_I,
+    STAT_SUM_Q,
+    STAT_SUMSQ_I,
+    STAT_SUMSQ_Q,
+    STAT_SWAMPED,
+)
+
+__all__ = [
+    "EnsembleStats",
+    "gemm_stats",
+    "bwd_pair_stats",
+    "predicted_kernel_vrr",
+]
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclass(frozen=True)
+class EnsembleStats:
+    """Welford-form swamping statistics of one (or a merge of) GEMM
+    accumulator ensembles.  All fields are f32 scalars (jnp or python)."""
+
+    count: jnp.ndarray      # ensemble size (output elements observed)
+    mean_q: jnp.ndarray     # mean of reduced-precision sums
+    m2_q: jnp.ndarray       # sum of squared deviations, reduced-precision
+    mean_i: jnp.ndarray     # mean of ideal (f32) sums
+    m2_i: jnp.ndarray       # sum of squared deviations, ideal
+    max_abs: jnp.ndarray    # max |carry| seen across all chunk updates
+    swamped: jnp.ndarray    # fully-absorbed chunk adds (q(c+p) == c, p != 0)
+    adds: jnp.ndarray       # chunk adds with a non-zero addend
+
+    def tree_flatten(self):
+        return ((self.count, self.mean_q, self.m2_q, self.mean_i, self.m2_i,
+                 self.max_abs, self.swamped, self.adds), None)
+
+    @classmethod
+    def tree_unflatten(cls, _, children):
+        return cls(*children)
+
+    # ------------------------------ ingest ---------------------------------
+    @classmethod
+    def from_raw(cls, raw: jnp.ndarray) -> "EnsembleStats":
+        """From one kernel stats row (the (N_STATS,) f32 vector).
+
+        The sumsq - c*mean^2 centering is cancellation-prone for strongly
+        non-centered ensembles, so it runs in float64 (numpy on concrete
+        rows, jnp.float64 under x64); the residual accuracy floor is the
+        kernel-side f32 reduction of the raw sums, which bounds trustworthy
+        ensembles to ~2^24 elements — the probe's per-GEMM windows are far
+        below that, and cross-window growth goes through ``merge``, whose
+        combine is cancellation-free.
+        """
+        if isinstance(raw, jax.core.Tracer):
+            if jax.config.jax_enable_x64:
+                raw = raw.astype(jnp.float64)
+        else:
+            raw = np.asarray(raw, np.float64)
+        c = raw[STAT_COUNT]
+        safe = jnp.maximum(c, 1.0)
+        mean_q = raw[STAT_SUM_Q] / safe
+        mean_i = raw[STAT_SUM_I] / safe
+        f32 = lambda v: jnp.asarray(v, jnp.float32)  # noqa: E731
+        return cls(
+            count=f32(c),
+            mean_q=f32(mean_q),
+            m2_q=f32(jnp.maximum(raw[STAT_SUMSQ_Q] - c * mean_q * mean_q, 0.0)),
+            mean_i=f32(mean_i),
+            m2_i=f32(jnp.maximum(raw[STAT_SUMSQ_I] - c * mean_i * mean_i, 0.0)),
+            max_abs=f32(raw[STAT_MAX_ABS]),
+            swamped=f32(raw[STAT_SWAMPED]),
+            adds=f32(raw[STAT_ADDS]),
+        )
+
+    @classmethod
+    def zero(cls) -> "EnsembleStats":
+        z = jnp.float32(0.0)
+        return cls(z, z, z, z, z, z, z, z)
+
+    # ------------------------------ reduce ---------------------------------
+    def merge(self, other: "EnsembleStats") -> "EnsembleStats":
+        """Chan's parallel-Welford combine (associative, exact ensemble
+        union) — the cross-step streaming reducer."""
+        ca, cb = self.count, other.count
+        c = ca + cb
+        safe = jnp.maximum(c, 1.0)
+
+        def comb(mean_a, m2_a, mean_b, m2_b):
+            d = mean_b - mean_a
+            mean = mean_a + d * cb / safe
+            m2 = m2_a + m2_b + d * d * ca * cb / safe
+            return mean, m2
+
+        mq, m2q = comb(self.mean_q, self.m2_q, other.mean_q, other.m2_q)
+        mi, m2i = comb(self.mean_i, self.m2_i, other.mean_i, other.m2_i)
+        return EnsembleStats(
+            count=c, mean_q=mq, m2_q=m2q, mean_i=mi, m2_i=m2i,
+            max_abs=jnp.maximum(self.max_abs, other.max_abs),
+            swamped=self.swamped + other.swamped,
+            adds=self.adds + other.adds,
+        )
+
+    def psum(self, axis_name: str) -> "EnsembleStats":
+        """Mesh-wide reduction of per-shard windows (inside shard_map/pmap):
+        the same ensemble-union algebra as ``merge``, over ``axis_name``."""
+        c = jax.lax.psum(self.count, axis_name)
+        safe = jnp.maximum(c, 1.0)
+
+        def comb(count, mean, m2):
+            s = jax.lax.psum(count * mean, axis_name)
+            gm = s / safe
+            gm2 = jax.lax.psum(m2 + count * mean * mean, axis_name) \
+                - safe * gm * gm
+            return gm, jnp.maximum(gm2, 0.0)
+
+        mq, m2q = comb(self.count, self.mean_q, self.m2_q)
+        mi, m2i = comb(self.count, self.mean_i, self.m2_i)
+        return EnsembleStats(
+            count=c, mean_q=mq, m2_q=m2q, mean_i=mi, m2_i=m2i,
+            max_abs=jax.lax.pmax(self.max_abs, axis_name),
+            swamped=jax.lax.psum(self.swamped, axis_name),
+            adds=jax.lax.psum(self.adds, axis_name),
+        )
+
+    # ----------------------------- read-outs -------------------------------
+    @property
+    def var_q(self):
+        return self.m2_q / jnp.maximum(self.count, 1.0)
+
+    @property
+    def var_i(self):
+        return self.m2_i / jnp.maximum(self.count, 1.0)
+
+    @property
+    def measured_vrr(self):
+        """Var(reduced-precision sums) / Var(ideal sums) — the live VRR.
+        1.0 when the ideal ensemble is degenerate (no signal to lose)."""
+        return jnp.where(self.m2_i > 0.0, self.m2_q / jnp.maximum(self.m2_i, 1e-30), 1.0)
+
+    @property
+    def swamp_rate(self):
+        return self.swamped / jnp.maximum(self.adds, 1.0)
+
+    @property
+    def max_exponent(self):
+        """Max carry exponent (log2 of the largest |carry|) — headroom
+        check against the accumulator's e_acc range."""
+        return jnp.where(self.max_abs > 0.0,
+                         jnp.log2(jnp.maximum(self.max_abs, 1e-30)),
+                         -jnp.inf)
+
+    def measured_log_v(self, n: int) -> float:
+        """log v(n) = n (1 - VRR_measured) — Eq. (6) on the measurement.
+        Use n = n2 (the inter-chunk length) for the chunked kernels: their
+        intra-chunk accumulation is ideal f32, so the measured retention is
+        the inter-chunk stage's."""
+        return float(n) * (1.0 - float(self.measured_vrr))
+
+    def suitable(self, n: int, *, cutoff: float = CUTOFF_LOG_V) -> bool:
+        """The paper's §4.4 knee test, applied to the measurement."""
+        return self.measured_log_v(n) < cutoff
+
+
+def predicted_kernel_vrr(m_acc: int, m_p: int, n1: int, n2: int,
+                         *, nzr: float = 1.0) -> float:
+    """Closed-form VRR prediction matching the Pallas kernels' semantics:
+    ideal (f32) intra-chunk accumulation, (1, e_acc, m_acc) inter-chunk
+    carry — i.e. the inter-chunk stage of Corollary 1 with the grown
+    operand mantissa ``m_inter = min(m_acc, m_p + log2 n1)``.  Compare with
+    ``EnsembleStats.measured_vrr``."""
+    n1_eff = max(int(round(nzr * n1)), 1)
+    m_inter = min(m_acc, m_p + int(round(math.log2(max(n1_eff, 1)))))
+    return vrr(m_acc, m_inter, max(int(n2), 1))
+
+
+def _acc(p) -> tuple[int, int, int]:
+    """(e_acc, m_acc, chunk) of a GEMMPrecision-or-None role."""
+    if p is None:
+        return 8, 23, 0
+    return p.e_acc, p.m_acc, p.chunk if p.chunk > 0 else 0
+
+
+def gemm_stats(a: jnp.ndarray, b: jnp.ndarray, *, precision=None,
+               repr_fmt=None, quantize_a: bool = True,
+               quantize_b: bool = True, a_packed: bool = False,
+               b_packed: bool = False) -> tuple[jnp.ndarray, EnsembleStats]:
+    """One fused GEMM with the swamping-stats epilogue: returns
+    ``(c, EnsembleStats)``; ``c`` is bit-identical to the stats-off call.
+    ``block_k`` is pinned to the precision's chunk (numerics)."""
+    from repro.kernels.fused import qmatmul_fused
+
+    e_acc, m_acc, chunk = _acc(precision)
+    y, raw = qmatmul_fused(
+        a, b, repr_fmt=repr_fmt, e_acc=e_acc, m_acc=m_acc,
+        block_k=chunk if chunk > 0 else 128,
+        quantize_a=quantize_a, quantize_b=quantize_b,
+        a_packed=a_packed, b_packed=b_packed, collect_stats=True)
+    return y, EnsembleStats.from_raw(raw)
+
+
+def bwd_pair_stats(g: jnp.ndarray, xq: jnp.ndarray, wq: jnp.ndarray, *,
+                   repr_fmt=None, bwd=None, grad=None, packed: bool = True,
+                   quantize_g: bool = True,
+                   ) -> tuple[jnp.ndarray, jnp.ndarray,
+                              EnsembleStats, EnsembleStats]:
+    """The one-pass backward pair with stats: ``(dx, dw, bwd_stats,
+    grad_stats)``.  dx/dw are bit-identical to the stats-off kernel."""
+    from repro.kernels.bwd_pair import qmatmul_bwd_pair
+
+    eb, mb, cb = _acc(bwd)
+    eg, mg, cg = _acc(grad)
+    dx, dw, raw = qmatmul_bwd_pair(
+        g, xq, wq, repr_fmt=repr_fmt, bwd_acc=(eb, mb), grad_acc=(eg, mg),
+        block_t=cg if cg > 0 else 128, block_n=cb if cb > 0 else 128,
+        packed=packed, quantize_g=quantize_g, collect_stats=True)
+    return dx, dw, EnsembleStats.from_raw(raw[0]), EnsembleStats.from_raw(raw[1])

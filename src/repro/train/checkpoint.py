@@ -58,7 +58,17 @@ def _qtensor_meta(tree: Any) -> dict[str, dict]:
     return metas
 
 
-def save_checkpoint(ckpt_dir: str, step: int, state: Any, meta: dict | None = None) -> str:
+def save_checkpoint(ckpt_dir: str, step: int, state: Any, meta: dict | None = None,
+                    *, precision_schedule: dict | None = None) -> str:
+    """Write one atomic checkpoint.
+
+    ``precision_schedule`` is the telemetry controller's realized per-GEMM
+    accumulator schedule (``PrecisionController.to_meta()``, keys
+    ``"<gemm>:<role>" -> m_acc``): the closed loop mutates the QuantPlan at
+    run time, so the widths actually trained under are state — recording
+    them makes a restore reproduce the precision trajectory instead of
+    silently re-planning from the static policy.
+    """
     os.makedirs(ckpt_dir, exist_ok=True)
     final = os.path.join(ckpt_dir, f"step_{step:08d}")
     tmp = final + ".tmp"
@@ -69,6 +79,8 @@ def save_checkpoint(ckpt_dir: str, step: int, state: Any, meta: dict | None = No
     np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
     qt = _qtensor_meta(state)
     payload = {"step": step, **(meta or {})}
+    if precision_schedule:
+        payload["precision_schedule"] = precision_schedule
     if qt:
         payload["qtensors"] = qt
     with open(os.path.join(tmp, "meta.json"), "w") as f:

@@ -28,6 +28,7 @@ __all__ = [
     "make_train_step",
     "init_train_state",
     "warmup_gemm_autotune",
+    "run_telemetry_tick",
 ]
 
 
@@ -66,12 +67,18 @@ def warmup_gemm_autotune(
     with zero run-time cost.  Shapes already in the table are not re-timed.
 
     Coverage: every dense-layer qdot variant (FWD train/eval, the one-pass
-    backward pair or its two-GEMM VMEM fallback) plus — for MoE families —
-    the expert einsum GEMM shapes (bf16-keyed; ROADMAP "autotune coverage").
+    backward pair — N-split segment shapes when the layer takes that path —
+    or the two-GEMM VMEM fallback) plus the non-qdot hot-path GEMMs: MoE
+    expert einsums and the chunked SSD scan contractions (both bf16-keyed;
+    ROADMAP "autotune coverage").
     """
     from repro.kernels import autotune
     from repro.kernels.ops import qdot_gemm_variants
-    from repro.models.api import dense_gemm_shapes, moe_expert_gemm_shapes
+    from repro.models.api import (
+        dense_gemm_shapes,
+        moe_expert_gemm_shapes,
+        ssm_scan_gemm_shapes,
+    )
 
     table = autotune.get_table()
     results: dict[str, dict] = {}
@@ -95,8 +102,11 @@ def warmup_gemm_autotune(
                     kw.pop("m"), kw.pop("k"), kw.pop("n"), **kw,
                     table=table, persist=False, reps=reps, verbose=verbose,
                 )
-    for tag, m, k, n in moe_expert_gemm_shapes(
-        model.cfg, seq_len=seq_len, global_batch=mb_batch,
+    for tag, m, k, n in (
+        moe_expert_gemm_shapes(model.cfg, seq_len=seq_len,
+                               global_batch=mb_batch)
+        + ssm_scan_gemm_shapes(model.cfg, seq_len=seq_len,
+                               global_batch=mb_batch)
     ):
         results[tag] = autotune.autotune_qmatmul(
             m, k, n, dtype="bf16",
@@ -104,6 +114,44 @@ def warmup_gemm_autotune(
         )
     table.save()  # one atomic merge-write for the whole warmup
     return results
+
+
+def run_telemetry_tick(controller, model: Model, state: dict, batch: dict,
+                       dist: Dist = Dist(), *, step: int, key,
+                       seq_len: int, global_batch: int,
+                       retune: bool = True):
+    """One swamping-telemetry cadence tick (``repro.telemetry``): probe
+    every quantized GEMM's accumulators on the live params/batch, feed the
+    measurements to the closed-loop precision controller, and — when the
+    controller adjusted any ``m_acc`` — return the re-planned model (the
+    caller re-jits its train step; precision changes are hysteresis-gated,
+    so this is rare).
+
+    Returns ``(events, new_model_or_None)``.  The probe runs EAGERLY (one
+    un-jitted forward + three stats GEMMs per captured layer), off the
+    jitted train-step path; with ``collect_stats=False`` everywhere else,
+    the training numerics are untouched by telemetry being on or off.
+    """
+    from repro.models.api import get_model
+    from repro.telemetry.controller import apply_schedule
+    from repro.telemetry.probe import probe_model_stats
+
+    probes = probe_model_stats(model, state["params"], batch, dist, key=key)
+    events = controller.observe(step, probes)
+    if not controller.dirty:
+        return events, None
+    new_cfg = apply_schedule(model.cfg, controller.policy,
+                             controller.schedule(),
+                             seq_len=seq_len, global_batch=global_batch)
+    new_model = get_model(new_cfg)
+    if retune:
+        # autotune keys include the accumulator format, so a changed m_acc
+        # is an untuned shape: warm the re-planned kernels before the caller
+        # re-jits (already-covered keys are cache hits, so this only times
+        # the GEMMs the adjustment actually changed)
+        warmup_gemm_autotune(new_model, seq_len=seq_len,
+                             global_batch=global_batch)
+    return events, new_model
 
 
 def init_train_state(model: Model, key, train_cfg: TrainConfig) -> dict:

@@ -193,6 +193,73 @@ def test_bwd_pair_is_one_pallas_call():
     assert n == 1
 
 
+@pytest.mark.parametrize("n_split", [2, 3, 5])
+def test_bwd_pair_nsplit_matches_unsplit_bitexact(n_split):
+    # ROADMAP "bwd-pair VMEM scaling": the N-split pair must be the SAME
+    # function as the one-pass kernel — dx carry chained across segments in
+    # the unsplit chunk order, dw emitted per segment slice
+    from repro.kernels.bwd_pair import qmatmul_bwd_pair_nsplit
+
+    rng = np.random.RandomState(61)
+    t, k, n = 100, 96, 300
+    g = jnp.asarray(rng.standard_normal((t, n)).astype(np.float32))
+    xq = quantize(jnp.asarray(rng.standard_normal((t, k)).astype(np.float32)),
+                  FP8_152)
+    wq = quantize(jnp.asarray(rng.standard_normal((k, n)).astype(np.float32)),
+                  FP8_152)
+    kw = dict(repr_fmt=FP8_152, bwd_acc=(6, 5), grad_acc=(6, 8),
+              block_t=64, block_n=64, packed=True)
+    dx0, dw0 = qmatmul_bwd_pair(g, pack_block(xq, 5, 2), pack_block(wq, 5, 2),
+                                **kw)
+    dx1, dw1 = qmatmul_bwd_pair_nsplit(
+        g, pack_block(xq, 5, 2), pack_block(wq, 5, 2), n_split=n_split, **kw)
+    np.testing.assert_array_equal(np.asarray(dx1), np.asarray(dx0))
+    np.testing.assert_array_equal(np.asarray(dw1), np.asarray(dw0))
+
+
+def test_qdot_wide_n_takes_nsplit_path_not_fallback(monkeypatch):
+    # a VMEM budget too small for the unsplit slab but big enough for
+    # segments: pair_n_segments must route qdot's backward onto the N-split
+    # pair, and the grads must stay bit-identical to the unfused oracle
+    from repro.kernels.ops import pair_n_segments
+
+    t, k, n = 32, 64, 1024
+    cfg = _cfg()
+    assert pair_n_segments(cfg, t, k, n) == 1
+    monkeypatch.setenv("REPRO_VMEM_BUDGET", str(360_000))
+    segs = pair_n_segments(cfg, t, k, n)
+    assert segs > 1, "budget should force the N-split path"
+
+    x, w = _rand(t, k, n, 67)
+    y_f = qdot(x, w, cfg)
+    y_u = qdot(x, w, _cfg(fused=False))
+    np.testing.assert_array_equal(np.asarray(y_f), np.asarray(y_u))
+
+    def loss(c):
+        return lambda x, w: jnp.sum(jnp.sin(qdot(x, w, c)))
+
+    g_f = jax.grad(loss(_cfg()), argnums=(0, 1))(x, w)
+    g_u = jax.grad(loss(_cfg(fused=False)), argnums=(0, 1))(x, w)
+    for a, b in zip(g_f, g_u):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # and the pass count is the segment count, not the 2-call fallback's
+    # quantize-twice structure: segs backward passes + 1 forward
+    passes = _train_passes(_cfg(), x, w)
+    assert passes <= 1 + segs
+
+
+def test_pair_n_segments_boundaries():
+    from repro.kernels.ops import pair_n_segments
+
+    cfg = _cfg()
+    # fits outright
+    assert pair_n_segments(cfg, 64, 64, 128) == 1
+    # unfused configs never take the pair path
+    assert pair_n_segments(_cfg(fused=False), 64, 64, 128) == 0
+    # an absurdly small budget: even single-chunk segments bust -> fallback
+    assert pair_n_segments(cfg, 64, 64, 4096, vmem=1024) == 0
+
+
 def test_fused_requantization_is_free():
     # quantizer idempotence: feeding already-quantized operands with
     # quantization ON equals feeding them with quantization OFF — the

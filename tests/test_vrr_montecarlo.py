@@ -96,3 +96,66 @@ def test_mc_variance_scaling_sanity():
     # (He-init assumption the paper builds on)
     n = 4096
     assert mc_vrr(20, n, ensemble=1024) == pytest.approx(1.0, abs=0.08)
+
+
+# ----------------- in-kernel measured VRR vs the closed forms ----------------
+#
+# The telemetry stats epilogue measures VRR INSIDE the Pallas GEMM, on the
+# actual chunked-accumulation datapath (ideal f32 intra-chunk, quantized
+# inter-chunk carry).  Same validity contract as the MC tests above: tight
+# agreement in the certified regime, theory conservative at/below the knee,
+# and — the controller's operating requirement — correct classification of
+# suitable and unsuitable m_acc on synthetic Gaussian dot products.
+
+_N1, _N2 = 64, 512  # accumulation length 32768, chunk 64
+
+
+def _kernel_vrr(m_acc: int, *, seed: int = 0):
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.policy import GEMMPrecision
+    from repro.quant.formats import FP8_152
+    from repro.telemetry.stats import gemm_stats
+
+    k_len = _N1 * _N2
+    x = jax.random.normal(jax.random.PRNGKey(seed), (32, k_len), jnp.float32)
+    w = jax.random.normal(jax.random.PRNGKey(seed + 1), (k_len, 32),
+                          jnp.float32)
+    _, st = gemm_stats(
+        x, w, precision=GEMMPrecision(m_acc=m_acc, e_acc=6, chunk=_N1),
+        repr_fmt=FP8_152)
+    return st
+
+
+def test_kernel_measured_vrr_suitable_regime_tight():
+    from repro.core.precision import min_m_acc
+    from repro.core.vrr import CUTOFF_LOG_V
+    from repro.telemetry.stats import predicted_kernel_vrr
+
+    m_pred = min_m_acc(_N1 * _N2, 5, chunked=True, chunk=_N1)
+    st = _kernel_vrr(m_pred)
+    th = predicted_kernel_vrr(m_pred, 5, _N1, _N2)
+    assert th > 0.99
+    assert float(st.measured_vrr) == pytest.approx(th, abs=0.08)
+    # and the measurement classifies the solver's bound as suitable
+    assert st.measured_log_v(_N2) < CUTOFF_LOG_V
+
+
+def test_kernel_measured_vrr_unsuitable_classified_and_conservative():
+    from repro.core.precision import min_m_acc
+    from repro.core.vrr import CUTOFF_LOG_V
+    from repro.telemetry.stats import predicted_kernel_vrr
+
+    m_pred = min_m_acc(_N1 * _N2, 5, chunked=True, chunk=_N1)
+    st = _kernel_vrr(m_pred - 2)
+    mc = float(st.measured_vrr)
+    th = predicted_kernel_vrr(m_pred - 2, 5, _N1, _N2)
+    # under-provisioned: the measurement itself crosses the paper's knee
+    assert st.measured_log_v(_N2) >= CUTOFF_LOG_V
+    assert mc < 0.99
+    # theory never promises more retention than the kernel delivers
+    # (Assumption 5 halts at full swamping; the kernel partially recovers)
+    assert th <= mc + 0.08
+    # swamping is visible in the raw counters too
+    assert float(st.swamp_rate) > 2 * float(_kernel_vrr(m_pred).swamp_rate)
