@@ -1,0 +1,140 @@
+"""Serving benchmark: continuous batching over the paged QTensor KV-cache.
+
+Interpret-mode wall-times are a correctness proxy (see kernel_bench.py);
+the quantities that transfer are the pallas-pass accounting (one
+HBM round-trip per pallas_call: the decode step must cost exactly ONE
+attention pass per layer, with no standalone quantize/pack/unpack passes),
+the KV-cache bytes-per-token compression vs the f32 carrier, the
+logit-exactness of the kernel path against the unfused f32-KV oracle, and
+the continuous-batching demo itself (>= 3 concurrently admitted sequences
+of different lengths through one arena).
+
+Writes ``BENCH_serve.json``; CI gates on the compression ratio, the pass
+count, logit exactness and the concurrency of the demo run.
+"""
+
+from __future__ import annotations
+
+import functools
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.kernels.common import count_pallas_executions
+from repro.models import lm
+from repro.models.api import get_model
+from repro.serve.scheduler import ServeEngine
+
+PAGE_SIZE = 8
+N_PAGES = 40
+PROMPT_LENS = (6, 13, 21)
+GEN = 8
+
+
+def _passes_per_decode_step(model, params, eng) -> int:
+    """Per-execution pallas_call count of one batched decode step (the
+    rolled layer scan is weighted by its trip count)."""
+    b = len(PROMPT_LENS)
+    _, bucket = eng.plan.bucket_for(max(PROMPT_LENS) + GEN)
+    width = bucket.max_pages(PAGE_SIZE)
+    fn = functools.partial(lm.decode_step_paged, cfg=model.cfg,
+                          kv_fmt=eng.kv_fmt, acc=bucket.acc)
+    return count_pallas_executions(
+        fn, params, jnp.zeros((b, 1), jnp.int32), eng.kv,
+        jnp.zeros((b, width), jnp.int32),
+        jnp.asarray([p - 1 for p in PROMPT_LENS], jnp.int32),
+        jnp.asarray(PROMPT_LENS, jnp.int32))
+
+
+def _logit_exact(model, params, eng) -> bool:
+    """Kernel decode vs the unfused f32-KV oracle, on a live mixed-length
+    state (the acceptance gate's logit-exactness check)."""
+    rng = np.random.RandomState(0)
+    kv_state = lm.init_paged_state(model.cfg, n_pages=16, page_size=PAGE_SIZE)
+    _, bucket = eng.plan.bucket_for(max(PROMPT_LENS))
+    pages = {0: [1, 2], 1: [3]}
+    lens = {0: 11, 1: 5}
+    for i, pg in pages.items():
+        toks = jnp.asarray([rng.randint(0, model.cfg.vocab_size, lens[i])],
+                           jnp.int32)
+        _, kv_state = lm.prefill_paged(params, toks, kv_state,
+                                       jnp.asarray(pg, jnp.int32), model.cfg,
+                                       kv_fmt=eng.kv_fmt, acc=bucket.acc)
+    pt = jnp.asarray([[1, 2], [3, 0]], jnp.int32)
+    positions = jnp.asarray([lens[0], lens[1]], jnp.int32)
+    tokens = jnp.asarray([[7], [9]], jnp.int32)
+    kw = dict(cfg=model.cfg, kv_fmt=eng.kv_fmt, acc=bucket.acc)
+    lk, _ = lm.decode_step_paged(params, tokens, kv_state, pt, positions,
+                                 positions + 1, **kw)
+    lo, _ = lm.decode_step_paged(params, tokens, kv_state, pt, positions,
+                                 positions + 1, oracle=True, **kw)
+    return bool(np.array_equal(np.asarray(lk), np.asarray(lo)))
+
+
+def run(json_path: str = "BENCH_serve.json") -> dict:
+    cfg = get_smoke_config("qwen2-1.5b")
+    model = get_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+
+    eng = ServeEngine(model, params, n_pages=N_PAGES, page_size=PAGE_SIZE,
+                      max_batch=4, monitor_cadence=5)
+    rng = np.random.RandomState(1)
+    rids = [eng.submit(list(rng.randint(0, cfg.vocab_size, n)), GEN)
+            for n in PROMPT_LENS]
+
+    t0 = time.time()
+    results = eng.run()
+    dt = max(time.time() - t0, 1e-9)
+
+    packed = eng.kv_bytes_per_token()
+    f32 = eng.kv_bytes_per_token(carrier_bytes=4)
+    bf16 = eng.kv_bytes_per_token(carrier_bytes=2)
+    passes = _passes_per_decode_step(model, params, eng)
+    exact = _logit_exact(model, params, eng)
+
+    out = {
+        "arch": cfg.name,
+        "prompt_lens": list(PROMPT_LENS),
+        "gen": GEN,
+        "page_size": PAGE_SIZE,
+        "n_pages": N_PAGES,
+        "decode_tokens": eng.decoded_tokens,
+        "tokens_per_s": round(eng.decoded_tokens / dt, 2),
+        "max_concurrent": eng.max_concurrent,
+        "pallas_passes_per_decode_step": passes,
+        "attention_layers": cfg.n_layers,
+        "pallas_passes_per_decoded_token": round(
+            passes / len(PROMPT_LENS), 3),
+        "kv_bytes_per_token_packed": round(packed, 1),
+        "kv_bytes_per_token_f32": round(f32, 1),
+        "kv_bytes_per_token_bf16": round(bf16, 1),
+        "kv_compression_vs_f32": round(f32 / packed, 3),
+        "kv_compression_vs_bf16": round(bf16 / packed, 3),
+        "logit_exact_vs_f32_oracle": exact,
+        "monitor_events": eng.events,
+        "generated": {int(r): results[r] for r in rids},
+    }
+    eng.pool.check_invariants()
+
+    print("### serve bench (interpret mode on CPU — correctness proxy)")
+    for k in ("tokens_per_s", "max_concurrent",
+              "pallas_passes_per_decode_step",
+              "pallas_passes_per_decoded_token",
+              "kv_bytes_per_token_packed", "kv_bytes_per_token_f32",
+              "kv_compression_vs_f32", "kv_compression_vs_bf16",
+              "logit_exact_vs_f32_oracle"):
+        print(f"  {k:34s} {out[k]}")
+
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(out, f, indent=1)
+        print(f"wrote {json_path}")
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,7 +1,9 @@
-"""Batched serving example: prefill + greedy decode across architectures,
-exercising KV caches (dense/MoE), SSM recurrent states (mamba2), the hybrid
-shared-attention cache (zamba2) and the enc-dec cross-attention priming
-(seamless) through the same public API.
+"""Batched serving example across architectures: attention families
+(qwen2 dense, moonshot MoE) run through the continuous-batching engine —
+mixed-length requests sharing one paged QTensor KV arena — while SSM
+recurrent states (mamba2), the hybrid shared-attention cache (zamba2) and
+the enc-dec cross-attention priming (seamless) take the legacy
+static-batch path, all through the same driver.
 
 Run:  PYTHONPATH=src python examples/serve_batch.py [--gen 12]
 """
@@ -20,8 +22,9 @@ def main():
     for arch in ("qwen2-1.5b", "mamba2-1.3b", "zamba2-7b",
                  "moonshot-v1-16b-a3b", "seamless-m4t-large-v2"):
         print("\n" + "=" * 60)
+        lens = ",".join(str(8 + 5 * i) for i in range(args.batch))
         serve.main(["--arch", arch, "--smoke",
-                    "--batch", str(args.batch),
+                    "--batch", str(args.batch), "--prompt-lens", lens,
                     "--prompt-len", "16", "--gen", str(args.gen)])
 
 

@@ -1,0 +1,564 @@
+"""Pallas TPU kernels: serve-path flash attention over the paged KV-cache.
+
+Attention over a growing KV-cache is the longest accumulation in the serving
+system — the softmax-weighted value sum reduces over every cached token — so
+it is where the paper's variance-retention analysis pays the largest
+inference dividend.  Two kernels cover the serve path:
+
+* ``flash_prefill`` — causal online-softmax attention over a prompt
+  (one sequence), KV visited in ``chunk``-length blocks.
+* ``paged_attn_decode`` — single-token decode against the paged QTensor
+  KV-cache (``repro.serve.kvcache``): the page table and per-page scale
+  exponents ride in as scalar-prefetch operands, each grid step DMAs one
+  int8 page, unpacks it in VMEM (``repro.quant.qtensor`` layout, times the
+  page's power-of-two scale) and folds it into the online softmax — no
+  dequantized copy of the cache ever exists in HBM.
+
+Accumulation discipline (the same chunked low-precision carry as
+``fused.py``): within one KV block the score and weighted-value contractions
+run in ideal f32 (intra-chunk); across blocks the THREE online-softmax
+carries — the output accumulator ``o`` and the denominator ``l`` — are
+rounded to the planner's ``(1, e_acc, m_acc)`` accumulator format after
+every block update (``repro.serve.plan`` sizes the format per context-length
+bucket with the paper's §4.4 knee test; the running max ``m`` is exact — it
+is order statistics, not an accumulation).  The per-block update, shared
+verbatim by the kernels and the unfused references, is ``_online_update``.
+
+Bit-exactness contract: ``*_reference`` are unfused jnp oracles that walk
+the same blocks in the same order with the same carry rounding —
+``tests/test_serve.py`` pins kernel == reference exactly (ragged page
+tails, decode at page boundaries, packed-vs-f32 KV parity included).
+
+``paged_attn_decode(collect_stats=True)`` is the serve-time telemetry
+variant: alongside the quantized carries it runs a wide (f32) shadow ``o``
+accumulation and reduces the raw ``N_STATS`` swamping vector
+(``repro.kernels.common`` layout, ``repro.telemetry.stats.EnsembleStats``
+consumes it) so a context that outgrows its planned accumulator width is
+measurable live; the attention output is bit-identical to the stats-off
+call.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.autotune import fmt_tuple, register_kernel
+from repro.kernels.common import (
+    INTERPRET,
+    N_STATS,
+    quantize_block,
+    stats_delta_row,
+    stats_update,
+)
+from repro.quant.qtensor import unpack_block
+
+__all__ = [
+    "flash_prefill",
+    "flash_prefill_reference",
+    "paged_attn_decode",
+    "paged_attn_decode_reference",
+    "NEG",
+]
+
+# Mask value for invalid scores.  A large finite negative instead of -inf:
+# exp2(NEG - m) underflows to exactly 0.0 in f32 for any finite running max
+# m, and finite arithmetic avoids the inf - inf = nan trap on fully-masked
+# blocks (where the running max itself stays at NEG).
+NEG = -1e30
+
+# The softmax runs in base 2 (scores pre-scaled by log2 e) and the running
+# max is kept on the INTEGER lattice (ceil), so the rescale factor
+# alpha = 2^(m - m') is an exact power of two: rescaling the o/l carries is
+# a pure exponent shift that never rounds their mantissas — every mantissa
+# loss in the online accumulation is the modeled per-block carry rounding,
+# exactly the regime the paper's VRR analysis prices.  It also makes the
+# update order-robust at the bit level: a * 2^k is exactly representable,
+# so fused (FMA) and separate multiply-add lower identically — which is
+# what lets the Pallas kernels and the unfused jnp references agree
+# bit-for-bit instead of to 1 ulp.
+LOG2E = 1.4426950408889634
+
+_WIDE = (8, 23)
+
+
+def _pv(p: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
+    """Batched ``probs @ values`` contraction in f32: p (..., G, T) with
+    v (..., T, D) -> (..., G, D).  One helper shared by the kernels (2D
+    operands) and the references (batched operands) so the ideal intra-block
+    contraction is the same primitive in both."""
+    nb = p.ndim - 2
+    batch = tuple(range(nb))
+    return jax.lax.dot_general(
+        p, v, (((p.ndim - 1,), (nb,)), (batch, batch)),
+        preferred_element_type=jnp.float32)
+
+
+def _online_update(o, m, l, t, valid, v, e_acc: int, m_acc: int):
+    """One KV-block step of the online softmax with the chunked
+    low-precision carry discipline.
+
+    ``o`` (..., G, D) / ``m``, ``l`` (..., G, 1) are the carries, ``t``
+    (..., G, T) this block's BASE-2 scores (pre-scaled by log2 e, NEG where
+    invalid), ``valid`` the score mask, ``v`` (..., T, D) the block's
+    values.  The running max lives on the integer lattice so the rescale is
+    an exact exponent shift (see LOG2E); the rescale-and-add of ``o`` and
+    ``l`` is then rounded to (1, e_acc, m_acc) once per block — the
+    inter-chunk stage of the paper's Corollary 1 — while everything within
+    the block is ideal f32.  A fully-masked block is a carry no-op: alpha =
+    2^0 = 1, the addends are exactly zero, and the carry is a representable
+    point of the accumulator format, so quantize(c + 0) == c.  Returns
+    (o', m', l')."""
+    m_new = jnp.maximum(m, jnp.ceil(jnp.max(t, axis=-1, keepdims=True)))
+    alpha = jnp.exp2(m - m_new)
+    # exp2(t - m_new) would be 2^0 = 1 on fully-masked rows (t == m_new ==
+    # NEG); the explicit mask keeps invalid columns at exactly 0
+    p = jnp.where(valid, jnp.exp2(t - m_new), 0.0)
+    l_new = quantize_block(l * alpha + jnp.sum(p, axis=-1, keepdims=True),
+                           e_acc, m_acc)
+    o_new = quantize_block(o * alpha + _pv(p, v), e_acc, m_acc)
+    return o_new, m_new, l_new
+
+
+def _finalize(o, l):
+    """out = o / l; 0 where nothing was attended (l == 0)."""
+    return jnp.where(l > 0.0, o / jnp.where(l > 0.0, l, 1.0), 0.0)
+
+
+# --------------------------------------------------------------------------
+# prefill
+# --------------------------------------------------------------------------
+
+
+def _prefill_kernel(q_ref, k_ref, v_ref, o_ref, oacc, mx, lx, *,
+                    s_true: int, block_q: int, chunk: int, e_acc: int,
+                    m_acc: int, scale: float):
+    qi, kk = pl.program_id(1), pl.program_id(2)
+
+    @pl.when(kk == 0)
+    def _init():
+        oacc[...] = jnp.zeros_like(oacc)
+        mx[...] = jnp.full_like(mx, NEG)
+        lx[...] = jnp.zeros_like(lx)
+
+    # blocks strictly in the causal future (or wholly past the prompt end)
+    # are provably carry no-ops — every score masked, alpha = 1, addends
+    # exactly 0 — so their MXU/VPU work is predicated away outright
+    @pl.when((kk * chunk <= qi * block_q + block_q - 1)
+             & (kk * chunk < s_true))
+    def _update():
+        q = q_ref[0]  # (block_q, dh)
+        k = k_ref[0]  # (chunk, dh)
+        v = v_ref[0]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        rows = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        cols = kk * chunk + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        valid = (cols <= rows) & (cols < s_true)
+        s = jnp.where(valid, s, NEG)
+        o_new, m_new, l_new = _online_update(
+            oacc[...], mx[...], lx[...], s, valid, v, e_acc, m_acc)
+        oacc[...] = o_new
+        mx[...] = m_new
+        lx[...] = l_new
+
+    @pl.when(kk == pl.num_programs(2) - 1)
+    def _emit():
+        o_ref[0] = _finalize(oacc[...], lx[...])
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("e_acc", "m_acc", "chunk", "block_q", "interpret"),
+)
+def _flash_prefill(q, k, v, *, e_acc, m_acc, chunk, block_q, interpret):
+    s, h, dh = q.shape
+    kv = k.shape[1]
+    g = h // kv
+    # GQA: repeat K/V to the full head count (prefill-transient HBM; the
+    # decode kernel instead shares one KV page across its g query rows)
+    kh = jnp.repeat(k, g, axis=1) if g > 1 else k
+    vh = jnp.repeat(v, g, axis=1) if g > 1 else v
+    sq = -(-s // block_q) * block_q
+    sk = -(-s // chunk) * chunk
+    qt = jnp.pad(q.astype(jnp.float32).transpose(1, 0, 2),
+                 ((0, 0), (0, sq - s), (0, 0)))
+    kt = jnp.pad(kh.astype(jnp.float32).transpose(1, 0, 2),
+                 ((0, 0), (0, sk - s), (0, 0)))
+    vt = jnp.pad(vh.astype(jnp.float32).transpose(1, 0, 2),
+                 ((0, 0), (0, sk - s), (0, 0)))
+    grid = (h, sq // block_q, sk // chunk)
+    out = pl.pallas_call(
+        functools.partial(_prefill_kernel, s_true=s, block_q=block_q,
+                          chunk=chunk, e_acc=e_acc, m_acc=m_acc,
+                          scale=LOG2E / math.sqrt(dh)),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, dh), lambda hh, qi, kk: (hh, qi, 0)),
+            pl.BlockSpec((1, chunk, dh), lambda hh, qi, kk: (hh, kk, 0)),
+            pl.BlockSpec((1, chunk, dh), lambda hh, qi, kk: (hh, kk, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, dh), lambda hh, qi, kk: (hh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, sq, dh), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, dh), jnp.float32),  # o carry
+            pltpu.VMEM((block_q, 1), jnp.float32),   # running max (exact)
+            pltpu.VMEM((block_q, 1), jnp.float32),   # l carry
+        ],
+        interpret=interpret,
+    )(qt, kt, vt)
+    return out.transpose(1, 0, 2)[:s]
+
+
+@register_kernel("flash_prefill")
+def flash_prefill(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    acc: tuple[int, int] = _WIDE,
+    chunk: int = 128,
+    block_q: int = 128,
+    interpret: bool = INTERPRET,
+) -> jnp.ndarray:
+    """Causal flash attention for one sequence's prefill.
+
+    * ``q`` (S, H, dh); ``k``/``v`` (S, KV, dh) — GQA handled by head
+      repetition.  Values should already carry the KV-cache quantization
+      (``repro.serve.kvcache.write_prompt`` returns the dequantized view)
+      so that later paged decode attends to exactly what prefill attended.
+    * ``acc`` — the (e_acc, m_acc) carry format from the serve planner.
+    * ``chunk`` is the KV block length n1 — numerics (the carry rounding
+      cadence; the serve path pins it to the KV page size so prefill and
+      decode share one accumulation geometry).  ``block_q`` is
+      schedule-only: any choice is bit-identical (each query row's block
+      sequence over KV is fixed), tuned via ``autotune_flash_prefill``.
+    """
+    if q.ndim != 3 or k.ndim != 3 or v.ndim != 3 or k.shape != v.shape:
+        raise ValueError(f"bad shapes q{q.shape} k{k.shape} v{v.shape}")
+    if q.shape[1] % k.shape[1] != 0:
+        raise ValueError(f"H={q.shape[1]} not a multiple of KV={k.shape[1]}")
+    e_acc, m_acc = acc
+    return _flash_prefill(q, k, v, e_acc=int(e_acc), m_acc=int(m_acc),
+                          chunk=int(chunk), block_q=int(block_q),
+                          interpret=interpret)
+
+
+def flash_prefill_reference(q, k, v, *, acc=_WIDE, chunk=128):
+    """Unfused jnp oracle for ``flash_prefill``: same chunk walk, same carry
+    rounding, no q blocking (per-row results are block_q-invariant)."""
+    s, h, dh = q.shape
+    g = h // k.shape[1]
+    kh = jnp.repeat(k, g, axis=1).astype(jnp.float32).transpose(1, 0, 2)
+    vh = jnp.repeat(v, g, axis=1).astype(jnp.float32).transpose(1, 0, 2)
+    qt = q.astype(jnp.float32).transpose(1, 0, 2)  # (h, s, dh)
+    sk = -(-s // chunk) * chunk
+    kh = jnp.pad(kh, ((0, 0), (0, sk - s), (0, 0)))
+    vh = jnp.pad(vh, ((0, 0), (0, sk - s), (0, 0)))
+    e_acc, m_acc = acc
+    o = jnp.zeros((h, s, dh), jnp.float32)
+    m = jnp.full((h, s, 1), NEG, jnp.float32)
+    l = jnp.zeros((h, s, 1), jnp.float32)
+    rows = jnp.arange(s)[None, :, None]
+    scale = LOG2E / math.sqrt(dh)
+    for kk in range(sk // chunk):
+        kb = kh[:, kk * chunk:(kk + 1) * chunk]
+        vb = vh[:, kk * chunk:(kk + 1) * chunk]
+        sc = _pv(qt, kb.transpose(0, 2, 1)) * scale  # (h, s, chunk)
+        cols = kk * chunk + jnp.arange(chunk)[None, None, :]
+        valid = (cols <= rows) & (cols < s)
+        sc = jnp.where(valid, sc, NEG)
+        o, m, l = _online_update(o, m, l, sc, valid, vb, e_acc, m_acc)
+    return _finalize(o, l).transpose(1, 0, 2)
+
+
+# --------------------------------------------------------------------------
+# paged decode
+# --------------------------------------------------------------------------
+
+
+def _page_values(ref, se_ref, pid, *, packed, e_kv, m_kv):
+    """One KV page as f32 values in VMEM: unpack the int8 codes and apply
+    the page's power-of-two scale exponent (from SMEM), or pass the f32
+    carrier through (parity mode)."""
+    x = ref[0, 0]  # (page_size, dh)
+    if not packed:
+        return x
+    return unpack_block(x, e_kv, m_kv) * jnp.exp2(
+        se_ref[pid].astype(jnp.float32))
+
+
+def _decode_kernel(pt_ref, sl_ref, kse_ref, vse_ref, q_ref, k_ref, v_ref,
+                   o_ref, oacc, mx, lx, *, packed, e_kv, m_kv, e_acc, m_acc,
+                   page_size, scale):
+    b, p = pl.program_id(0), pl.program_id(2)
+
+    @pl.when(p == 0)
+    def _init():
+        oacc[...] = jnp.zeros_like(oacc)
+        mx[...] = jnp.full_like(mx, NEG)
+        lx[...] = jnp.zeros_like(lx)
+
+    # pages wholly past the sequence's length (the page-table row padding
+    # of a mixed-length batch, pointing at the null page) are provably
+    # carry no-ops — predicate their work away
+    @pl.when(p * page_size < sl_ref[b])
+    def _update():
+        pid = pt_ref[b, p]
+        k = _page_values(k_ref, kse_ref, pid, packed=packed, e_kv=e_kv,
+                         m_kv=m_kv)
+        v = _page_values(v_ref, vse_ref, pid, packed=packed, e_kv=e_kv,
+                         m_kv=m_kv)
+        q = q_ref[0, 0]  # (g, dh)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        tok = p * page_size + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        valid = tok < sl_ref[b]
+        s = jnp.where(valid, s, NEG)
+        o_new, m_new, l_new = _online_update(
+            oacc[...], mx[...], lx[...], s, valid, v, e_acc, m_acc)
+        oacc[...] = o_new
+        mx[...] = m_new
+        lx[...] = l_new
+
+    @pl.when(p == pl.num_programs(2) - 1)
+    def _emit():
+        o_ref[0, 0] = _finalize(oacc[...], lx[...])
+
+
+def _decode_kernel_stats(pt_ref, sl_ref, kse_ref, vse_ref, q_ref, k_ref,
+                         v_ref, o_ref, stats_ref, oacc, mx, lx, oi, stats_acc,
+                         *, packed, e_kv, m_kv, e_acc, m_acc, page_size,
+                         scale):
+    """Telemetry variant: the SAME online-softmax carries — identical
+    values, identical order — plus a wide (f32) shadow ``o`` accumulation
+    and the (1, N_STATS) swamping reduction over the output ensemble (the
+    softmax-weighted value sums, the serve path's long accumulation).
+    Output is bit-identical to ``_decode_kernel``.  Unlike the serving
+    kernel this variant does NOT predicate away beyond-length pages: the
+    ensemble moments are sampled on the LAST grid page (``emit_out``),
+    which for a short sequence is a masked one — the probe pays the full
+    grid, which is fine off the serving hot path."""
+    b, hk, p = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+    last_p = p == pl.num_programs(2) - 1
+
+    @pl.when((b == 0) & (hk == 0) & (p == 0))
+    def _init_stats():
+        stats_acc[...] = jnp.zeros_like(stats_acc)
+
+    @pl.when(p == 0)
+    def _init():
+        oacc[...] = jnp.zeros_like(oacc)
+        mx[...] = jnp.full_like(mx, NEG)
+        lx[...] = jnp.zeros_like(lx)
+        oi[...] = jnp.zeros_like(oi)
+
+    pid = pt_ref[b, p]
+    k = _page_values(k_ref, kse_ref, pid, packed=packed, e_kv=e_kv, m_kv=m_kv)
+    v = _page_values(v_ref, vse_ref, pid, packed=packed, e_kv=e_kv, m_kv=m_kv)
+    q = q_ref[0, 0]
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    tok = p * page_size + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    valid = tok < sl_ref[b]
+    s = jnp.where(valid, s, NEG)
+
+    prev_o, prev_m, prev_l = oacc[...], mx[...], lx[...]
+    o_new, m_new, l_new = _online_update(
+        prev_o, prev_m, prev_l, s, valid, v, e_acc, m_acc)
+    oacc[...] = o_new
+    mx[...] = m_new
+    lx[...] = l_new
+    # wide shadow: the ideal accumulation of the SAME rescaled addends
+    # (base-2, integer-lattice max — identical to _online_update's)
+    alpha = jnp.exp2(prev_m - m_new)
+    pexp = jnp.where(valid, jnp.exp2(s - m_new), 0.0)
+    pv = _pv(pexp, v)
+    ideal = oi[...] * alpha + pv
+    oi[...] = ideal
+
+    mask = jnp.broadcast_to(sl_ref[b] > 0, o_new.shape)
+    delta, step_max = stats_delta_row(o_new, prev_o * alpha, ideal, pv, mask,
+                                      last_p)
+    stats_update(stats_acc, delta[None, :], step_max[None])
+
+    @pl.when(last_p)
+    def _emit():
+        o_ref[0, 0] = _finalize(oacc[...], lx[...])
+
+    @pl.when((b == pl.num_programs(0) - 1) & (hk == pl.num_programs(1) - 1)
+             & last_p)
+    def _emit_stats():
+        stats_ref[...] = stats_acc[...]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("packed", "e_kv", "m_kv", "e_acc", "m_acc",
+                     "collect_stats", "interpret"),
+)
+def _paged_decode(q4, k_pages, v_pages, k_se, v_se, page_table, seq_lens, *,
+                  packed, e_kv, m_kv, e_acc, m_acc, collect_stats, interpret):
+    b, kv, g, dh = q4.shape
+    page_size = k_pages.shape[2]
+    max_pages = page_table.shape[1]
+    grid = (b, kv, max_pages)
+    kw = dict(packed=packed, e_kv=e_kv, m_kv=m_kv, e_acc=e_acc, m_acc=m_acc,
+              page_size=page_size, scale=LOG2E / math.sqrt(dh))
+    # scalar-prefetch operands (SMEM): page table, lengths, page scale
+    # exponents — the index maps gather each sequence's pages through them
+    in_specs = [
+        pl.BlockSpec((1, 1, g, dh),
+                     lambda bb, hk, p, pt, sl, ks, vs: (bb, hk, 0, 0)),
+        pl.BlockSpec((1, 1, page_size, dh),
+                     lambda bb, hk, p, pt, sl, ks, vs: (pt[bb, p], hk, 0, 0)),
+        pl.BlockSpec((1, 1, page_size, dh),
+                     lambda bb, hk, p, pt, sl, ks, vs: (pt[bb, p], hk, 0, 0)),
+    ]
+    o_spec = pl.BlockSpec((1, 1, g, dh),
+                          lambda bb, hk, p, pt, sl, ks, vs: (bb, hk, 0, 0))
+    o_shape = jax.ShapeDtypeStruct((b, kv, g, dh), jnp.float32)
+    scratch = [
+        pltpu.VMEM((g, dh), jnp.float32),  # o carry
+        pltpu.VMEM((g, 1), jnp.float32),   # running max (exact)
+        pltpu.VMEM((g, 1), jnp.float32),   # l carry
+    ]
+    if collect_stats:
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=4, grid=grid, in_specs=in_specs,
+            out_specs=[
+                o_spec,
+                pl.BlockSpec((1, N_STATS),
+                             lambda bb, hk, p, pt, sl, ks, vs: (0, 0)),
+            ],
+            scratch_shapes=scratch + [
+                pltpu.VMEM((g, dh), jnp.float32),      # ideal o shadow
+                pltpu.VMEM((1, N_STATS), jnp.float32),  # stats row
+            ],
+        )
+        out, stats = pl.pallas_call(
+            functools.partial(_decode_kernel_stats, **kw),
+            grid_spec=grid_spec,
+            out_shape=[o_shape,
+                       jax.ShapeDtypeStruct((1, N_STATS), jnp.float32)],
+            interpret=interpret,
+        )(page_table, seq_lens, k_se, v_se, q4, k_pages, v_pages)
+        return out, stats[0]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4, grid=grid, in_specs=in_specs,
+        out_specs=o_spec, scratch_shapes=scratch)
+    return pl.pallas_call(
+        functools.partial(_decode_kernel, **kw),
+        grid_spec=grid_spec,
+        out_shape=o_shape,
+        interpret=interpret,
+    )(page_table, seq_lens, k_se, v_se, q4, k_pages, v_pages)
+
+
+@register_kernel("paged_attn_decode")
+def paged_attn_decode(
+    q: jnp.ndarray,
+    k_pages: jnp.ndarray,
+    v_pages: jnp.ndarray,
+    k_se: jnp.ndarray,
+    v_se: jnp.ndarray,
+    page_table: jnp.ndarray,
+    seq_lens: jnp.ndarray,
+    *,
+    kv_fmt=None,
+    acc: tuple[int, int] = _WIDE,
+    collect_stats: bool = False,
+    interpret: bool = INTERPRET,
+):
+    """One decode token of attention per sequence against the paged cache.
+
+    * ``q`` (B, H, dh) f32 — this step's query rows.
+    * ``k_pages``/``v_pages`` (P, KV, page_size, dh) — the arena: int8
+      ``(1, e, m)`` codes (``kv_fmt`` required; unpacked in VMEM) or f32
+      carriers (parity/oracle mode, ``kv_fmt`` ignored for decoding).
+    * ``k_se``/``v_se`` (P,) int32 — per-page power-of-two scale exponents
+      (ignored in f32 mode: the carrier already includes the scale).
+    * ``page_table`` (B, max_pages) int32 — page ids per sequence, padded
+      with 0 (page 0 is the reserved null page, see ``serve.kvcache``).
+    * ``seq_lens`` (B,) int32 — valid tokens per sequence (0 = inactive
+      row: output is exactly 0 and nothing is attended).
+    * ``acc`` — the (e_acc, m_acc) carry format for this context bucket
+      (``repro.serve.plan``); the page size is the chunk length n1.
+    * ``collect_stats=True`` additionally returns the raw (N_STATS,)
+      swamping vector over the output ensemble (see module docstring).
+
+    Returns (B, H, dh) f32 [, stats].
+    """
+    if q.ndim != 3:
+        raise ValueError(f"q must be (B, H, dh), got {q.shape}")
+    if k_pages.shape != v_pages.shape or k_pages.ndim != 4:
+        raise ValueError(f"bad pages {k_pages.shape} / {v_pages.shape}")
+    b, h, dh = q.shape
+    kv = k_pages.shape[1]
+    if h % kv != 0:
+        raise ValueError(f"H={h} not a multiple of KV={kv}")
+    packed = k_pages.dtype == jnp.int8
+    fmt = fmt_tuple(kv_fmt)
+    if packed and fmt is None:
+        raise ValueError("packed pages need kv_fmt to decode")
+    e_kv, m_kv = fmt or _WIDE
+    # (B, H, dh) rows are kv-major: head hh = hk * g + gg belongs to kv
+    # head hk — reshape (B, kv, g, dh) is exactly that grouping
+    q4 = q.astype(jnp.float32).reshape(b, kv, h // kv, dh)
+    e_acc, m_acc = acc
+    out = _paged_decode(
+        q4, k_pages, v_pages,
+        jnp.asarray(k_se, jnp.int32), jnp.asarray(v_se, jnp.int32),
+        jnp.asarray(page_table, jnp.int32), jnp.asarray(seq_lens, jnp.int32),
+        packed=packed, e_kv=int(e_kv), m_kv=int(m_kv),
+        e_acc=int(e_acc), m_acc=int(m_acc),
+        collect_stats=collect_stats, interpret=interpret)
+    if collect_stats:
+        o, stats = out
+        return o.reshape(b, h, dh), stats
+    return out.reshape(b, h, dh)
+
+
+def paged_attn_decode_reference(q, k_pages, v_pages, k_se, v_se, page_table,
+                                seq_lens, *, kv_fmt=None, acc=_WIDE):
+    """Unfused jnp oracle for ``paged_attn_decode``: gathers pages through
+    the page table with plain indexing, dequantizes with the per-page
+    scales, and walks the pages in the same order with the same carry
+    rounding.  Bit-exact against the kernel."""
+    b, h, dh = q.shape
+    kv = k_pages.shape[1]
+    g = h // kv
+    page_size = k_pages.shape[2]
+    packed = k_pages.dtype == jnp.int8
+    fmt = fmt_tuple(kv_fmt)
+    e_kv, m_kv = fmt or _WIDE
+    e_acc, m_acc = acc
+    q4 = q.astype(jnp.float32).reshape(b, kv, g, dh)
+    o = jnp.zeros((b, kv, g, dh), jnp.float32)
+    m = jnp.full((b, kv, g, 1), NEG, jnp.float32)
+    l = jnp.zeros((b, kv, g, 1), jnp.float32)
+    scale = LOG2E / math.sqrt(dh)
+    seq_lens = jnp.asarray(seq_lens, jnp.int32)
+    for p in range(page_table.shape[1]):
+        pid = jnp.asarray(page_table, jnp.int32)[:, p]  # (B,)
+        kb = k_pages[pid]  # (B, kv, page_size, dh)
+        vb = v_pages[pid]
+        if packed:
+            kb = unpack_block(kb, e_kv, m_kv) * jnp.exp2(
+                k_se[pid].astype(jnp.float32))[:, None, None, None]
+            vb = unpack_block(vb, e_kv, m_kv) * jnp.exp2(
+                v_se[pid].astype(jnp.float32))[:, None, None, None]
+        kb = kb.astype(jnp.float32)
+        vb = vb.astype(jnp.float32)
+        s = _pv(q4, kb.transpose(0, 1, 3, 2)) * scale  # (B, kv, g, page_size)
+        tok = p * page_size + jnp.arange(page_size)[None, None, None, :]
+        valid = tok < seq_lens[:, None, None, None]
+        s = jnp.where(valid, s, NEG)
+        o, m, l = _online_update(o, m, l, s, valid, vb, e_acc, m_acc)
+    return _finalize(o, l).reshape(b, h, dh)

@@ -58,10 +58,13 @@ __all__ = [
     "set_table_path",
     "blocks_for",
     "pair_blocks_for",
+    "attn_blocks_for",
     "fmt_tuple",
     "operand_dtype",
     "autotune_qmatmul",
     "autotune_bwd_pair",
+    "autotune_flash_prefill",
+    "attn_vmem_bytes",
 ]
 
 # --------------------------------------------------------------------------
@@ -274,6 +277,34 @@ def _pair_key(t: int, k: int, n: int, bwd_chunk: int, grad_chunk: int,
             f":r{rs}:p{int(bool(packed))}:d{dtype}:v{vm >> 20}")
 
 
+def attn_vmem_bytes(block_q: int, chunk: int, dh: int,
+                    *, kv_bytes: int = 4) -> int:
+    """VMEM working set of one flash-attention grid step: q/out tiles, the
+    K/V block, the o-carry scratch and the (block_q, 1) max/l rows.
+    ``kv_bytes`` prices the K/V block carrier — 4 for ``flash_prefill``
+    (its tiles are f32: prefill consumes the dequantized view so it
+    attends to exactly what the pages hold), 1 for the decode kernel's
+    in-VMEM-unpacked int8 pages."""
+    return (4 * block_q * dh            # q tile
+            + 2 * kv_bytes * chunk * dh  # k + v block
+            + 4 * block_q * dh           # out tile
+            + 4 * block_q * dh           # o carry scratch
+            + 2 * 4 * block_q)           # running max + l carry
+
+
+def _attn_key(s: int, h: int, dh: int, chunk: int, e_acc: int, m_acc: int,
+              kv_fmt, dtype: str = "f32", vmem: int | None = None) -> str:
+    """Problem key for the serve-path attention kernels — same shape as the
+    GEMM keys (geometry + chunk + accumulator format + KV representation
+    format + operand dtype + VMEM ceiling) so attention entries live in the
+    same table under the same drift rules."""
+    r = fmt_tuple(kv_fmt)
+    rs = "none" if r is None else f"{r[0]}.{r[1]}"
+    vm = vmem if vmem is not None else vmem_budget()
+    return (f"attn:{s}x{h}x{dh}:c{chunk}:acc{e_acc}.{m_acc}:r{rs}"
+            f":d{dtype}:v{vm >> 20}")
+
+
 class TuningTable:
     """JSON-backed map from GEMM problem key to the winning block triple.
 
@@ -398,6 +429,20 @@ def pair_blocks_for(t: int, k: int, n: int, *, bwd_chunk: int = 0,
     return (bt, bk, bn)
 
 
+def attn_blocks_for(s: int, h: int, dh: int, chunk: int, *, e_acc: int = 8,
+                    m_acc: int = 23, kv_fmt=None, dtype: str = "f32",
+                    vmem: int | None = None) -> int:
+    """Trace-time consult for ``flash_prefill``'s block_q (the only
+    schedule-only knob: ``chunk`` is the carry rounding cadence — numerics,
+    pinned to the KV page size by the serve path — and the decode kernel's
+    grid is fixed by the page geometry outright)."""
+    e = get_table().get_key(_attn_key(s, h, dh, chunk, e_acc, m_acc, kv_fmt,
+                                      dtype=dtype, vmem=vmem))
+    if e is not None:
+        return int(e["block_q"])
+    return 128
+
+
 # --------------------------------------------------------------------------
 # the tuner
 # --------------------------------------------------------------------------
@@ -518,6 +563,7 @@ def autotune_bwd_pair(
     grad_acc: tuple[int, int] = (8, 23),
     repr_fmt: Any = None,
     packed: bool = True,
+    dtype: str | None = None,
     vmem: int | None = None,
     reps: int = 2,
     seed: int = 0,
@@ -526,7 +572,9 @@ def autotune_bwd_pair(
     verbose: bool = False,
 ) -> dict:
     """Tune block_k of the fused backward-pair kernel (block_t / block_n are
-    the two rounding cadences — numerics, never swept)."""
+    the two rounding cadences — numerics, never swept).  ``dtype`` labels
+    the key like the GEMM tuner's (e.g. "bf16" for the MoE expert shapes
+    routed through qdot with ``table_dtype``)."""
     import jax.numpy as jnp
 
     from repro.kernels.bwd_pair import pair_vmem_bytes, qmatmul_bwd_pair
@@ -539,7 +587,7 @@ def autotune_bwd_pair(
     bt = grad_chunk if grad_chunk > 0 else 128
     bn = bwd_chunk if bwd_chunk > 0 else 128
     key_str = _pair_key(t, k, n, bn, bt, tuple(bwd_acc), tuple(grad_acc),
-                        repr_fmt, packed, dtype="f32", vmem=budget)
+                        repr_fmt, packed, dtype=dtype or "f32", vmem=budget)
     table = table or get_table()
     cached = table.get_key(key_str)
     if cached is not None and cached.get("reps", 0) >= reps:
@@ -573,5 +621,64 @@ def autotune_bwd_pair(
     us, bk = best
     entry = {"block_t": bt, "block_k": bk, "block_n": bn,
              "us": round(us, 1), "candidates": len(cands), "reps": reps}
+    table.put_key(key_str, entry, persist=persist)
+    return entry
+
+
+def autotune_flash_prefill(
+    s: int,
+    h: int,
+    dh: int,
+    *,
+    chunk: int,
+    e_acc: int = 8,
+    m_acc: int = 23,
+    kv_fmt: Any = None,
+    vmem: int | None = None,
+    reps: int = 2,
+    seed: int = 0,
+    table: TuningTable | None = None,
+    persist: bool = True,
+    verbose: bool = False,
+) -> dict:
+    """Tune ``flash_prefill``'s block_q for one (prompt, heads, head_dim)
+    geometry (``chunk`` is the carry cadence — numerics, never swept) and
+    record the winner under an ``attn:`` key in the shared tuning table."""
+    import jax.numpy as jnp
+
+    from repro.kernels.attention import flash_prefill  # late: import cycle
+
+    kv_fmt = fmt_tuple(kv_fmt)
+    budget = vmem if vmem is not None else vmem_budget()
+    key_str = _attn_key(s, h, dh, chunk, e_acc, m_acc, kv_fmt, vmem=budget)
+    table = table or get_table()
+    cached = table.get_key(key_str)
+    if cached is not None and cached.get("reps", 0) >= reps:
+        return cached
+
+    rk = jax.random.PRNGKey(seed)
+    kq, kk, kv_ = jax.random.split(rk, 3)
+    q = jax.random.normal(kq, (s, h, dh), jnp.float32)
+    k = jax.random.normal(kk, (s, h, dh), jnp.float32)
+    v = jax.random.normal(kv_, (s, h, dh), jnp.float32)
+
+    sp = max(-(-s // 128) * 128, 128)
+    cands = [bq for bq in _TILE_EDGES
+             if bq <= sp and attn_vmem_bytes(bq, chunk, dh) <= budget] or [128]
+    best: tuple[float, int] | None = None
+    for bq in cands:
+        def run(q, k, v, _bq=bq):
+            return flash_prefill(q, k, v, acc=(e_acc, m_acc), chunk=chunk,
+                                 block_q=_bq)
+
+        us = time_kernel(run, q, k, v, reps=reps)
+        if verbose:
+            print(f"  autotune attn {s}x{h}x{dh} c{chunk}: bq={bq} -> {us:.0f}us")
+        if best is None or us < best[0]:
+            best = (us, bq)
+
+    us, bq = best
+    entry = {"block_q": bq, "us": round(us, 1),
+             "candidates": len(cands), "reps": reps}
     table.put_key(key_str, entry, persist=persist)
     return entry

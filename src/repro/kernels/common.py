@@ -10,6 +10,7 @@ __all__ = [
     "INTERPRET",
     "pad2d",
     "count_pallas_calls",
+    "count_pallas_executions",
     "N_STATS",
     "STAT_COUNT",
     "STAT_SUM_Q",
@@ -58,23 +59,37 @@ def count_pallas_calls(fn, *args, **kwargs) -> int:
     return _count_eqns(jaxpr.jaxpr)
 
 
-def _count_eqns(jaxpr) -> int:
+def count_pallas_executions(fn, *args, **kwargs) -> int:
+    """Like ``count_pallas_calls`` but weights equations inside ``lax.scan``
+    bodies by the scan's trip count, so a rolled layer stack reports the
+    passes one EXECUTION performs (a scanned stack's body appears once in
+    the jaxpr however many layers it runs)."""
+    import functools
+
+    jaxpr = jax.make_jaxpr(functools.partial(fn, **kwargs))(*args)
+    return _count_eqns(jaxpr.jaxpr, weighted=True)
+
+
+def _count_eqns(jaxpr, weighted: bool = False) -> int:
     n = 0
     for eqn in jaxpr.eqns:
         if eqn.primitive.name == "pallas_call":
             n += 1
+        mult = 1
+        if weighted and eqn.primitive.name == "scan":
+            mult = int(eqn.params.get("length", 1))
         for v in eqn.params.values():
-            n += _count_in_param(v)
+            n += mult * _count_in_param(v, weighted)
     return n
 
 
-def _count_in_param(v) -> int:
+def _count_in_param(v, weighted: bool = False) -> int:
     if hasattr(v, "jaxpr"):  # ClosedJaxpr
-        return _count_eqns(v.jaxpr)
+        return _count_eqns(v.jaxpr, weighted)
     if hasattr(v, "eqns"):  # raw Jaxpr
-        return _count_eqns(v)
+        return _count_eqns(v, weighted)
     if isinstance(v, (list, tuple)):
-        return sum(_count_in_param(x) for x in v)
+        return sum(_count_in_param(x, weighted) for x in v)
     return 0
 
 

@@ -101,6 +101,11 @@ class QDotConfig:
     fused: bool = True
     pack_residuals: bool = True
     out_fmt: FPFormat | None = None
+    # autotune-table dtype label override for the forward consult: the MoE
+    # expert einsum shapes are warmed under "bf16" keys (they are bf16 GEMMs
+    # outside the quantized emulation) — routing them through qdot must look
+    # those entries up rather than the default f32-carrier key
+    table_dtype: str | None = None
 
     @property
     def is_exact(self) -> bool:
@@ -190,7 +195,8 @@ def qdot_gemm_variants(cfg: QDotConfig, t: int, k: int, n: int) -> dict[str, dic
         out[role] = dict(kernel="gemm", m=m_, k=k_, n=n_, chunk=chunk,
                          e_acc=e_acc, m_acc=m_acc, repr_fmt=fmt,
                          quantize_a=qa, quantize_b=qb, emit_quantized=emitq,
-                         pack_residuals=packs and emitq)
+                         pack_residuals=packs and emitq,
+                         dtype=cfg.table_dtype)
     eb, mb, cb = _acc_params(cfg.bwd)
     eg, mg, cg = _acc_params(cfg.grad)
     segs = pair_n_segments(cfg, t, k, n)
@@ -201,17 +207,20 @@ def qdot_gemm_variants(cfg: QDotConfig, t: int, k: int, n: int) -> dict[str, dic
         out["bwd_pair"] = dict(kernel="bwd_pair", t=t, k=k, n=n_tune,
                                bwd_chunk=cb, grad_chunk=cg,
                                bwd_acc=(eb, mb), grad_acc=(eg, mg),
-                               repr_fmt=fmt, packed=packs)
+                               repr_fmt=fmt, packed=packs,
+                               dtype=cfg.table_dtype)
     else:
         # two-call fallback: residuals consumed packed, in-kernel
         out["bwd"] = dict(kernel="gemm", m=t, k=n, n=k, chunk=cb,
                           e_acc=eb, m_acc=mb, repr_fmt=fmt,
                           quantize_a=True, quantize_b=False,
-                          b_packed=packs, emit_quantized=False)
+                          b_packed=packs, emit_quantized=False,
+                          dtype=cfg.table_dtype)
         out["grad"] = dict(kernel="gemm", m=k, k=t, n=n, chunk=cg,
                            e_acc=eg, m_acc=mg, repr_fmt=fmt,
                            quantize_a=False, quantize_b=True,
-                           a_packed=packs, emit_quantized=False)
+                           a_packed=packs, emit_quantized=False,
+                           dtype=cfg.table_dtype)
     return out
 
 
@@ -229,6 +238,7 @@ def _mm_fused(
     pack_residuals: bool = False,
     out_fmt: FPFormat | None = None,
     pack_out: bool = False,
+    dtype_key: str | None = None,
 ):
     """One fused pallas_call: Q(a) @ Q(b) under role-``p`` accumulation,
     block decomposition consulted from the autotune table at trace time."""
@@ -239,7 +249,7 @@ def _mm_fused(
         e_acc=e_acc, m_acc=m_acc, repr_fmt=fmt,
         emit_quantized=return_quantized,
         quantize_a=quantize_a, quantize_b=quantize_b,
-        dtype=operand_dtype(a_packed, b_packed),
+        dtype=dtype_key or operand_dtype(a_packed, b_packed),
         pack_residuals=pack_residuals)
     return qmatmul_fused(
         a, b,
@@ -307,7 +317,8 @@ def _qdot2d(x: jnp.ndarray, w: jnp.ndarray, cfg: QDotConfig) -> jnp.ndarray:
     if not cfg.fused:
         y = _mm(_maybe_q(x, cfg.repr_fmt), _maybe_q(w, cfg.repr_fmt), cfg.fwd)
         return _maybe_q(y, cfg.out_fmt)
-    return _mm_fused(x, w, cfg.fwd, cfg.repr_fmt, out_fmt=cfg.out_fmt)
+    return _mm_fused(x, w, cfg.fwd, cfg.repr_fmt, out_fmt=cfg.out_fmt,
+                     dtype_key=cfg.table_dtype)
 
 
 def _qdot2d_fwd(x, w, cfg):
@@ -318,7 +329,8 @@ def _qdot2d_fwd(x, w, cfg):
         return y, (xq, wq)
     if cfg.repr_fmt is None:
         # nothing to quantize: residuals are the raw operands
-        return _mm_fused(x, w, cfg.fwd, None, out_fmt=cfg.out_fmt), (x, w)
+        return _mm_fused(x, w, cfg.fwd, None, out_fmt=cfg.out_fmt,
+                         dtype_key=cfg.table_dtype), (x, w)
     # one pallas_call: FWD GEMM + residual emission from the epilogue —
     # int8-packed QTensor payloads when the format fits in 8 bits
     packs = cfg.packs
@@ -357,7 +369,7 @@ def _qdot2d_bwd(cfg, res, g):
         bt, bk, bn = pair_blocks_for(
             t, k, seg_n, bwd_chunk=cb, grad_chunk=cg, bwd_acc=(eb, mb),
             grad_acc=(eg, mg), repr_fmt=fmt_tuple(cfg.repr_fmt),
-            packed=packed)
+            packed=packed, dtype=cfg.table_dtype or "f32")
         kw = dict(repr_fmt=cfg.repr_fmt, bwd_acc=(eb, mb),
                   grad_acc=(eg, mg), block_t=bt, block_k=bk, block_n=bn,
                   packed=packed, quantize_g=cfg.repr_fmt is not None)
@@ -370,11 +382,13 @@ def _qdot2d_bwd(cfg, res, g):
     # (the int8 transpose is an XLA copy, not a pallas pass)
     # BWD GEMM: dx[T, K] = g[T, N] @ w^T[N, K]   (accumulation length N)
     dx = _mm_fused(g, wp.T, cfg.bwd, cfg.repr_fmt,
-                   quantize_a=True, quantize_b=False, b_packed=packed)
+                   quantize_a=True, quantize_b=False, b_packed=packed,
+                   dtype_key=cfg.table_dtype)
     # GRAD GEMM: dw[K, N] = x^T[K, T] @ g[T, N]  (accumulation length T —
     # the long one, B*T tokens; the paper's critical case)
     dw = _mm_fused(xp.T, g, cfg.grad, cfg.repr_fmt,
-                   quantize_a=False, quantize_b=True, a_packed=packed)
+                   quantize_a=False, quantize_b=True, a_packed=packed,
+                   dtype_key=cfg.table_dtype)
     return dx, dw
 
 

@@ -1,11 +1,20 @@
-"""Batched serving driver: prefill a batch of prompts, then greedy-decode.
+"""Serving driver: continuous batching over the paged QTensor KV-cache.
 
-The production shapes (decode_32k / long_500k) are exercised via the
-dry-run; this driver runs the same code paths end-to-end at any scale the
-host can execute (smoke configs on CPU, full configs on a pod).
+Attention-stack families (dense / moe / vlm) serve through
+``repro.serve.ServeEngine`` — paged int8 KV pages, flash prefill/decode
+kernels with planner-chosen accumulator widths, admission / decode
+interleave and page eviction on completion — so requests of wildly
+different lengths share one arena and one decode batch.  Families the
+paged path does not cover (ssm / hybrid / encdec) fall back to the legacy
+static-batch loop below.
+
+Restoring from a training checkpoint honors the telemetry controller's
+realized ``precision_schedule`` (recorded in ``meta.json``): the dense-GEMM
+QuantPlan the run actually converged under is reproduced via
+``apply_schedule`` instead of re-derived from the static policy.
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --smoke \
-      --batch 4 --prompt-len 32 --gen 16
+      --prompt-lens 16,32,48 --gen 16
 """
 
 from __future__ import annotations
@@ -17,34 +26,146 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import get_config, get_smoke_config
+from repro.core.policy import AccumulationPolicy, plan_for_model
 from repro.data.pipeline import DataConfig, SyntheticLM, with_extras
 from repro.models import encdec
 from repro.models.api import get_model
 from repro.models.layers import Dist
+from repro.models.lm import PAGED_FAMILIES
 
 
-def main(argv=None) -> dict:
+def parse_args(argv=None):
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--arch", default="qwen2-1.5b")
     ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--prompt-lens", default="",
+                    help="comma-separated prompt lengths, one request each "
+                         "(continuous batching); default: --batch copies of "
+                         "--prompt-len")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--pages", type=int, default=0,
+                    help="KV pool pages (0 = sized for the workload +25%)")
+    ap.add_argument("--max-batch", type=int, default=8)
+    ap.add_argument("--policy", choices=["exact", "predicted"], default="exact",
+                    help="dense-GEMM accumulation plan for the serve path")
+    ap.add_argument("--chunk", type=int, default=64)
+    ap.add_argument("--ckpt-dir", default="",
+                    help="restore params (and the recorded precision "
+                         "schedule) from the latest training checkpoint")
+    ap.add_argument("--monitor-cadence", type=int, default=0,
+                    help="decode steps between serve-time VRR probes")
+    ap.add_argument("--legacy", action="store_true",
+                    help="force the static-batch loop")
     ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args(argv)
+    return ap.parse_args(argv)
 
+
+def _restore_params(ckpt_dir: str, cfg, policy, model, params,
+                    *, seq_len: int, global_batch: int):
+    """Latest-checkpoint params + the precision schedule the run trained
+    under (satellite: serve honors ``precision_schedule`` instead of
+    re-deriving the default plan)."""
+    from repro.train.checkpoint import latest_step, restore_checkpoint
+
+    step = latest_step(ckpt_dir)
+    if step is None:
+        raise FileNotFoundError(f"no checkpoint under {ckpt_dir}")
+    like = {"params": jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), params)}
+    state, meta = restore_checkpoint(ckpt_dir, step, like)
+    params = state["params"]
+    schedule = meta.get("precision_schedule")
+    if schedule:
+        from repro.telemetry.controller import PrecisionController, apply_schedule
+
+        ctl = PrecisionController(policy)
+        ctl.restore_meta(schedule)
+        cfg = apply_schedule(cfg, policy, ctl.schedule(),
+                             seq_len=seq_len, global_batch=global_batch)
+        model = get_model(cfg)
+        print(f"restored step {step} with precision schedule {schedule}")
+    else:
+        print(f"restored step {step} (no precision schedule recorded)")
+    return cfg, model, params
+
+
+def main(argv=None) -> dict:
+    args = parse_args(argv)
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
-    model = get_model(cfg)
-    dist = Dist()
-    params = model.init_params(jax.random.PRNGKey(args.seed))
-    params = jax.tree.map(
-        lambda x: x.astype(jnp.bfloat16) if x.dtype == jnp.float32 else x, params)
+    if args.prompt_lens:
+        prompt_lens = [int(x) for x in args.prompt_lens.split(",")]
+    else:
+        prompt_lens = [args.prompt_len] * args.batch
+    max_ctx = max(prompt_lens) + args.gen
 
+    policy = AccumulationPolicy(mode=args.policy, chunk=args.chunk)
+    cfg = plan_for_model(cfg, seq_len=max_ctx, global_batch=len(prompt_lens),
+                         policy=policy)
+    model = get_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(args.seed))
+    if args.ckpt_dir:
+        cfg, model, params = _restore_params(
+            args.ckpt_dir, cfg, policy, model, params,
+            seq_len=max_ctx, global_batch=len(prompt_lens))
+    params = jax.tree.map(
+        lambda x: x.astype(jnp.bfloat16) if x.dtype == jnp.float32 else x,
+        params)
+
+    if args.legacy or cfg.family not in PAGED_FAMILIES:
+        return _legacy_main(args, cfg, model, params)
+
+    from repro.serve.scheduler import ServeEngine
+
+    tokens_needed = sum(pl + args.gen for pl in prompt_lens)
+    n_pages = args.pages or (
+        -(-int(tokens_needed * 1.25) // args.page_size) + 1)
+    eng = ServeEngine(model, params, n_pages=n_pages,
+                      page_size=args.page_size, max_batch=args.max_batch,
+                      monitor_cadence=args.monitor_cadence, seed=args.seed)
+    rng = jax.random.PRNGKey(args.seed + 1)
+    rids = []
+    for pl_ in prompt_lens:
+        rng, sub = jax.random.split(rng)
+        prompt = jax.random.randint(sub, (pl_,), 0, cfg.vocab_size)
+        rids.append(eng.submit([int(t) for t in prompt], args.gen))
+
+    t0 = time.time()
+    results = eng.run()
+    dt = time.time() - t0
+    toks_per_s = eng.decoded_tokens / max(dt, 1e-9)
+    packed = eng.kv_bytes_per_token()
+    f32 = eng.kv_bytes_per_token(carrier_bytes=4)
+    print(f"arch={cfg.name} requests={len(rids)} "
+          f"prompt_lens={prompt_lens} gen={args.gen}")
+    print(f"continuous batching: {eng.decoded_tokens} tokens in {dt:.2f}s "
+          f"({toks_per_s:.1f} tok/s), max concurrent {eng.max_concurrent}, "
+          f"pool {n_pages} x {args.page_size}-token pages")
+    print(f"KV bytes/token: packed {packed:.1f} vs f32 {f32:.1f} "
+          f"({f32 / packed:.2f}x)")
+    print("sample generation (request 0):", results[rids[0]])
+    eng.pool.check_invariants()
+    return {"tok_per_s": float(toks_per_s), "results": results,
+            "kv_ratio": f32 / packed, "max_concurrent": eng.max_concurrent,
+            "events": eng.events}
+
+
+def _legacy_main(args, cfg, model, params) -> dict:
+    """Static-batch prefill + greedy decode (ssm / hybrid / encdec, whose
+    recurrent or cross-attention state is not paged-KV shaped)."""
+    dist = Dist()
+    prompt_len = args.prompt_len
+    if args.prompt_lens:
+        print(f"note: legacy static batch serves {args.batch} uniform "
+              f"prompts of {prompt_len} tokens; --prompt-lens "
+              f"{args.prompt_lens!r} applies to the paged engine only")
     data = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size,
-                                  seq_len=args.prompt_len,
+                                  seq_len=prompt_len,
                                   global_batch=args.batch, seed=args.seed))
     batch = with_extras(next(data), cfg, key=jax.random.PRNGKey(1))
-    max_t = args.prompt_len + args.gen
+    max_t = prompt_len + args.gen
 
     t0 = time.time()
     if cfg.family == "encdec":
@@ -88,8 +209,8 @@ def main(argv=None) -> dict:
 
     gen = jnp.concatenate(out_tokens, axis=1)
     toks_per_s = args.batch * (args.gen - 1) / max(t_decode, 1e-9)
-    print(f"arch={cfg.name} batch={args.batch} prompt={args.prompt_len} "
-          f"gen={args.gen}")
+    print(f"arch={cfg.name} batch={args.batch} prompt={prompt_len} "
+          f"gen={args.gen} [legacy static batch]")
     print(f"prefill: {t_prefill:.2f}s   decode: {t_decode:.2f}s "
           f"({toks_per_s:.1f} tok/s)")
     print("sample generation (seq 0):", gen[0].tolist())

@@ -169,6 +169,50 @@ def prime_cross_attention(params, enc_out, cfg: ModelConfig, state: Params) -> P
     return {**state, "xk": xk, "xv": xv}
 
 
+def init_paged_state(cfg: ModelConfig, *, n_pages: int, page_size: int,
+                     kv_fmt=None) -> dict:
+    """Paged arena for the decoder's SELF-attention layers (the
+    cross-attention K/V stay a dense prefill-time projection — they are
+    encoder-length, fixed, and shared-shape across the batch, so paging
+    buys nothing there)."""
+    from repro.serve.kvcache import PagedKVConfig, init_arena
+
+    pc = PagedKVConfig.for_model(cfg, n_pages=n_pages, page_size=page_size,
+                                 kv_fmt=kv_fmt)
+    return init_arena(pc)
+
+
+def decode_step_paged(params, tokens, kv_state, xk, xv, page_table,
+                      positions, seq_lens, cfg: ModelConfig,
+                      dist: L.Dist = L.LOCAL, *, kv_fmt,
+                      acc: tuple[int, int], oracle: bool = False):
+    """One decoder token through the paged self-attention cache (the serve
+    subsystem's cache + flash-decode kernel) with fixed cross-attention
+    memory ``xk``/``xv`` ((L, B, T_enc, KV, dh), from
+    ``prime_cross_attention``).  Per-sequence ``positions``/``seq_lens`` as
+    in ``repro.models.lm.decode_step_paged``."""
+    x = params["embed"][tokens].astype(L.COMPUTE_DTYPE)
+    x = L._constrain(x, dist, P(dist.data_axes, None, None))
+
+    def body(carry, inp):
+        lp, kvl, xkl, xvl = inp
+        h, nkv = L.attn_decode_paged(
+            lp["attn"], L.rms_norm(carry, lp["ln1"], cfg.norm_eps), kvl,
+            page_table, positions, seq_lens, cfg, dist,
+            kv_fmt=kv_fmt, acc=acc, oracle=oracle)
+        carry = carry + h
+        z = L.rms_norm(carry, lp["ln_x"], cfg.norm_eps)
+        q = L._q_proj(lp["xattn"], z, cfg, positions[:, None])
+        o = L._gqa_attend(q, xkl, xvl, None, cfg, dist)
+        carry = carry + L.dense(o, lp["xattn"]["wo"], cfg.quant.attn_out)
+        z = L.rms_norm(carry, lp["ln2"], cfg.norm_eps)
+        return carry + L.mlp_apply(lp["mlp"], z, cfg), nkv
+
+    x, new_kv = scan_util.scan(body, x, (params["decoder"], kv_state, xk, xv))
+    logits = _unembed(params, x, cfg, dist)
+    return logits, new_kv
+
+
 def decode_step(params, tokens, state, pos, cfg: ModelConfig,
                 dist: L.Dist = L.LOCAL):
     """One decoder token with fixed cross-attention memory."""

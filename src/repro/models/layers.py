@@ -319,6 +319,104 @@ def attn_cache_init(cfg: ModelConfig, batch: int, max_t: int) -> dict[str, jnp.n
 
 
 # --------------------------------------------------------------------------
+# paged serving attention (repro.serve): packed QTensor KV pages + the
+# online-softmax Pallas kernels with planner-chosen accumulator widths
+# --------------------------------------------------------------------------
+
+
+def attn_decode_paged(
+    p: Params,
+    x: jnp.ndarray,
+    kv: dict[str, jnp.ndarray],
+    page_table: jnp.ndarray,
+    positions: jnp.ndarray,
+    seq_lens: jnp.ndarray,
+    cfg: ModelConfig,
+    dist: Dist,
+    *,
+    kv_fmt,
+    acc: tuple[int, int],
+    oracle: bool = False,
+) -> tuple[jnp.ndarray, dict[str, jnp.ndarray]]:
+    """One-token decode against a layer's paged-KV arena slice.
+
+    ``x`` (B, 1, D); ``kv`` = {"k", "v", "k_se", "v_se"} per-layer slices
+    (``repro.serve.kvcache`` layout); ``positions`` (B,) — each sequence's
+    own write position (continuous batching: they differ); ``seq_lens``
+    (B,) — attended tokens incl. this one, 0 for padded rows (their writes
+    land in the reserved null page).  ``acc`` is the planner's carry
+    format; ``oracle=True`` swaps the Pallas kernel for the unfused jnp
+    reference (the logit-exactness oracle).
+    """
+    from repro.kernels.attention import (
+        paged_attn_decode,
+        paged_attn_decode_reference,
+    )
+    from repro.serve import kvcache as KV
+
+    b = x.shape[0]
+    pos2 = positions[:, None]
+    q = _q_proj(p, x, cfg, pos2)  # (B, 1, H, dh)
+    k1, v1 = _kv_proj(p, x, cfg, pos2)
+    page_size = kv["k"].shape[2]
+    page_id = jnp.take_along_axis(
+        page_table, (positions // page_size)[:, None], axis=1)[:, 0]
+    slot = positions % page_size
+    kk, kse = KV.append_token(kv["k"], kv["k_se"],
+                              k1[:, 0].astype(jnp.float32), page_id, slot,
+                              kv_fmt)
+    vv, vse = KV.append_token(kv["v"], kv["v_se"],
+                              v1[:, 0].astype(jnp.float32), page_id, slot,
+                              kv_fmt)
+    attend = paged_attn_decode_reference if oracle else paged_attn_decode
+    o = attend(q[:, 0].astype(jnp.float32), kk, vv, kse, vse, page_table,
+               seq_lens, kv_fmt=kv_fmt, acc=acc)
+    o = o.reshape(b, 1, -1).astype(COMPUTE_DTYPE)
+    new_kv = {"k": kk, "v": vv, "k_se": kse, "v_se": vse}
+    return dense(o, p["wo"], cfg.quant.attn_out), new_kv
+
+
+def attn_prefill_paged(
+    p: Params,
+    x: jnp.ndarray,
+    kv: dict[str, jnp.ndarray],
+    page_ids: jnp.ndarray,
+    positions: jnp.ndarray,
+    cfg: ModelConfig,
+    dist: Dist,
+    *,
+    kv_fmt,
+    acc: tuple[int, int],
+    block_q: int | None = None,
+) -> tuple[jnp.ndarray, dict[str, jnp.ndarray]]:
+    """Causal prefill of ONE sequence through a layer, writing its K/V into
+    the paged arena and attending (flash kernel, page-size chunked carry)
+    to the exact quantized values the cache now holds — decode later sees
+    the same history prefill saw.  ``x`` (1, S, D); ``page_ids``
+    (n_pages,)."""
+    from repro.kernels.attention import flash_prefill
+    from repro.kernels.autotune import attn_blocks_for
+    from repro.serve import kvcache as KV
+
+    s = x.shape[1]
+    q = _q_proj(p, x, cfg, positions)  # (1, S, H, dh)
+    k, v = _kv_proj(p, x, cfg, positions)
+    kk, kse, kdq = KV.write_prompt(kv["k"], kv["k_se"],
+                                   k[0].astype(jnp.float32), page_ids, kv_fmt)
+    vv, vse, vdq = KV.write_prompt(kv["v"], kv["v_se"],
+                                   v[0].astype(jnp.float32), page_ids, kv_fmt)
+    page_size = kv["k"].shape[2]
+    if block_q is None:
+        block_q = attn_blocks_for(s, cfg.n_heads, cfg.head_dim, page_size,
+                                  e_acc=acc[0], m_acc=acc[1], kv_fmt=kv_fmt)
+    o = flash_prefill(q[0].astype(jnp.float32), kdq, vdq, acc=acc,
+                      chunk=page_size, block_q=block_q)
+    o = o.reshape(1, s, -1).astype(COMPUTE_DTYPE)
+    new_kv = {"k": kk, "v": vv, "k_se": kse, "v_se": vse}
+    return dense(o, p["wo"], cfg.quant.attn_out), new_kv
+
+
+# --------------------------------------------------------------------------
 # MLP (SwiGLU)
 # --------------------------------------------------------------------------
 
@@ -358,6 +456,46 @@ def moe_init(key, cfg: ModelConfig) -> Params:
     if mc.n_shared:
         p["shared"] = mlp_init(ks[4], cfg, d_ff=mc.n_shared * mc.d_ff_expert)
     return p
+
+
+def _moe_fused_enabled() -> bool:
+    """The MoE expert MLPs route through the fused Pallas GEMM by default
+    (ROADMAP "autotune coverage": the warmup pre-tunes their shapes under
+    bf16-labeled table keys, and this routing is what lets those entries
+    steer an actual schedule).  REPRO_MOE_FUSED=0 restores the plain XLA
+    einsum path."""
+    import os
+
+    return os.environ.get("REPRO_MOE_FUSED", "1") != "0"
+
+
+def _moe_expert_mlp_fused(h: jnp.ndarray, wl: jnp.ndarray, wu: jnp.ndarray,
+                          wd: jnp.ndarray) -> jnp.ndarray:
+    """The per-expert SwiGLU through ``qdot``'s fused kernel, one expert at
+    a time (E_loc is a static small count; the loop unrolls at trace time).
+
+    The GEMMs stay unquantized — wide accumulation, no representation
+    format — so values match the einsum path up to the bf16 operand
+    rounding both paths share; what changes is the executor: one
+    ``pallas_call`` per GEMM whose block decomposition comes from the
+    autotune table's bf16-keyed expert-shape entries (``table_dtype``),
+    with ``qdot``'s custom_vjp supplying the backward.
+    """
+    from repro.kernels.ops import QDotConfig, qdot
+
+    qcfg = QDotConfig(table_dtype="bf16")
+
+    def f32(w):  # same bf16 operand rounding as the einsum path
+        return w.astype(COMPUTE_DTYPE).astype(jnp.float32)
+
+    outs = []
+    for i in range(h.shape[0]):
+        hi = h[i].astype(jnp.float32)
+        g = qdot(hi, f32(wl[i]), qcfg).astype(COMPUTE_DTYPE)
+        u = qdot(hi, f32(wu[i]), qcfg).astype(COMPUTE_DTYPE)
+        a = (jax.nn.silu(g) * u).astype(jnp.float32)
+        outs.append(qdot(a, f32(wd[i]), qcfg).astype(COMPUTE_DTYPE))
+    return jnp.stack(outs)
 
 
 def _moe_local(
@@ -404,12 +542,15 @@ def _moe_local(
     h = buf[:-1].reshape(e_loc, cap, d)
 
     wl, wu, wd = p["w_gate"], p["w_up"], p["w_down"]  # local slices (E_loc,...)
-    g = jnp.einsum("ecd,edf->ecf", h, wl.astype(COMPUTE_DTYPE),
-                   preferred_element_type=jnp.float32).astype(COMPUTE_DTYPE)
-    u = jnp.einsum("ecd,edf->ecf", h, wu.astype(COMPUTE_DTYPE),
-                   preferred_element_type=jnp.float32).astype(COMPUTE_DTYPE)
-    o = jnp.einsum("ecf,efd->ecd", jax.nn.silu(g) * u, wd.astype(COMPUTE_DTYPE),
-                   preferred_element_type=jnp.float32).astype(COMPUTE_DTYPE)
+    if _moe_fused_enabled():
+        o = _moe_expert_mlp_fused(h, wl, wu, wd)
+    else:
+        g = jnp.einsum("ecd,edf->ecf", h, wl.astype(COMPUTE_DTYPE),
+                       preferred_element_type=jnp.float32).astype(COMPUTE_DTYPE)
+        u = jnp.einsum("ecd,edf->ecf", h, wu.astype(COMPUTE_DTYPE),
+                       preferred_element_type=jnp.float32).astype(COMPUTE_DTYPE)
+        o = jnp.einsum("ecf,efd->ecd", jax.nn.silu(g) * u, wd.astype(COMPUTE_DTYPE),
+                       preferred_element_type=jnp.float32).astype(COMPUTE_DTYPE)
 
     o_flat = jnp.concatenate([o.reshape(e_loc * cap, d),
                               jnp.zeros((1, d), COMPUTE_DTYPE)])

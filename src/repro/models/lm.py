@@ -355,3 +355,118 @@ def prefill(
     TB — serving only ever needs the sampling position)."""
     x, _ = forward_hidden(params, batch, cfg, dist, remat=False)
     return _unembed(params, x[:, -1:], cfg, dist)[:, 0]
+
+
+# --------------------------------------------------------------------------
+# paged serving path (repro.serve): packed-QTensor KV pages, flash kernels
+# --------------------------------------------------------------------------
+
+# families the paged serving path covers — the single source of truth the
+# launch driver routes on (ssm/hybrid/encdec keep the legacy static batch)
+PAGED_FAMILIES = ("dense", "moe", "vlm")
+
+
+def _check_paged(cfg: ModelConfig) -> None:
+    if cfg.family not in PAGED_FAMILIES:
+        raise ValueError(
+            f"paged serving covers uniform attention stacks {PAGED_FAMILIES}"
+            f"; family {cfg.family!r} keeps the legacy decode path (SSM "
+            "state is O(1) per sequence — paging buys nothing there)")
+
+
+def init_paged_state(cfg: ModelConfig, *, n_pages: int, page_size: int,
+                     kv_fmt=None) -> dict:
+    """The paged-KV arena for every attention layer (repro.serve.kvcache
+    layout; layer axis leading so the decode scan carries slices as xs)."""
+    from repro.serve.kvcache import PagedKVConfig, init_arena
+
+    _check_paged(cfg)
+    pc = PagedKVConfig.for_model(cfg, n_pages=n_pages, page_size=page_size,
+                                 kv_fmt=kv_fmt)
+    return init_arena(pc)
+
+
+def decode_step_paged(
+    params: Params,
+    tokens: jnp.ndarray,   # (B, 1) int32
+    kv_state: dict,        # arena pytree, leading layer axis
+    page_table: jnp.ndarray,  # (B, max_pages) int32
+    positions: jnp.ndarray,   # (B,) int32 — per-sequence write positions
+    seq_lens: jnp.ndarray,    # (B,) int32 — 0 for padded rows
+    cfg: ModelConfig,
+    dist: L.Dist = L.LOCAL,
+    *,
+    kv_fmt,
+    acc: tuple[int, int],
+    oracle: bool = False,
+) -> tuple[jnp.ndarray, dict]:
+    """One continuous-batching decode token per sequence through the paged
+    cache + flash-decode kernel.  Unlike ``decode_step``, every sequence
+    carries its OWN position (the whole point of continuous batching);
+    ``acc`` is the planner's carry format for the batch's context bucket.
+    ``oracle=True`` routes attention through the unfused jnp reference —
+    the logit-exactness oracle of the acceptance gate."""
+    _check_paged(cfg)
+    x = params["embed"][tokens].astype(L.COMPUTE_DTYPE)
+    x = L._constrain(x, dist, P(dist.data_axes, None, None))
+
+    def body(carry, inp):
+        lp, kvl = inp
+        h, nkv = L.attn_decode_paged(
+            lp["attn"], L.rms_norm(carry, lp["ln1"], cfg.norm_eps), kvl,
+            page_table, positions, seq_lens, cfg, dist,
+            kv_fmt=kv_fmt, acc=acc, oracle=oracle)
+        carry = carry + h
+        z = L.rms_norm(carry, lp["ln2"], cfg.norm_eps)
+        if cfg.moe is not None and "moe" in lp:
+            f, _ = L.moe_apply(lp["moe"], z, cfg, dist)
+        else:
+            f = L.mlp_apply(lp["mlp"], z, cfg)
+        return carry + f, nkv
+
+    x, new_kv = scan_util.scan(body, x, (params["layers"], kv_state))
+    logits = _unembed(params, x, cfg, dist)
+    return logits, new_kv
+
+
+def prefill_paged(
+    params: Params,
+    tokens: jnp.ndarray,    # (1, S) int32 — one sequence (admission unit)
+    kv_state: dict,
+    page_ids: jnp.ndarray,  # (n_pages,) int32 — this sequence's pages
+    cfg: ModelConfig,
+    dist: L.Dist = L.LOCAL,
+    *,
+    kv_fmt,
+    acc: tuple[int, int],
+    block_q: int | None = None,
+) -> tuple[jnp.ndarray, dict]:
+    """Prefill one admitted sequence: causal flash attention over the
+    prompt (page-size chunked carry) with each layer's K/V quantized into
+    its pages — decode continues from exactly the history prefill attended
+    to.  Returns (last-position logits (1, V), new arena)."""
+    _check_paged(cfg)
+    b, s = tokens.shape
+    if b != 1:
+        raise ValueError("prefill is per admitted sequence (B = 1)")
+    x = params["embed"][tokens].astype(L.COMPUTE_DTYPE)
+    x = L._constrain(x, dist, P(dist.data_axes, None, None))
+    positions = jnp.arange(s, dtype=jnp.int32)[None]
+
+    def body(carry, inp):
+        lp, kvl = inp
+        h, nkv = L.attn_prefill_paged(
+            lp["attn"], L.rms_norm(carry, lp["ln1"], cfg.norm_eps), kvl,
+            page_ids, positions, cfg, dist,
+            kv_fmt=kv_fmt, acc=acc, block_q=block_q)
+        carry = carry + h
+        z = L.rms_norm(carry, lp["ln2"], cfg.norm_eps)
+        if cfg.moe is not None and "moe" in lp:
+            f, _ = L.moe_apply(lp["moe"], z, cfg, dist)
+        else:
+            f = L.mlp_apply(lp["mlp"], z, cfg)
+        return carry + f, nkv
+
+    x, new_kv = scan_util.scan(body, x, (params["layers"], kv_state))
+    logits = _unembed(params, x[:, -1:], cfg, dist)[:, 0]
+    return logits, new_kv

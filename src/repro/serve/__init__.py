@@ -1,0 +1,7 @@
+# Quantized-accumulation serving subsystem: the paged QTensor KV-cache
+# (kvcache), the inference-side accumulator-width planner (plan), and the
+# continuous-batching scheduler (scheduler).  The serve-path attention
+# kernels live with the other Pallas kernels in repro.kernels.attention.
+from repro.serve.kvcache import PagedKVConfig, PagePool, init_arena  # noqa: F401
+from repro.serve.plan import AttnBucket, AttnPlan, plan_attention  # noqa: F401
+from repro.serve.scheduler import Request, ServeEngine  # noqa: F401

@@ -1,0 +1,284 @@
+"""Paged KV-cache whose pages are packed QTensor blocks.
+
+The serving memory bill is the KV-cache: at f32 carriers a cached token
+costs ``2 * KV * dh * 4`` bytes per layer, and a static per-sequence
+``max_t`` allocation strands most of it when sequences have wildly
+different lengths.  This module fixes both:
+
+* **Packed pages** — K/V values are stored as int8 ``(1, e, m)`` codes
+  (the ``repro.quant.qtensor`` layout, same codes the training pipeline
+  carries) plus ONE power-of-two scale exponent per (layer, page).  The
+  scale is an exponent offset: multiplying by 2^se only shifts the
+  exponent, so dequantization is exact on representable values and the
+  narrow format's exponent range is re-centered on the page's actual
+  magnitude without spending per-element bits.  4x fewer KV bytes than the
+  f32 carrier (2x vs bf16), and the decode kernel unpacks pages in VMEM —
+  no dequantized copy of the cache ever exists in HBM.
+* **Paging** — the arena is a fixed pool of ``page_size``-token pages
+  shared by all sequences; ``PagePool`` (host-side) hands out pages as
+  sequences grow and reclaims them on completion, so the HBM bill tracks
+  the tokens actually cached, not ``batch * max_t``.
+
+Layout (one arena per model; the layer axis leads so the per-layer scan
+in ``models.lm.decode_step_paged`` can carry arena slices as scan xs)::
+
+    k / v   : (L, P, KV, page_size, dh)  int8 codes
+    k_se/v_se: (L, P)                     int32 scale exponents
+
+Page 0 is the reserved **null page**: the pool never allocates it, padded
+page-table entries point at it, and padded batch rows write their (masked,
+never read) token there — so scatter writes need no predication.
+
+Scale discipline: a page's scale exponent is fixed by the FIRST write that
+touches it (``floor(log2(amax))`` of the written block) and later tokens in
+the page quantize under it (the quantizer saturates/flushes as usual).
+K/V magnitudes are post-norm and stable across a few dozen tokens, and the
+format's own exponent field absorbs the drift.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.quant.formats import FPFormat
+from repro.kernels.common import quantize_block
+from repro.quant.qtensor import pack_block, unpack_block
+
+__all__ = [
+    "PagedKVConfig",
+    "PagePool",
+    "init_arena",
+    "append_token",
+    "write_prompt",
+    "dequantize_pages",
+    "kv_bytes_per_token",
+]
+
+# scale exponents clipped well inside f32's range so exp2() stays finite
+_SE_LIM = 120
+
+
+@dataclass(frozen=True)
+class PagedKVConfig:
+    """Shapes + format of one paged arena."""
+
+    n_layers: int
+    n_kv_heads: int
+    head_dim: int
+    n_pages: int
+    page_size: int
+    kv_fmt: FPFormat = FPFormat(e=5, m=2)
+
+    def __post_init__(self):
+        if self.kv_fmt.bits > 8:
+            raise ValueError(f"kv_fmt {self.kv_fmt} does not fit int8 codes")
+        if self.n_pages < 2:
+            raise ValueError("need at least 2 pages (page 0 is reserved)")
+
+    @property
+    def tokens_capacity(self) -> int:
+        return (self.n_pages - 1) * self.page_size  # page 0 reserved
+
+    @classmethod
+    def for_model(cls, cfg, *, n_pages: int, page_size: int,
+                  kv_fmt: FPFormat | None = None,
+                  n_layers: int | None = None) -> "PagedKVConfig":
+        return cls(
+            n_layers=n_layers if n_layers is not None else cfg.n_layers,
+            n_kv_heads=cfg.n_kv_heads, head_dim=cfg.head_dim,
+            n_pages=n_pages, page_size=page_size,
+            kv_fmt=kv_fmt or FPFormat(e=5, m=2))
+
+
+def init_arena(pc: PagedKVConfig) -> dict[str, jnp.ndarray]:
+    """Zero-initialized arena pytree (int8 code 0 decodes to +0.0)."""
+    shape = (pc.n_layers, pc.n_pages, pc.n_kv_heads, pc.page_size,
+             pc.head_dim)
+    z = jnp.zeros(shape, jnp.int8)
+    se = jnp.zeros((pc.n_layers, pc.n_pages), jnp.int32)
+    return {"k": z, "v": z, "k_se": se, "v_se": se}
+
+
+def _scale_exp(amax: jnp.ndarray) -> jnp.ndarray:
+    """Per-page power-of-two scale exponent from a block's max magnitude."""
+    safe = jnp.where(amax > 0.0, amax, 1.0)
+    se = jnp.floor(jnp.log2(safe))
+    return jnp.clip(se, -_SE_LIM, _SE_LIM).astype(jnp.int32)
+
+
+def _encode(x: jnp.ndarray, se: jnp.ndarray, fmt: FPFormat) -> jnp.ndarray:
+    """Quantize ``x`` under the 2^se scale and pack to int8 codes; ``se``
+    broadcasts over the trailing axes of ``x``."""
+    scaled = x * jnp.exp2(-se.astype(jnp.float32))
+    return pack_block(quantize_block(scaled, fmt.e, fmt.m), fmt.e, fmt.m)
+
+
+def _decode(codes: jnp.ndarray, se: jnp.ndarray, fmt: FPFormat) -> jnp.ndarray:
+    return unpack_block(codes, fmt.e, fmt.m) * jnp.exp2(se.astype(jnp.float32))
+
+
+def append_token(arena_l: jnp.ndarray, se_l: jnp.ndarray, x: jnp.ndarray,
+                 page_id: jnp.ndarray, slot: jnp.ndarray,
+                 fmt: FPFormat) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Write one decode token per sequence into a layer's arena slice.
+
+    ``arena_l`` (P, KV, page_size, dh) int8, ``se_l`` (P,) int32,
+    ``x`` (B, KV, dh) f32 values, ``page_id``/``slot`` (B,) int32.  A write
+    at ``slot == 0`` is the page's first and fixes its scale exponent.
+    Padded batch rows must carry ``page_id == 0`` (the null page).
+    """
+    amax = jnp.max(jnp.abs(x), axis=(1, 2))  # (B,)
+    se = jnp.where(slot == 0, _scale_exp(amax), se_l[page_id])
+    se_l = se_l.at[page_id].set(se)
+    codes = _encode(x, se[:, None, None], fmt)  # (B, KV, dh)
+    arena_l = arena_l.at[page_id, :, slot].set(codes)
+    return arena_l, se_l
+
+
+def write_prompt(arena_l: jnp.ndarray, se_l: jnp.ndarray, x: jnp.ndarray,
+                 page_ids: jnp.ndarray, fmt: FPFormat,
+                 ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Write one sequence's prompt K (or V) into a layer's arena slice.
+
+    ``x`` (S, KV, dh) f32; ``page_ids`` (n_pages,) int32 with
+    ``n_pages * page_size >= S`` (the tail page is zero-padded; code 0
+    decodes to 0.0 and padded tokens are masked out of attention anyway).
+    Returns ``(arena_l, se_l, dequant)`` where ``dequant`` (S, KV, dh) is
+    the exact values the cache now holds — prefill attends to THESE, so
+    later paged decode sees the same history prefill saw.
+    """
+    s, kv, dh = x.shape
+    npg = page_ids.shape[0]
+    page_size = arena_l.shape[2]
+    xp = jnp.pad(x.astype(jnp.float32),
+                 ((0, npg * page_size - s), (0, 0), (0, 0)))
+    blocks = xp.reshape(npg, page_size, kv, dh).transpose(0, 2, 1, 3)
+    amax = jnp.max(jnp.abs(blocks), axis=(1, 2, 3))  # (npg,)
+    se = _scale_exp(amax)
+    codes = _encode(blocks, se[:, None, None, None], fmt)
+    arena_l = arena_l.at[page_ids].set(codes)
+    se_l = se_l.at[page_ids].set(se)
+    deq = _decode(codes, se[:, None, None, None], fmt)
+    deq = deq.transpose(0, 2, 1, 3).reshape(npg * page_size, kv, dh)[:s]
+    return arena_l, se_l, deq
+
+
+def dequantize_pages(arena_l: jnp.ndarray, se_l: jnp.ndarray,
+                     fmt: FPFormat) -> jnp.ndarray:
+    """Full f32 view of a layer's pages — the oracle / parity-mode carrier.
+    (P, KV, page_size, dh) f32; identical values to the kernel's in-VMEM
+    unpack."""
+    return _decode(arena_l, se_l[:, None, None, None], fmt)
+
+
+def kv_bytes_per_token(pc: PagedKVConfig, *, carrier_bytes: int = 1) -> float:
+    """Cache bytes per cached token across all layers: K + V payloads plus
+    the amortized per-page scale exponents.  ``carrier_bytes=4`` prices the
+    f32-carrier baseline (2 for bf16) for the compression ratio."""
+    per_layer = 2 * pc.n_kv_heads * pc.head_dim * carrier_bytes
+    if carrier_bytes == 1:  # packed: two int32 scale exponents per page
+        per_layer += 2 * 4 / pc.page_size
+    return pc.n_layers * per_layer
+
+
+# --------------------------------------------------------------------------
+# host-side page accounting
+# --------------------------------------------------------------------------
+
+
+class PagePool:
+    """Host-side allocator over the arena's page ids.
+
+    Invariants (pinned by the scheduler property tests): page 0 is never
+    handed out; a page is owned by at most one sequence; released pages
+    return to the free list — ``free + in-use == n_pages - 1`` always.
+    """
+
+    def __init__(self, n_pages: int, page_size: int):
+        if n_pages < 2:
+            raise ValueError("need at least 2 pages (page 0 is reserved)")
+        self.n_pages = n_pages
+        self.page_size = page_size
+        self._free: list[int] = list(range(n_pages - 1, 0, -1))
+        self._pages: dict[int, list[int]] = {}
+        self._lens: dict[int, int] = {}
+
+    # ------------------------------ queries --------------------------------
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    def pages_for(self, n_tokens: int) -> int:
+        return -(-max(n_tokens, 1) // self.page_size)
+
+    def can_admit(self, n_tokens: int) -> bool:
+        return self.free_pages >= self.pages_for(n_tokens)
+
+    def seq_len(self, sid: int) -> int:
+        return self._lens[sid]
+
+    def pages(self, sid: int) -> list[int]:
+        return list(self._pages[sid])
+
+    def can_extend(self, sid: int, n_new: int = 1) -> bool:
+        need = self.pages_for(self._lens[sid] + n_new) - len(self._pages[sid])
+        return need <= self.free_pages
+
+    # ------------------------------ mutation -------------------------------
+    def allocate(self, sid: int, n_tokens: int) -> list[int]:
+        """Claim pages for a new sequence of ``n_tokens`` cached tokens."""
+        if sid in self._pages:
+            raise ValueError(f"sequence {sid} already allocated")
+        need = self.pages_for(n_tokens)
+        if need > self.free_pages:
+            raise RuntimeError(
+                f"KV pool exhausted: need {need} pages, {self.free_pages} free")
+        got = [self._free.pop() for _ in range(need)]
+        self._pages[sid] = got
+        self._lens[sid] = n_tokens
+        return list(got)
+
+    def extend(self, sid: int, n_new: int = 1) -> list[int]:
+        """Grow a sequence by ``n_new`` tokens, claiming pages as the length
+        crosses page boundaries.  Returns the newly claimed page ids."""
+        new_len = self._lens[sid] + n_new
+        need = self.pages_for(new_len) - len(self._pages[sid])
+        if need > self.free_pages:
+            raise RuntimeError(
+                f"KV pool exhausted extending seq {sid}: need {need} pages")
+        got = [self._free.pop() for _ in range(need)]
+        self._pages[sid].extend(got)
+        self._lens[sid] = new_len
+        return got
+
+    def release(self, sid: int) -> None:
+        """Completion eviction: all of the sequence's pages return to the
+        free list."""
+        self._free.extend(reversed(self._pages.pop(sid)))
+        del self._lens[sid]
+
+    # ------------------------------ views ----------------------------------
+    def page_table(self, sids: list[int], width: int) -> np.ndarray:
+        """(len(sids), width) int32 page table, rows padded with the null
+        page 0 (masked out by seq_lens in the kernel)."""
+        out = np.zeros((len(sids), width), np.int32)
+        for i, sid in enumerate(sids):
+            pages = self._pages[sid]
+            if len(pages) > width:
+                raise ValueError(
+                    f"seq {sid} has {len(pages)} pages > table width {width}")
+            out[i, :len(pages)] = pages
+        return out
+
+    def check_invariants(self) -> None:
+        used = [p for pages in self._pages.values() for p in pages]
+        assert 0 not in used, "null page handed out"
+        assert 0 not in self._free, "null page on the free list"
+        assert len(set(used)) == len(used), "page owned twice"
+        assert len(used) + len(self._free) == self.n_pages - 1, "page leak"
+        for sid, pages in self._pages.items():
+            assert len(pages) == self.pages_for(self._lens[sid]), \
+                f"seq {sid}: {len(pages)} pages for {self._lens[sid]} tokens"

@@ -1,0 +1,148 @@
+"""Inference-side accumulator-width planner for serve-path attention.
+
+Training sizes accumulators once per GEMM role; serving cannot — the
+attention accumulation length IS the context length, and it grows with
+every decoded token.  This planner applies the paper's analysis to that
+moving target: context lengths are split into geometric buckets, and each
+bucket gets the narrowest ``(1, e_acc, m_acc)`` online-softmax carry format
+that passes BOTH
+
+* the paper's §4.4 knee test ``v(n2) < 50`` evaluated for the kernel's
+  actual semantics (ideal f32 accumulation within one ``page_size`` KV
+  block, quantized carry across the ``n2 = ceil(ctx / page_size)`` blocks
+  — the inter-chunk stage of Corollary 1, via
+  ``repro.telemetry.stats.predicted_kernel_vrr``), and
+* an overflow-avoidance bound on the softmax-weighted sum: the denominator
+  ``l`` is at most ``ctx`` (each exp'd score <= 1 after the running-max
+  shift) and ``|o| <= l * v_max``, so the accumulator's exponent range must
+  represent ``ctx * v_hint`` where ``v_hint`` bounds the dequantized KV
+  magnitude (Colbert et al. 2023's guaranteed-overflow-avoidance posture,
+  applied to the exponent field instead of extra mantissa).
+
+The widths are static per bucket (the decode kernel is jitted per bucket);
+``ServeEngine`` re-buckets a sequence whose context crosses a bucket edge,
+and the serve-time swamping monitor (``scheduler.measure_decode_vrr``)
+bumps a bucket whose MEASURED swamp rate (or whose closed-form knee test
+at the grown context) breaches — the same flag-and-widen posture as the
+training-side closed loop (``repro.telemetry.controller``), minus the
+trim direction (serving never narrows below the solver bound mid-flight).
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, replace
+
+from repro.core.vrr import CUTOFF_LOG_V
+from repro.quant.formats import FPFormat
+from repro.telemetry.stats import predicted_kernel_vrr
+
+__all__ = [
+    "AttnBucket",
+    "AttnPlan",
+    "decode_m_acc",
+    "min_e_acc",
+    "plan_attention",
+]
+
+# the f32 VMEM carry is the emulation ceiling, same constant as the
+# training-side AccumulationPolicy.M_ACC_CARRIER
+_M_ACC_MAX = 23
+
+
+@dataclass(frozen=True)
+class AttnBucket:
+    """One context-length bucket: contexts up to ``max_ctx`` run the
+    decode/prefill kernels with the (1, ``e_acc``, ``m_acc``) carry."""
+
+    max_ctx: int
+    e_acc: int
+    m_acc: int
+
+    @property
+    def acc(self) -> tuple[int, int]:
+        return (self.e_acc, self.m_acc)
+
+    def max_pages(self, page_size: int) -> int:
+        return -(-self.max_ctx // page_size)
+
+
+@dataclass(frozen=True)
+class AttnPlan:
+    """Bucketed accumulator widths for the serve-path attention kernels."""
+
+    page_size: int
+    m_p: int
+    buckets: tuple[AttnBucket, ...]
+
+    def bucket_for(self, ctx: int) -> tuple[int, AttnBucket]:
+        """(index, bucket) of the narrowest bucket covering ``ctx``."""
+        for i, b in enumerate(self.buckets):
+            if ctx <= b.max_ctx:
+                return i, b
+        raise ValueError(
+            f"context {ctx} exceeds the plan's {self.buckets[-1].max_ctx}")
+
+    def bumped(self, index: int) -> "AttnPlan":
+        """One-bit m_acc bump of bucket ``index`` (and any wider bucket now
+        narrower than it — widths stay monotone in context length).  The
+        serve-time monitor's re-bucket action."""
+        bs = list(self.buckets)
+        m = min(bs[index].m_acc + 1, _M_ACC_MAX)
+        for i in range(index, len(bs)):
+            if bs[i].m_acc < m:
+                bs[i] = replace(bs[i], m_acc=m)
+        return replace(self, buckets=tuple(bs))
+
+
+def decode_m_acc(ctx: int, page_size: int, m_p: int, *,
+                 cutoff: float = CUTOFF_LOG_V) -> int:
+    """Narrowest carry mantissa passing the knee test for a ``ctx``-token
+    context at chunk length ``page_size`` — the kernels' actual semantics
+    (ideal intra-block, quantized inter-block carry)."""
+    n2 = max(-(-ctx // page_size), 1)
+    if n2 <= 1:
+        return m_p  # a single block never rounds the carry mid-sum
+    for m in range(m_p, _M_ACC_MAX + 1):
+        v = n2 * (1.0 - predicted_kernel_vrr(m, m_p, page_size, n2))
+        if v < cutoff:
+            return m
+    return _M_ACC_MAX
+
+
+def min_e_acc(ctx: int, *, v_hint: float = 16.0, e_min: int = 6) -> int:
+    """Smallest exponent width whose saturating range covers the
+    softmax-weighted sum's worst case ``ctx * v_hint`` (overflow
+    avoidance; the paper's §4 'sufficient exponent precision' made
+    explicit for the serving accumulation)."""
+    need = math.log2(max(ctx, 1) * max(v_hint, 1.0))
+    for e in range(e_min, 9):
+        if FPFormat(e=e, m=1).max_exp >= need:
+            return e
+    return 8
+
+
+def plan_attention(max_context: int, page_size: int, *, m_p: int = 5,
+                   growth: int = 4, v_hint: float = 16.0,
+                   e_min: int = 6) -> AttnPlan:
+    """Bucketed plan covering contexts up to ``max_context``.
+
+    Bucket edges grow geometrically (``growth``x in pages) from one page;
+    VRR is ~4x of length per mantissa bit at the knee, so finer buckets
+    would not change the assigned widths.  ``m_p`` is the product mantissa
+    width of the softmax-weighted addends — default 5, the paper's
+    convention for two (1,5,2) factors (the KV codes are (1,5,2); the
+    probabilities are wider, so 5 is the conservative floor).
+    """
+    edges: list[int] = []
+    ctx = page_size
+    while ctx < max_context:
+        edges.append(ctx)
+        ctx *= growth
+    edges.append(max(max_context, page_size))
+    buckets = tuple(
+        AttnBucket(max_ctx=c,
+                   e_acc=min_e_acc(c, v_hint=v_hint, e_min=e_min),
+                   m_acc=decode_m_acc(c, page_size, m_p))
+        for c in edges)
+    return AttnPlan(page_size=page_size, m_p=m_p, buckets=buckets)

@@ -1,0 +1,356 @@
+"""Continuous-batching scheduler over the paged QTensor KV-cache.
+
+The static-batch serving loop (prefill a fixed batch, decode everyone to
+the same horizon) wastes both axes: compute on sequences that finished
+early, and KV memory sized for the longest request.  ``ServeEngine``
+replaces it with the standard continuous-batching shape:
+
+* **admission** — pending requests enter whenever the page pool (minus the
+  pages active sequences are still entitled to claim) can hold them at
+  their full final length — reservation admission, so page pressure can
+  delay a sequence but never deadlock one mid-decode; one prefill per
+  engine step keeps the running batch's decode latency bounded;
+* **prefill / decode interleave** — each ``step()`` optionally prefills
+  one admitted sequence (flash-prefill kernel, K/V quantized into its
+  pages) and then decodes ONE token for every active sequence in a single
+  batched call of the paged flash-decode kernel — sequences at wildly
+  different positions share the batch because every row carries its own
+  position, page-table row and length;
+* **eviction on completion** — a sequence hitting its token budget (or the
+  optional EOS id) releases its pages back to the pool immediately, which
+  is what lets the next pending request in.
+
+Accumulator widths come from the inference-side planner
+(``repro.serve.plan``): each decode batch runs at the context bucket of
+its LONGEST member (VRR is monotone in m_acc, so the shorter members are
+strictly safe), and crossing a bucket edge re-jits at the wider format.
+
+Serve-time VRR monitoring (``monitor_cadence``): every N decode steps the
+longest context is probed with the stats variant of the decode kernel
+(``collect_stats=True`` — the same ``EnsembleStats`` machinery as the
+training-side telemetry).  The breach predicate is two-sided, because the
+softmax-weighted ensemble is small and its carry-rounding NOISE can
+inflate the measured variance ratio past 1 (the knee test's ``v = n2 (1 -
+VRR)`` only sees deflation): (1) the MEASURED swamp rate — the fraction
+of carry adds fully absorbed, the paper's swamping event counted directly
+in-kernel — crossing ``swamp_threshold``, or (2) the closed-form knee
+test failing at the context's ACTUAL grown length (the planner certified
+the bucket edge, not the context the sequence has since reached).  Either
+flags the bucket and re-buckets it one mantissa bit wider instead of
+letting the context swamp silently.  Events append to ``self.events``
+(and the JSONL log when given) in the training controller's schema
+dialect.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from collections import deque
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.vrr import CUTOFF_LOG_V
+from repro.models import lm
+from repro.models.layers import LOCAL, Dist
+from repro.quant.formats import FPFormat
+from repro.serve.kvcache import PagedKVConfig, PagePool, init_arena
+from repro.serve.plan import AttnPlan, plan_attention
+from repro.telemetry.stats import EnsembleStats
+
+__all__ = ["Request", "ServeEngine", "measure_decode_vrr"]
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: list[int]
+    max_new: int
+
+
+@dataclass
+class _Seq:
+    rid: int
+    tokens: list[int]          # prompt + generated
+    prompt_len: int
+    max_new: int
+    generated: list[int] = field(default_factory=list)
+
+    @property
+    def pos(self) -> int:
+        """Write position of the NEXT token's KV (= tokens cached so far)."""
+        return len(self.tokens) - 1  # the last token's KV is not cached yet
+
+    @property
+    def done(self) -> bool:
+        return len(self.generated) >= self.max_new
+
+
+def measure_decode_vrr(kv_state, page_row: np.ndarray,
+                       seq_len: int, *, cfg, kv_fmt: FPFormat,
+                       acc: tuple[int, int], key) -> EnsembleStats:
+    """Probe one context's decode-attention accumulator: a unit-Gaussian
+    query (the telemetry probe's synthetic fallback posture —
+    ``repro.telemetry.probe``) against the sequence's REAL layer-0 KV
+    pages, through the stats variant of the decode kernel.  Returns the
+    merged ``EnsembleStats`` window for the knee test."""
+    from repro.kernels.attention import paged_attn_decode
+
+    q = jax.random.normal(key, (1, cfg.n_heads, cfg.head_dim), jnp.float32)
+    _, raw = paged_attn_decode(
+        q, kv_state["k"][0], kv_state["v"][0],
+        kv_state["k_se"][0], kv_state["v_se"][0],
+        jnp.asarray(page_row[None]), jnp.asarray([seq_len], jnp.int32),
+        kv_fmt=kv_fmt, acc=acc, collect_stats=True)
+    return EnsembleStats.from_raw(np.asarray(raw))
+
+
+class ServeEngine:
+    """Continuous-batching serving over one model's paged KV arena."""
+
+    def __init__(
+        self,
+        model,
+        params,
+        *,
+        n_pages: int,
+        page_size: int,
+        kv_fmt: FPFormat | None = None,
+        plan: AttnPlan | None = None,
+        max_batch: int = 8,
+        eos_id: int | None = None,
+        monitor_cadence: int = 0,
+        monitor_log: str | None = None,
+        swamp_threshold: float = 0.15,
+        oracle: bool = False,
+        dist: Dist = LOCAL,
+        seed: int = 0,
+    ):
+        self.model = model
+        self.cfg = model.cfg
+        self.params = params
+        self.dist = dist
+        self.kv_fmt = kv_fmt or FPFormat(e=5, m=2)
+        self.pc = PagedKVConfig.for_model(
+            self.cfg, n_pages=n_pages, page_size=page_size, kv_fmt=self.kv_fmt)
+        self.pool = PagePool(n_pages, page_size)
+        self.kv = init_arena(self.pc)
+        self.plan = plan or plan_attention(
+            self.pc.tokens_capacity, page_size)
+        self.max_batch = max_batch
+        self.eos_id = eos_id
+        self.monitor_cadence = monitor_cadence
+        self.monitor_log = monitor_log
+        self.swamp_threshold = swamp_threshold
+        self.oracle = oracle
+        self._key = jax.random.PRNGKey(seed)
+
+        self.pending: deque[Request] = deque()
+        self.active: dict[int, _Seq] = {}
+        self.finished: dict[int, list[int]] = {}
+        self.events: list[dict] = []
+        self._next_rid = 0
+        self._final_pages: dict[int, int] = {}
+        self._decode_steps = 0
+        self.decoded_tokens = 0
+        self.max_concurrent = 0
+        self._jit_cache: dict = {}
+
+    # ------------------------------ intake ---------------------------------
+    def submit(self, prompt: list[int], max_new: int) -> int:
+        rid = self._next_rid
+        self._next_rid += 1
+        self.pending.append(Request(rid, list(prompt), max_new))
+        return rid
+
+    # ------------------------------ jit fns --------------------------------
+    def _decode_fn(self, acc: tuple[int, int]):
+        key = ("decode", acc, self.oracle)
+        if key not in self._jit_cache:
+            import functools
+
+            self._jit_cache[key] = jax.jit(functools.partial(
+                lm.decode_step_paged, cfg=self.cfg, dist=self.dist,
+                kv_fmt=self.kv_fmt, acc=acc, oracle=self.oracle))
+        return self._jit_cache[key]
+
+    def _prefill_fn(self, acc: tuple[int, int]):
+        key = ("prefill", acc)
+        if key not in self._jit_cache:
+            import functools
+
+            self._jit_cache[key] = jax.jit(functools.partial(
+                lm.prefill_paged, cfg=self.cfg, dist=self.dist,
+                kv_fmt=self.kv_fmt, acc=acc))
+        return self._jit_cache[key]
+
+    # ------------------------------ stepping -------------------------------
+    def _admit_one(self) -> int | None:
+        """Prefill at most one pending request (if pages + a batch slot are
+        available).  Returns the admitted rid or None."""
+        if not self.pending or len(self.active) >= self.max_batch:
+            return None
+        req = self.pending[0]
+        # reservation admission: admit only when the free pool minus every
+        # active sequence's OUTSTANDING reservation (pages it is entitled
+        # to claim before finishing) covers this sequence at its full final
+        # length.  Admitting on raw free pages can deadlock — two sequences
+        # each holding half the pool, both needing one more page to ever
+        # finish — and this engine has no preemption/swap path to break
+        # such a tie.  The price is conservatism for early (EOS) stops.
+        need = self.pool.pages_for(len(req.prompt) + req.max_new)
+        if self.pool.free_pages - self._reserved_outstanding() < need:
+            return None
+        self.pending.popleft()
+        self._final_pages[req.rid] = need
+        pages = self.pool.allocate(req.rid, len(req.prompt))
+        _, bucket = self.plan.bucket_for(len(req.prompt))
+        logits, self.kv = self._prefill_fn(bucket.acc)(
+            self.params, jnp.asarray([req.prompt], jnp.int32), self.kv,
+            jnp.asarray(pages, jnp.int32))
+        tok = int(jnp.argmax(logits[0]))
+        seq = _Seq(rid=req.rid, tokens=list(req.prompt) + [tok],
+                   prompt_len=len(req.prompt), max_new=req.max_new,
+                   generated=[tok])
+        self.active[req.rid] = seq
+        self._maybe_finish(seq)
+        return req.rid
+
+    def _reserved_outstanding(self) -> int:
+        """Pages active sequences are still entitled to claim.  Held pages
+        only convert reservations 1:1, so ``free >= reserved`` is invariant
+        — every admitted sequence can always run to its final length."""
+        return sum(max(self._final_pages[sid] - len(self.pool.pages(sid)), 0)
+                   for sid in self.active)
+
+    def _decode_batch(self) -> list[int]:
+        """One decode token for every active sequence that can grow."""
+        batch = []
+        for seq in self.active.values():
+            if self.pool.can_extend(seq.rid):
+                self.pool.extend(seq.rid)
+                batch.append(seq)
+            # else: unreachable under reservation admission; defensive skip
+        if not batch:
+            return []
+        bucket_i, bucket = self.plan.bucket_for(
+            max(self.pool.seq_len(s.rid) for s in batch))
+        width = bucket.max_pages(self.pc.page_size)
+        # pad to max_batch so the jitted decode step keeps ONE shape per
+        # (bucket, acc) as the active set breathes: padded rows are exact
+        # no-ops (seq_len 0, null-page table row, write to page 0)
+        pt = np.zeros((self.max_batch, width), np.int32)
+        pt[:len(batch)] = self.pool.page_table([s.rid for s in batch], width)
+        tokens = np.zeros((self.max_batch, 1), np.int32)
+        tokens[:len(batch), 0] = [s.tokens[-1] for s in batch]
+        positions = np.zeros((self.max_batch,), np.int32)
+        positions[:len(batch)] = [s.pos for s in batch]
+        seq_lens = np.zeros((self.max_batch,), np.int32)
+        seq_lens[:len(batch)] = positions[:len(batch)] + 1
+        logits, self.kv = self._decode_fn(bucket.acc)(
+            self.params, jnp.asarray(tokens), self.kv, jnp.asarray(pt),
+            jnp.asarray(positions), jnp.asarray(seq_lens))
+        next_toks = np.asarray(jnp.argmax(logits[:len(batch), 0], axis=-1))
+        finished = []
+        for seq, tok in zip(batch, next_toks):
+            seq.tokens.append(int(tok))
+            seq.generated.append(int(tok))
+            self.decoded_tokens += 1
+            if self._maybe_finish(seq):
+                finished.append(seq.rid)
+        self._decode_steps += 1
+        if self.monitor_cadence and self._decode_steps % self.monitor_cadence == 0:
+            self._monitor(bucket_i, bucket)
+        return finished
+
+    def _maybe_finish(self, seq: _Seq) -> bool:
+        if seq.done or (self.eos_id is not None
+                        and seq.generated and seq.generated[-1] == self.eos_id):
+            self.finished[seq.rid] = list(seq.generated)
+            self.pool.release(seq.rid)
+            del self.active[seq.rid]
+            self._final_pages.pop(seq.rid, None)
+            return True
+        return False
+
+    def step(self) -> dict:
+        """One engine tick: <=1 admission prefill + one batched decode."""
+        admitted = self._admit_one()
+        self.max_concurrent = max(self.max_concurrent, len(self.active))
+        finished = self._decode_batch() if self.active else []
+        return {"admitted": admitted, "finished": finished,
+                "active": len(self.active), "pending": len(self.pending),
+                "free_pages": self.pool.free_pages}
+
+    def run(self, max_steps: int = 100_000) -> dict[int, list[int]]:
+        """Drive to completion; returns {rid: generated tokens}."""
+        for _ in range(max_steps):
+            if not self.pending and not self.active:
+                break
+            self.step()
+        else:
+            raise RuntimeError("serve loop did not drain (pool too small "
+                               "for the pending prompts?)")
+        return dict(self.finished)
+
+    # ------------------------------ monitor --------------------------------
+    def _monitor(self, bucket_i: int, bucket) -> None:
+        """Swamping probe on the longest active context; a breach (measured
+        swamp rate or the closed-form knee test at the grown length — see
+        module docstring) re-buckets rather than letting the context
+        swamp."""
+        from repro.telemetry.stats import predicted_kernel_vrr
+
+        if not self.active:
+            return
+        sid = max(self.active, key=lambda r: self.pool.seq_len(r))
+        ctx = self.pool.seq_len(sid)
+        width = bucket.max_pages(self.pc.page_size)
+        self._key, sub = jax.random.split(self._key)
+        stats = measure_decode_vrr(
+            self.kv, self.pool.page_table([sid], width)[0], ctx,
+            cfg=self.cfg, kv_fmt=self.kv_fmt, acc=bucket.acc, key=sub)
+        n2 = -(-ctx // self.pc.page_size)
+        swamp = float(stats.swamp_rate)
+        v_pred = n2 * (1.0 - predicted_kernel_vrr(
+            bucket.m_acc, self.plan.m_p, self.pc.page_size, n2))
+        breach_m = swamp >= self.swamp_threshold
+        breach_p = v_pred >= CUTOFF_LOG_V
+        breach = breach_m or breach_p
+        if breach:
+            self.plan = self.plan.bumped(bucket_i)
+        # the realized width after the (carrier-clamped) bump — at the
+        # m_acc ceiling a breach is a saturated no-op, and the log says so
+        m_now = self.plan.buckets[bucket_i].m_acc
+        event = {
+            "step": self._decode_steps,
+            "event": ("rebucket" if breach and m_now > bucket.m_acc
+                      else "saturated" if breach else "ok"),
+            "source": ("both" if breach_m and breach_p
+                       else "measured" if breach_m
+                       else "predicted" if breach_p else None),
+            "gemm": "attn_decode", "role": "serve",
+            "bucket": bucket_i, "ctx": ctx, "n1": self.pc.page_size, "n2": n2,
+            "m_acc": m_now,
+            "measured_vrr": round(float(stats.measured_vrr), 6),
+            "log_v": round(float(stats.measured_log_v(n2)), 4),
+            "log_v_pred": round(float(v_pred), 4),
+            "cutoff": round(CUTOFF_LOG_V, 4),
+            "swamp_rate": round(swamp, 6),
+            "swamp_threshold": self.swamp_threshold,
+        }
+        self.events.append(event)
+        if self.monitor_log:
+            d = os.path.dirname(os.path.abspath(self.monitor_log))
+            os.makedirs(d, exist_ok=True)
+            with open(self.monitor_log, "a") as f:
+                f.write(json.dumps(event) + "\n")
+
+    # ------------------------------ accounting -----------------------------
+    def kv_bytes_per_token(self, *, carrier_bytes: int = 1) -> float:
+        from repro.serve.kvcache import kv_bytes_per_token
+
+        return kv_bytes_per_token(self.pc, carrier_bytes=carrier_bytes)

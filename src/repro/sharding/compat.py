@@ -4,13 +4,26 @@ The codebase targets the modern ``jax.shard_map`` entry point (with its
 ``check_vma`` flag); older jax releases (< 0.5) only ship
 ``jax.experimental.shard_map.shard_map`` whose equivalent flag is spelled
 ``check_rep``.  ``shard_map`` below presents the modern signature on both.
+
+The legacy branch is explicitly gated on the running jax version: it is
+unreachable on jax >= 0.5, and ``tests/test_shims.py`` fails (naming this
+module and ``launch.dryrun._memory``) as soon as the project's jax floor
+in pyproject.toml passes 0.5 — the reminder to delete both shims (ROADMAP
+"jax API drift").
 """
 
 from __future__ import annotations
 
 import jax
 
-__all__ = ["shard_map"]
+__all__ = ["shard_map", "JAX_VERSION", "LEGACY_SHIMS_NEEDED"]
+
+JAX_VERSION: tuple[int, int] = tuple(
+    int(p) for p in jax.__version__.split(".")[:2])
+
+# the one predicate both shims (this module's shard_map fallback and
+# launch.dryrun._memory's peak-memory synthesis) key their legacy paths on
+LEGACY_SHIMS_NEEDED: bool = JAX_VERSION < (0, 5)
 
 
 def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool | None = None):
@@ -19,6 +32,11 @@ def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool | None = None):
         return jax.shard_map(
             f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw
         )
+    if not LEGACY_SHIMS_NEEDED:  # pragma: no cover - unreachable by design
+        raise RuntimeError(
+            f"jax {jax.__version__} lacks jax.shard_map but is >= 0.5; the "
+            "experimental fallback below was written for the < 0.5 API and "
+            "should have been deleted (ROADMAP 'jax API drift')")
     from jax.experimental.shard_map import shard_map as _shard_map
 
     kw = {} if check_vma is None else {"check_rep": check_vma}

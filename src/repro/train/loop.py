@@ -68,9 +68,11 @@ def warmup_gemm_autotune(
 
     Coverage: every dense-layer qdot variant (FWD train/eval, the one-pass
     backward pair — N-split segment shapes when the layer takes that path —
-    or the two-GEMM VMEM fallback) plus the non-qdot hot-path GEMMs: MoE
-    expert einsums and the chunked SSD scan contractions (both bf16-keyed;
-    ROADMAP "autotune coverage").
+    or the two-GEMM VMEM fallback); the MoE expert MLP shapes under their
+    bf16 table keys, forward AND backward-pair variants, exactly the
+    kernels ``layers._moe_expert_mlp_fused`` routes through qdot; and the
+    chunked SSD scan contractions (bf16-keyed, still awaiting a fused SSD
+    kernel — ROADMAP "autotune coverage").
     """
     from repro.kernels import autotune
     from repro.kernels.ops import qdot_gemm_variants
@@ -102,12 +104,28 @@ def warmup_gemm_autotune(
                     kw.pop("m"), kw.pop("k"), kw.pop("n"), **kw,
                     table=table, persist=False, reps=reps, verbose=verbose,
                 )
-    for tag, m, k, n in (
-        moe_expert_gemm_shapes(model.cfg, seq_len=seq_len,
-                               global_batch=mb_batch)
-        + ssm_scan_gemm_shapes(model.cfg, seq_len=seq_len,
-                               global_batch=mb_batch)
-    ):
+    # MoE expert MLPs route through qdot with table_dtype="bf16"
+    # (layers._moe_expert_mlp_fused): warm the SAME variants that routing
+    # traces — forward GEMM and the backward pair — under bf16 keys
+    from repro.kernels.ops import QDotConfig
+
+    moe_qcfg = QDotConfig(table_dtype="bf16")
+    for tag, m, k, n in moe_expert_gemm_shapes(
+            model.cfg, seq_len=seq_len, global_batch=mb_batch):
+        for role, kw in qdot_gemm_variants(moe_qcfg, m, k, n).items():
+            kind = kw.pop("kernel")
+            if kind == "bwd_pair":
+                results[f"{tag}:{role}"] = autotune.autotune_bwd_pair(
+                    kw.pop("t"), kw.pop("k"), kw.pop("n"), **kw,
+                    table=table, persist=False, reps=reps, verbose=verbose,
+                )
+            else:
+                results[f"{tag}:{role}"] = autotune.autotune_qmatmul(
+                    kw.pop("m"), kw.pop("k"), kw.pop("n"), **kw,
+                    table=table, persist=False, reps=reps, verbose=verbose,
+                )
+    for tag, m, k, n in ssm_scan_gemm_shapes(model.cfg, seq_len=seq_len,
+                                             global_batch=mb_batch):
         results[tag] = autotune.autotune_qmatmul(
             m, k, n, dtype="bf16",
             table=table, persist=False, reps=reps, verbose=verbose,
