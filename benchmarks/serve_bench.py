@@ -9,8 +9,18 @@ logit-exactness of the kernel path against the unfused f32-KV oracle, and
 the continuous-batching demo itself (>= 3 concurrently admitted sequences
 of different lengths through one arena).
 
+The scheduler side is measured by the **bursty-arrival utilization
+scenario**: the same seeded virtual-clock traces (``repro.serve.sim``)
+replayed against the chunked-prefill + optimistic-admission + preemption
+engine and against the one-prefill-per-step worst-case-reservation
+baseline.  CI gates utilization (decoded tokens per decode-batch slot) of
+the new scheduler >= the baseline, that the traces actually forced
+preemptions/swaps, and that the scheduler change left KV bytes/token
+untouched.
+
 Writes ``BENCH_serve.json``; CI gates on the compression ratio, the pass
-count, logit exactness and the concurrency of the demo run.
+count, logit exactness, the concurrency of the demo run and the bursty
+utilization comparison.
 """
 
 from __future__ import annotations
@@ -28,11 +38,18 @@ from repro.kernels.common import count_pallas_executions
 from repro.models import lm
 from repro.models.api import get_model
 from repro.serve.scheduler import ServeEngine
+from repro.serve.sim import bursty_utilization_comparison
 
 PAGE_SIZE = 8
 N_PAGES = 40
 PROMPT_LENS = (6, 13, 21)
 GEN = 8
+PREFILL_CHUNK = PAGE_SIZE  # demo engine runs chunked prefill
+
+# realized KV bytes/token of the pre-chunking engine at THIS bench config
+# (2-layer smoke, page 8): K+V int8 payloads + amortized per-page scale
+# exponents.  The scheduler PR must not move it.
+KV_BYTES_PER_TOKEN_BASELINE = 130.0
 
 
 def _passes_per_decode_step(model, params, eng) -> int:
@@ -81,7 +98,8 @@ def run(json_path: str = "BENCH_serve.json") -> dict:
     params = model.init_params(jax.random.PRNGKey(0))
 
     eng = ServeEngine(model, params, n_pages=N_PAGES, page_size=PAGE_SIZE,
-                      max_batch=4, monitor_cadence=5)
+                      max_batch=4, monitor_cadence=5,
+                      prefill_chunk_tokens=PREFILL_CHUNK)
     rng = np.random.RandomState(1)
     rids = [eng.submit(list(rng.randint(0, cfg.vocab_size, n)), GEN)
             for n in PROMPT_LENS]
@@ -95,6 +113,15 @@ def run(json_path: str = "BENCH_serve.json") -> dict:
     bf16 = eng.kv_bytes_per_token(carrier_bytes=2)
     passes = _passes_per_decode_step(model, params, eng)
     exact = _logit_exact(model, params, eng)
+    # the pinned virtual-clock comparison vs the reservation baseline —
+    # scenario and aggregation shared with tests/test_serve_sim.py
+    bursty = bursty_utilization_comparison()
+    # the scheduler work must leave the cache geometry alone: the realized
+    # bytes/token must still equal the pre-chunking (PR 4) value for this
+    # exact bench config — a scheduler change that smuggled in per-sequence
+    # metadata, a different scale layout or swap-time repacking would move
+    # this number (swap blobs are transient HOST memory and don't count)
+    kv_unchanged = abs(packed - KV_BYTES_PER_TOKEN_BASELINE) < 1e-6
 
     out = {
         "arch": cfg.name,
@@ -102,6 +129,11 @@ def run(json_path: str = "BENCH_serve.json") -> dict:
         "gen": GEN,
         "page_size": PAGE_SIZE,
         "n_pages": N_PAGES,
+        "prefill_chunk_tokens": PREFILL_CHUNK,
+        "prefill_slabs": eng.prefill_slabs,
+        "preemptions_demo": eng.preemptions,
+        "bursty": bursty,
+        "kv_bytes_unchanged_by_scheduler": kv_unchanged,
         "decode_tokens": eng.decoded_tokens,
         "tokens_per_s": round(eng.decoded_tokens / dt, 2),
         "max_concurrent": eng.max_concurrent,
@@ -126,8 +158,12 @@ def run(json_path: str = "BENCH_serve.json") -> dict:
               "pallas_passes_per_decoded_token",
               "kv_bytes_per_token_packed", "kv_bytes_per_token_f32",
               "kv_compression_vs_f32", "kv_compression_vs_bf16",
-              "logit_exact_vs_f32_oracle"):
+              "logit_exact_vs_f32_oracle", "prefill_slabs",
+              "kv_bytes_unchanged_by_scheduler"):
         print(f"  {k:34s} {out[k]}")
+    print("### bursty-arrival scheduler comparison (virtual clock)")
+    for k, v in bursty.items():
+        print(f"  {k:34s} {v}")
 
     if json_path:
         with open(json_path, "w") as f:

@@ -6,7 +6,18 @@ it is where the paper's variance-retention analysis pays the largest
 inference dividend.  Two kernels cover the serve path:
 
 * ``flash_prefill`` — causal online-softmax attention over a prompt
-  (one sequence), KV visited in ``chunk``-length blocks.
+  (one sequence), KV visited in ``chunk``-length blocks.  It is
+  **resumable**: ``carry=(o, m, l)`` feeds a previous call's online-softmax
+  state back in and ``return_carry=True`` hands the raw state out instead of
+  the finalized output, while ``q_offset``/``kv_offset`` place the query and
+  KV slabs on the absolute token axis.  Because the running max lives on the
+  integer base-2 lattice and the o/l carries are already rounded to the
+  accumulator format after every block, the carry round-trips through HBM
+  exactly — splitting the KV walk at any block boundary and resuming is
+  bit-identical to the one-shot walk.  Chunked prefill
+  (``repro.serve.scheduler``) leans on this: each ``prefill_chunk_tokens``
+  query slab attends its page-aligned KV history with a carry-out call and
+  folds its own causal slab with a carry-in call.
 * ``paged_attn_decode`` — single-token decode against the paged QTensor
   KV-cache (``repro.serve.kvcache``): the page table and per-page scale
   exponents ride in as scalar-prefetch operands, each grid step DMAs one
@@ -135,31 +146,45 @@ def _finalize(o, l):
 # --------------------------------------------------------------------------
 
 
-def _prefill_kernel(q_ref, k_ref, v_ref, o_ref, oacc, mx, lx, *,
-                    s_true: int, block_q: int, chunk: int, e_acc: int,
-                    m_acc: int, scale: float):
+def _prefill_kernel(*refs, sk_true: int, block_q: int, chunk: int,
+                    e_acc: int, m_acc: int, scale: float, q_offset: int,
+                    kv_offset: int, has_carry: bool, emit_carry: bool):
+    n_in = 6 if has_carry else 3
+    q_ref, k_ref, v_ref = refs[:3]
+    out_refs = refs[n_in:n_in + (3 if emit_carry else 1)]
+    oacc, mx, lx = refs[n_in + (3 if emit_carry else 1):]
     qi, kk = pl.program_id(1), pl.program_id(2)
 
     @pl.when(kk == 0)
     def _init():
-        oacc[...] = jnp.zeros_like(oacc)
-        mx[...] = jnp.full_like(mx, NEG)
-        lx[...] = jnp.zeros_like(lx)
+        if has_carry:
+            co_ref, cm_ref, cl_ref = refs[3:6]
+            oacc[...] = co_ref[0]
+            mx[...] = cm_ref[0]
+            lx[...] = cl_ref[0]
+        else:
+            oacc[...] = jnp.zeros_like(oacc)
+            mx[...] = jnp.full_like(mx, NEG)
+            lx[...] = jnp.zeros_like(lx)
 
-    # blocks strictly in the causal future (or wholly past the prompt end)
-    # are provably carry no-ops — every score masked, alpha = 1, addends
-    # exactly 0 — so their MXU/VPU work is predicated away outright
-    @pl.when((kk * chunk <= qi * block_q + block_q - 1)
-             & (kk * chunk < s_true))
+    # blocks strictly in the causal future (or wholly past the KV slab's
+    # end) are provably carry no-ops — every score masked, alpha = 1,
+    # addends exactly 0 — so their MXU/VPU work is predicated away outright.
+    # Causality is on ABSOLUTE positions: query row i sits at q_offset + i,
+    # KV column j at kv_offset + j (one-shot calls have both offsets 0).
+    @pl.when((kv_offset + kk * chunk
+              <= q_offset + qi * block_q + block_q - 1)
+             & (kk * chunk < sk_true))
     def _update():
         q = q_ref[0]  # (block_q, dh)
         k = k_ref[0]  # (chunk, dh)
         v = v_ref[0]
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                                 preferred_element_type=jnp.float32) * scale
-        rows = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
-        cols = kk * chunk + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
-        valid = (cols <= rows) & (cols < s_true)
+        rows = (q_offset + qi * block_q
+                + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0))
+        cols_l = kk * chunk + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        valid = (kv_offset + cols_l <= rows) & (cols_l < sk_true)
         s = jnp.where(valid, s, NEG)
         o_new, m_new, l_new = _online_update(
             oacc[...], mx[...], lx[...], s, valid, v, e_acc, m_acc)
@@ -169,49 +194,90 @@ def _prefill_kernel(q_ref, k_ref, v_ref, o_ref, oacc, mx, lx, *,
 
     @pl.when(kk == pl.num_programs(2) - 1)
     def _emit():
-        o_ref[0] = _finalize(oacc[...], lx[...])
+        if emit_carry:
+            out_refs[0][0] = oacc[...]
+            out_refs[1][0] = mx[...]
+            out_refs[2][0] = lx[...]
+        else:
+            out_refs[0][0] = _finalize(oacc[...], lx[...])
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("e_acc", "m_acc", "chunk", "block_q", "interpret"),
+    static_argnames=("e_acc", "m_acc", "chunk", "block_q", "q_offset",
+                     "kv_offset", "emit_carry", "interpret"),
 )
-def _flash_prefill(q, k, v, *, e_acc, m_acc, chunk, block_q, interpret):
+def _flash_prefill(q, k, v, carry_o, carry_m, carry_l, *, e_acc, m_acc,
+                   chunk, block_q, q_offset, kv_offset, emit_carry,
+                   interpret):
     s, h, dh = q.shape
+    sk_true = k.shape[0]
     kv = k.shape[1]
     g = h // kv
+    has_carry = carry_o is not None
     # GQA: repeat K/V to the full head count (prefill-transient HBM; the
     # decode kernel instead shares one KV page across its g query rows)
     kh = jnp.repeat(k, g, axis=1) if g > 1 else k
     vh = jnp.repeat(v, g, axis=1) if g > 1 else v
     sq = -(-s // block_q) * block_q
-    sk = -(-s // chunk) * chunk
+    sk = -(-sk_true // chunk) * chunk
     qt = jnp.pad(q.astype(jnp.float32).transpose(1, 0, 2),
                  ((0, 0), (0, sq - s), (0, 0)))
     kt = jnp.pad(kh.astype(jnp.float32).transpose(1, 0, 2),
-                 ((0, 0), (0, sk - s), (0, 0)))
+                 ((0, 0), (0, sk - sk_true), (0, 0)))
     vt = jnp.pad(vh.astype(jnp.float32).transpose(1, 0, 2),
-                 ((0, 0), (0, sk - s), (0, 0)))
+                 ((0, 0), (0, sk - sk_true), (0, 0)))
     grid = (h, sq // block_q, sk // chunk)
-    out = pl.pallas_call(
-        functools.partial(_prefill_kernel, s_true=s, block_q=block_q,
-                          chunk=chunk, e_acc=e_acc, m_acc=m_acc,
-                          scale=LOG2E / math.sqrt(dh)),
-        grid=grid,
-        in_specs=[
+    in_specs = [
+        pl.BlockSpec((1, block_q, dh), lambda hh, qi, kk: (hh, qi, 0)),
+        pl.BlockSpec((1, chunk, dh), lambda hh, qi, kk: (hh, kk, 0)),
+        pl.BlockSpec((1, chunk, dh), lambda hh, qi, kk: (hh, kk, 0)),
+    ]
+    operands = [qt, kt, vt]
+    if has_carry:
+        # carry rows ride in the kernel layout; padded rows get the same
+        # neutral state the cold init uses (they are sliced off anyway)
+        co = jnp.pad(carry_o.astype(jnp.float32).transpose(1, 0, 2),
+                     ((0, 0), (0, sq - s), (0, 0)))
+        cm = jnp.pad(carry_m.astype(jnp.float32).T[..., None],
+                     ((0, 0), (0, sq - s), (0, 0)), constant_values=NEG)
+        cl = jnp.pad(carry_l.astype(jnp.float32).T[..., None],
+                     ((0, 0), (0, sq - s), (0, 0)))
+        operands += [co, cm, cl]
+        in_specs += [
             pl.BlockSpec((1, block_q, dh), lambda hh, qi, kk: (hh, qi, 0)),
-            pl.BlockSpec((1, chunk, dh), lambda hh, qi, kk: (hh, kk, 0)),
-            pl.BlockSpec((1, chunk, dh), lambda hh, qi, kk: (hh, kk, 0)),
-        ],
-        out_specs=pl.BlockSpec((1, block_q, dh), lambda hh, qi, kk: (hh, qi, 0)),
-        out_shape=jax.ShapeDtypeStruct((h, sq, dh), jnp.float32),
+            pl.BlockSpec((1, block_q, 1), lambda hh, qi, kk: (hh, qi, 0)),
+            pl.BlockSpec((1, block_q, 1), lambda hh, qi, kk: (hh, qi, 0)),
+        ]
+    o_spec = pl.BlockSpec((1, block_q, dh), lambda hh, qi, kk: (hh, qi, 0))
+    o_shape = jax.ShapeDtypeStruct((h, sq, dh), jnp.float32)
+    if emit_carry:
+        s_spec = pl.BlockSpec((1, block_q, 1), lambda hh, qi, kk: (hh, qi, 0))
+        s_shape = jax.ShapeDtypeStruct((h, sq, 1), jnp.float32)
+        out_specs: list | pl.BlockSpec = [o_spec, s_spec, s_spec]
+        out_shape: list | jax.ShapeDtypeStruct = [o_shape, s_shape, s_shape]
+    else:
+        out_specs, out_shape = o_spec, o_shape
+    out = pl.pallas_call(
+        functools.partial(_prefill_kernel, sk_true=sk_true, block_q=block_q,
+                          chunk=chunk, e_acc=e_acc, m_acc=m_acc,
+                          scale=LOG2E / math.sqrt(dh), q_offset=q_offset,
+                          kv_offset=kv_offset, has_carry=has_carry,
+                          emit_carry=emit_carry),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
         scratch_shapes=[
             pltpu.VMEM((block_q, dh), jnp.float32),  # o carry
             pltpu.VMEM((block_q, 1), jnp.float32),   # running max (exact)
             pltpu.VMEM((block_q, 1), jnp.float32),   # l carry
         ],
         interpret=interpret,
-    )(qt, kt, vt)
+    )(*operands)
+    if emit_carry:
+        o, m, l = out
+        return (o.transpose(1, 0, 2)[:s], m[..., 0].T[:s], l[..., 0].T[:s])
     return out.transpose(1, 0, 2)[:s]
 
 
@@ -224,12 +290,18 @@ def flash_prefill(
     acc: tuple[int, int] = _WIDE,
     chunk: int = 128,
     block_q: int = 128,
+    q_offset: int = 0,
+    kv_offset: int = 0,
+    carry: tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray] | None = None,
+    return_carry: bool = False,
     interpret: bool = INTERPRET,
-) -> jnp.ndarray:
-    """Causal flash attention for one sequence's prefill.
+) -> jnp.ndarray | tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Causal flash attention for one sequence's prefill (resumable).
 
-    * ``q`` (S, H, dh); ``k``/``v`` (S, KV, dh) — GQA handled by head
-      repetition.  Values should already carry the KV-cache quantization
+    * ``q`` (S, H, dh) — query rows at absolute positions ``q_offset + i``;
+      ``k``/``v`` (Sk, KV, dh) — KV rows at absolute positions
+      ``kv_offset + j`` (GQA handled by head repetition).  Values should
+      already carry the KV-cache quantization
       (``repro.serve.kvcache.write_prompt`` returns the dequantized view)
       so that later paged decode attends to exactly what prefill attended.
     * ``acc`` — the (e_acc, m_acc) carry format from the serve planner.
@@ -238,42 +310,77 @@ def flash_prefill(
       decode share one accumulation geometry).  ``block_q`` is
       schedule-only: any choice is bit-identical (each query row's block
       sequence over KV is fixed), tuned via ``autotune_flash_prefill``.
+    * ``carry`` — a previous call's ``(o, m, l)`` state (shapes (S, H, dh),
+      (S, H), (S, H)) covering KV ``[0, kv_offset)``; ``return_carry=True``
+      returns the raw state after this call's KV instead of the finalized
+      output.  Resuming at a ``chunk`` multiple is bit-identical to the
+      one-shot walk: the o/l carries are representable accumulator-format
+      points and the running max is on the integer lattice, so the HBM
+      round-trip is exact.  Offsets are static (one trace per slab
+      geometry — the serve engine's slab sizes are fixed per plan).
     """
     if q.ndim != 3 or k.ndim != 3 or v.ndim != 3 or k.shape != v.shape:
         raise ValueError(f"bad shapes q{q.shape} k{k.shape} v{v.shape}")
     if q.shape[1] % k.shape[1] != 0:
         raise ValueError(f"H={q.shape[1]} not a multiple of KV={k.shape[1]}")
+    if kv_offset % chunk != 0:
+        raise ValueError(
+            f"kv_offset {kv_offset} must be a multiple of chunk {chunk}: a "
+            "mid-block resumption would insert an extra carry-rounding "
+            "event and break bit-exactness vs the one-shot walk")
+    carry_o = carry_m = carry_l = None
+    if carry is not None:
+        carry_o, carry_m, carry_l = carry
+        s, h, dh = q.shape
+        if carry_o.shape != (s, h, dh) or carry_m.shape != (s, h) \
+                or carry_l.shape != (s, h):
+            raise ValueError(
+                f"carry shapes {carry_o.shape}/{carry_m.shape}/"
+                f"{carry_l.shape} do not match q {q.shape}")
     e_acc, m_acc = acc
-    return _flash_prefill(q, k, v, e_acc=int(e_acc), m_acc=int(m_acc),
+    return _flash_prefill(q, k, v, carry_o, carry_m, carry_l,
+                          e_acc=int(e_acc), m_acc=int(m_acc),
                           chunk=int(chunk), block_q=int(block_q),
-                          interpret=interpret)
+                          q_offset=int(q_offset), kv_offset=int(kv_offset),
+                          emit_carry=bool(return_carry), interpret=interpret)
 
 
-def flash_prefill_reference(q, k, v, *, acc=_WIDE, chunk=128):
+def flash_prefill_reference(q, k, v, *, acc=_WIDE, chunk=128, q_offset=0,
+                            kv_offset=0, carry=None, return_carry=False):
     """Unfused jnp oracle for ``flash_prefill``: same chunk walk, same carry
-    rounding, no q blocking (per-row results are block_q-invariant)."""
+    rounding, no q blocking (per-row results are block_q-invariant).
+    Mirrors the kernel's resumable-carry contract exactly."""
     s, h, dh = q.shape
+    sk_true = k.shape[0]
     g = h // k.shape[1]
     kh = jnp.repeat(k, g, axis=1).astype(jnp.float32).transpose(1, 0, 2)
     vh = jnp.repeat(v, g, axis=1).astype(jnp.float32).transpose(1, 0, 2)
     qt = q.astype(jnp.float32).transpose(1, 0, 2)  # (h, s, dh)
-    sk = -(-s // chunk) * chunk
-    kh = jnp.pad(kh, ((0, 0), (0, sk - s), (0, 0)))
-    vh = jnp.pad(vh, ((0, 0), (0, sk - s), (0, 0)))
+    sk = -(-sk_true // chunk) * chunk
+    kh = jnp.pad(kh, ((0, 0), (0, sk - sk_true), (0, 0)))
+    vh = jnp.pad(vh, ((0, 0), (0, sk - sk_true), (0, 0)))
     e_acc, m_acc = acc
-    o = jnp.zeros((h, s, dh), jnp.float32)
-    m = jnp.full((h, s, 1), NEG, jnp.float32)
-    l = jnp.zeros((h, s, 1), jnp.float32)
-    rows = jnp.arange(s)[None, :, None]
+    if carry is None:
+        o = jnp.zeros((h, s, dh), jnp.float32)
+        m = jnp.full((h, s, 1), NEG, jnp.float32)
+        l = jnp.zeros((h, s, 1), jnp.float32)
+    else:
+        co, cm, cl = carry
+        o = co.astype(jnp.float32).transpose(1, 0, 2)
+        m = cm.astype(jnp.float32).T[..., None]
+        l = cl.astype(jnp.float32).T[..., None]
+    rows = q_offset + jnp.arange(s)[None, :, None]
     scale = LOG2E / math.sqrt(dh)
     for kk in range(sk // chunk):
         kb = kh[:, kk * chunk:(kk + 1) * chunk]
         vb = vh[:, kk * chunk:(kk + 1) * chunk]
         sc = _pv(qt, kb.transpose(0, 2, 1)) * scale  # (h, s, chunk)
-        cols = kk * chunk + jnp.arange(chunk)[None, None, :]
-        valid = (cols <= rows) & (cols < s)
+        cols_l = kk * chunk + jnp.arange(chunk)[None, None, :]
+        valid = (kv_offset + cols_l <= rows) & (cols_l < sk_true)
         sc = jnp.where(valid, sc, NEG)
         o, m, l = _online_update(o, m, l, sc, valid, vb, e_acc, m_acc)
+    if return_carry:
+        return (o.transpose(1, 0, 2), m[..., 0].T, l[..., 0].T)
     return _finalize(o, l).transpose(1, 0, 2)
 
 

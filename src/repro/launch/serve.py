@@ -2,11 +2,14 @@
 
 Attention-stack families (dense / moe / vlm) serve through
 ``repro.serve.ServeEngine`` — paged int8 KV pages, flash prefill/decode
-kernels with planner-chosen accumulator widths, admission / decode
-interleave and page eviction on completion — so requests of wildly
-different lengths share one arena and one decode batch.  Families the
-paged path does not cover (ssm / hybrid / encdec) fall back to the legacy
-static-batch loop below.
+kernels with planner-chosen accumulator widths, optimistic admission with
+preemption/swap to a host-side store, chunked prefill slabs interleaved
+with batched decode (``--prefill-chunk``), and page eviction on
+completion — so requests of wildly different lengths share one arena and
+one decode batch.  ``--reserve-admission`` restores the worst-case
+reservation baseline (no preemption).  Families the paged path does not
+cover (ssm / hybrid / encdec) fall back to the legacy static-batch loop
+below.
 
 Restoring from a training checkpoint honors the telemetry controller's
 realized ``precision_schedule`` (recorded in ``meta.json``): the dense-GEMM
@@ -49,6 +52,12 @@ def parse_args(argv=None):
     ap.add_argument("--pages", type=int, default=0,
                     help="KV pool pages (0 = sized for the workload +25%)")
     ap.add_argument("--max-batch", type=int, default=8)
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="chunked-prefill slab size in tokens (multiple of "
+                         "--page-size; 0 = one-shot prefill per admission)")
+    ap.add_argument("--reserve-admission", action="store_true",
+                    help="worst-case page-reservation admission, no "
+                         "preemption/swap (the pre-chunking baseline)")
     ap.add_argument("--policy", choices=["exact", "predicted"], default="exact",
                     help="dense-GEMM accumulation plan for the serve path")
     ap.add_argument("--chunk", type=int, default=64)
@@ -124,6 +133,8 @@ def main(argv=None) -> dict:
         -(-int(tokens_needed * 1.25) // args.page_size) + 1)
     eng = ServeEngine(model, params, n_pages=n_pages,
                       page_size=args.page_size, max_batch=args.max_batch,
+                      prefill_chunk_tokens=args.prefill_chunk or None,
+                      reserve_admission=args.reserve_admission,
                       monitor_cadence=args.monitor_cadence, seed=args.seed)
     rng = jax.random.PRNGKey(args.seed + 1)
     rids = []
@@ -143,13 +154,20 @@ def main(argv=None) -> dict:
     print(f"continuous batching: {eng.decoded_tokens} tokens in {dt:.2f}s "
           f"({toks_per_s:.1f} tok/s), max concurrent {eng.max_concurrent}, "
           f"pool {n_pages} x {args.page_size}-token pages")
+    print(f"scheduler: {eng.prefill_slabs} prefill slabs "
+          f"(chunk={args.prefill_chunk or 'one-shot'}), "
+          f"{eng.preemptions} preemptions / {eng.restores} restores, "
+          f"utilization {eng.utilization():.3f} "
+          f"({'reservation' if args.reserve_admission else 'optimistic'} "
+          f"admission)")
     print(f"KV bytes/token: packed {packed:.1f} vs f32 {f32:.1f} "
           f"({f32 / packed:.2f}x)")
     print("sample generation (request 0):", results[rids[0]])
     eng.pool.check_invariants()
     return {"tok_per_s": float(toks_per_s), "results": results,
             "kv_ratio": f32 / packed, "max_concurrent": eng.max_concurrent,
-            "events": eng.events}
+            "preemptions": eng.preemptions, "restores": eng.restores,
+            "utilization": eng.utilization(), "events": eng.events}
 
 
 def _legacy_main(args, cfg, model, params) -> dict:

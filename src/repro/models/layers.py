@@ -416,6 +416,70 @@ def attn_prefill_paged(
     return dense(o, p["wo"], cfg.quant.attn_out), new_kv
 
 
+def attn_prefill_chunk_paged(
+    p: Params,
+    x: jnp.ndarray,
+    kv: dict[str, jnp.ndarray],
+    hist_page_ids: jnp.ndarray,
+    slab_page_ids: jnp.ndarray,
+    t0: int,
+    cfg: ModelConfig,
+    dist: Dist,
+    *,
+    kv_fmt,
+    acc: tuple[int, int],
+    block_q: int | None = None,
+) -> tuple[jnp.ndarray, dict[str, jnp.ndarray]]:
+    """One chunked-prefill slab of ONE sequence through a layer.
+
+    ``x`` (1, T, D) is the slab's hidden states (absolute token positions
+    ``t0 + i``; ``t0`` must be page-aligned so slab pages are whole pages
+    and the carry hand-off lands on a block edge).  The slab's K/V are
+    quantized into ``slab_page_ids`` exactly as a one-shot
+    ``attn_prefill_paged`` would have (same per-page scale grouping), then
+    the slab's queries attend their page history via the resumable flash
+    kernel: a carry-out pass over the dequantized ``hist_page_ids`` view
+    (all of it causally visible — the slab starts at ``t0``), resumed by a
+    carry-in causal pass over the slab's own KV.  Per query row this walks
+    the same page-size blocks in the same order with the same carry
+    rounding as a one-shot prefill of the whole prompt — bit-identical
+    outputs, arena and (eventually) decode stream."""
+    from repro.kernels.attention import flash_prefill
+    from repro.kernels.autotune import attn_blocks_for
+    from repro.serve import kvcache as KV
+
+    s = x.shape[1]
+    page_size = kv["k"].shape[2]
+    if t0 % page_size != 0:
+        raise ValueError(f"slab offset {t0} not page-aligned ({page_size})")
+    positions = (t0 + jnp.arange(s, dtype=jnp.int32))[None]
+    q = _q_proj(p, x, cfg, positions)  # (1, T, H, dh)
+    k, v = _kv_proj(p, x, cfg, positions)
+    kk, kse, kdq = KV.write_prompt(kv["k"], kv["k_se"],
+                                   k[0].astype(jnp.float32), slab_page_ids,
+                                   kv_fmt)
+    vv, vse, vdq = KV.write_prompt(kv["v"], kv["v_se"],
+                                   v[0].astype(jnp.float32), slab_page_ids,
+                                   kv_fmt)
+    if block_q is None:
+        block_q = attn_blocks_for(s, cfg.n_heads, cfg.head_dim, page_size,
+                                  e_acc=acc[0], m_acc=acc[1], kv_fmt=kv_fmt)
+    qf = q[0].astype(jnp.float32)
+    carry = None
+    if t0 > 0:
+        kh = KV.gather_pages(kk, kse, hist_page_ids, kv_fmt)  # (t0, KV, dh)
+        vh = KV.gather_pages(vv, vse, hist_page_ids, kv_fmt)
+        carry = flash_prefill(qf, kh[:t0], vh[:t0], acc=acc,
+                              chunk=page_size, block_q=block_q,
+                              q_offset=t0, return_carry=True)
+    o = flash_prefill(qf, kdq, vdq, acc=acc, chunk=page_size,
+                      block_q=block_q, q_offset=t0, kv_offset=t0,
+                      carry=carry)
+    o = o.reshape(1, s, -1).astype(COMPUTE_DTYPE)
+    new_kv = {"k": kk, "v": vv, "k_se": kse, "v_se": vse}
+    return dense(o, p["wo"], cfg.quant.attn_out), new_kv
+
+
 # --------------------------------------------------------------------------
 # MLP (SwiGLU)
 # --------------------------------------------------------------------------

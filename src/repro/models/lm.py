@@ -470,3 +470,56 @@ def prefill_paged(
     x, new_kv = scan_util.scan(body, x, (params["layers"], kv_state))
     logits = _unembed(params, x[:, -1:], cfg, dist)[:, 0]
     return logits, new_kv
+
+
+def prefill_chunk_paged(
+    params: Params,
+    tokens: jnp.ndarray,        # (1, T) int32 — one slab of one sequence
+    kv_state: dict,
+    hist_page_ids: jnp.ndarray,  # (n_hist,) int32 — pages holding [0, t0)
+    slab_page_ids: jnp.ndarray,  # (n_slab,) int32 — this slab's fresh pages
+    cfg: ModelConfig,
+    dist: L.Dist = L.LOCAL,
+    *,
+    t0: int,                    # absolute offset of the slab (page-aligned)
+    kv_fmt,
+    acc: tuple[int, int],
+    block_q: int | None = None,
+    want_logits: bool = True,
+) -> tuple[jnp.ndarray | None, dict]:
+    """One chunked-prefill slab: prompt tokens ``[t0, t0 + T)`` flow
+    through the stack, each layer quantizing the slab's K/V into its fresh
+    pages and attending the page history via the resumable-carry flash
+    kernel (``layers.attn_prefill_chunk_paged``).  Driving every slab of a
+    prompt through this (``t0 = 0, C, 2C, ...``) is bit-identical to one
+    ``prefill_paged`` call — same arena bytes, same final logits — which
+    is what lets the serve engine interleave prefill slabs with batched
+    decode (and preempt/resume a sequence between slabs) without touching
+    the numerics.  ``want_logits=False`` skips the unembed on non-final
+    slabs.  Returns (last-position logits (1, V) or None, new arena)."""
+    _check_paged(cfg)
+    b, s = tokens.shape
+    if b != 1:
+        raise ValueError("prefill is per admitted sequence (B = 1)")
+    x = params["embed"][tokens].astype(L.COMPUTE_DTYPE)
+    x = L._constrain(x, dist, P(dist.data_axes, None, None))
+
+    def body(carry, inp):
+        lp, kvl = inp
+        h, nkv = L.attn_prefill_chunk_paged(
+            lp["attn"], L.rms_norm(carry, lp["ln1"], cfg.norm_eps), kvl,
+            hist_page_ids, slab_page_ids, t0, cfg, dist,
+            kv_fmt=kv_fmt, acc=acc, block_q=block_q)
+        carry = carry + h
+        z = L.rms_norm(carry, lp["ln2"], cfg.norm_eps)
+        if cfg.moe is not None and "moe" in lp:
+            f, _ = L.moe_apply(lp["moe"], z, cfg, dist)
+        else:
+            f = L.mlp_apply(lp["mlp"], z, cfg)
+        return carry + f, nkv
+
+    x, new_kv = scan_util.scan(body, x, (params["layers"], kv_state))
+    if not want_logits:
+        return None, new_kv
+    logits = _unembed(params, x[:, -1:], cfg, dist)[:, 0]
+    return logits, new_kv

@@ -1,7 +1,19 @@
 # Quantized-accumulation serving subsystem: the paged QTensor KV-cache
-# (kvcache), the inference-side accumulator-width planner (plan), and the
-# continuous-batching scheduler (scheduler).  The serve-path attention
-# kernels live with the other Pallas kernels in repro.kernels.attention.
-from repro.serve.kvcache import PagedKVConfig, PagePool, init_arena  # noqa: F401
+# (kvcache), the inference-side accumulator-width planner (plan), the
+# continuous-batching scheduler with chunked prefill + preemption/swap
+# (scheduler), and the deterministic scheduler simulation harness (sim).
+# The serve-path attention kernels live with the other Pallas kernels in
+# repro.kernels.attention.
+from repro.serve.kvcache import (  # noqa: F401
+    PagedKVConfig,
+    PagePool,
+    SwapStore,
+    init_arena,
+)
 from repro.serve.plan import AttnBucket, AttnPlan, plan_attention  # noqa: F401
-from repro.serve.scheduler import Request, ServeEngine  # noqa: F401
+from repro.serve.scheduler import (  # noqa: F401
+    ModelExecutor,
+    Request,
+    ServeEngine,
+)
+from repro.serve.sim import SimExecutor, replay_trace  # noqa: F401

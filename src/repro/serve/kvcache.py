@@ -50,10 +50,14 @@ from repro.quant.qtensor import pack_block, unpack_block
 __all__ = [
     "PagedKVConfig",
     "PagePool",
+    "SwapStore",
     "init_arena",
     "append_token",
     "write_prompt",
+    "gather_pages",
     "dequantize_pages",
+    "swap_out_pages",
+    "swap_in_pages",
     "kv_bytes_per_token",
 ]
 
@@ -166,12 +170,104 @@ def write_prompt(arena_l: jnp.ndarray, se_l: jnp.ndarray, x: jnp.ndarray,
     return arena_l, se_l, deq
 
 
+def gather_pages(arena_l: jnp.ndarray, se_l: jnp.ndarray,
+                 page_ids: jnp.ndarray, fmt: FPFormat) -> jnp.ndarray:
+    """Dequantized token-major view of one sequence's pages in a layer:
+    (len(page_ids) * page_size, KV, dh) f32 — exactly the values
+    ``write_prompt`` returned when the pages were written (same codes, same
+    per-page scale exponents).  Chunked prefill attends its history through
+    this view, so a resumed slab sees bit-identically what a one-shot
+    prefill over the whole prompt would have seen."""
+    codes = arena_l[page_ids]  # (n, KV, page_size, dh)
+    deq = _decode(codes, se_l[page_ids][:, None, None, None], fmt)
+    n, kv, page_size, dh = deq.shape
+    return deq.transpose(0, 2, 1, 3).reshape(n * page_size, kv, dh)
+
+
 def dequantize_pages(arena_l: jnp.ndarray, se_l: jnp.ndarray,
                      fmt: FPFormat) -> jnp.ndarray:
     """Full f32 view of a layer's pages — the oracle / parity-mode carrier.
     (P, KV, page_size, dh) f32; identical values to the kernel's in-VMEM
     unpack."""
     return _decode(arena_l, se_l[:, None, None, None], fmt)
+
+
+# --------------------------------------------------------------------------
+# preemption swap: packed pages round-trip host memory byte-identically
+# --------------------------------------------------------------------------
+
+
+def swap_out_pages(kv_state: dict[str, jnp.ndarray],
+                   pages: list[int]) -> dict[str, np.ndarray]:
+    """Copy one sequence's pages (all layers) to host memory.  The pages
+    are already wire-format QTensor blocks — int8 codes + int32 scale
+    exponents — so a swap is a COPY, not a requantization: the blob holds
+    the exact bytes the arena held, keyed by the page's ordinal within the
+    sequence (physical page ids are NOT recorded; swap-in may land the
+    blob on different pages and only the page table changes)."""
+    idx = np.asarray(pages, np.int32)
+    return {
+        "k": np.asarray(kv_state["k"][:, idx]),     # (L, n, KV, ps, dh) int8
+        "v": np.asarray(kv_state["v"][:, idx]),
+        "k_se": np.asarray(kv_state["k_se"][:, idx]),  # (L, n) int32
+        "v_se": np.asarray(kv_state["v_se"][:, idx]),
+    }
+
+
+def swap_in_pages(kv_state: dict[str, jnp.ndarray], pages: list[int],
+                  blob: dict[str, np.ndarray]) -> dict[str, jnp.ndarray]:
+    """Restore a swapped-out blob into (possibly different) pages.  The
+    inverse of ``swap_out_pages``: byte-identical codes and scale
+    exponents, so a restored sequence decodes exactly as if it had never
+    been preempted (recompute-free restore)."""
+    if blob["k"].shape[1] != len(pages):
+        raise ValueError(
+            f"blob holds {blob['k'].shape[1]} pages, restore got {len(pages)}")
+    idx = jnp.asarray(pages, jnp.int32)
+    return {
+        "k": kv_state["k"].at[:, idx].set(jnp.asarray(blob["k"])),
+        "v": kv_state["v"].at[:, idx].set(jnp.asarray(blob["v"])),
+        "k_se": kv_state["k_se"].at[:, idx].set(jnp.asarray(blob["k_se"])),
+        "v_se": kv_state["v_se"].at[:, idx].set(jnp.asarray(blob["v_se"])),
+    }
+
+
+class SwapStore:
+    """Host-side store of preempted sequences' packed KV pages.
+
+    One entry per swapped-out sequence: the ``swap_out_pages`` blob plus
+    the cached-token count it covers.  Entries are exact byte copies —
+    ``tests/test_serve.py`` pins the swap-out → swap-in round trip as
+    byte-identical — so restoring is a page allocation + scatter, never a
+    recompute or requantization.
+    """
+
+    def __init__(self):
+        self._entries: dict[int, tuple[dict[str, np.ndarray], int]] = {}
+
+    def __contains__(self, sid: int) -> bool:
+        return sid in self._entries
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def put(self, sid: int, blob: dict[str, np.ndarray],
+            n_tokens: int) -> None:
+        if sid in self._entries:
+            raise ValueError(f"sequence {sid} already swapped out")
+        self._entries[sid] = (blob, n_tokens)
+
+    def n_tokens(self, sid: int) -> int:
+        return self._entries[sid][1]
+
+    def take(self, sid: int) -> tuple[dict[str, np.ndarray], int]:
+        """Remove and return ``(blob, n_tokens)`` for a restore."""
+        return self._entries.pop(sid)
+
+    @property
+    def bytes_used(self) -> int:
+        return sum(sum(a.nbytes for a in blob.values())
+                   for blob, _ in self._entries.values())
 
 
 def kv_bytes_per_token(pc: PagedKVConfig, *, carrier_bytes: int = 1) -> float:
@@ -219,6 +315,9 @@ class PagePool:
 
     def seq_len(self, sid: int) -> int:
         return self._lens[sid]
+
+    def owns(self, sid: int) -> bool:
+        return sid in self._pages
 
     def pages(self, sid: int) -> list[int]:
         return list(self._pages[sid])

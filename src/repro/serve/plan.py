@@ -42,6 +42,8 @@ __all__ = [
     "AttnPlan",
     "decode_m_acc",
     "min_e_acc",
+    "max_carry_resumptions",
+    "extra_carry_events",
     "plan_attention",
 ]
 
@@ -53,11 +55,16 @@ _M_ACC_MAX = 23
 @dataclass(frozen=True)
 class AttnBucket:
     """One context-length bucket: contexts up to ``max_ctx`` run the
-    decode/prefill kernels with the (1, ``e_acc``, ``m_acc``) carry."""
+    decode/prefill kernels with the (1, ``e_acc``, ``m_acc``) carry.
+    ``resumptions`` is the worst-case number of chunked-prefill carry
+    hand-offs a context in this bucket can go through (0 when prefill is
+    one-shot); the knee test and the e_acc bound are certified FOR that
+    resumption count (see ``plan_attention``)."""
 
     max_ctx: int
     e_acc: int
     m_acc: int
+    resumptions: int = 0
 
     @property
     def acc(self) -> tuple[int, int]:
@@ -69,11 +76,14 @@ class AttnBucket:
 
 @dataclass(frozen=True)
 class AttnPlan:
-    """Bucketed accumulator widths for the serve-path attention kernels."""
+    """Bucketed accumulator widths for the serve-path attention kernels.
+    ``prefill_chunk`` records the chunked-prefill slab size (tokens) the
+    buckets were certified for; None = one-shot prefill."""
 
     page_size: int
     m_p: int
     buckets: tuple[AttnBucket, ...]
+    prefill_chunk: int | None = None
 
     def bucket_for(self, ctx: int) -> tuple[int, AttnBucket]:
         """(index, bucket) of the narrowest bucket covering ``ctx``."""
@@ -95,12 +105,42 @@ class AttnPlan:
         return replace(self, buckets=tuple(bs))
 
 
+def max_carry_resumptions(ctx: int, prefill_chunk: int | None) -> int:
+    """Worst-case number of chunked-prefill carry hand-offs for a
+    ``ctx``-token context: the last query slab resumes its KV walk once
+    per preceding slab boundary (history call → slab call is ONE hand-off
+    in the engine, but a future multi-part history walk resumes at every
+    slab edge — certify the worst case, not the implementation detail)."""
+    if prefill_chunk is None or ctx <= prefill_chunk:
+        return 0
+    return -(-ctx // prefill_chunk) - 1
+
+
+def extra_carry_events(page_size: int, prefill_chunk: int | None,
+                      resumptions: int) -> int:
+    """Extra quantized-carry roundings per query row introduced by carry
+    resumption.  Page-ALIGNED slab boundaries (``prefill_chunk`` a
+    multiple of ``page_size``) add ZERO: the hand-off happens at a block
+    edge, the carried o/l are already representable accumulator-format
+    points and the running max is on the integer lattice, so the HBM
+    round-trip is an exact copy (this is what the chunked-prefill
+    bit-exactness tests pin).  An UNALIGNED boundary would split one
+    page-block accumulation into two quantize events — one extra carry
+    rounding per resumption — which the knee test must then absorb."""
+    if prefill_chunk is None or resumptions == 0:
+        return 0
+    return 0 if prefill_chunk % page_size == 0 else resumptions
+
+
 def decode_m_acc(ctx: int, page_size: int, m_p: int, *,
+                 extra_events: int = 0,
                  cutoff: float = CUTOFF_LOG_V) -> int:
     """Narrowest carry mantissa passing the knee test for a ``ctx``-token
     context at chunk length ``page_size`` — the kernels' actual semantics
-    (ideal intra-block, quantized inter-block carry)."""
-    n2 = max(-(-ctx // page_size), 1)
+    (ideal intra-block, quantized inter-block carry).  ``extra_events``
+    adds carry roundings beyond the ``n2`` block walk (unaligned
+    chunked-prefill resumptions — see ``extra_carry_events``)."""
+    n2 = max(-(-ctx // page_size), 1) + max(extra_events, 0)
     if n2 <= 1:
         return m_p  # a single block never rounds the carry mid-sum
     for m in range(m_p, _M_ACC_MAX + 1):
@@ -110,12 +150,22 @@ def decode_m_acc(ctx: int, page_size: int, m_p: int, *,
     return _M_ACC_MAX
 
 
-def min_e_acc(ctx: int, *, v_hint: float = 16.0, e_min: int = 6) -> int:
+def min_e_acc(ctx: int, *, v_hint: float = 16.0, e_min: int = 6,
+              boundaries: tuple[int, ...] = ()) -> int:
     """Smallest exponent width whose saturating range covers the
     softmax-weighted sum's worst case ``ctx * v_hint`` (overflow
     avoidance; the paper's §4 'sufficient exponent precision' made
-    explicit for the serving accumulation)."""
-    need = math.log2(max(ctx, 1) * max(v_hint, 1.0))
+    explicit for the serving accumulation).
+
+    ``boundaries`` are the chunked-prefill resumption points (context
+    lengths at which the UNNORMALIZED carry is materialized to HBM): the
+    bound must hold at every one of them, not just at finalization —
+    ``l <= ctx_boundary`` and ``|o| <= l * v_max`` at each hand-off.  The
+    materialized carries grow monotonically with the boundary, so the
+    binding constraint is the largest, but the planner checks them all
+    explicitly rather than assuming monotonicity."""
+    need = max((math.log2(max(c, 1) * max(v_hint, 1.0))
+                for c in (*boundaries, ctx)), default=0.0)
     for e in range(e_min, 9):
         if FPFormat(e=e, m=1).max_exp >= need:
             return e
@@ -124,7 +174,8 @@ def min_e_acc(ctx: int, *, v_hint: float = 16.0, e_min: int = 6) -> int:
 
 def plan_attention(max_context: int, page_size: int, *, m_p: int = 5,
                    growth: int = 4, v_hint: float = 16.0,
-                   e_min: int = 6) -> AttnPlan:
+                   e_min: int = 6,
+                   prefill_chunk_tokens: int | None = None) -> AttnPlan:
     """Bucketed plan covering contexts up to ``max_context``.
 
     Bucket edges grow geometrically (``growth``x in pages) from one page;
@@ -133,6 +184,13 @@ def plan_attention(max_context: int, page_size: int, *, m_p: int = 5,
     width of the softmax-weighted addends — default 5, the paper's
     convention for two (1,5,2) factors (the KV codes are (1,5,2); the
     probabilities are wider, so 5 is the conservative floor).
+
+    ``prefill_chunk_tokens`` certifies the buckets for CHUNKED prefill:
+    each bucket's knee test re-runs at the worst-case number of carry
+    resumptions a context in it can go through (page-aligned slabs add no
+    carry-rounding events; unaligned slabs add one per resumption), and
+    the e_acc overflow bound is checked at every resumption boundary
+    where the unnormalized carry is materialized.
     """
     edges: list[int] = []
     ctx = page_size
@@ -140,9 +198,20 @@ def plan_attention(max_context: int, page_size: int, *, m_p: int = 5,
         edges.append(ctx)
         ctx *= growth
     edges.append(max(max_context, page_size))
-    buckets = tuple(
-        AttnBucket(max_ctx=c,
-                   e_acc=min_e_acc(c, v_hint=v_hint, e_min=e_min),
-                   m_acc=decode_m_acc(c, page_size, m_p))
-        for c in edges)
-    return AttnPlan(page_size=page_size, m_p=m_p, buckets=buckets)
+
+    def _bucket(c: int) -> AttnBucket:
+        r = max_carry_resumptions(c, prefill_chunk_tokens)
+        extra = extra_carry_events(page_size, prefill_chunk_tokens, r)
+        bounds = (tuple(min(i * prefill_chunk_tokens, c)
+                        for i in range(1, r + 1))
+                  if prefill_chunk_tokens else ())
+        return AttnBucket(
+            max_ctx=c,
+            e_acc=min_e_acc(c, v_hint=v_hint, e_min=e_min,
+                            boundaries=bounds),
+            m_acc=decode_m_acc(c, page_size, m_p, extra_events=extra),
+            resumptions=r)
+
+    return AttnPlan(page_size=page_size, m_p=m_p,
+                    buckets=tuple(_bucket(c) for c in edges),
+                    prefill_chunk=prefill_chunk_tokens)

@@ -3,22 +3,48 @@
 The static-batch serving loop (prefill a fixed batch, decode everyone to
 the same horizon) wastes both axes: compute on sequences that finished
 early, and KV memory sized for the longest request.  ``ServeEngine``
-replaces it with the standard continuous-batching shape:
+replaces it with the standard continuous-batching shape, plus the two
+levers that keep utilization up under bursty, mixed-length arrivals:
 
-* **admission** — pending requests enter whenever the page pool (minus the
-  pages active sequences are still entitled to claim) can hold them at
-  their full final length — reservation admission, so page pressure can
-  delay a sequence but never deadlock one mid-decode; one prefill per
-  engine step keeps the running batch's decode latency bounded;
-* **prefill / decode interleave** — each ``step()`` optionally prefills
-  one admitted sequence (flash-prefill kernel, K/V quantized into its
-  pages) and then decodes ONE token for every active sequence in a single
-  batched call of the paged flash-decode kernel — sequences at wildly
-  different positions share the batch because every row carries its own
-  position, page-table row and length;
+* **chunked prefill** — a prompt is prefilled in ``prefill_chunk_tokens``
+  slabs (page-aligned), ONE slab per engine step, interleaved with the
+  batched decode of every running sequence — a long prompt no longer
+  blocks the decode batch for a full step per prompt.  Each slab runs the
+  resumable-carry ``flash_prefill`` (history carry-out pass over the
+  sequence's pages, causal carry-in pass over the slab), which is
+  bit-identical to the one-shot prefill at every split point — the
+  numerics are scheduling-invariant by construction.
+* **optimistic admission + preemption/swap** — admission asks only for the
+  pages the FIRST prefill slab needs (not the worst-case final length), so
+  the pool oversubscribes under load.  When a sequence cannot claim its
+  next page, the engine preempts the YOUNGEST resident sequence: its
+  packed int8 KV pages + per-page scale exponents are copied to a
+  host-side ``SwapStore`` (they are already wire-format QTensor blocks, so
+  swap is a copy, not a requantization) and its pages return to the pool.
+  Swapped sequences are restored oldest-first as pages free up —
+  allocation + byte-identical scatter, recompute-free — and resume
+  mid-prefill (at a slab boundary) or mid-decode exactly where they left
+  off.  The oldest resident sequence is never a victim, which is the
+  no-livelock argument: it always progresses, completes, and frees pages
+  for everyone behind it.  ``reserve_admission=True`` restores the old
+  worst-case-reservation admission (no preemption) — the baseline the
+  serve bench gates utilization against.
+
+* **prefill / decode interleave** — each ``step()`` restores or admits at
+  most one sequence, advances at most one prefill slab, then decodes ONE
+  token for every running sequence in a single batched call of the paged
+  flash-decode kernel — sequences at wildly different positions share the
+  batch because every row carries its own position, page-table row and
+  length;
 * **eviction on completion** — a sequence hitting its token budget (or the
-  optional EOS id) releases its pages back to the pool immediately, which
-  is what lets the next pending request in.
+  optional EOS id) releases its pages back to the pool immediately.
+
+Model execution is behind an executor seam: ``ModelExecutor`` runs the
+real jitted model against the paged arena; the deterministic
+``repro.serve.sim.SimExecutor`` replays the SAME scheduler against a
+pure-host stamped arena, which is what lets ``tests/test_serve_sim.py``
+fuzz hundreds of schedules (admission/preemption/swap orders, PagePool
+invariants, token-loss/duplication, livelock) in seconds.
 
 Accumulator widths come from the inference-side planner
 (``repro.serve.plan``): each decode batch runs at the context bucket of
@@ -28,18 +54,19 @@ strictly safe), and crossing a bucket edge re-jits at the wider format.
 Serve-time VRR monitoring (``monitor_cadence``): every N decode steps the
 longest context is probed with the stats variant of the decode kernel
 (``collect_stats=True`` — the same ``EnsembleStats`` machinery as the
-training-side telemetry).  The breach predicate is two-sided, because the
-softmax-weighted ensemble is small and its carry-rounding NOISE can
+training-side telemetry).  The probed bucket is keyed by the GROWN
+(post-decode) context length, not the original prompt length — a sequence
+that decodes past its admission bucket's edge is re-planned at the bucket
+its context is actually in.  The breach predicate is two-sided, because
+the softmax-weighted ensemble is small and its carry-rounding NOISE can
 inflate the measured variance ratio past 1 (the knee test's ``v = n2 (1 -
 VRR)`` only sees deflation): (1) the MEASURED swamp rate — the fraction
 of carry adds fully absorbed, the paper's swamping event counted directly
 in-kernel — crossing ``swamp_threshold``, or (2) the closed-form knee
-test failing at the context's ACTUAL grown length (the planner certified
-the bucket edge, not the context the sequence has since reached).  Either
-flags the bucket and re-buckets it one mantissa bit wider instead of
-letting the context swamp silently.  Events append to ``self.events``
-(and the JSONL log when given) in the training controller's schema
-dialect.
+test failing at the context's ACTUAL grown length.  Either flags the
+bucket and re-buckets it one mantissa bit wider instead of letting the
+context swamp silently.  Events append to ``self.events`` (and the JSONL
+log when given) in the training controller's schema dialect.
 """
 
 from __future__ import annotations
@@ -57,11 +84,18 @@ from repro.core.vrr import CUTOFF_LOG_V
 from repro.models import lm
 from repro.models.layers import LOCAL, Dist
 from repro.quant.formats import FPFormat
-from repro.serve.kvcache import PagedKVConfig, PagePool, init_arena
+from repro.serve.kvcache import (
+    PagedKVConfig,
+    PagePool,
+    SwapStore,
+    init_arena,
+    swap_in_pages,
+    swap_out_pages,
+)
 from repro.serve.plan import AttnPlan, plan_attention
 from repro.telemetry.stats import EnsembleStats
 
-__all__ = ["Request", "ServeEngine", "measure_decode_vrr"]
+__all__ = ["Request", "ModelExecutor", "ServeEngine", "measure_decode_vrr"]
 
 
 @dataclass
@@ -78,6 +112,7 @@ class _Seq:
     prompt_len: int
     max_new: int
     generated: list[int] = field(default_factory=list)
+    prefilled: int = 0         # prompt tokens whose KV is cached
 
     @property
     def pos(self) -> int:
@@ -85,8 +120,25 @@ class _Seq:
         return len(self.tokens) - 1  # the last token's KV is not cached yet
 
     @property
+    def in_prefill(self) -> bool:
+        return self.prefilled < self.prompt_len
+
+    @property
     def done(self) -> bool:
         return len(self.generated) >= self.max_new
+
+
+@dataclass
+class _Swapped:
+    """A preempted sequence waiting in the SwapStore: its host-side page
+    blob plus the cached-token count the blob covers (0 = preempted before
+    its first slab claimed any pages).  ``final_pages`` carries the
+    reservation-mode page entitlement across the swap, so a restore
+    re-registers it and ``free >= reserved`` stays invariant."""
+
+    seq: _Seq
+    n_tokens: int
+    final_pages: int | None = None
 
 
 def measure_decode_vrr(kv_state, page_row: np.ndarray,
@@ -108,6 +160,99 @@ def measure_decode_vrr(kv_state, page_row: np.ndarray,
     return EnsembleStats.from_raw(np.asarray(raw))
 
 
+class ModelExecutor:
+    """Device-side executor: the real model + paged arena + jit caches.
+
+    The engine core schedules in plain python (pages, slabs, victims); this
+    class is the only place device work happens, which is also the seam the
+    deterministic simulation executor (``repro.serve.sim.SimExecutor``)
+    plugs into.
+    """
+
+    def __init__(self, model, params, pc: PagedKVConfig, *,
+                 kv_fmt: FPFormat, dist: Dist = LOCAL, oracle: bool = False,
+                 max_batch: int = 8):
+        self.model = model
+        self.cfg = model.cfg
+        self.params = params
+        self.pc = pc
+        self.kv_fmt = kv_fmt
+        self.dist = dist
+        self.oracle = oracle
+        self.max_batch = max_batch
+        self.kv = init_arena(pc)
+        self._jit_cache: dict = {}
+
+    # ------------------------------ jit fns --------------------------------
+    def _decode_fn(self, acc: tuple[int, int]):
+        key = ("decode", acc, self.oracle)
+        if key not in self._jit_cache:
+            import functools
+
+            self._jit_cache[key] = jax.jit(functools.partial(
+                lm.decode_step_paged, cfg=self.cfg, dist=self.dist,
+                kv_fmt=self.kv_fmt, acc=acc, oracle=self.oracle))
+        return self._jit_cache[key]
+
+    def _prefill_fn(self, acc: tuple[int, int], final: bool):
+        key = ("prefill", acc, final)
+        if key not in self._jit_cache:
+            import functools
+
+            self._jit_cache[key] = jax.jit(
+                functools.partial(
+                    lm.prefill_chunk_paged, cfg=self.cfg, dist=self.dist,
+                    kv_fmt=self.kv_fmt, acc=acc, want_logits=final),
+                static_argnames=("t0",))
+        return self._jit_cache[key]
+
+    # ------------------------------ engine ops -----------------------------
+    def prefill_chunk(self, rid: int, slab_tokens: list[int],
+                      hist_pages: list[int], slab_pages: list[int],
+                      t0: int, acc: tuple[int, int],
+                      final: bool) -> int | None:
+        """Run one prefill slab; returns the first generated token on the
+        final slab (greedy argmax of the last-position logits)."""
+        logits, self.kv = self._prefill_fn(acc, final)(
+            self.params, jnp.asarray([slab_tokens], jnp.int32), self.kv,
+            jnp.asarray(hist_pages, jnp.int32),
+            jnp.asarray(slab_pages, jnp.int32), t0=t0)
+        return int(jnp.argmax(logits[0])) if final else None
+
+    def decode(self, rids: list[int], last_tokens: list[int],
+               page_table: np.ndarray, positions: list[int],
+               seq_lens: list[int], acc: tuple[int, int]) -> list[int]:
+        """One batched decode token per row; returns the next tokens."""
+        n, width = len(rids), page_table.shape[1]
+        # pad to max_batch so the jitted decode step keeps ONE shape per
+        # (bucket, acc) as the active set breathes: padded rows are exact
+        # no-ops (seq_len 0, null-page table row, write to page 0)
+        pt = np.zeros((self.max_batch, width), np.int32)
+        pt[:n] = page_table
+        tokens = np.zeros((self.max_batch, 1), np.int32)
+        tokens[:n, 0] = last_tokens
+        pos = np.zeros((self.max_batch,), np.int32)
+        pos[:n] = positions
+        sl = np.zeros((self.max_batch,), np.int32)
+        sl[:n] = seq_lens
+        logits, self.kv = self._decode_fn(acc)(
+            self.params, jnp.asarray(tokens), self.kv, jnp.asarray(pt),
+            jnp.asarray(pos), jnp.asarray(sl))
+        return [int(t) for t in np.asarray(
+            jnp.argmax(logits[:n, 0], axis=-1))]
+
+    def swap_out(self, rid: int, pages: list[int]) -> dict:
+        return swap_out_pages(self.kv, pages)
+
+    def swap_in(self, rid: int, pages: list[int], blob: dict) -> None:
+        self.kv = swap_in_pages(self.kv, pages, blob)
+
+    def measure_vrr(self, page_row: np.ndarray, ctx: int,
+                    acc: tuple[int, int], key) -> EnsembleStats:
+        return measure_decode_vrr(self.kv, page_row, ctx, cfg=self.cfg,
+                                  kv_fmt=self.kv_fmt, acc=acc, key=key)
+
+
 class ServeEngine:
     """Continuous-batching serving over one model's paged KV arena."""
 
@@ -122,26 +267,51 @@ class ServeEngine:
         plan: AttnPlan | None = None,
         max_batch: int = 8,
         eos_id: int | None = None,
+        prefill_chunk_tokens: int | None = None,
+        reserve_admission: bool = False,
         monitor_cadence: int = 0,
         monitor_log: str | None = None,
         swamp_threshold: float = 0.15,
         oracle: bool = False,
         dist: Dist = LOCAL,
         seed: int = 0,
+        executor=None,
     ):
+        if prefill_chunk_tokens is not None:
+            if prefill_chunk_tokens <= 0 \
+                    or prefill_chunk_tokens % page_size != 0:
+                raise ValueError(
+                    f"prefill_chunk_tokens {prefill_chunk_tokens} must be a "
+                    f"positive multiple of page_size {page_size}: slab "
+                    "boundaries must land on page (carry-block) edges for "
+                    "the resumed walk to be bit-identical to one-shot "
+                    "prefill")
         self.model = model
-        self.cfg = model.cfg
+        self.cfg = model.cfg if model is not None else None
         self.params = params
-        self.dist = dist
         self.kv_fmt = kv_fmt or FPFormat(e=5, m=2)
-        self.pc = PagedKVConfig.for_model(
-            self.cfg, n_pages=n_pages, page_size=page_size, kv_fmt=self.kv_fmt)
+        self.page_size = page_size
+        self.n_pages = n_pages
+        self.tokens_capacity = (n_pages - 1) * page_size
+        if executor is None:
+            self.pc = PagedKVConfig.for_model(
+                self.cfg, n_pages=n_pages, page_size=page_size,
+                kv_fmt=self.kv_fmt)
+            executor = ModelExecutor(model, params, self.pc,
+                                     kv_fmt=self.kv_fmt, dist=dist,
+                                     oracle=oracle, max_batch=max_batch)
+        else:
+            self.pc = getattr(executor, "pc", None)
+        self.executor = executor
         self.pool = PagePool(n_pages, page_size)
-        self.kv = init_arena(self.pc)
+        self.store = SwapStore()
         self.plan = plan or plan_attention(
-            self.pc.tokens_capacity, page_size)
+            self.tokens_capacity, page_size,
+            prefill_chunk_tokens=prefill_chunk_tokens)
         self.max_batch = max_batch
         self.eos_id = eos_id
+        self.prefill_chunk = prefill_chunk_tokens
+        self.reserve_admission = reserve_admission
         self.monitor_cadence = monitor_cadence
         self.monitor_log = monitor_log
         self.swamp_threshold = swamp_threshold
@@ -150,110 +320,219 @@ class ServeEngine:
 
         self.pending: deque[Request] = deque()
         self.active: dict[int, _Seq] = {}
+        self.swapped: dict[int, _Swapped] = {}
         self.finished: dict[int, list[int]] = {}
         self.events: list[dict] = []
         self._next_rid = 0
-        self._final_pages: dict[int, int] = {}
+        self._final_pages: dict[int, int] = {}   # reservation mode only
         self._decode_steps = 0
+        self.steps = 0
         self.decoded_tokens = 0
+        self.prefill_slabs = 0
+        self.preemptions = 0
+        self.restores = 0
         self.max_concurrent = 0
-        self._jit_cache: dict = {}
+
+    @property
+    def kv(self):
+        """The executor's arena (compat accessor for benches/tests)."""
+        return getattr(self.executor, "kv", None)
 
     # ------------------------------ intake ---------------------------------
     def submit(self, prompt: list[int], max_new: int) -> int:
+        need = self.pool.pages_for(len(prompt) + max_new)
+        if need > self.n_pages - 1:
+            raise ValueError(
+                f"request of {len(prompt)} + {max_new} tokens needs {need} "
+                f"pages; the pool holds {self.n_pages - 1} — it can never "
+                "be served, with or without preemption")
         rid = self._next_rid
         self._next_rid += 1
         self.pending.append(Request(rid, list(prompt), max_new))
         return rid
 
-    # ------------------------------ jit fns --------------------------------
-    def _decode_fn(self, acc: tuple[int, int]):
-        key = ("decode", acc, self.oracle)
-        if key not in self._jit_cache:
-            import functools
-
-            self._jit_cache[key] = jax.jit(functools.partial(
-                lm.decode_step_paged, cfg=self.cfg, dist=self.dist,
-                kv_fmt=self.kv_fmt, acc=acc, oracle=self.oracle))
-        return self._jit_cache[key]
-
-    def _prefill_fn(self, acc: tuple[int, int]):
-        key = ("prefill", acc)
-        if key not in self._jit_cache:
-            import functools
-
-            self._jit_cache[key] = jax.jit(functools.partial(
-                lm.prefill_paged, cfg=self.cfg, dist=self.dist,
-                kv_fmt=self.kv_fmt, acc=acc))
-        return self._jit_cache[key]
-
-    # ------------------------------ stepping -------------------------------
+    # ------------------------------ admission ------------------------------
     def _admit_one(self) -> int | None:
-        """Prefill at most one pending request (if pages + a batch slot are
-        available).  Returns the admitted rid or None."""
-        if not self.pending or len(self.active) >= self.max_batch:
+        """Move at most one pending request into the active set.  Swapped
+        sequences are strictly older, so while any wait, no NEW request is
+        admitted (anti-starvation: restore-before-admit)."""
+        if not self.pending or self.swapped \
+                or len(self.active) >= self.max_batch:
             return None
         req = self.pending[0]
-        # reservation admission: admit only when the free pool minus every
-        # active sequence's OUTSTANDING reservation (pages it is entitled
-        # to claim before finishing) covers this sequence at its full final
-        # length.  Admitting on raw free pages can deadlock — two sequences
-        # each holding half the pool, both needing one more page to ever
-        # finish — and this engine has no preemption/swap path to break
-        # such a tie.  The price is conservatism for early (EOS) stops.
-        need = self.pool.pages_for(len(req.prompt) + req.max_new)
-        if self.pool.free_pages - self._reserved_outstanding() < need:
-            return None
+        if self.reserve_admission:
+            # reservation admission: admit only when the free pool minus
+            # every active sequence's OUTSTANDING reservation (pages it is
+            # entitled to claim before finishing) covers this sequence at
+            # its full final length.  Conservative — page pressure delays
+            # admission — but needs no preemption path to be deadlock-free.
+            need = self.pool.pages_for(len(req.prompt) + req.max_new)
+            if self.pool.free_pages - self._reserved_outstanding() < need:
+                return None
+            self._final_pages[req.rid] = need
+        else:
+            # optimistic admission: ask only for the first prefill slab's
+            # pages; growth past that is the preemption path's problem
+            first = min(self.prefill_chunk or len(req.prompt),
+                        len(req.prompt))
+            if self.pool.free_pages < self.pool.pages_for(first):
+                return None
         self.pending.popleft()
-        self._final_pages[req.rid] = need
-        pages = self.pool.allocate(req.rid, len(req.prompt))
-        _, bucket = self.plan.bucket_for(len(req.prompt))
-        logits, self.kv = self._prefill_fn(bucket.acc)(
-            self.params, jnp.asarray([req.prompt], jnp.int32), self.kv,
-            jnp.asarray(pages, jnp.int32))
-        tok = int(jnp.argmax(logits[0]))
-        seq = _Seq(rid=req.rid, tokens=list(req.prompt) + [tok],
-                   prompt_len=len(req.prompt), max_new=req.max_new,
-                   generated=[tok])
-        self.active[req.rid] = seq
-        self._maybe_finish(seq)
+        self.active[req.rid] = _Seq(
+            rid=req.rid, tokens=list(req.prompt),
+            prompt_len=len(req.prompt), max_new=req.max_new)
         return req.rid
 
     def _reserved_outstanding(self) -> int:
-        """Pages active sequences are still entitled to claim.  Held pages
-        only convert reservations 1:1, so ``free >= reserved`` is invariant
-        — every admitted sequence can always run to its final length."""
-        return sum(max(self._final_pages[sid] - len(self.pool.pages(sid)), 0)
-                   for sid in self.active)
+        """Pages active sequences are still entitled to claim (reservation
+        mode).  Held pages only convert reservations 1:1, so ``free >=
+        reserved`` is invariant — every admitted sequence can always run to
+        its final length."""
+        return sum(
+            max(self._final_pages[sid]
+                - (len(self.pool.pages(sid)) if self.pool.owns(sid) else 0),
+                0)
+            for sid in self.active)
 
+    # ------------------------------ preemption -----------------------------
+    def preempt(self, rid: int) -> None:
+        """Swap one resident sequence out: its packed pages + scale
+        exponents move to the host-side SwapStore byte-identically, its
+        pages return to the pool, and it queues for an oldest-first
+        restore.  Public so the fuzz harness can force arbitrary
+        preemption points; the engine itself calls it with the
+        youngest-victim policy in ``_ensure_pages``."""
+        seq = self.active.pop(rid)
+        if self.pool.owns(rid):
+            n_tok = self.pool.seq_len(rid)
+            blob = self.executor.swap_out(rid, self.pool.pages(rid))
+            self.store.put(rid, blob, n_tok)
+            self.pool.release(rid)
+        else:
+            n_tok = 0  # preempted before its first slab claimed pages
+        self.swapped[rid] = _Swapped(
+            seq=seq, n_tokens=n_tok,
+            final_pages=self._final_pages.pop(rid, None))
+        self.preemptions += 1
+        self.events.append({
+            "step": self._decode_steps, "event": "preempt", "role": "serve",
+            "rid": rid, "ctx": n_tok, "free_pages": self.pool.free_pages,
+        })
+
+    def _ensure_pages(self, rid: int, new_len: int) -> bool:
+        """Make the pool able to grow ``rid`` to ``new_len`` tokens,
+        preempting strictly-YOUNGER residents (youngest first) as needed.
+        If ``rid`` is itself the youngest and still short it STALLS —
+        keeps its pages, skips this step, retries next tick (cheaper than
+        swapping itself out, and safe: any older sequence that needs its
+        pages will evict it).  The oldest resident is never a victim and
+        never stalls — it can always claim from everyone younger — so it
+        always progresses, completes, and frees pages: the engine cannot
+        livelock.  Returns False on a stall."""
+        held = len(self.pool.pages(rid)) if self.pool.owns(rid) else 0
+        need = self.pool.pages_for(new_len) - held
+        while need > self.pool.free_pages:
+            victim = max((r for r in self.active if r > rid), default=None)
+            if victim is None:
+                return False
+            self.preempt(victim)
+        return True
+
+    def _restore_one(self) -> int | None:
+        """Re-admit the OLDEST swapped sequence once its pages fit:
+        allocation + byte-identical scatter of the stored blob
+        (recompute-free), resuming mid-prefill or mid-decode exactly where
+        it was preempted."""
+        if not self.swapped or len(self.active) >= self.max_batch:
+            return None
+        rid = min(self.swapped)
+        ent = self.swapped[rid]
+        if ent.final_pages is not None:
+            # reservation mode (the engine itself never preempts here, but
+            # the public preempt() may have): re-admit under the same
+            # worst-case entitlement so ``free >= reserved`` stays true
+            if self.pool.free_pages - self._reserved_outstanding() \
+                    < ent.final_pages:
+                return None
+        elif ent.n_tokens and \
+                self.pool.free_pages < self.pool.pages_for(ent.n_tokens):
+            return None
+        if ent.n_tokens:
+            pages = self.pool.allocate(rid, ent.n_tokens)
+            blob, _ = self.store.take(rid)
+            self.executor.swap_in(rid, pages, blob)
+        if ent.final_pages is not None:
+            self._final_pages[rid] = ent.final_pages
+        del self.swapped[rid]
+        self.active[rid] = ent.seq
+        self.restores += 1
+        self.events.append({
+            "step": self._decode_steps, "event": "restore", "role": "serve",
+            "rid": rid, "ctx": ent.n_tokens,
+            "free_pages": self.pool.free_pages,
+        })
+        return rid
+
+    # ------------------------------ prefill --------------------------------
+    def _prefill_slab(self) -> int | None:
+        """Advance the OLDEST prefilling sequence by one slab (at most one
+        slab per engine step keeps the running batch's decode latency
+        bounded).  The final slab yields the first generated token."""
+        rid = next((r for r in sorted(self.active)
+                    if self.active[r].in_prefill), None)
+        if rid is None:
+            return None
+        seq = self.active[rid]
+        t0 = seq.prefilled
+        t1 = min(t0 + (self.prefill_chunk or seq.prompt_len), seq.prompt_len)
+        if not self.reserve_admission:
+            if not self._ensure_pages(rid, t1):
+                return None  # stalled; retries this slab next step
+        if self.pool.owns(rid):
+            self.pool.extend(rid, t1 - t0)
+        else:
+            self.pool.allocate(rid, t1)
+        pages = self.pool.pages(rid)
+        n_hist = t0 // self.page_size
+        final = t1 == seq.prompt_len
+        # the slab runs at the FULL prompt's bucket — every query row's
+        # carry format must match the one-shot walk for bit-exactness
+        _, bucket = self.plan.bucket_for(seq.prompt_len)
+        tok = self.executor.prefill_chunk(
+            rid, seq.tokens[t0:t1], pages[:n_hist], pages[n_hist:], t0,
+            bucket.acc, final)
+        seq.prefilled = t1
+        self.prefill_slabs += 1
+        if final:
+            seq.tokens.append(int(tok))
+            seq.generated.append(int(tok))
+            self._maybe_finish(seq)
+        return rid
+
+    # ------------------------------ decode ---------------------------------
     def _decode_batch(self) -> list[int]:
-        """One decode token for every active sequence that can grow."""
-        batch = []
-        for seq in self.active.values():
-            if self.pool.can_extend(seq.rid):
-                self.pool.extend(seq.rid)
-                batch.append(seq)
-            # else: unreachable under reservation admission; defensive skip
+        """One decode token for every running (fully prefilled) sequence."""
+        batch: list[_Seq] = []
+        for rid in sorted(self.active):
+            seq = self.active.get(rid)
+            if seq is None or seq.in_prefill:
+                continue  # preempted as a victim this step, or still filling
+            if self.reserve_admission:
+                if not self.pool.can_extend(rid):
+                    continue  # unreachable under reservation; defensive skip
+            elif not self._ensure_pages(rid, self.pool.seq_len(rid) + 1):
+                continue  # stalled (it is the youngest); retries next step
+            self.pool.extend(rid)
+            batch.append(seq)
         if not batch:
             return []
-        bucket_i, bucket = self.plan.bucket_for(
+        _, bucket = self.plan.bucket_for(
             max(self.pool.seq_len(s.rid) for s in batch))
-        width = bucket.max_pages(self.pc.page_size)
-        # pad to max_batch so the jitted decode step keeps ONE shape per
-        # (bucket, acc) as the active set breathes: padded rows are exact
-        # no-ops (seq_len 0, null-page table row, write to page 0)
-        pt = np.zeros((self.max_batch, width), np.int32)
-        pt[:len(batch)] = self.pool.page_table([s.rid for s in batch], width)
-        tokens = np.zeros((self.max_batch, 1), np.int32)
-        tokens[:len(batch), 0] = [s.tokens[-1] for s in batch]
-        positions = np.zeros((self.max_batch,), np.int32)
-        positions[:len(batch)] = [s.pos for s in batch]
-        seq_lens = np.zeros((self.max_batch,), np.int32)
-        seq_lens[:len(batch)] = positions[:len(batch)] + 1
-        logits, self.kv = self._decode_fn(bucket.acc)(
-            self.params, jnp.asarray(tokens), self.kv, jnp.asarray(pt),
-            jnp.asarray(positions), jnp.asarray(seq_lens))
-        next_toks = np.asarray(jnp.argmax(logits[:len(batch), 0], axis=-1))
+        width = bucket.max_pages(self.page_size)
+        pt = self.pool.page_table([s.rid for s in batch], width)
+        next_toks = self.executor.decode(
+            [s.rid for s in batch], [s.tokens[-1] for s in batch], pt,
+            [s.pos for s in batch], [s.pos + 1 for s in batch], bucket.acc)
         finished = []
         for seq, tok in zip(batch, next_toks):
             seq.tokens.append(int(tok))
@@ -263,7 +542,7 @@ class ServeEngine:
                 finished.append(seq.rid)
         self._decode_steps += 1
         if self.monitor_cadence and self._decode_steps % self.monitor_cadence == 0:
-            self._monitor(bucket_i, bucket)
+            self._monitor()
         return finished
 
     def _maybe_finish(self, seq: _Seq) -> bool:
@@ -276,19 +555,26 @@ class ServeEngine:
             return True
         return False
 
+    # ------------------------------ stepping -------------------------------
     def step(self) -> dict:
-        """One engine tick: <=1 admission prefill + one batched decode."""
-        admitted = self._admit_one()
+        """One engine tick: <=1 restore-or-admission, <=1 prefill slab, one
+        batched decode."""
+        self.steps += 1
+        restored = self._restore_one()
+        admitted = self._admit_one() if restored is None else None
         self.max_concurrent = max(self.max_concurrent, len(self.active))
+        prefilled = self._prefill_slab()
         finished = self._decode_batch() if self.active else []
-        return {"admitted": admitted, "finished": finished,
+        return {"admitted": admitted, "restored": restored,
+                "prefilled": prefilled, "finished": finished,
                 "active": len(self.active), "pending": len(self.pending),
+                "swapped": len(self.swapped),
                 "free_pages": self.pool.free_pages}
 
     def run(self, max_steps: int = 100_000) -> dict[int, list[int]]:
         """Drive to completion; returns {rid: generated tokens}."""
         for _ in range(max_steps):
-            if not self.pending and not self.active:
+            if not self.pending and not self.active and not self.swapped:
                 break
             self.step()
         else:
@@ -297,26 +583,30 @@ class ServeEngine:
         return dict(self.finished)
 
     # ------------------------------ monitor --------------------------------
-    def _monitor(self, bucket_i: int, bucket) -> None:
-        """Swamping probe on the longest active context; a breach (measured
-        swamp rate or the closed-form knee test at the grown length — see
-        module docstring) re-buckets rather than letting the context
-        swamp."""
+    def _monitor(self) -> None:
+        """Swamping probe on the longest running context; a breach
+        (measured swamp rate or the closed-form knee test at the grown
+        length — see module docstring) re-buckets rather than letting the
+        context swamp.  The bucket is keyed by the GROWN context length: a
+        sequence that decodes past its admission bucket's edge is
+        re-planned at the bucket its context is actually in, not the one
+        its original prompt length fell into."""
         from repro.telemetry.stats import predicted_kernel_vrr
 
-        if not self.active:
+        running = [r for r, s in self.active.items() if not s.in_prefill]
+        if not running:
             return
-        sid = max(self.active, key=lambda r: self.pool.seq_len(r))
+        sid = max(running, key=lambda r: self.pool.seq_len(r))
         ctx = self.pool.seq_len(sid)
-        width = bucket.max_pages(self.pc.page_size)
+        bucket_i, bucket = self.plan.bucket_for(ctx)
+        width = bucket.max_pages(self.page_size)
         self._key, sub = jax.random.split(self._key)
-        stats = measure_decode_vrr(
-            self.kv, self.pool.page_table([sid], width)[0], ctx,
-            cfg=self.cfg, kv_fmt=self.kv_fmt, acc=bucket.acc, key=sub)
-        n2 = -(-ctx // self.pc.page_size)
+        stats = self.executor.measure_vrr(
+            self.pool.page_table([sid], width)[0], ctx, bucket.acc, sub)
+        n2 = -(-ctx // self.page_size)
         swamp = float(stats.swamp_rate)
         v_pred = n2 * (1.0 - predicted_kernel_vrr(
-            bucket.m_acc, self.plan.m_p, self.pc.page_size, n2))
+            bucket.m_acc, self.plan.m_p, self.page_size, n2))
         breach_m = swamp >= self.swamp_threshold
         breach_p = v_pred >= CUTOFF_LOG_V
         breach = breach_m or breach_p
@@ -333,7 +623,7 @@ class ServeEngine:
                        else "measured" if breach_m
                        else "predicted" if breach_p else None),
             "gemm": "attn_decode", "role": "serve",
-            "bucket": bucket_i, "ctx": ctx, "n1": self.pc.page_size, "n2": n2,
+            "bucket": bucket_i, "ctx": ctx, "n1": self.page_size, "n2": n2,
             "m_acc": m_now,
             "measured_vrr": round(float(stats.measured_vrr), 6),
             "log_v": round(float(stats.measured_log_v(n2)), 4),
@@ -350,6 +640,12 @@ class ServeEngine:
                 f.write(json.dumps(event) + "\n")
 
     # ------------------------------ accounting -----------------------------
+    def utilization(self) -> float:
+        """Decoded tokens per decode-batch slot: 1.0 = every step decoded a
+        full batch.  The serve bench gates the chunked+preemptive engine's
+        utilization against the reservation baseline on this number."""
+        return self.decoded_tokens / max(self.steps * self.max_batch, 1)
+
     def kv_bytes_per_token(self, *, carrier_bytes: int = 1) -> float:
         from repro.serve.kvcache import kv_bytes_per_token
 

@@ -1,0 +1,323 @@
+"""Deterministic scheduler simulation: a pure-host executor + traces.
+
+The continuous-batching engine's hard bugs are SCHEDULER bugs — a page
+handed to two sequences, a swap blob restored into the wrong page table, a
+token decoded twice across a preemption, a victim policy that livelocks —
+and none of them need a real model to manifest.  ``SimExecutor`` plugs
+into ``ServeEngine``'s executor seam and replaces device work with a
+stamped page arena:
+
+* every KV write stamps ``(rid, absolute token index)`` into the page
+  slot it lands in;
+* every attention read (prefill history walk, decode) VERIFIES the stamps
+  of the tokens it claims to attend — any cross-sequence page mixup,
+  stale swapped-out page, or wrong-order restore raises
+  ``SimCorruption`` with the exact slot that disagreed;
+* swapped-out pages are poisoned in the arena, so a page table that still
+  points at them is caught on the next read;
+* generated tokens are a pure function of ``(rid, absolute index)`` — the
+  schedule cannot change them, so lost/duplicated/reordered tokens across
+  preemption show up as a direct mismatch against the expected stream
+  (``expected_generation``).
+
+Because all of this is numpy on a few hundred slots, a full engine run is
+microseconds — ``tests/test_serve_sim.py`` replays hundreds of seeded
+bursty traces and a hypothesis state machine per CI run, which is the
+evidence the chunked-prefill + preemption scheduler leans on.  The
+NUMERICS of the serve path (bit-exact kernels, logit-exact decode) are
+pinned separately in ``tests/test_serve.py`` against the real model.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+__all__ = [
+    "BURSTY_POOL",
+    "BURSTY_SEEDS",
+    "BURSTY_TRACE",
+    "SimCorruption",
+    "SimExecutor",
+    "TraceRequest",
+    "bursty_utilization_comparison",
+    "expected_generation",
+    "poisson_burst_trace",
+    "adversarial_trace",
+    "replay_trace",
+]
+
+
+class SimCorruption(AssertionError):
+    """KV integrity violation observed by the simulation executor."""
+
+
+def _stamp(rid: int, idx: int) -> np.int64:
+    return np.int64((rid << 24) | (idx + 1))  # +1 keeps 0 distinct from empty
+
+
+_EMPTY = np.int64(-1)
+_POISON = np.int64(-2)  # swapped-out page: any read of it is corruption
+
+
+class SimExecutor:
+    """Pure-host stand-in for ``ModelExecutor`` (see module docstring).
+
+    ``vocab_size`` only shapes the deterministic token stream; the engine
+    never inspects token values."""
+
+    pc = None  # no device arena config; engine accounting falls back
+
+    def __init__(self, *, n_pages: int, page_size: int,
+                 vocab_size: int = 50021):
+        self.page_size = page_size
+        self.vocab_size = vocab_size
+        self.pages = np.full((n_pages, page_size), _EMPTY, np.int64)
+        self.kv = None
+        self.swap_outs = 0
+        self.swap_ins = 0
+        self.reads_verified = 0
+
+    # ------------------------------ token stream ---------------------------
+    def next_token(self, rid: int, idx: int) -> int:
+        """The token at absolute position ``idx`` of sequence ``rid`` — a
+        pure function, so any schedule must produce the same stream."""
+        return (rid * 1_000_003 + idx * 97 + 13) % self.vocab_size
+
+    # ------------------------------ verification ---------------------------
+    def _verify(self, rid: int, pages: list[int] | np.ndarray,
+                n_tokens: int, *, where: str) -> None:
+        for idx in range(n_tokens):
+            pg = int(pages[idx // self.page_size])
+            slot = idx % self.page_size
+            got = self.pages[pg, slot]
+            want = _stamp(rid, idx)
+            if got != want:
+                kind = ("poisoned (stale swapped-out page)"
+                        if got == _POISON else
+                        "empty" if got == _EMPTY else
+                        f"owned by rid {int(got) >> 24} "
+                        f"idx {(int(got) & 0xFFFFFF) - 1}")
+                raise SimCorruption(
+                    f"{where}: rid {rid} token {idx} expected in page {pg} "
+                    f"slot {slot}, but the slot is {kind}")
+        self.reads_verified += n_tokens
+
+    # ------------------------------ engine ops -----------------------------
+    def prefill_chunk(self, rid: int, slab_tokens: list[int],
+                      hist_pages: list[int], slab_pages: list[int],
+                      t0: int, acc: tuple[int, int],
+                      final: bool) -> int | None:
+        self._verify(rid, list(hist_pages), t0, where="prefill history")
+        for j in range(len(slab_tokens)):
+            pg = int(slab_pages[j // self.page_size])
+            self.pages[pg, j % self.page_size] = _stamp(rid, t0 + j)
+        return self.next_token(rid, t0 + len(slab_tokens)) if final else None
+
+    def decode(self, rids: list[int], last_tokens: list[int],
+               page_table: np.ndarray, positions: list[int],
+               seq_lens: list[int], acc: tuple[int, int]) -> list[int]:
+        out = []
+        for i, rid in enumerate(rids):
+            pos = int(positions[i])
+            row = page_table[i]
+            self.pages[int(row[pos // self.page_size]),
+                       pos % self.page_size] = _stamp(rid, pos)
+            self._verify(rid, row, int(seq_lens[i]), where="decode")
+            out.append(self.next_token(rid, int(seq_lens[i])))
+        return out
+
+    def swap_out(self, rid: int, pages: list[int]) -> dict:
+        idx = np.asarray(pages, np.int64)
+        stamps = self.pages[idx].copy()
+        # slots past the sequence's length may hold a PRIOR owner's stale
+        # stamps (pages are reused; the real engine never reads past
+        # seq_len, so the stale bytes are dead) — scrub them so the
+        # restore-time owner check only sees live data
+        stamps[(stamps >> 24) != rid] = _EMPTY
+        blob = {"stamps": stamps}
+        self.pages[idx] = _POISON
+        self.swap_outs += 1
+        return blob
+
+    def swap_in(self, rid: int, pages: list[int], blob: dict) -> None:
+        stamps = blob["stamps"]
+        if stamps.shape[0] != len(pages):
+            raise SimCorruption(
+                f"restore of rid {rid}: blob holds {stamps.shape[0]} pages, "
+                f"engine allocated {len(pages)}")
+        owners = {int(s) >> 24 for s in stamps.ravel()
+                  if s != _EMPTY and s != _POISON}
+        if owners - {rid}:
+            raise SimCorruption(
+                f"restore of rid {rid} got a blob stamped by rids {owners}")
+        self.pages[np.asarray(pages, np.int64)] = stamps
+        self.swap_ins += 1
+
+    def measure_vrr(self, page_row, ctx, acc, key):
+        raise NotImplementedError(
+            "the sim executor has no numerics to probe; run the monitor "
+            "against ModelExecutor")
+
+
+def expected_generation(rid: int, prompt_len: int, max_new: int,
+                        executor: SimExecutor) -> list[int]:
+    """The one and only token stream a correct engine can emit for this
+    request, independent of scheduling, preemption or swap order."""
+    return [executor.next_token(rid, prompt_len + j) for j in range(max_new)]
+
+
+# --------------------------------------------------------------------------
+# virtual-clock arrival traces
+# --------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class TraceRequest:
+    t_arrive: int
+    prompt_len: int
+    max_new: int
+
+
+def poisson_burst_trace(seed: int, *, n_requests: int = 12,
+                        mean_gap: float = 2.0, burst_p: float = 0.35,
+                        burst_size: int = 3,
+                        prompt_range: tuple[int, int] = (2, 24),
+                        gen_range: tuple[int, int] = (1, 12),
+                        max_request_tokens: int | None = None,
+                        ) -> list[TraceRequest]:
+    """Bursty Poisson arrivals: exponential gaps, with probability
+    ``burst_p`` a gap instead delivers a burst of ``burst_size``
+    simultaneous requests — the regime where reservation admission
+    collapses utilization."""
+    rng = np.random.RandomState(seed)
+    out: list[TraceRequest] = []
+    t = 0
+    while len(out) < n_requests:
+        t += int(rng.exponential(mean_gap))
+        k = burst_size if rng.rand() < burst_p else 1
+        for _ in range(min(k, n_requests - len(out))):
+            p = int(rng.randint(prompt_range[0], prompt_range[1] + 1))
+            g = int(rng.randint(gen_range[0], gen_range[1] + 1))
+            if max_request_tokens is not None:
+                p = min(p, max(max_request_tokens - g, 1))
+            out.append(TraceRequest(t, p, g))
+    return out
+
+
+def adversarial_trace(kind: str, *, n_requests: int = 6,
+                      capacity_tokens: int = 64) -> list[TraceRequest]:
+    """Hand-shaped worst cases: ``all_long`` (each request alone nearly
+    fills the pool — maximal preemption churn), ``all_short`` (a flood of
+    tiny requests — admission throughput), ``long_then_short`` and
+    ``short_then_long`` (head-of-line blocking in both directions)."""
+    long_p = max(capacity_tokens // 2 - 4, 2)
+    long_g = max(capacity_tokens // 4, 1)
+    if kind == "all_long":
+        return [TraceRequest(0, long_p, long_g) for _ in range(n_requests)]
+    if kind == "all_short":
+        return [TraceRequest(i // 4, 2, 2) for i in range(n_requests)]
+    if kind == "long_then_short":
+        return [TraceRequest(0, long_p, long_g)] + [
+            TraceRequest(1, 2, 2) for _ in range(n_requests - 1)]
+    if kind == "short_then_long":
+        return [TraceRequest(0, 2, 2) for _ in range(n_requests - 1)] + [
+            TraceRequest(1, long_p, long_g)]
+    raise ValueError(f"unknown adversarial trace kind {kind!r}")
+
+
+# the pinned bursty-arrival comparison scenario: ONE definition shared by
+# benchmarks/serve_bench.py (the CI utilization gate) and
+# tests/test_serve_sim.py (the same gate in miniature), so they cannot
+# silently desynchronize
+BURSTY_POOL = dict(n_pages=16, page_size=4, max_batch=6)
+BURSTY_TRACE = dict(n_requests=24, mean_gap=1.0, burst_p=0.5, burst_size=4,
+                    prompt_range=(2, 12), gen_range=(2, 16),
+                    max_request_tokens=60)
+BURSTY_SEEDS = (11, 12, 13, 14, 15)
+
+
+def bursty_utilization_comparison(seeds=BURSTY_SEEDS, *,
+                                  vocab_size: int = 50) -> dict:
+    """Replay the pinned bursty regime against the chunked-prefill +
+    optimistic-admission + preemption engine AND the one-prefill-per-step
+    worst-case-reservation baseline, aggregating utilization over
+    ``seeds`` (every replay also verifies the schedule-independent output
+    streams and PagePool invariants)."""
+    from repro.serve.scheduler import ServeEngine  # late: keep sim light
+
+    def total(reserve: bool) -> tuple[int, int, int]:
+        dec = steps = preempts = 0
+        for seed in seeds:
+            ex = SimExecutor(n_pages=BURSTY_POOL["n_pages"],
+                             page_size=BURSTY_POOL["page_size"],
+                             vocab_size=vocab_size)
+            eng = ServeEngine(
+                None, None, executor=ex, **BURSTY_POOL,
+                prefill_chunk_tokens=(None if reserve
+                                      else BURSTY_POOL["page_size"]),
+                reserve_admission=reserve)
+            m = replay_trace(eng, poisson_burst_trace(seed, **BURSTY_TRACE))
+            for rid, req in m["submitted"].items():
+                exp = expected_generation(rid, req.prompt_len, req.max_new,
+                                          ex)
+                assert eng.finished[rid] == exp, (seed, rid)
+            dec += m["decoded_tokens"]
+            steps += m["steps"]
+            preempts += m["preemptions"]
+        return dec, steps, preempts
+
+    dec_new, steps_new, preempts = total(False)
+    dec_base, steps_base, _ = total(True)
+    mb = BURSTY_POOL["max_batch"]
+    return {
+        "seeds": list(seeds),
+        "utilization_chunked_preempt": round(dec_new / (steps_new * mb), 4),
+        "utilization_reservation_baseline": round(
+            dec_base / (steps_base * mb), 4),
+        "utilization_gain": round(
+            (dec_new / steps_new) / (dec_base / steps_base), 4),
+        "steps_chunked_preempt": steps_new,
+        "steps_reservation_baseline": steps_base,
+        "preemptions": preempts,
+    }
+
+
+def replay_trace(engine, trace: list[TraceRequest], *,
+                 prompt_fn=None, max_steps: int = 20_000,
+                 check_invariants: bool = True) -> dict:
+    """Drive an engine against a virtual-clock arrival trace: each tick
+    submits every request whose arrival time has come, then runs one
+    ``engine.step()``.  Checks PagePool invariants every tick and that the
+    queue fully drains (completion/no-livelock).  Returns scheduling
+    metrics plus the {rid: TraceRequest} map for output verification."""
+    prompt_fn = prompt_fn or (lambda req: [1] * req.prompt_len)
+    trace = sorted(trace, key=lambda r: r.t_arrive)
+    submitted: dict[int, TraceRequest] = {}
+    i = 0
+    clock = 0
+    while i < len(trace) or engine.pending or engine.active or engine.swapped:
+        while i < len(trace) and trace[i].t_arrive <= clock:
+            rid = engine.submit(prompt_fn(trace[i]), trace[i].max_new)
+            submitted[rid] = trace[i]
+            i += 1
+        engine.step()
+        if check_invariants:
+            engine.pool.check_invariants()
+        clock += 1
+        if clock > max_steps:
+            raise RuntimeError(
+                f"trace did not drain in {max_steps} steps: "
+                f"{len(engine.pending)} pending, {len(engine.active)} "
+                f"active, {len(engine.swapped)} swapped — livelock?")
+    return {
+        "steps": clock,
+        "decoded_tokens": engine.decoded_tokens,
+        "utilization": engine.utilization(),
+        "prefill_slabs": engine.prefill_slabs,
+        "preemptions": engine.preemptions,
+        "restores": engine.restores,
+        "max_concurrent": engine.max_concurrent,
+        "submitted": submitted,
+    }

@@ -150,6 +150,113 @@ def test_flash_prefill_matches_plain_softmax_when_wide():
 
 
 # --------------------------------------------------------------------------
+# chunked prefill: resumable carry bit-exactness
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("s", [13, 16])  # ragged page tail / exact boundary
+@pytest.mark.parametrize("acc", [(8, 23), ACC])
+def test_flash_prefill_resumable_carry_bitexact(s, acc):
+    """Splitting the KV walk at ANY page boundary and resuming with the
+    carried (o, m, l) must be bit-identical to the one-shot kernel and the
+    unfused oracle — the carry is exact through HBM because o/l are
+    representable accumulator-format points and the running max is on the
+    integer lattice."""
+    chunk = 4
+    rng = np.random.RandomState(11)
+    q = jnp.asarray(rng.standard_normal((s, 4, 16)).astype(np.float32))
+    k = jnp.asarray(rng.standard_normal((s, 2, 16)).astype(np.float32))
+    v = jnp.asarray(rng.standard_normal((s, 2, 16)).astype(np.float32))
+    one = flash_prefill(q, k, v, acc=acc, chunk=chunk, block_q=8)
+    ref = flash_prefill_reference(q, k, v, acc=acc, chunk=chunk)
+    np.testing.assert_array_equal(np.asarray(one), np.asarray(ref))
+    for split in range(chunk, s, chunk):
+        c = flash_prefill(q, k[:split], v[:split], acc=acc, chunk=chunk,
+                          block_q=8, return_carry=True)
+        out = flash_prefill(q, k[split:], v[split:], acc=acc, chunk=chunk,
+                            block_q=8, kv_offset=split, carry=c)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(one))
+        cr = flash_prefill_reference(q, k[:split], v[:split], acc=acc,
+                                     chunk=chunk, return_carry=True)
+        outr = flash_prefill_reference(q, k[split:], v[split:], acc=acc,
+                                       chunk=chunk, kv_offset=split,
+                                       carry=cr)
+        np.testing.assert_array_equal(np.asarray(outr), np.asarray(one))
+
+
+@pytest.mark.parametrize("s,c_slab", [(13, 4), (13, 8), (16, 8), (9, 12)])
+def test_flash_prefill_qslab_scheme_bitexact(s, c_slab):
+    """The engine's chunked-prefill decomposition — per query slab, a
+    carry-out pass over the history then a causal carry-in pass over the
+    slab's own KV — concatenates to exactly the one-shot output for every
+    slab size, including ragged final slabs."""
+    chunk = 4
+    rng = np.random.RandomState(12)
+    q = jnp.asarray(rng.standard_normal((s, 4, 16)).astype(np.float32))
+    k = jnp.asarray(rng.standard_normal((s, 2, 16)).astype(np.float32))
+    v = jnp.asarray(rng.standard_normal((s, 2, 16)).astype(np.float32))
+    one = flash_prefill(q, k, v, acc=ACC, chunk=chunk, block_q=8)
+    outs, t0 = [], 0
+    while t0 < s:
+        t1 = min(t0 + c_slab, s)
+        carry = None
+        if t0 > 0:
+            carry = flash_prefill(q[t0:t1], k[:t0], v[:t0], acc=ACC,
+                                  chunk=chunk, block_q=8, q_offset=t0,
+                                  return_carry=True)
+        o = flash_prefill(q[t0:t1], k[t0:t1], v[t0:t1], acc=ACC,
+                          chunk=chunk, block_q=8, q_offset=t0,
+                          kv_offset=t0, carry=carry)
+        outs.append(np.asarray(o))
+        t0 = t1
+    np.testing.assert_array_equal(np.concatenate(outs, 0), np.asarray(one))
+
+
+def test_flash_prefill_rejects_unaligned_resume():
+    """A mid-block resumption would insert an extra carry-rounding event;
+    the kernel refuses it outright (the planner prices the hypothetical
+    via ``extra_carry_events`` instead)."""
+    rng = np.random.RandomState(13)
+    q = jnp.asarray(rng.standard_normal((4, 2, 8)).astype(np.float32))
+    with pytest.raises(ValueError, match="multiple of chunk"):
+        flash_prefill(q, q[:, :1], q[:, :1], acc=ACC, chunk=4, kv_offset=2)
+
+
+@pytest.mark.parametrize("n,c_slab", [(13, 8), (16, 8), (9, 12)])
+def test_prefill_chunk_paged_bitexact_vs_oneshot(n, c_slab):
+    """Whole-model chunked prefill == one-shot ``prefill_paged``: same
+    final logits AND byte-identical arena (codes + scale exponents) for
+    ragged tails, page-boundary prompts and slabs larger than the
+    prompt."""
+    cfg = get_smoke_config("qwen2-1.5b")
+    model = get_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    rng = np.random.RandomState(14)
+    page = 4
+    toks = jnp.asarray([rng.randint(0, cfg.vocab_size, n)], jnp.int32)
+    pages = list(range(1, -(-n // page) + 1))
+    kv1 = lm.init_paged_state(cfg, n_pages=12, page_size=page)
+    l1, kv1 = lm.prefill_paged(params, toks, kv1,
+                               jnp.asarray(pages, jnp.int32), cfg,
+                               kv_fmt=FP8_152, acc=ACC)
+    kv2 = lm.init_paged_state(cfg, n_pages=12, page_size=page)
+    t0 = 0
+    while t0 < n:
+        t1 = min(t0 + c_slab, n)
+        hist = pages[:t0 // page]
+        slab = pages[t0 // page:-(-t1 // page)]
+        l2, kv2 = lm.prefill_chunk_paged(
+            params, toks[:, t0:t1], kv2, jnp.asarray(hist, jnp.int32),
+            jnp.asarray(slab, jnp.int32), cfg, t0=t0, kv_fmt=FP8_152,
+            acc=ACC, want_logits=(t1 == n))
+        t0 = t1
+    np.testing.assert_array_equal(np.asarray(l1), np.asarray(l2))
+    for key in kv1:
+        np.testing.assert_array_equal(np.asarray(kv1[key]),
+                                      np.asarray(kv2[key]))
+
+
+# --------------------------------------------------------------------------
 # kv-cache packing
 # --------------------------------------------------------------------------
 
@@ -185,6 +292,76 @@ def test_write_prompt_then_append_token_roundtrip():
     np.testing.assert_array_equal(np.asarray(ka3[1:]), np.asarray(ka2[1:]))
 
 
+def test_gather_pages_matches_write_prompt_view():
+    """The chunked-prefill history view must be the exact values the
+    cache holds — identical to what write_prompt returned when the pages
+    were written."""
+    rng = np.random.RandomState(15)
+    fmt = FP8_152
+    pc = KV.PagedKVConfig(n_layers=1, n_kv_heads=2, head_dim=8,
+                          n_pages=6, page_size=4, kv_fmt=fmt)
+    ar = KV.init_arena(pc)
+    ka, kse = ar["k"][0], ar["k_se"][0]
+    x = jnp.asarray(rng.standard_normal((8, 2, 8)).astype(np.float32))
+    ka, kse, deq = KV.write_prompt(ka, kse, x, jnp.asarray([3, 1]), fmt)
+    view = KV.gather_pages(ka, kse, jnp.asarray([3, 1]), fmt)
+    np.testing.assert_array_equal(np.asarray(view), np.asarray(deq))
+
+
+def test_swap_roundtrip_byte_identical():
+    """swap-out -> swap-in must round-trip the packed pages BYTE-identically
+    (int8 codes and int32 scale exponents), both onto the same pages and
+    onto different pages (only the page table changes)."""
+    rng = np.random.RandomState(16)
+    fmt = FP8_152
+    pc = KV.PagedKVConfig(n_layers=2, n_kv_heads=2, head_dim=8,
+                          n_pages=10, page_size=4, kv_fmt=fmt)
+    kv = KV.init_arena(pc)
+    for layer in range(2):
+        x = jnp.asarray(rng.standard_normal((7, 2, 8)).astype(np.float32)) * 9.0
+        k, kse, _ = KV.write_prompt(kv["k"][layer], kv["k_se"][layer], x,
+                                    jnp.asarray([1, 2]), fmt)
+        v, vse, _ = KV.write_prompt(kv["v"][layer], kv["v_se"][layer], 2 * x,
+                                    jnp.asarray([1, 2]), fmt)
+        kv = {"k": kv["k"].at[layer].set(k), "v": kv["v"].at[layer].set(v),
+              "k_se": kv["k_se"].at[layer].set(kse),
+              "v_se": kv["v_se"].at[layer].set(vse)}
+    blob = KV.swap_out_pages(kv, [1, 2])
+    assert blob["k"].dtype == np.int8 and blob["k_se"].dtype == np.int32
+    # scrub the pages, restore onto the SAME ids -> arena bytes identical
+    scrubbed = {
+        "k": kv["k"].at[:, [1, 2]].set(0), "v": kv["v"].at[:, [1, 2]].set(0),
+        "k_se": kv["k_se"].at[:, [1, 2]].set(0),
+        "v_se": kv["v_se"].at[:, [1, 2]].set(0)}
+    back = KV.swap_in_pages(scrubbed, [1, 2], blob)
+    for key in kv:
+        np.testing.assert_array_equal(np.asarray(back[key]),
+                                      np.asarray(kv[key]))
+    # restore onto DIFFERENT ids -> the moved pages hold the same bytes
+    moved = KV.swap_in_pages(scrubbed, [5, 7], blob)
+    for a, b in ((5, 1), (7, 2)):
+        np.testing.assert_array_equal(np.asarray(moved["k"][:, a]),
+                                      np.asarray(kv["k"][:, b]))
+        np.testing.assert_array_equal(np.asarray(moved["k_se"][:, a]),
+                                      np.asarray(kv["k_se"][:, b]))
+    # wrong blob size is rejected, not silently truncated
+    with pytest.raises(ValueError, match="pages"):
+        KV.swap_in_pages(scrubbed, [5], blob)
+
+
+def test_swapstore_accounting():
+    store = KV.SwapStore()
+    blob = {"k": np.zeros((2, 1, 2, 4, 8), np.int8),
+            "k_se": np.zeros((2, 1), np.int32)}
+    store.put(7, blob, 3)
+    assert 7 in store and len(store) == 1 and store.n_tokens(7) == 3
+    assert store.bytes_used == blob["k"].nbytes + blob["k_se"].nbytes
+    with pytest.raises(ValueError):
+        store.put(7, blob, 3)
+    got, n = store.take(7)
+    assert got is blob and n == 3 and len(store) == 0
+
+
 # --------------------------------------------------------------------------
 # planner
 # --------------------------------------------------------------------------
@@ -215,6 +392,36 @@ def test_planner_bump_rebuckets_monotonically():
     assert bumped.buckets[0].m_acc == plan.buckets[0].m_acc + 1
     ms = [b.m_acc for b in bumped.buckets]
     assert ms == sorted(ms)
+
+
+def test_planner_chunked_prefill_certification():
+    """The carry-resumption re-run of the knee test: page-ALIGNED slab
+    boundaries add zero carry-rounding events (the hand-off is an exact
+    HBM round-trip — pinned bit-exactly by the kernel tests), so the plan
+    records resumptions but assigns the same widths; an UNALIGNED slab
+    size adds one event per resumption and can only widen."""
+    from repro.serve.plan import extra_carry_events, max_carry_resumptions
+
+    page = 16
+    base = plan_attention(8192, page)
+    aligned = plan_attention(8192, page, prefill_chunk_tokens=4 * page)
+    assert aligned.prefill_chunk == 4 * page
+    for b0, b1 in zip(base.buckets, aligned.buckets):
+        assert b1.resumptions == max_carry_resumptions(b1.max_ctx, 4 * page)
+        assert (b1.m_acc, b1.e_acc) == (b0.m_acc, b0.e_acc), (
+            "aligned resumptions must not change the certified widths")
+    assert aligned.buckets[-1].resumptions > 0
+    # unaligned slabs: one extra quantized-carry event per resumption
+    r = max_carry_resumptions(8192, 24)
+    assert extra_carry_events(page, 24, r) == r
+    assert extra_carry_events(page, 4 * page, r) == 0
+    for ctx in (512, 2048, 8192):
+        rr = max_carry_resumptions(ctx, 24)
+        assert decode_m_acc(ctx, page, 5, extra_events=rr) >= \
+            decode_m_acc(ctx, page, 5)
+    # e_acc checks every materialization boundary, not just finalization
+    assert min_e_acc(4096, boundaries=(1024, 2048, 3072)) == min_e_acc(4096)
+    assert min_e_acc(64, boundaries=(4096,)) == min_e_acc(4096)
 
 
 # --------------------------------------------------------------------------
@@ -385,6 +592,106 @@ def test_engine_admission_waits_for_pages(smoke_model):
     assert all(len(results[r]) == 6 for r in rids)
     eng.pool.check_invariants()
     assert eng.pool.free_pages == eng.pool.n_pages - 1
+
+
+def test_engine_chunked_prefill_matches_oneshot(smoke_model):
+    """The whole engine, chunked: slab-interleaved prefill must produce
+    token-for-token the same generations as one-shot prefill (the
+    scheduling changed; the numerics may not)."""
+    model, params = smoke_model
+    rng = np.random.RandomState(17)
+    prompts = [list(rng.randint(0, model.cfg.vocab_size, n))
+               for n in (9, 5, 3)]
+
+    def run(chunk):
+        eng = _engine(model, params, prefill_chunk_tokens=chunk)
+        rids = [eng.submit(p, 4) for p in prompts]
+        out = eng.run()
+        return [tuple(out[r]) for r in rids], eng
+
+    one, _ = run(None)
+    for chunk in (4, 8):
+        chunked, eng = run(chunk)
+        assert chunked == one, f"chunk={chunk} changed the token streams"
+        assert eng.prefill_slabs > len(prompts), "slabs did not split"
+    eng.pool.check_invariants()
+
+
+def test_engine_preemption_recompute_free(smoke_model):
+    """Forcing preemption/swap through a tiny pool must not change a
+    single generated token vs an unpressured run — restore is a
+    byte-identical page copy, never a recompute."""
+    model, params = smoke_model
+    rng = np.random.RandomState(18)
+    prompts = [list(rng.randint(0, model.cfg.vocab_size, 8))
+               for _ in range(3)]
+
+    def run(n_pages):
+        eng = _engine(model, params, n_pages=n_pages, page_size=4,
+                      max_batch=4, prefill_chunk_tokens=4)
+        rids = [eng.submit(p, 6) for p in prompts]
+        out = eng.run()
+        eng.pool.check_invariants()
+        assert eng.pool.free_pages == eng.pool.n_pages - 1
+        return [tuple(out[r]) for r in rids], eng
+
+    roomy, eng_roomy = run(32)
+    tight, eng_tight = run(7)  # 6 usable pages for 3 x (8+6)-token requests
+    assert eng_roomy.preemptions == 0
+    assert eng_tight.preemptions > 0 and eng_tight.restores > 0, \
+        "tiny pool failed to force the swap path"
+    assert tight == roomy, "preemption/swap changed generated tokens"
+    assert len(eng_tight.store) == 0
+
+
+def test_engine_forced_preempt_midstream_is_exact(smoke_model):
+    """Public preempt() at an arbitrary decode point, real model: the
+    restored sequence continues exactly (swap is recompute-free)."""
+    model, params = smoke_model
+    rng = np.random.RandomState(19)
+    prompt = list(rng.randint(0, model.cfg.vocab_size, 9))
+
+    eng0 = _engine(model, params)
+    r0 = eng0.submit(prompt, 6)
+    baseline = eng0.run()[r0]
+
+    eng = _engine(model, params)
+    rid = eng.submit(prompt, 6)
+    for _ in range(3):
+        eng.step()
+    assert rid in eng.active and len(eng.active[rid].generated) >= 2
+    eng.preempt(rid)
+    assert rid in eng.swapped and rid in eng.store
+    out = eng.run()
+    assert out[rid] == baseline
+    assert eng.restores == 1
+
+
+def test_monitor_rebucket_keyed_by_grown_context(smoke_model):
+    """Regression: the monitor must key its re-bucket on the GROWN
+    (post-decode) context length.  A prompt admitted in bucket 0 that
+    decodes past the bucket edge breaches in bucket 1 — bucket 1 must be
+    the one widened, and bucket 0 (the original prompt length's bucket)
+    must be left untouched (a prompt-length-keyed monitor would bump
+    bucket 0 and, via monotonicity, drag bucket 1 with it)."""
+    from repro.serve.plan import AttnBucket, AttnPlan
+
+    model, params = smoke_model
+    narrow = AttnPlan(page_size=4, m_p=5, buckets=(
+        AttnBucket(max_ctx=8, e_acc=6, m_acc=1),
+        AttnBucket(max_ctx=92, e_acc=6, m_acc=1)))
+    eng = _engine(model, params, plan=narrow, monitor_cadence=4)
+    eng.submit(list(range(1, 7)), 34)   # prompt 6 (bucket 0), grows past 8
+    eng.run()
+    probes = [e for e in eng.events if e.get("gemm") == "attn_decode"]
+    assert probes and all(e["ctx"] > 8 and e["bucket"] == 1 for e in probes), \
+        f"probes must land in the grown context's bucket: {probes}"
+    rebuckets = [e for e in probes if e["event"] == "rebucket"]
+    assert rebuckets, f"no rebucket despite the 1-bit carry: {probes}"
+    assert eng.plan.buckets[1].m_acc > 1, "grown bucket was not widened"
+    assert eng.plan.buckets[0].m_acc == 1, (
+        "bucket 0 was bumped — the monitor keyed by the original prompt "
+        "length instead of the grown context")
 
 
 def test_serve_restore_honors_precision_schedule(tmp_path):
