@@ -24,6 +24,15 @@ inference dividend.  Two kernels cover the serve path:
   int8 page, unpacks it in VMEM (``repro.quant.qtensor`` layout, times the
   page's power-of-two scale) and folds it into the online softmax — no
   dequantized copy of the cache ever exists in HBM.
+* ``flash_prefill_paged`` — causal prefill rebuilt on the decode kernel's
+  scalar-prefetch pattern: the page row, per-page scale exponents and the
+  absolute-axis geometry (``q_offset``/``q_len``/``kv_len``/``start_page``)
+  are all TRACED operands, the page row is padded to the bucket width and
+  ``pl.when`` masks past the live page count — so ONE compiled kernel per
+  attention bucket (``repro.serve.plan``) serves every slab of every prompt
+  in the bucket, aligned or ragged, history and fresh slab walked in a
+  single pass over the post-write arena.  Bit-identical to the dense
+  ``flash_prefill`` walk at the same ``chunk == page_size`` cadence.
 
 Accumulation discipline (the same chunked low-precision carry as
 ``fused.py``): within one KV block the score and weighted-value contractions
@@ -59,7 +68,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.autotune import fmt_tuple, register_kernel
+from repro.kernels.autotune import AttnCall, fmt_tuple, register_kernel
 from repro.kernels.common import (
     INTERPRET,
     N_STATS,
@@ -72,10 +81,33 @@ from repro.quant.qtensor import unpack_block
 __all__ = [
     "flash_prefill",
     "flash_prefill_reference",
+    "flash_prefill_paged",
+    "flash_prefill_paged_reference",
     "paged_attn_decode",
     "paged_attn_decode_reference",
+    "kernel_trace_counts",
+    "reset_kernel_trace_counts",
     "NEG",
 ]
+
+# Trace instrumentation: the python body of each jitted kernel wrapper runs
+# exactly once per trace (shape-driven retraces included), so bumping a
+# counter there counts compilations — the compile-count regression tests
+# pin one trace per (bucket, kernel) across arbitrary slab geometries.
+_TRACE_COUNTS: dict[str, int] = {}
+
+
+def kernel_trace_counts() -> dict[str, int]:
+    """Traces per kernel since the last reset (process-wide)."""
+    return dict(_TRACE_COUNTS)
+
+
+def reset_kernel_trace_counts() -> None:
+    _TRACE_COUNTS.clear()
+
+
+def _count_trace(name: str) -> None:
+    _TRACE_COUNTS[name] = _TRACE_COUNTS.get(name, 0) + 1
 
 # Mask value for invalid scores.  A large finite negative instead of -inf:
 # exp2(NEG - m) underflows to exactly 0.0 in f32 for any finite running max
@@ -210,6 +242,7 @@ def _prefill_kernel(*refs, sk_true: int, block_q: int, chunk: int,
 def _flash_prefill(q, k, v, carry_o, carry_m, carry_l, *, e_acc, m_acc,
                    chunk, block_q, q_offset, kv_offset, emit_carry,
                    interpret):
+    _count_trace("flash_prefill")
     s, h, dh = q.shape
     sk_true = k.shape[0]
     kv = k.shape[1]
@@ -294,6 +327,7 @@ def flash_prefill(
     kv_offset: int = 0,
     carry: tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray] | None = None,
     return_carry: bool = False,
+    call: AttnCall | None = None,
     interpret: bool = INTERPRET,
 ) -> jnp.ndarray | tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Causal flash attention for one sequence's prefill (resumable).
@@ -318,7 +352,17 @@ def flash_prefill(
       points and the running max is on the integer lattice, so the HBM
       round-trip is exact.  Offsets are static (one trace per slab
       geometry — the serve engine's slab sizes are fixed per plan).
+    * ``call`` — an ``AttnCall`` spec supplying acc/chunk/block_q/offsets
+      in one struct (the same one the autotuner and the serve compile
+      cache key on); explicit kwargs are ignored when it is given.
     """
+    if call is not None:
+        acc = call.acc
+        chunk = call.chunk
+        block_q = call.resolve_block_q()
+        q_offset = call.q_offset
+        kv_offset = call.kv_offset
+        return_carry = bool(return_carry or call.return_carry)
     if q.ndim != 3 or k.ndim != 3 or v.ndim != 3 or k.shape != v.shape:
         raise ValueError(f"bad shapes q{q.shape} k{k.shape} v{v.shape}")
     if q.shape[1] % k.shape[1] != 0:
@@ -511,6 +555,7 @@ def _decode_kernel_stats(pt_ref, sl_ref, kse_ref, vse_ref, q_ref, k_ref,
 )
 def _paged_decode(q4, k_pages, v_pages, k_se, v_se, page_table, seq_lens, *,
                   packed, e_kv, m_kv, e_acc, m_acc, collect_stats, interpret):
+    _count_trace("paged_attn_decode")
     b, kv, g, dh = q4.shape
     page_size = k_pages.shape[2]
     max_pages = page_table.shape[1]
@@ -669,3 +714,317 @@ def paged_attn_decode_reference(q, k_pages, v_pages, k_se, v_se, page_table,
         s = jnp.where(valid, s, NEG)
         o, m, l = _online_update(o, m, l, s, valid, vb, e_acc, m_acc)
     return _finalize(o, l).reshape(b, h, dh)
+
+
+# --------------------------------------------------------------------------
+# bucketed paged prefill — one compiled kernel per attention bucket
+# --------------------------------------------------------------------------
+
+
+def _prefill_paged_kernel(pr_ref, gm_ref, kse_ref, vse_ref, *refs,
+                          block_q: int, page_size: int, packed: bool,
+                          e_kv: int, m_kv: int, e_acc: int, m_acc: int,
+                          scale: float, has_carry: bool, emit_carry: bool):
+    """Grid (H, q_blocks, max_pages).  The page row and the slab geometry
+    (``gm_ref`` = [q_offset, q_len, kv_len, start_page], SMEM) are traced
+    scalar-prefetch operands, so every slab of every prompt in the bucket
+    reuses this one compiled body; pages past the live count, before the
+    carry's resume point, or wholly in the causal future are provable
+    carry no-ops and are predicated away."""
+    n_in = 6 if has_carry else 3
+    q_ref, k_ref, v_ref = refs[:3]
+    out_refs = refs[n_in:n_in + (3 if emit_carry else 1)]
+    oacc, mx, lx = refs[n_in + (3 if emit_carry else 1):]
+    qi, p = pl.program_id(1), pl.program_id(2)
+    q_off, q_len, kv_len, start_pg = (gm_ref[0], gm_ref[1], gm_ref[2],
+                                      gm_ref[3])
+
+    @pl.when(p == 0)
+    def _init():
+        if has_carry:
+            co_ref, cm_ref, cl_ref = refs[3:6]
+            oacc[...] = co_ref[0]
+            mx[...] = cm_ref[0]
+            lx[...] = cl_ref[0]
+        else:
+            oacc[...] = jnp.zeros_like(oacc)
+            mx[...] = jnp.full_like(mx, NEG)
+            lx[...] = jnp.zeros_like(lx)
+
+    @pl.when((p >= start_pg) & (p * page_size < kv_len)
+             & (p * page_size <= q_off + qi * block_q + block_q - 1))
+    def _update():
+        pid = pr_ref[p]
+        k = _page_values(k_ref, kse_ref, pid, packed=packed, e_kv=e_kv,
+                         m_kv=m_kv)
+        v = _page_values(v_ref, vse_ref, pid, packed=packed, e_kv=e_kv,
+                         m_kv=m_kv)
+        q = q_ref[0]  # (block_q, dh)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        rows = (q_off + qi * block_q
+                + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0))
+        rloc = (qi * block_q
+                + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0))
+        cols = (p * page_size
+                + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1))
+        valid = (cols <= rows) & (cols < kv_len) & (rloc < q_len)
+        s = jnp.where(valid, s, NEG)
+        o_new, m_new, l_new = _online_update(
+            oacc[...], mx[...], lx[...], s, valid, v, e_acc, m_acc)
+        oacc[...] = o_new
+        mx[...] = m_new
+        lx[...] = l_new
+
+    @pl.when(p == pl.num_programs(2) - 1)
+    def _emit():
+        if emit_carry:
+            out_refs[0][0] = oacc[...]
+            out_refs[1][0] = mx[...]
+            out_refs[2][0] = lx[...]
+        else:
+            out_refs[0][0] = _finalize(oacc[...], lx[...])
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("packed", "e_kv", "m_kv", "e_acc", "m_acc", "block_q",
+                     "emit_carry", "interpret"),
+)
+def _flash_prefill_paged(q, k_pages, v_pages, k_se, v_se, page_row, geom,
+                         carry_o, carry_m, carry_l, *, packed, e_kv, m_kv,
+                         e_acc, m_acc, block_q, emit_carry, interpret):
+    _count_trace("flash_prefill_paged")
+    t, h, dh = q.shape
+    kv = k_pages.shape[1]
+    g = h // kv
+    page_size = k_pages.shape[2]
+    max_pages = page_row.shape[0]
+    has_carry = carry_o is not None
+    sq = -(-t // block_q) * block_q
+    qt = jnp.pad(q.astype(jnp.float32).transpose(1, 0, 2),
+                 ((0, 0), (0, sq - t), (0, 0)))
+    grid = (h, sq // block_q, max_pages)
+    # GQA rides the index map: query head hh reads KV head hh // g straight
+    # from the arena — no repeated HBM copy (the dense kernel's jnp.repeat)
+    in_specs = [
+        pl.BlockSpec((1, block_q, dh),
+                     lambda hh, qi, p, pr, gm, ks, vs: (hh, qi, 0)),
+        pl.BlockSpec((1, 1, page_size, dh),
+                     lambda hh, qi, p, pr, gm, ks, vs, g=g:
+                     (pr[p], hh // g, 0, 0)),
+        pl.BlockSpec((1, 1, page_size, dh),
+                     lambda hh, qi, p, pr, gm, ks, vs, g=g:
+                     (pr[p], hh // g, 0, 0)),
+    ]
+    operands = [qt, k_pages, v_pages]
+    if has_carry:
+        co = jnp.pad(carry_o.astype(jnp.float32).transpose(1, 0, 2),
+                     ((0, 0), (0, sq - t), (0, 0)))
+        cm = jnp.pad(carry_m.astype(jnp.float32).T[..., None],
+                     ((0, 0), (0, sq - t), (0, 0)), constant_values=NEG)
+        cl = jnp.pad(carry_l.astype(jnp.float32).T[..., None],
+                     ((0, 0), (0, sq - t), (0, 0)))
+        operands += [co, cm, cl]
+        in_specs += [
+            pl.BlockSpec((1, block_q, dh),
+                         lambda hh, qi, p, pr, gm, ks, vs: (hh, qi, 0)),
+            pl.BlockSpec((1, block_q, 1),
+                         lambda hh, qi, p, pr, gm, ks, vs: (hh, qi, 0)),
+            pl.BlockSpec((1, block_q, 1),
+                         lambda hh, qi, p, pr, gm, ks, vs: (hh, qi, 0)),
+        ]
+    o_spec = pl.BlockSpec((1, block_q, dh),
+                          lambda hh, qi, p, pr, gm, ks, vs: (hh, qi, 0))
+    o_shape = jax.ShapeDtypeStruct((h, sq, dh), jnp.float32)
+    if emit_carry:
+        s_spec = pl.BlockSpec((1, block_q, 1),
+                              lambda hh, qi, p, pr, gm, ks, vs: (hh, qi, 0))
+        s_shape = jax.ShapeDtypeStruct((h, sq, 1), jnp.float32)
+        out_specs: list | pl.BlockSpec = [o_spec, s_spec, s_spec]
+        out_shape: list | jax.ShapeDtypeStruct = [o_shape, s_shape, s_shape]
+    else:
+        out_specs, out_shape = o_spec, o_shape
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4, grid=grid, in_specs=in_specs,
+        out_specs=out_specs,
+        scratch_shapes=[
+            pltpu.VMEM((block_q, dh), jnp.float32),  # o carry
+            pltpu.VMEM((block_q, 1), jnp.float32),   # running max (exact)
+            pltpu.VMEM((block_q, 1), jnp.float32),   # l carry
+        ])
+    out = pl.pallas_call(
+        functools.partial(_prefill_paged_kernel, block_q=block_q,
+                          page_size=page_size, packed=packed, e_kv=e_kv,
+                          m_kv=m_kv, e_acc=e_acc, m_acc=m_acc,
+                          scale=LOG2E / math.sqrt(dh), has_carry=has_carry,
+                          emit_carry=emit_carry),
+        grid_spec=grid_spec,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(page_row, geom, k_se, v_se, *operands)
+    if emit_carry:
+        o, m, l = out
+        return (o.transpose(1, 0, 2)[:t], m[..., 0].T[:t], l[..., 0].T[:t])
+    return out.transpose(1, 0, 2)[:t]
+
+
+@register_kernel("flash_prefill_paged")
+def flash_prefill_paged(
+    q: jnp.ndarray,
+    k_pages: jnp.ndarray,
+    v_pages: jnp.ndarray,
+    k_se: jnp.ndarray,
+    v_se: jnp.ndarray,
+    page_row: jnp.ndarray,
+    q_offset,
+    q_len,
+    kv_len,
+    *,
+    kv_fmt=None,
+    acc: tuple[int, int] = _WIDE,
+    block_q: int = 128,
+    carry: tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray] | None = None,
+    start_page=0,
+    return_carry: bool = False,
+    call: AttnCall | None = None,
+    interpret: bool = INTERPRET,
+) -> jnp.ndarray | tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Bucketed causal prefill straight off the paged KV arena.
+
+    One compiled instance serves every slab of every prompt in an
+    attention bucket: the compiled signature depends only on the slab
+    width T, the arena geometry and ``page_row``'s padded width (the
+    bucket's ``max_pages``) — everything else is a traced operand.
+
+    * ``q`` (T, H, dh) — the query slab, padded to the bucket's slab width;
+      rows ``>= q_len`` are padding (their output is exactly 0).
+    * ``k_pages``/``v_pages`` (P, KV, page_size, dh) + ``k_se``/``v_se``
+      (P,) int32 — one layer's arena AFTER the slab's
+      ``kvcache.write_prompt``: history and fresh slab are walked in one
+      pass, int8 pages unpacked in VMEM exactly like ``paged_attn_decode``
+      (f32 carriers pass through; ``kv_fmt`` ignored then).
+    * ``page_row`` (max_pages,) int32 — this sequence's pages in token
+      order, padded with 0 (the reserved null page); pages at positions
+      ``>= ceil(kv_len / page_size)`` are never read.
+    * ``q_offset``/``q_len``/``kv_len`` — traced int32 scalars: absolute
+      position of q row 0, live query rows, total live KV tokens
+      (history + slab).  Causality is on absolute positions, so a slab at
+      any ``q_offset`` reuses the same executable.
+    * ``carry``/``start_page``/``return_carry`` — resumable online-softmax
+      state exactly as in ``flash_prefill``: ``carry`` covers KV pages
+      ``[0, start_page)`` and the walk resumes there; the carry
+      round-trips exactly (accumulator-format points + integer-lattice
+      max), so split-anywhere equals one-shot bit-for-bit.
+    * ``acc``/``block_q``/``call`` — carry format and the schedule-only q
+      tile; ``call`` (an ``AttnCall`` with ``max_pages > 0``) supplies
+      acc/block_q/kv_fmt from the one struct the serve compile cache and
+      autotuner share.
+
+    Returns (T, H, dh) f32, or the raw ``(o, m, l)`` carry.
+    """
+    if call is not None:
+        acc = call.acc
+        block_q = call.resolve_block_q()
+        kv_fmt = call.kv_fmt
+        return_carry = bool(return_carry or call.return_carry)
+        if call.max_pages and page_row.shape[0] != call.max_pages:
+            raise ValueError(
+                f"page_row width {page_row.shape[0]} != bucket max_pages "
+                f"{call.max_pages}")
+    if q.ndim != 3:
+        raise ValueError(f"q must be (T, H, dh), got {q.shape}")
+    if k_pages.shape != v_pages.shape or k_pages.ndim != 4:
+        raise ValueError(f"bad pages {k_pages.shape} / {v_pages.shape}")
+    t, h, dh = q.shape
+    kv = k_pages.shape[1]
+    if h % kv != 0:
+        raise ValueError(f"H={h} not a multiple of KV={kv}")
+    packed = k_pages.dtype == jnp.int8
+    fmt = fmt_tuple(kv_fmt)
+    if packed and fmt is None:
+        raise ValueError("packed pages need kv_fmt to decode")
+    e_kv, m_kv = fmt or _WIDE
+    carry_o = carry_m = carry_l = None
+    if carry is not None:
+        carry_o, carry_m, carry_l = carry
+        if carry_o.shape != (t, h, dh) or carry_m.shape != (t, h) \
+                or carry_l.shape != (t, h):
+            raise ValueError(
+                f"carry shapes {carry_o.shape}/{carry_m.shape}/"
+                f"{carry_l.shape} do not match q {q.shape}")
+    e_acc, m_acc = acc
+    geom = jnp.stack([jnp.asarray(q_offset, jnp.int32),
+                      jnp.asarray(q_len, jnp.int32),
+                      jnp.asarray(kv_len, jnp.int32),
+                      jnp.asarray(start_page, jnp.int32)])
+    return _flash_prefill_paged(
+        q, k_pages, v_pages,
+        jnp.asarray(k_se, jnp.int32), jnp.asarray(v_se, jnp.int32),
+        jnp.asarray(page_row, jnp.int32), geom, carry_o, carry_m, carry_l,
+        packed=packed, e_kv=int(e_kv), m_kv=int(m_kv),
+        e_acc=int(e_acc), m_acc=int(m_acc), block_q=int(block_q),
+        emit_carry=bool(return_carry), interpret=interpret)
+
+
+def flash_prefill_paged_reference(q, k_pages, v_pages, k_se, v_se, page_row,
+                                  q_offset, q_len, kv_len, *, kv_fmt=None,
+                                  acc=_WIDE, carry=None, start_page=0,
+                                  return_carry=False,
+                                  call: AttnCall | None = None):
+    """Unfused jnp oracle for ``flash_prefill_paged``: gathers each page
+    through the page row, dequantizes with the per-page scales, and walks
+    ALL ``max_pages`` positions in order — pages the kernel predicates away
+    are run fully masked here, which is a provable carry no-op (alpha = 1,
+    addends exactly 0, the running max pinned at NEG), so oracle == kernel
+    bit-for-bit."""
+    if call is not None:
+        acc = call.acc
+        kv_fmt = call.kv_fmt
+        return_carry = bool(return_carry or call.return_carry)
+    t, h, dh = q.shape
+    kv = k_pages.shape[1]
+    g = h // kv
+    page_size = k_pages.shape[2]
+    packed = k_pages.dtype == jnp.int8
+    fmt = fmt_tuple(kv_fmt)
+    e_kv, m_kv = fmt or _WIDE
+    e_acc, m_acc = acc
+    qt = q.astype(jnp.float32).transpose(1, 0, 2)  # (h, t, dh)
+    if carry is None:
+        o = jnp.zeros((h, t, dh), jnp.float32)
+        m = jnp.full((h, t, 1), NEG, jnp.float32)
+        l = jnp.zeros((h, t, 1), jnp.float32)
+    else:
+        co, cm, cl = carry
+        o = co.astype(jnp.float32).transpose(1, 0, 2)
+        m = cm.astype(jnp.float32).T[..., None]
+        l = cl.astype(jnp.float32).T[..., None]
+    q_offset = jnp.asarray(q_offset, jnp.int32)
+    q_len = jnp.asarray(q_len, jnp.int32)
+    kv_len = jnp.asarray(kv_len, jnp.int32)
+    start_page = jnp.asarray(start_page, jnp.int32)
+    page_row = jnp.asarray(page_row, jnp.int32)
+    rows = q_offset + jnp.arange(t)[None, :, None]
+    rloc = jnp.arange(t)[None, :, None]
+    scale = LOG2E / math.sqrt(dh)
+    for p in range(page_row.shape[0]):
+        pid = page_row[p]
+        kb = k_pages[pid]  # (kv, page_size, dh)
+        vb = v_pages[pid]
+        if packed:
+            kb = unpack_block(kb, e_kv, m_kv) * jnp.exp2(
+                k_se[pid].astype(jnp.float32))
+            vb = unpack_block(vb, e_kv, m_kv) * jnp.exp2(
+                v_se[pid].astype(jnp.float32))
+        kb = jnp.repeat(kb.astype(jnp.float32), g, axis=0)  # (h, page, dh)
+        vb = jnp.repeat(vb.astype(jnp.float32), g, axis=0)
+        sc = _pv(qt, kb.transpose(0, 2, 1)) * scale  # (h, t, page_size)
+        cols = p * page_size + jnp.arange(page_size)[None, None, :]
+        valid = ((cols <= rows) & (cols < kv_len) & (rloc < q_len)
+                 & (p >= start_page))
+        sc = jnp.where(valid, sc, NEG)
+        o, m, l = _online_update(o, m, l, sc, valid, vb, e_acc, m_acc)
+    if return_carry:
+        return (o.transpose(1, 0, 2), m[..., 0].T, l[..., 0].T)
+    return _finalize(o, l).transpose(1, 0, 2)

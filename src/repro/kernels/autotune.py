@@ -36,6 +36,7 @@ contract; re-tuning on real hardware just rewrites the JSON.
 
 from __future__ import annotations
 
+import dataclasses
 import json
 import os
 import tempfile
@@ -65,6 +66,7 @@ __all__ = [
     "autotune_bwd_pair",
     "autotune_flash_prefill",
     "attn_vmem_bytes",
+    "AttnCall",
 ]
 
 # --------------------------------------------------------------------------
@@ -305,6 +307,81 @@ def _attn_key(s: int, h: int, dh: int, chunk: int, e_acc: int, m_acc: int,
             f":d{dtype}:v{vm >> 20}")
 
 
+@dataclasses.dataclass(frozen=True)
+class AttnCall:
+    """One serve-path attention invocation, fully specified.
+
+    The bucket key (``table_key``), the jit-static compiled signature
+    (``static_signature``) and the knee-certified accumulator format
+    (``acc``) are all derived from this one struct, so the autotuner, the
+    executor's compile cache and the planner cannot drift apart — the old
+    arrangement kept three hand-maintained tuples in sync.
+
+    ``max_pages > 0`` selects the bucketed paged kernel
+    (``flash_prefill_paged``): geometry scalars ride in as traced
+    scalar-prefetch operands and the page row is padded to ``max_pages``,
+    so every slab of every prompt in the bucket shares one compiled
+    kernel.  ``max_pages == 0`` describes the dense ``flash_prefill``
+    call, where ``q_offset``/``kv_offset`` are jit-static.
+    """
+
+    s: int                    # query tokens per call (slab width, padded)
+    h: int                    # query heads
+    dh: int                   # head dim
+    chunk: int                # carry rounding cadence (== KV page size)
+    e_acc: int = 8
+    m_acc: int = 23
+    kv_fmt: Any = None        # packed KV representation format, or None
+    kv_heads: int = 0         # KV heads; 0 means h (no GQA)
+    max_pages: int = 0        # padded page-row width; 0 = dense kernel
+    block_q: int = 0          # explicit override; 0 = consult the table
+    q_offset: int = 0         # dense kernel only (static); paged: traced
+    kv_offset: int = 0        # dense kernel only (static); paged: traced
+    has_carry: bool = False
+    return_carry: bool = False
+    dtype: str = "f32"
+
+    def __post_init__(self):
+        object.__setattr__(self, "kv_fmt", fmt_tuple(self.kv_fmt))
+
+    @property
+    def acc(self) -> tuple[int, int]:
+        return (self.e_acc, self.m_acc)
+
+    @property
+    def paged(self) -> bool:
+        return self.max_pages > 0
+
+    def table_key(self, vmem: int | None = None) -> str:
+        """Tuning-table key.  Paged calls append ``:p{max_pages}`` so the
+        dense entries written by earlier releases keep resolving."""
+        key = _attn_key(self.s, self.h, self.dh, self.chunk, self.e_acc,
+                        self.m_acc, self.kv_fmt, dtype=self.dtype, vmem=vmem)
+        return f"{key}:p{self.max_pages}" if self.paged else key
+
+    def resolve_block_q(self, vmem: int | None = None) -> int:
+        """block_q is the only schedule-only knob: explicit override, else
+        the tuned entry (paged key first, dense key as fallback — the tile
+        working set is the same), else the safe default 128."""
+        if self.block_q:
+            return int(self.block_q)
+        table = get_table()
+        e = table.get_key(self.table_key(vmem=vmem))
+        if e is None and self.paged:
+            e = table.get_key(_attn_key(self.s, self.h, self.dh, self.chunk,
+                                        self.e_acc, self.m_acc, self.kv_fmt,
+                                        dtype=self.dtype, vmem=vmem))
+        return int(e["block_q"]) if e is not None else 128
+
+    def static_signature(self) -> tuple:
+        """Everything jit-static about the compiled call — two AttnCalls
+        with equal signatures hit the same XLA executable."""
+        return (self.s, self.h, self.dh, self.chunk, self.e_acc, self.m_acc,
+                self.kv_fmt, self.kv_heads, self.max_pages,
+                self.resolve_block_q(), self.q_offset, self.kv_offset,
+                self.has_carry, self.return_carry, self.dtype)
+
+
 class TuningTable:
     """JSON-backed map from GEMM problem key to the winning block triple.
 
@@ -431,16 +508,14 @@ def pair_blocks_for(t: int, k: int, n: int, *, bwd_chunk: int = 0,
 
 def attn_blocks_for(s: int, h: int, dh: int, chunk: int, *, e_acc: int = 8,
                     m_acc: int = 23, kv_fmt=None, dtype: str = "f32",
-                    vmem: int | None = None) -> int:
-    """Trace-time consult for ``flash_prefill``'s block_q (the only
+                    vmem: int | None = None, max_pages: int = 0) -> int:
+    """Trace-time consult for the prefill kernels' block_q (the only
     schedule-only knob: ``chunk`` is the carry rounding cadence — numerics,
     pinned to the KV page size by the serve path — and the decode kernel's
-    grid is fixed by the page geometry outright)."""
-    e = get_table().get_key(_attn_key(s, h, dh, chunk, e_acc, m_acc, kv_fmt,
-                                      dtype=dtype, vmem=vmem))
-    if e is not None:
-        return int(e["block_q"])
-    return 128
+    grid is fixed by the page geometry outright).  ``max_pages > 0``
+    consults the paged-kernel key, falling back to the dense one."""
+    return AttnCall(s, h, dh, chunk, e_acc=e_acc, m_acc=m_acc, kv_fmt=kv_fmt,
+                    max_pages=max_pages, dtype=dtype).resolve_block_q(vmem)
 
 
 # --------------------------------------------------------------------------
@@ -626,14 +701,15 @@ def autotune_bwd_pair(
 
 
 def autotune_flash_prefill(
-    s: int,
-    h: int,
-    dh: int,
+    s: int = 0,
+    h: int = 0,
+    dh: int = 0,
     *,
-    chunk: int,
+    chunk: int = 0,
     e_acc: int = 8,
     m_acc: int = 23,
     kv_fmt: Any = None,
+    call: "AttnCall | None" = None,
     vmem: int | None = None,
     reps: int = 2,
     seed: int = 0,
@@ -641,37 +717,81 @@ def autotune_flash_prefill(
     persist: bool = True,
     verbose: bool = False,
 ) -> dict:
-    """Tune ``flash_prefill``'s block_q for one (prompt, heads, head_dim)
+    """Tune the prefill kernel's block_q for one (prompt, heads, head_dim)
     geometry (``chunk`` is the carry cadence — numerics, never swept) and
-    record the winner under an ``attn:`` key in the shared tuning table."""
+    record the winner under an ``attn:`` key in the shared tuning table.
+
+    Pass ``call=AttnCall(...)`` to tune from the same spec the executor
+    compiles against; a paged call (``max_pages > 0``) times the bucketed
+    ``flash_prefill_paged`` over a dummy page arena and records under the
+    paged ``:p{max_pages}`` key."""
     import jax.numpy as jnp
 
-    from repro.kernels.attention import flash_prefill  # late: import cycle
-
-    kv_fmt = fmt_tuple(kv_fmt)
+    if call is None:
+        call = AttnCall(s, h, dh, chunk, e_acc=e_acc, m_acc=m_acc,
+                        kv_fmt=kv_fmt)
+    s, h, dh, chunk = call.s, call.h, call.dh, call.chunk
     budget = vmem if vmem is not None else vmem_budget()
-    key_str = _attn_key(s, h, dh, chunk, e_acc, m_acc, kv_fmt, vmem=budget)
+    key_str = call.table_key(vmem=budget)
     table = table or get_table()
     cached = table.get_key(key_str)
     if cached is not None and cached.get("reps", 0) >= reps:
         return cached
 
+    kv_bytes = 1 if (call.paged and call.kv_fmt is not None) else 4
+    sp = max(-(-s // 128) * 128, 128)
+    cands = [bq for bq in _TILE_EDGES
+             if bq <= sp and attn_vmem_bytes(bq, chunk, dh,
+                                             kv_bytes=kv_bytes) <= budget]
+    cands = cands or [128]
+
     rk = jax.random.PRNGKey(seed)
     kq, kk, kv_ = jax.random.split(rk, 3)
     q = jax.random.normal(kq, (s, h, dh), jnp.float32)
-    k = jax.random.normal(kk, (s, h, dh), jnp.float32)
-    v = jax.random.normal(kv_, (s, h, dh), jnp.float32)
+    if call.paged:
+        from repro.kernels.attention import flash_prefill_paged  # late
 
-    sp = max(-(-s // 128) * 128, 128)
-    cands = [bq for bq in _TILE_EDGES
-             if bq <= sp and attn_vmem_bytes(bq, chunk, dh) <= budget] or [128]
+        kvh = call.kv_heads or h
+        page = chunk
+        n_pg = call.max_pages
+        if call.kv_fmt is not None:
+            kp = jax.random.randint(kk, (n_pg, kvh, page, dh), -63, 64,
+                                    jnp.int8)
+            vp = jax.random.randint(kv_, (n_pg, kvh, page, dh), -63, 64,
+                                    jnp.int8)
+        else:
+            kp = jax.random.normal(kk, (n_pg, kvh, page, dh), jnp.float32)
+            vp = jax.random.normal(kv_, (n_pg, kvh, page, dh), jnp.float32)
+        se = jnp.zeros((n_pg,), jnp.int32)
+        row = jnp.arange(n_pg, dtype=jnp.int32)
+        kv_len = jnp.int32(min(s, n_pg * page))
+
+        def make_run(bq):
+            def run(q, kp, vp):
+                c = dataclasses.replace(call, block_q=bq)
+                return flash_prefill_paged(
+                    q, kp, vp, se, se, row, jnp.int32(0), jnp.int32(s),
+                    kv_len, call=c)
+            return run
+
+        operands = (q, kp, vp)
+    else:
+        from repro.kernels.attention import flash_prefill  # late: cycle
+
+        k = jax.random.normal(kk, (s, h, dh), jnp.float32)
+        v = jax.random.normal(kv_, (s, h, dh), jnp.float32)
+
+        def make_run(bq):
+            def run(q, k, v):
+                return flash_prefill(q, k, v, acc=call.acc, chunk=chunk,
+                                     block_q=bq)
+            return run
+
+        operands = (q, k, v)
+
     best: tuple[float, int] | None = None
     for bq in cands:
-        def run(q, k, v, _bq=bq):
-            return flash_prefill(q, k, v, acc=(e_acc, m_acc), chunk=chunk,
-                                 block_q=_bq)
-
-        us = time_kernel(run, q, k, v, reps=reps)
+        us = time_kernel(make_run(bq), *operands, reps=reps)
         if verbose:
             print(f"  autotune attn {s}x{h}x{dh} c{chunk}: bq={bq} -> {us:.0f}us")
         if best is None or us < best[0]:

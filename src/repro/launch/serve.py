@@ -66,6 +66,10 @@ def parse_args(argv=None):
                          "schedule) from the latest training checkpoint")
     ap.add_argument("--monitor-cadence", type=int, default=0,
                     help="decode steps between serve-time VRR probes")
+    ap.add_argument("--no-warmup", action="store_true",
+                    help="skip the startup compile-cache warmup (every "
+                         "bucket's kernels then compile lazily on first "
+                         "traffic)")
     ap.add_argument("--legacy", action="store_true",
                     help="force the static-batch loop")
     ap.add_argument("--seed", type=int, default=0)
@@ -136,6 +140,13 @@ def main(argv=None) -> dict:
                       prefill_chunk_tokens=args.prefill_chunk or None,
                       reserve_admission=args.reserve_admission,
                       monitor_cadence=args.monitor_cadence, seed=args.seed)
+    if not args.no_warmup:
+        # compile every certified bucket's prefill/decode kernels BEFORE
+        # traffic arrives — steady-state serving then performs zero traces
+        t0 = time.time()
+        warm = eng.warmup()
+        print(f"warmup: {warm['compiles']} compiles across "
+              f"{warm['buckets']} buckets in {time.time() - t0:.2f}s")
     rng = jax.random.PRNGKey(args.seed + 1)
     rids = []
     for pl_ in prompt_lens:
@@ -162,12 +173,19 @@ def main(argv=None) -> dict:
           f"admission)")
     print(f"KV bytes/token: packed {packed:.1f} vs f32 {f32:.1f} "
           f"({f32 / packed:.2f}x)")
+    cstats = eng.compile_stats()
+    if cstats is not None:
+        steady = cstats["compiles"] - cstats["warm_compiles"]
+        print(f"compile cache: {cstats['compiles']} compiles "
+              f"({cstats['warm_compiles']} at warmup, {steady} steady-state), "
+              f"{cstats['hits']} dispatch hits / {cstats['misses']} misses")
     print("sample generation (request 0):", results[rids[0]])
     eng.pool.check_invariants()
     return {"tok_per_s": float(toks_per_s), "results": results,
             "kv_ratio": f32 / packed, "max_concurrent": eng.max_concurrent,
             "preemptions": eng.preemptions, "restores": eng.restores,
-            "utilization": eng.utilization(), "events": eng.events}
+            "utilization": eng.utilization(), "events": eng.events,
+            "compile_stats": cstats}
 
 
 def _legacy_main(args, cfg, model, params) -> dict:

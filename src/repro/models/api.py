@@ -42,6 +42,122 @@ def get_model(cfg: ModelConfig) -> Model:
     )
 
 
+# --------------------------------------------------------------------------
+# paged serving protocol — the ONE surface ModelExecutor / SimExecutor drive
+# --------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class PrefillRequest:
+    """One prefill slab of one sequence, as the scheduler hands it to an
+    executor.  ``tokens``/``hist_pages``/``slab_pages`` are plain tuples
+    (the scheduler's python-side state); ``t0`` the slab's absolute
+    page-aligned offset; ``final`` marks the prompt's last slab (sample a
+    token).  Bucketed executors additionally get ``bucket_pages`` (the
+    padded page-row width), ``slab_width`` (the padded token width) and
+    ``call`` (the bucket's ``kernels.autotune.AttnCall``) so one compiled
+    kernel serves every slab of the bucket."""
+
+    rid: int
+    tokens: tuple
+    hist_pages: tuple
+    slab_pages: tuple
+    t0: int
+    acc: tuple
+    final: bool
+    bucket_pages: int | None = None
+    slab_width: int | None = None
+    call: Any = None
+
+
+@dataclass(frozen=True)
+class DecodeRequest:
+    """One batched decode step: parallel per-sequence lists plus the padded
+    page table (lists of lists) and the batch bucket's carry format."""
+
+    rids: tuple
+    last_tokens: tuple
+    page_table: tuple
+    positions: tuple
+    seq_lens: tuple
+    acc: tuple
+
+
+@dataclass(frozen=True)
+class PagedModel:
+    """Family dispatch for the paged serving path: ``prefill``/``decode``
+    close over the ModelConfig and expose the ``lm.paged_prefill`` /
+    ``lm.paged_decode`` calling conventions uniformly — the executors
+    drive ONLY this protocol, so a family lands on the serve path by
+    providing these three callables, not by duplicating entry points."""
+
+    cfg: ModelConfig
+    init_state: Callable
+    prefill: Callable
+    decode: Callable
+
+
+def paged_init_state(cfg: ModelConfig, *, n_pages: int, page_size: int,
+                     kv_fmt=None) -> dict:
+    """The paged-KV arena for every (self-)attention layer — the single
+    family-agnostic constructor behind the legacy ``init_paged_state``
+    duplicates in ``lm``/``encdec``."""
+    from repro.serve.kvcache import PagedKVConfig, init_arena
+
+    if cfg.family != "encdec":
+        lm._check_paged(cfg)
+    pc = PagedKVConfig.for_model(cfg, n_pages=n_pages, page_size=page_size,
+                                 kv_fmt=kv_fmt)
+    return init_arena(pc)
+
+
+def get_paged_model(cfg: ModelConfig) -> PagedModel:
+    if cfg.family == "encdec":
+        def _prefill(*a, **kw):
+            raise NotImplementedError(
+                "encdec prefill is encode + prime_cross_attention + "
+                "teacher-forced decode; the paged arena only serves the "
+                "decoder's self-attention")
+
+        def _decode(params, tokens, kv_state, page_table, positions,
+                    seq_lens, dist=None, *, cross, kv_fmt, acc,
+                    oracle=False):
+            xk, xv = cross
+            from repro.models.layers import LOCAL
+            return encdec.paged_decode(
+                params, tokens, kv_state, xk, xv, page_table, positions,
+                seq_lens, cfg, dist if dist is not None else LOCAL,
+                kv_fmt=kv_fmt, acc=acc, oracle=oracle)
+
+        return PagedModel(
+            cfg=cfg,
+            init_state=lambda **kw: paged_init_state(cfg, **kw),
+            prefill=_prefill,
+            decode=_decode,
+        )
+
+    def _prefill(params, tokens, kv_state, page_row, slab_page_ids,
+                 q_offset, q_len, dist=None, **kw):
+        from repro.models.layers import LOCAL
+        return lm.paged_prefill(params, tokens, kv_state, page_row,
+                                slab_page_ids, q_offset, q_len, cfg,
+                                dist if dist is not None else LOCAL, **kw)
+
+    def _decode(params, tokens, kv_state, page_table, positions, seq_lens,
+                dist=None, **kw):
+        from repro.models.layers import LOCAL
+        return lm.paged_decode(params, tokens, kv_state, page_table,
+                               positions, seq_lens, cfg,
+                               dist if dist is not None else LOCAL, **kw)
+
+    return PagedModel(
+        cfg=cfg,
+        init_state=lambda **kw: paged_init_state(cfg, **kw),
+        prefill=_prefill,
+        decode=_decode,
+    )
+
+
 def param_count(params: Any) -> int:
     import jax
 

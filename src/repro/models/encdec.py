@@ -171,26 +171,25 @@ def prime_cross_attention(params, enc_out, cfg: ModelConfig, state: Params) -> P
 
 def init_paged_state(cfg: ModelConfig, *, n_pages: int, page_size: int,
                      kv_fmt=None) -> dict:
-    """Paged arena for the decoder's SELF-attention layers (the
-    cross-attention K/V stay a dense prefill-time projection — they are
-    encoder-length, fixed, and shared-shape across the batch, so paging
-    buys nothing there)."""
-    from repro.serve.kvcache import PagedKVConfig, init_arena
+    """Deprecated: use ``models.api.paged_init_state``.  (The paged arena
+    serves the decoder's SELF-attention only — cross-attention K/V stay a
+    dense prefill-time projection: encoder-length, fixed, shared-shape
+    across the batch, so paging buys nothing there.)"""
+    from repro.models.api import paged_init_state  # late: api imports encdec
 
-    pc = PagedKVConfig.for_model(cfg, n_pages=n_pages, page_size=page_size,
-                                 kv_fmt=kv_fmt)
-    return init_arena(pc)
+    return paged_init_state(cfg, n_pages=n_pages, page_size=page_size,
+                            kv_fmt=kv_fmt)
 
 
-def decode_step_paged(params, tokens, kv_state, xk, xv, page_table,
-                      positions, seq_lens, cfg: ModelConfig,
-                      dist: L.Dist = L.LOCAL, *, kv_fmt,
-                      acc: tuple[int, int], oracle: bool = False):
+def paged_decode(params, tokens, kv_state, xk, xv, page_table,
+                 positions, seq_lens, cfg: ModelConfig,
+                 dist: L.Dist = L.LOCAL, *, kv_fmt,
+                 acc: tuple[int, int], oracle: bool = False):
     """One decoder token through the paged self-attention cache (the serve
     subsystem's cache + flash-decode kernel) with fixed cross-attention
     memory ``xk``/``xv`` ((L, B, T_enc, KV, dh), from
     ``prime_cross_attention``).  Per-sequence ``positions``/``seq_lens`` as
-    in ``repro.models.lm.decode_step_paged``."""
+    in ``repro.models.lm.paged_decode``."""
     x = params["embed"][tokens].astype(L.COMPUTE_DTYPE)
     x = L._constrain(x, dist, P(dist.data_axes, None, None))
 
@@ -211,6 +210,22 @@ def decode_step_paged(params, tokens, kv_state, xk, xv, page_table,
     x, new_kv = scan_util.scan(body, x, (params["decoder"], kv_state, xk, xv))
     logits = _unembed(params, x, cfg, dist)
     return logits, new_kv
+
+
+def decode_step_paged(params, tokens, kv_state, xk, xv, page_table,
+                      positions, seq_lens, cfg: ModelConfig,
+                      dist: L.Dist = L.LOCAL, *, kv_fmt,
+                      acc: tuple[int, int], oracle: bool = False):
+    """Deprecated: use ``paged_decode`` (same signature) or drive the
+    ``models.api.PagedModel`` protocol."""
+    import warnings
+
+    warnings.warn("encdec.decode_step_paged is deprecated; use "
+                  "encdec.paged_decode or the models.api.PagedModel "
+                  "protocol", DeprecationWarning, stacklevel=2)
+    return paged_decode(params, tokens, kv_state, xk, xv, page_table,
+                        positions, seq_lens, cfg, dist, kv_fmt=kv_fmt,
+                        acc=acc, oracle=oracle)
 
 
 def decode_step(params, tokens, state, pos, cfg: ModelConfig,

@@ -480,6 +480,75 @@ def attn_prefill_chunk_paged(
     return dense(o, p["wo"], cfg.quant.attn_out), new_kv
 
 
+def attn_prefill_bucketed(
+    p: Params,
+    x: jnp.ndarray,
+    kv: dict[str, jnp.ndarray],
+    page_row: jnp.ndarray,
+    slab_page_ids: jnp.ndarray,
+    q_offset,
+    q_len,
+    cfg: ModelConfig,
+    dist: Dist,
+    *,
+    kv_fmt,
+    acc: tuple[int, int],
+    block_q: int | None = None,
+    call=None,
+) -> tuple[jnp.ndarray, dict[str, jnp.ndarray]]:
+    """One bucket-shaped prefill slab of ONE sequence through a layer —
+    the single-compile replacement for the history-gather + two-call
+    ``attn_prefill_chunk_paged`` walk.
+
+    ``x`` (1, T, D) is the slab padded to the bucket's fixed slab width;
+    ``q_offset``/``q_len`` are TRACED int32 scalars (absolute start, live
+    rows), so every slab of every prompt in the bucket — first, middle,
+    ragged last, post-preemption restore — reuses one compiled instance.
+    ``page_row`` (max_pages,) is the sequence's full page row padded to
+    the bucket width; ``slab_page_ids`` the slab's own (padded) pages.
+
+    The slab's K/V are quantized into ``slab_page_ids`` byte-identically
+    to the unpadded walk: rows ``>= q_len`` are zeroed before the write
+    (``write_prompt`` zero-fills the ragged tail internally, so the
+    padded slab reproduces the exact tail-page bytes), padded page slots
+    point at the reserved null page, and zero blocks encode to scale
+    exponent 0 + code 0 — the null page's existing dead bytes.  Then one
+    ``flash_prefill_paged`` call walks history AND slab straight off the
+    post-write arena (history pages were written by earlier slabs with
+    the same per-page scale grouping), per query row the same page-size
+    blocks in the same order with the same carry rounding as a one-shot
+    prefill — bit-identical outputs, arena and decode stream."""
+    from repro.kernels.attention import flash_prefill_paged
+    from repro.kernels.autotune import attn_blocks_for
+    from repro.serve import kvcache as KV
+
+    t = x.shape[1]
+    page_size = kv["k"].shape[2]
+    q_offset = jnp.asarray(q_offset, jnp.int32)
+    q_len = jnp.asarray(q_len, jnp.int32)
+    positions = (q_offset + jnp.arange(t, dtype=jnp.int32))[None]
+    q = _q_proj(p, x, cfg, positions)  # (1, T, H, dh)
+    k, v = _kv_proj(p, x, cfg, positions)
+    live = (jnp.arange(t, dtype=jnp.int32) < q_len)[:, None, None]
+    kf = jnp.where(live, k[0].astype(jnp.float32), 0.0)
+    vf = jnp.where(live, v[0].astype(jnp.float32), 0.0)
+    kk, kse, _ = KV.write_prompt(kv["k"], kv["k_se"], kf, slab_page_ids,
+                                 kv_fmt)
+    vv, vse, _ = KV.write_prompt(kv["v"], kv["v_se"], vf, slab_page_ids,
+                                 kv_fmt)
+    if call is None and block_q is None:
+        block_q = attn_blocks_for(t, cfg.n_heads, cfg.head_dim, page_size,
+                                  e_acc=acc[0], m_acc=acc[1], kv_fmt=kv_fmt,
+                                  max_pages=int(page_row.shape[0]))
+    o = flash_prefill_paged(q[0].astype(jnp.float32), kk, vv, kse, vse,
+                            page_row, q_offset, q_len, q_offset + q_len,
+                            kv_fmt=kv_fmt, acc=acc, block_q=block_q or 128,
+                            call=call)
+    o = o.reshape(1, t, -1).astype(COMPUTE_DTYPE)
+    new_kv = {"k": kk, "v": vv, "k_se": kse, "v_se": vse}
+    return dense(o, p["wo"], cfg.quant.attn_out), new_kv
+
+
 # --------------------------------------------------------------------------
 # MLP (SwiGLU)
 # --------------------------------------------------------------------------

@@ -9,6 +9,7 @@ after every k SSM layers — is a python loop of scanned sub-stacks.
 from __future__ import annotations
 
 import functools
+import warnings
 from typing import Any
 
 import jax
@@ -376,17 +377,15 @@ def _check_paged(cfg: ModelConfig) -> None:
 
 def init_paged_state(cfg: ModelConfig, *, n_pages: int, page_size: int,
                      kv_fmt=None) -> dict:
-    """The paged-KV arena for every attention layer (repro.serve.kvcache
-    layout; layer axis leading so the decode scan carries slices as xs)."""
-    from repro.serve.kvcache import PagedKVConfig, init_arena
+    """Deprecated: use ``models.api.paged_init_state`` (family-agnostic)."""
+    from repro.models.api import paged_init_state  # late: api imports lm
 
     _check_paged(cfg)
-    pc = PagedKVConfig.for_model(cfg, n_pages=n_pages, page_size=page_size,
-                                 kv_fmt=kv_fmt)
-    return init_arena(pc)
+    return paged_init_state(cfg, n_pages=n_pages, page_size=page_size,
+                            kv_fmt=kv_fmt)
 
 
-def decode_step_paged(
+def paged_decode(
     params: Params,
     tokens: jnp.ndarray,   # (B, 1) int32
     kv_state: dict,        # arena pytree, leading layer axis
@@ -429,87 +428,53 @@ def decode_step_paged(
     return logits, new_kv
 
 
-def prefill_paged(
+def paged_prefill(
     params: Params,
-    tokens: jnp.ndarray,    # (1, S) int32 — one sequence (admission unit)
+    tokens: jnp.ndarray,         # (1, T) int32 — slab, padded to T
     kv_state: dict,
-    page_ids: jnp.ndarray,  # (n_pages,) int32 — this sequence's pages
+    page_row: jnp.ndarray,       # (max_pages,) int32 — full row, padded
+    slab_page_ids: jnp.ndarray,  # (n_slab,) int32 — this slab's pages
+    q_offset,                    # traced int32 — absolute slab start
+    q_len,                       # traced int32 — live rows in the slab
     cfg: ModelConfig,
     dist: L.Dist = L.LOCAL,
     *,
     kv_fmt,
     acc: tuple[int, int],
     block_q: int | None = None,
-) -> tuple[jnp.ndarray, dict]:
-    """Prefill one admitted sequence: causal flash attention over the
-    prompt (page-size chunked carry) with each layer's K/V quantized into
-    its pages — decode continues from exactly the history prefill attended
-    to.  Returns (last-position logits (1, V), new arena)."""
-    _check_paged(cfg)
-    b, s = tokens.shape
-    if b != 1:
-        raise ValueError("prefill is per admitted sequence (B = 1)")
-    x = params["embed"][tokens].astype(L.COMPUTE_DTYPE)
-    x = L._constrain(x, dist, P(dist.data_axes, None, None))
-    positions = jnp.arange(s, dtype=jnp.int32)[None]
-
-    def body(carry, inp):
-        lp, kvl = inp
-        h, nkv = L.attn_prefill_paged(
-            lp["attn"], L.rms_norm(carry, lp["ln1"], cfg.norm_eps), kvl,
-            page_ids, positions, cfg, dist,
-            kv_fmt=kv_fmt, acc=acc, block_q=block_q)
-        carry = carry + h
-        z = L.rms_norm(carry, lp["ln2"], cfg.norm_eps)
-        if cfg.moe is not None and "moe" in lp:
-            f, _ = L.moe_apply(lp["moe"], z, cfg, dist)
-        else:
-            f = L.mlp_apply(lp["mlp"], z, cfg)
-        return carry + f, nkv
-
-    x, new_kv = scan_util.scan(body, x, (params["layers"], kv_state))
-    logits = _unembed(params, x[:, -1:], cfg, dist)[:, 0]
-    return logits, new_kv
-
-
-def prefill_chunk_paged(
-    params: Params,
-    tokens: jnp.ndarray,        # (1, T) int32 — one slab of one sequence
-    kv_state: dict,
-    hist_page_ids: jnp.ndarray,  # (n_hist,) int32 — pages holding [0, t0)
-    slab_page_ids: jnp.ndarray,  # (n_slab,) int32 — this slab's fresh pages
-    cfg: ModelConfig,
-    dist: L.Dist = L.LOCAL,
-    *,
-    t0: int,                    # absolute offset of the slab (page-aligned)
-    kv_fmt,
-    acc: tuple[int, int],
-    block_q: int | None = None,
+    call=None,
     want_logits: bool = True,
 ) -> tuple[jnp.ndarray | None, dict]:
-    """One chunked-prefill slab: prompt tokens ``[t0, t0 + T)`` flow
-    through the stack, each layer quantizing the slab's K/V into its fresh
-    pages and attending the page history via the resumable-carry flash
-    kernel (``layers.attn_prefill_chunk_paged``).  Driving every slab of a
-    prompt through this (``t0 = 0, C, 2C, ...``) is bit-identical to one
-    ``prefill_paged`` call — same arena bytes, same final logits — which
-    is what lets the serve engine interleave prefill slabs with batched
-    decode (and preempt/resume a sequence between slabs) without touching
-    the numerics.  ``want_logits=False`` skips the unembed on non-final
-    slabs.  Returns (last-position logits (1, V) or None, new arena)."""
+    """THE paged prefill: one bucket-shaped slab of one sequence through
+    the stack, each layer quantizing the slab's K/V into its pages and
+    attending history + slab in a single ``flash_prefill_paged`` pass over
+    the post-write arena (``layers.attn_prefill_bucketed``).
+
+    Geometry is traced: ``q_offset``/``q_len`` are int32 operands, the
+    page row is padded to the bucket width, padding rows/pages are
+    byte-neutral (zeros into the reserved null page).  One compiled
+    instance therefore serves every slab — first, middle, ragged last,
+    one-shot (``q_offset=0``), post-preemption restore — of every prompt
+    in the bucket.  Walking a prompt slab-by-slab is bit-identical to one
+    whole-prompt call: same arena bytes, same logits (pinned by
+    ``tests/test_serve.py``).  ``want_logits`` unembeds the row at
+    ``q_len - 1`` (the last live row) only on the final slab.
+
+    Returns (logits (1, V) or None, new arena)."""
     _check_paged(cfg)
-    b, s = tokens.shape
+    b, t = tokens.shape
     if b != 1:
         raise ValueError("prefill is per admitted sequence (B = 1)")
+    q_len = jnp.asarray(q_len, jnp.int32)
     x = params["embed"][tokens].astype(L.COMPUTE_DTYPE)
     x = L._constrain(x, dist, P(dist.data_axes, None, None))
 
     def body(carry, inp):
         lp, kvl = inp
-        h, nkv = L.attn_prefill_chunk_paged(
+        h, nkv = L.attn_prefill_bucketed(
             lp["attn"], L.rms_norm(carry, lp["ln1"], cfg.norm_eps), kvl,
-            hist_page_ids, slab_page_ids, t0, cfg, dist,
-            kv_fmt=kv_fmt, acc=acc, block_q=block_q)
+            page_row, slab_page_ids, q_offset, q_len, cfg, dist,
+            kv_fmt=kv_fmt, acc=acc, block_q=block_q, call=call)
         carry = carry + h
         z = L.rms_norm(carry, lp["ln2"], cfg.norm_eps)
         if cfg.moe is not None and "moe" in lp:
@@ -521,5 +486,55 @@ def prefill_chunk_paged(
     x, new_kv = scan_util.scan(body, x, (params["layers"], kv_state))
     if not want_logits:
         return None, new_kv
-    logits = _unembed(params, x[:, -1:], cfg, dist)[:, 0]
+    last = jax.lax.dynamic_slice_in_dim(
+        x, jnp.maximum(q_len - 1, 0), 1, axis=1)
+    logits = _unembed(params, last, cfg, dist)[:, 0]
     return logits, new_kv
+
+
+# -- legacy entry points (thin deprecation shims over the unified pair) ----
+
+
+def decode_step_paged(params, tokens, kv_state, page_table, positions,
+                      seq_lens, cfg, dist=L.LOCAL, *, kv_fmt, acc,
+                      oracle=False):
+    """Deprecated: use ``paged_decode`` (same signature) or drive the
+    ``models.api.PagedModel`` protocol."""
+    warnings.warn("decode_step_paged is deprecated; use lm.paged_decode or "
+                  "the models.api.PagedModel protocol",
+                  DeprecationWarning, stacklevel=2)
+    return paged_decode(params, tokens, kv_state, page_table, positions,
+                        seq_lens, cfg, dist, kv_fmt=kv_fmt, acc=acc,
+                        oracle=oracle)
+
+
+def prefill_paged(params, tokens, kv_state, page_ids, cfg, dist=L.LOCAL, *,
+                  kv_fmt, acc, block_q=None):
+    """Deprecated: one-shot prefill is ``paged_prefill`` with the whole
+    prompt as a single slab (``q_offset=0``, ``q_len=S``)."""
+    warnings.warn("prefill_paged is deprecated; use lm.paged_prefill or the "
+                  "models.api.PagedModel protocol",
+                  DeprecationWarning, stacklevel=2)
+    s = tokens.shape[1]
+    return paged_prefill(params, tokens, kv_state, page_ids, page_ids,
+                         0, s, cfg, dist, kv_fmt=kv_fmt, acc=acc,
+                         block_q=block_q)
+
+
+def prefill_chunk_paged(params, tokens, kv_state, hist_page_ids,
+                        slab_page_ids, cfg, dist=L.LOCAL, *, t0, kv_fmt,
+                        acc, block_q=None, want_logits=True):
+    """Deprecated: a chunked slab is ``paged_prefill`` with
+    ``page_row = hist + slab`` and ``q_offset = t0``."""
+    warnings.warn("prefill_chunk_paged is deprecated; use lm.paged_prefill "
+                  "or the models.api.PagedModel protocol",
+                  DeprecationWarning, stacklevel=2)
+    s = tokens.shape[1]
+    page_size = kv_state["k"].shape[3]
+    if t0 % page_size != 0:
+        raise ValueError(f"slab offset {t0} not page-aligned ({page_size})")
+    page_row = jnp.concatenate([jnp.asarray(hist_page_ids, jnp.int32),
+                                jnp.asarray(slab_page_ids, jnp.int32)])
+    return paged_prefill(params, tokens, kv_state, page_row, slab_page_ids,
+                         t0, s, cfg, dist, kv_fmt=kv_fmt, acc=acc,
+                         block_q=block_q, want_logits=want_logits)

@@ -40,6 +40,9 @@ from repro.telemetry.stats import predicted_kernel_vrr
 __all__ = [
     "AttnBucket",
     "AttnPlan",
+    "certified_log_v",
+    "certification_stats",
+    "reset_certification_stats",
     "decode_m_acc",
     "min_e_acc",
     "max_carry_resumptions",
@@ -104,6 +107,26 @@ class AttnPlan:
                 bs[i] = replace(bs[i], m_acc=m)
         return replace(self, buckets=tuple(bs))
 
+    def kernel_call(self, index: int, *, h: int, dh: int, kv_fmt=None,
+                    slab_tokens: int | None = None, block_q: int | None = None):
+        """The bucket↔kernel-geometry contract: the ``AttnCall`` spec that
+        bucket ``index`` compiles ONE paged-prefill kernel for.  ``s`` is
+        the padded query-slab width (the plan's ``prefill_chunk`` when
+        chunked, else the bucket's ``max_ctx``), ``chunk`` the KV page
+        size, ``max_pages`` the bucket's padded page-row width — every
+        slab of every prompt landing in this bucket runs under exactly
+        this compiled signature."""
+        from repro.kernels.autotune import AttnCall
+
+        b = self.buckets[index]
+        s = slab_tokens if slab_tokens is not None else (
+            self.prefill_chunk or b.max_ctx)
+        return AttnCall(
+            s=s, h=h, dh=dh, chunk=self.page_size,
+            e_acc=b.e_acc, m_acc=b.m_acc, kv_fmt=kv_fmt,
+            max_pages=b.max_pages(self.page_size),
+            block_q=block_q or 0)
+
 
 def max_carry_resumptions(ctx: int, prefill_chunk: int | None) -> int:
     """Worst-case number of chunked-prefill carry hand-offs for a
@@ -132,6 +155,57 @@ def extra_carry_events(page_size: int, prefill_chunk: int | None,
     return 0 if prefill_chunk % page_size == 0 else resumptions
 
 
+# --------------------------------------------------------------------------
+# memoized knee certification — one evaluation per (bucket geometry, width)
+# --------------------------------------------------------------------------
+#
+# Certification is a pure function of the BUCKET geometry, not of the live
+# context: every sequence in a bucket shares (max_ctx, m_acc, m_p,
+# page_size, resumption count), so the serve-time monitor and the planner's
+# width search must evaluate the knee test O(#buckets) times total — not
+# once per monitored decode step.  The memo is process-wide (the knee test
+# has no state) and its hit/evaluation counters are exported so a
+# regression test can pin the O(#buckets) property over a whole fuzz run.
+
+_CERT_MEMO: dict[tuple, float] = {}
+_CERT_STATS = {"evaluations": 0, "hits": 0}
+
+
+def certified_log_v(m_acc: int, m_p: int, page_size: int, max_ctx: int,
+                    extra_events: int = 0) -> float:
+    """The knee-test statistic ``v = n2 * (1 - VRR)`` for a bucket-wide
+    worst case: ``n2`` blocks at the bucket's ``max_ctx`` plus any carry
+    roundings from chunked-prefill resumption.  Memoized on the full
+    geometry key — certifying a bucket twice is a cache hit, so a serve
+    process evaluates the closed form once per (bucket, resumption_count)
+    no matter how many sequences or monitor ticks pass through it."""
+    key = (m_acc, m_p, page_size, max_ctx, extra_events)
+    hit = _CERT_MEMO.get(key)
+    if hit is not None:
+        _CERT_STATS["hits"] += 1
+        return hit
+    _CERT_STATS["evaluations"] += 1
+    n2 = max(-(-max_ctx // page_size), 1) + max(extra_events, 0)
+    v = 0.0 if n2 <= 1 else n2 * (1.0 - predicted_kernel_vrr(
+        m_acc, m_p, page_size, n2))
+    _CERT_MEMO[key] = v
+    return v
+
+
+def certification_stats() -> dict:
+    """Copy of the knee-certification memo counters
+    (``evaluations`` = closed-form computations, ``hits`` = memo hits)."""
+    return dict(_CERT_STATS)
+
+
+def reset_certification_stats() -> None:
+    """Zero the counters AND drop the memo (so a test observes cold-start
+    evaluation counts, not a previous test's warm cache)."""
+    _CERT_MEMO.clear()
+    _CERT_STATS["evaluations"] = 0
+    _CERT_STATS["hits"] = 0
+
+
 def decode_m_acc(ctx: int, page_size: int, m_p: int, *,
                  extra_events: int = 0,
                  cutoff: float = CUTOFF_LOG_V) -> int:
@@ -144,8 +218,7 @@ def decode_m_acc(ctx: int, page_size: int, m_p: int, *,
     if n2 <= 1:
         return m_p  # a single block never rounds the carry mid-sum
     for m in range(m_p, _M_ACC_MAX + 1):
-        v = n2 * (1.0 - predicted_kernel_vrr(m, m_p, page_size, n2))
-        if v < cutoff:
+        if certified_log_v(m, m_p, page_size, ctx, extra_events) < cutoff:
             return m
     return _M_ACC_MAX
 

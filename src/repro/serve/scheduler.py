@@ -81,7 +81,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.vrr import CUTOFF_LOG_V
-from repro.models import lm
+from repro.models.api import DecodeRequest, PrefillRequest, get_paged_model
 from repro.models.layers import LOCAL, Dist
 from repro.quant.formats import FPFormat
 from repro.serve.kvcache import (
@@ -92,7 +92,12 @@ from repro.serve.kvcache import (
     swap_in_pages,
     swap_out_pages,
 )
-from repro.serve.plan import AttnPlan, plan_attention
+from repro.serve.plan import (
+    AttnPlan,
+    certified_log_v,
+    extra_carry_events,
+    plan_attention,
+)
 from repro.telemetry.stats import EnsembleStats
 
 __all__ = ["Request", "ModelExecutor", "ServeEngine", "measure_decode_vrr"]
@@ -160,13 +165,34 @@ def measure_decode_vrr(kv_state, page_row: np.ndarray,
     return EnsembleStats.from_raw(np.asarray(raw))
 
 
+# One compile cache per serve PROCESS, not per engine: tearing an engine
+# down and constructing another with the same configuration (the bench's
+# cold/warm pair, a restarted loop, tests sharing a model) re-uses every
+# jitted executable instead of re-tracing.  Keyed on everything the traced
+# computation closes over (config, formats, dist, padding widths);
+# params/arena are operands, so engines with different weights share
+# executables safely.  An unhashable configuration falls back to a private
+# per-executor cache — sharing is lost, correctness is not.
+_PROCESS_CACHE: dict = {}
+
+
+def _fresh_cache_entry() -> dict:
+    return {"fns": {}, "stats": {"compiles": 0, "hits": 0, "misses": 0,
+                                 "warm_compiles": 0}}
+
+
 class ModelExecutor:
-    """Device-side executor: the real model + paged arena + jit caches.
+    """Device-side executor: the real model + paged arena + compile cache.
 
     The engine core schedules in plain python (pages, slabs, victims); this
     class is the only place device work happens, which is also the seam the
     deterministic simulation executor (``repro.serve.sim.SimExecutor``)
-    plugs into.
+    plugs into.  Both sides speak ONLY the ``repro.models.api`` paged
+    protocol: ``prefill(PrefillRequest)`` / ``decode(DecodeRequest)``
+    against a ``PagedModel``, with a process-wide compile cache whose
+    jitted entries count their own traces — ``compile_stats()`` exposes
+    compiles / dispatch hits / misses / warmup compiles, and the serve
+    bench gates steady-state compiles at zero.
     """
 
     def __init__(self, model, params, pc: PagedKVConfig, *,
@@ -181,65 +207,164 @@ class ModelExecutor:
         self.oracle = oracle
         self.max_batch = max_batch
         self.kv = init_arena(pc)
-        self._jit_cache: dict = {}
+        self.pm = get_paged_model(model.cfg)
+        key = ("model-executor", self.cfg, kv_fmt, dist, oracle, max_batch,
+               pc)
+        try:
+            entry = _PROCESS_CACHE.get(key)
+            if entry is None:
+                entry = _PROCESS_CACHE[key] = _fresh_cache_entry()
+        except TypeError:  # unhashable config: private, unshared cache
+            entry = _fresh_cache_entry()
+        self._cache = entry
 
     # ------------------------------ jit fns --------------------------------
+    def _jit(self, key, fn, **jit_kw):
+        """Memoized jit whose wrapped python body counts its own traces:
+        the body runs exactly once per compiled signature (jax re-enters
+        it only to trace), so ``stats["compiles"]`` is the compile count —
+        including shape-driven retraces the key did not anticipate."""
+        fns = self._cache["fns"]
+        hit = fns.get(key)
+        if hit is None:
+            stats = self._cache["stats"]
+
+            def counted(*a, **kw):
+                stats["compiles"] += 1
+                return fn(*a, **kw)
+
+            hit = fns[key] = jax.jit(counted, **jit_kw)
+        return hit
+
     def _decode_fn(self, acc: tuple[int, int]):
-        key = ("decode", acc, self.oracle)
-        if key not in self._jit_cache:
-            import functools
+        import functools
 
-            self._jit_cache[key] = jax.jit(functools.partial(
-                lm.decode_step_paged, cfg=self.cfg, dist=self.dist,
-                kv_fmt=self.kv_fmt, acc=acc, oracle=self.oracle))
-        return self._jit_cache[key]
+        return self._jit(
+            ("decode", acc, self.oracle),
+            functools.partial(self.pm.decode, dist=self.dist,
+                              kv_fmt=self.kv_fmt, acc=acc,
+                              oracle=self.oracle))
 
-    def _prefill_fn(self, acc: tuple[int, int], final: bool):
-        key = ("prefill", acc, final)
-        if key not in self._jit_cache:
-            import functools
+    def _prefill_fn(self, acc: tuple[int, int], final: bool, call=None):
+        # q_offset/q_len ride as traced int32 operands (no static_argnames):
+        # every slab of every prompt in a bucket hits ONE compiled signature
+        import functools
 
-            self._jit_cache[key] = jax.jit(
-                functools.partial(
-                    lm.prefill_chunk_paged, cfg=self.cfg, dist=self.dist,
-                    kv_fmt=self.kv_fmt, acc=acc, want_logits=final),
-                static_argnames=("t0",))
-        return self._jit_cache[key]
+        key = (("prefill", call.static_signature(), final)
+               if call is not None else ("prefill", acc, final))
+        return self._jit(
+            key,
+            functools.partial(self.pm.prefill, dist=self.dist,
+                              kv_fmt=self.kv_fmt, acc=acc, call=call,
+                              want_logits=final))
+
+    def _count_dispatch(self, before: int) -> None:
+        stats = self._cache["stats"]
+        if stats["compiles"] == before:
+            stats["hits"] += 1
+        else:
+            stats["misses"] += 1
 
     # ------------------------------ engine ops -----------------------------
-    def prefill_chunk(self, rid: int, slab_tokens: list[int],
-                      hist_pages: list[int], slab_pages: list[int],
-                      t0: int, acc: tuple[int, int],
-                      final: bool) -> int | None:
+    def prefill(self, req: PrefillRequest) -> int | None:
         """Run one prefill slab; returns the first generated token on the
-        final slab (greedy argmax of the last-position logits)."""
-        logits, self.kv = self._prefill_fn(acc, final)(
-            self.params, jnp.asarray([slab_tokens], jnp.int32), self.kv,
-            jnp.asarray(hist_pages, jnp.int32),
-            jnp.asarray(slab_pages, jnp.int32), t0=t0)
-        return int(jnp.argmax(logits[0])) if final else None
+        final slab (greedy argmax of the last LIVE position's logits).
 
-    def decode(self, rids: list[int], last_tokens: list[int],
-               page_table: np.ndarray, positions: list[int],
-               seq_lens: list[int], acc: tuple[int, int]) -> list[int]:
+        Bucketed requests are padded to the bucket's compiled geometry:
+        tokens to ``slab_width`` (zeros past ``q_len`` — projections are
+        value-wise and the padded K/V rows are zeroed before the arena
+        write, so the padding is byte-neutral), the page row to
+        ``bucket_pages`` and the slab pages to the padded slab's page
+        count (entry 0 = the reserved null page, never read under the
+        kernel's ``q_len``/``kv_len`` mask)."""
+        stats = self._cache["stats"]
+        before = stats["compiles"]
+        page_size = self.pc.page_size
+        n_tok = len(req.tokens)
+        width = req.slab_width or n_tok
+        toks = np.zeros((1, width), np.int32)
+        toks[0, :n_tok] = req.tokens
+        n_hist = len(req.hist_pages)
+        n_slab = -(-width // page_size)
+        slab = np.zeros((n_slab,), np.int32)
+        slab[:len(req.slab_pages)] = req.slab_pages
+        row = np.zeros((req.bucket_pages or (n_hist + n_slab),), np.int32)
+        row[:n_hist] = req.hist_pages
+        row[n_hist:n_hist + len(req.slab_pages)] = req.slab_pages
+        logits, self.kv = self._prefill_fn(req.acc, req.final, req.call)(
+            self.params, jnp.asarray(toks), self.kv, jnp.asarray(row),
+            jnp.asarray(slab), jnp.int32(req.t0), jnp.int32(n_tok))
+        self._count_dispatch(before)
+        return int(jnp.argmax(logits[0])) if req.final else None
+
+    def decode(self, req: DecodeRequest) -> list[int]:
         """One batched decode token per row; returns the next tokens."""
-        n, width = len(rids), page_table.shape[1]
+        stats = self._cache["stats"]
+        before = stats["compiles"]
+        pt_in = np.asarray(req.page_table, np.int32)
+        n, width = pt_in.shape
         # pad to max_batch so the jitted decode step keeps ONE shape per
         # (bucket, acc) as the active set breathes: padded rows are exact
         # no-ops (seq_len 0, null-page table row, write to page 0)
         pt = np.zeros((self.max_batch, width), np.int32)
-        pt[:n] = page_table
+        pt[:n] = pt_in
         tokens = np.zeros((self.max_batch, 1), np.int32)
-        tokens[:n, 0] = last_tokens
+        tokens[:n, 0] = req.last_tokens
         pos = np.zeros((self.max_batch,), np.int32)
-        pos[:n] = positions
+        pos[:n] = req.positions
         sl = np.zeros((self.max_batch,), np.int32)
-        sl[:n] = seq_lens
-        logits, self.kv = self._decode_fn(acc)(
+        sl[:n] = req.seq_lens
+        logits, self.kv = self._decode_fn(req.acc)(
             self.params, jnp.asarray(tokens), self.kv, jnp.asarray(pt),
             jnp.asarray(pos), jnp.asarray(sl))
+        self._count_dispatch(before)
         return [int(t) for t in np.asarray(
             jnp.argmax(logits[:n, 0], axis=-1))]
+
+    # ------------------------------ warmup ---------------------------------
+    def warmup(self, plan: AttnPlan,
+               prefill_chunk: int | None = None) -> dict:
+        """Compile every certified bucket's kernels before traffic arrives
+        (the ``warmup_gemm_autotune`` posture applied to serve compiles):
+        for each bucket, the padded decode step and the padded prefill
+        slab — final and, for multi-slab prompts, non-final — are CALLED
+        on dummy operands with the exact shapes/dtypes the engine will
+        use, because only a real call populates jit's dispatch cache (AOT
+        lowering does not).  Outputs are discarded, so the arena is
+        untouched.  After this, steady-state serving performs zero traces;
+        ``compile_stats()["warm_compiles"]`` records what warmup paid."""
+        stats = self._cache["stats"]
+        before = stats["compiles"]
+        page_size = self.pc.page_size
+        for i, b in enumerate(plan.buckets):
+            w = b.max_pages(page_size)
+            self._decode_fn(b.acc)(
+                self.params, jnp.zeros((self.max_batch, 1), jnp.int32),
+                self.kv, jnp.zeros((self.max_batch, w), jnp.int32),
+                jnp.zeros((self.max_batch,), jnp.int32),
+                jnp.zeros((self.max_batch,), jnp.int32))
+            slab_w = prefill_chunk or b.max_ctx
+            call = plan.kernel_call(i, h=self.cfg.n_heads,
+                                    dh=self.cfg.head_dim,
+                                    kv_fmt=self.kv_fmt, slab_tokens=slab_w)
+            finals = [True] + ([False] if prefill_chunk
+                               and b.max_ctx > prefill_chunk else [])
+            n_slab = -(-slab_w // page_size)
+            for final in finals:
+                self._prefill_fn(b.acc, final, call)(
+                    self.params, jnp.zeros((1, slab_w), jnp.int32),
+                    self.kv, jnp.zeros((w,), jnp.int32),
+                    jnp.zeros((n_slab,), jnp.int32),
+                    jnp.int32(0), jnp.int32(slab_w))
+        delta = stats["compiles"] - before
+        stats["warm_compiles"] += delta
+        return {"buckets": len(plan.buckets), "compiles": delta}
+
+    def compile_stats(self) -> dict:
+        """Copy of the process compile-cache counters: ``compiles`` (jit
+        traces), ``hits``/``misses`` (executor calls that did / did not
+        trace), ``warm_compiles`` (traces paid during ``warmup``)."""
+        return dict(self._cache["stats"])
 
     def swap_out(self, rid: int, pages: list[int]) -> dict:
         return swap_out_pages(self.kv, pages)
@@ -276,6 +401,7 @@ class ServeEngine:
         dist: Dist = LOCAL,
         seed: int = 0,
         executor=None,
+        warm_start: bool = False,
     ):
         if prefill_chunk_tokens is not None:
             if prefill_chunk_tokens <= 0 \
@@ -332,11 +458,26 @@ class ServeEngine:
         self.preemptions = 0
         self.restores = 0
         self.max_concurrent = 0
+        if warm_start:
+            self.warmup()
 
     @property
     def kv(self):
         """The executor's arena (compat accessor for benches/tests)."""
         return getattr(self.executor, "kv", None)
+
+    # ------------------------------ compile cache ---------------------------
+    def warmup(self) -> dict | None:
+        """Compile every certified bucket's prefill/decode kernels up front
+        so steady-state serving performs zero traces.  A no-op (returns
+        None) for executors without a compile cache, e.g. the sim."""
+        fn = getattr(self.executor, "warmup", None)
+        return fn(self.plan, self.prefill_chunk) if fn is not None else None
+
+    def compile_stats(self) -> dict | None:
+        """The executor's compile-cache counters (None for the sim)."""
+        fn = getattr(self.executor, "compile_stats", None)
+        return fn() if fn is not None else None
 
     # ------------------------------ intake ---------------------------------
     def submit(self, prompt: list[int], max_new: int) -> int:
@@ -497,10 +638,18 @@ class ServeEngine:
         final = t1 == seq.prompt_len
         # the slab runs at the FULL prompt's bucket — every query row's
         # carry format must match the one-shot walk for bit-exactness
-        _, bucket = self.plan.bucket_for(seq.prompt_len)
-        tok = self.executor.prefill_chunk(
-            rid, seq.tokens[t0:t1], pages[:n_hist], pages[n_hist:], t0,
-            bucket.acc, final)
+        bucket_i, bucket = self.plan.bucket_for(seq.prompt_len)
+        slab_w = self.prefill_chunk or bucket.max_ctx
+        call = (self.plan.kernel_call(
+                    bucket_i, h=self.cfg.n_heads, dh=self.cfg.head_dim,
+                    kv_fmt=self.kv_fmt, slab_tokens=slab_w)
+                if self.cfg is not None else None)
+        tok = self.executor.prefill(PrefillRequest(
+            rid=rid, tokens=tuple(seq.tokens[t0:t1]),
+            hist_pages=tuple(pages[:n_hist]),
+            slab_pages=tuple(pages[n_hist:]), t0=t0, acc=bucket.acc,
+            final=final, bucket_pages=bucket.max_pages(self.page_size),
+            slab_width=slab_w, call=call))
         seq.prefilled = t1
         self.prefill_slabs += 1
         if final:
@@ -530,9 +679,12 @@ class ServeEngine:
             max(self.pool.seq_len(s.rid) for s in batch))
         width = bucket.max_pages(self.page_size)
         pt = self.pool.page_table([s.rid for s in batch], width)
-        next_toks = self.executor.decode(
-            [s.rid for s in batch], [s.tokens[-1] for s in batch], pt,
-            [s.pos for s in batch], [s.pos + 1 for s in batch], bucket.acc)
+        next_toks = self.executor.decode(DecodeRequest(
+            rids=tuple(s.rid for s in batch),
+            last_tokens=tuple(s.tokens[-1] for s in batch),
+            page_table=tuple(tuple(r) for r in pt.tolist()),
+            positions=tuple(s.pos for s in batch),
+            seq_lens=tuple(s.pos + 1 for s in batch), acc=bucket.acc))
         finished = []
         for seq, tok in zip(batch, next_toks):
             seq.tokens.append(int(tok))
@@ -590,9 +742,15 @@ class ServeEngine:
         context swamp.  The bucket is keyed by the GROWN context length: a
         sequence that decodes past its admission bucket's edge is
         re-planned at the bucket its context is actually in, not the one
-        its original prompt length fell into."""
-        from repro.telemetry.stats import predicted_kernel_vrr
+        its original prompt length fell into.
 
+        The closed-form side runs through the MEMOIZED bucket-wide
+        certification (``plan.certified_log_v`` at the bucket's
+        ``max_ctx`` + its chunked-prefill carry events): v is monotone in
+        n2, so certifying the bucket's worst case covers the actual grown
+        context conservatively, and the knee test is evaluated once per
+        (bucket, resumption_count) per process — not once per monitor
+        tick."""
         running = [r for r, s in self.active.items() if not s.in_prefill]
         if not running:
             return
@@ -605,8 +763,10 @@ class ServeEngine:
             self.pool.page_table([sid], width)[0], ctx, bucket.acc, sub)
         n2 = -(-ctx // self.page_size)
         swamp = float(stats.swamp_rate)
-        v_pred = n2 * (1.0 - predicted_kernel_vrr(
-            bucket.m_acc, self.plan.m_p, self.page_size, n2))
+        v_pred = certified_log_v(
+            bucket.m_acc, self.plan.m_p, self.page_size, bucket.max_ctx,
+            extra_carry_events(self.page_size, self.plan.prefill_chunk,
+                               bucket.resumptions))
         breach_m = swamp >= self.swamp_threshold
         breach_p = v_pred >= CUTOFF_LOG_V
         breach = breach_m or breach_p

@@ -105,27 +105,30 @@ class SimExecutor:
         self.reads_verified += n_tokens
 
     # ------------------------------ engine ops -----------------------------
-    def prefill_chunk(self, rid: int, slab_tokens: list[int],
-                      hist_pages: list[int], slab_pages: list[int],
-                      t0: int, acc: tuple[int, int],
-                      final: bool) -> int | None:
-        self._verify(rid, list(hist_pages), t0, where="prefill history")
-        for j in range(len(slab_tokens)):
-            pg = int(slab_pages[j // self.page_size])
-            self.pages[pg, j % self.page_size] = _stamp(rid, t0 + j)
-        return self.next_token(rid, t0 + len(slab_tokens)) if final else None
+    # The seam speaks the ``repro.models.api`` paged protocol — the SAME
+    # PrefillRequest/DecodeRequest objects ModelExecutor receives — so the
+    # fuzz suite exercises the scheduler's real request construction.  The
+    # sim ignores the bucket-padding fields (bucket_pages/slab_width/call):
+    # it has no compiled shapes to keep stable, and stamping only the live
+    # tokens is exactly what the padded device path writes.
+    def prefill(self, req) -> int | None:
+        self._verify(req.rid, list(req.hist_pages), req.t0,
+                     where="prefill history")
+        for j in range(len(req.tokens)):
+            pg = int(req.slab_pages[j // self.page_size])
+            self.pages[pg, j % self.page_size] = _stamp(req.rid, req.t0 + j)
+        return (self.next_token(req.rid, req.t0 + len(req.tokens))
+                if req.final else None)
 
-    def decode(self, rids: list[int], last_tokens: list[int],
-               page_table: np.ndarray, positions: list[int],
-               seq_lens: list[int], acc: tuple[int, int]) -> list[int]:
+    def decode(self, req) -> list[int]:
         out = []
-        for i, rid in enumerate(rids):
-            pos = int(positions[i])
-            row = page_table[i]
+        for i, rid in enumerate(req.rids):
+            pos = int(req.positions[i])
+            row = req.page_table[i]
             self.pages[int(row[pos // self.page_size]),
                        pos % self.page_size] = _stamp(rid, pos)
-            self._verify(rid, row, int(seq_lens[i]), where="decode")
-            out.append(self.next_token(rid, int(seq_lens[i])))
+            self._verify(rid, row, int(req.seq_lens[i]), where="decode")
+            out.append(self.next_token(rid, int(req.seq_lens[i])))
         return out
 
     def swap_out(self, rid: int, pages: list[int]) -> dict:
