@@ -35,6 +35,9 @@ from __future__ import annotations
 
 import functools
 import json
+import os
+import subprocess
+import sys
 import time
 
 import jax
@@ -164,6 +167,91 @@ def _cold_vs_warm(model, params) -> dict:
     }
 
 
+# sharded scenario: must run in a subprocess — the forced-host device
+# count is fixed at jax import, and this process needs its real single
+# device for every other scenario
+_SHARDED_SHARDS = 4
+_SHARDED_CHILD = """
+import dataclasses, json, jax, numpy as np
+from repro.configs import get_smoke_config
+from repro.models.api import get_model
+from repro.quant.formats import FPFormat
+from repro.serve.kvcache import PagedKVConfig
+from repro.serve.plan import plan_attention
+from repro.serve.scheduler import ModelExecutor, ServeEngine, ShardedModelExecutor
+
+S = %(shards)d
+# the smoke config's 4 q / 2 kv heads cannot split 4 ways
+cfg = dataclasses.replace(get_smoke_config("qwen2-1.5b"),
+                          n_heads=8, n_kv_heads=4)
+model = get_model(cfg)
+params = model.init_params(jax.random.PRNGKey(0))
+kv_fmt = FPFormat(e=5, m=2)
+N_PAGES, PAGE = 16, 4
+pc = PagedKVConfig.for_model(cfg, n_pages=N_PAGES, page_size=PAGE,
+                             kv_fmt=kv_fmt)
+prompts = [list(np.random.RandomState(s).randint(1, cfg.vocab_size, n))
+           for s, n in ((1, 5), (2, 9))]
+plan = plan_attention((N_PAGES - 1) * PAGE, PAGE, prefill_chunk_tokens=PAGE,
+                      tp_shards=S)
+
+def drive(executor):
+    eng = ServeEngine(model, params, n_pages=N_PAGES, page_size=PAGE,
+                      max_batch=2, executor=executor, plan=plan,
+                      prefill_chunk_tokens=PAGE)
+    eng.warmup()
+    warm = eng.compile_stats()["compiles"]
+    rids = [eng.submit(p, 4) for p in prompts]
+    streams = eng.run()
+    out = {r: streams[r] for r in rids}
+    steady = eng.compile_stats()["compiles"] - warm
+    return eng, out, steady
+
+eng1, out1, _ = drive(ModelExecutor(model, params, pc, kv_fmt=kv_fmt,
+                                    max_batch=2))
+engS, outS, steadyS = drive(ShardedModelExecutor(model, params, pc,
+                                                 kv_fmt=kv_fmt, n_shards=S,
+                                                 max_batch=2))
+parity = out1 == outS and all(
+    np.array_equal(np.asarray(eng1.kv[k]), np.asarray(engS.kv[k]))
+    for k in ("k", "v", "k_se", "v_se"))
+engS.pool.check_invariants()
+print("SHARDED_JSON: " + json.dumps({
+    "shards": S,
+    "parity": bool(parity),
+    "warm_steady_compiles_sharded": int(steadyS),
+    "kv_bytes_per_token": round(engS.kv_bytes_per_token(), 1),
+    "kv_bytes_per_token_per_shard": round(
+        engS.kv_bytes_per_token(per_shard=True), 1),
+    "utilization_single": round(eng1.utilization(), 4),
+    "utilization_sharded": round(engS.utilization(), 4),
+}))
+"""
+
+
+def _sharded_scenario() -> dict:
+    """1-vs-N-shard parity + per-shard KV accounting on a forced-host
+    mesh of _SHARDED_SHARDS devices (see _SHARDED_CHILD); returns the
+    child's JSON record."""
+    src = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "src")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    env["XLA_FLAGS"] = (
+        f"--xla_force_host_platform_device_count={_SHARDED_SHARDS} "
+        + env.get("XLA_FLAGS", ""))
+    out = subprocess.run(
+        [sys.executable, "-c", _SHARDED_CHILD % {"shards": _SHARDED_SHARDS}],
+        capture_output=True, text=True, env=env, timeout=1200)
+    if out.returncode != 0:
+        raise RuntimeError(
+            f"sharded scenario child failed:\n{out.stdout}\n{out.stderr}")
+    for line in out.stdout.splitlines():
+        if line.startswith("SHARDED_JSON: "):
+            return json.loads(line[len("SHARDED_JSON: "):])
+    raise RuntimeError(f"sharded scenario emitted no record:\n{out.stdout}")
+
+
 def run(json_path: str = "BENCH_serve.json") -> dict:
     cfg = get_smoke_config("qwen2-1.5b")
     model = get_model(cfg)
@@ -198,6 +286,7 @@ def run(json_path: str = "BENCH_serve.json") -> dict:
     # metadata, a different scale layout or swap-time repacking would move
     # this number (swap blobs are transient HOST memory and don't count)
     kv_unchanged = abs(packed - KV_BYTES_PER_TOKEN_BASELINE) < 1e-6
+    sharded = _sharded_scenario()
 
     out = {
         "arch": cfg.name,
@@ -224,6 +313,7 @@ def run(json_path: str = "BENCH_serve.json") -> dict:
         "kv_compression_vs_f32": round(f32 / packed, 3),
         "kv_compression_vs_bf16": round(bf16 / packed, 3),
         "logit_exact_vs_f32_oracle": exact,
+        "sharded": sharded,
         "monitor_events": eng.events,
         "generated": {int(r): results[r] for r in rids},
     }
@@ -243,6 +333,10 @@ def run(json_path: str = "BENCH_serve.json") -> dict:
         print(f"  {k:34s} {v}")
     print("### bursty-arrival scheduler comparison (virtual clock)")
     for k, v in bursty.items():
+        print(f"  {k:34s} {v}")
+    print(f"### sharded serving (1 vs {sharded['shards']} shards, "
+          "forced-host mesh; parity is bitwise)")
+    for k, v in sharded.items():
         print(f"  {k:34s} {v}")
 
     if json_path:

@@ -85,6 +85,9 @@ __all__ = [
     "flash_prefill_paged_reference",
     "paged_attn_decode",
     "paged_attn_decode_reference",
+    "psum_carry",
+    "merge_carries",
+    "finalize_carry",
     "kernel_trace_counts",
     "reset_kernel_trace_counts",
     "NEG",
@@ -445,8 +448,9 @@ def _page_values(ref, se_ref, pid, *, packed, e_kv, m_kv):
 
 
 def _decode_kernel(pt_ref, sl_ref, kse_ref, vse_ref, q_ref, k_ref, v_ref,
-                   o_ref, oacc, mx, lx, *, packed, e_kv, m_kv, e_acc, m_acc,
-                   page_size, scale):
+                   *refs, packed, e_kv, m_kv, e_acc, m_acc,
+                   page_size, scale, emit_carry=False):
+    out_refs, (oacc, mx, lx) = refs[:-3], refs[-3:]
     b, p = pl.program_id(0), pl.program_id(2)
 
     @pl.when(p == 0)
@@ -479,7 +483,15 @@ def _decode_kernel(pt_ref, sl_ref, kse_ref, vse_ref, q_ref, k_ref, v_ref,
 
     @pl.when(p == pl.num_programs(2) - 1)
     def _emit():
-        o_ref[0, 0] = _finalize(oacc[...], lx[...])
+        if emit_carry:
+            # raw carry out: the cross-shard merge (psum_carry) owns the
+            # finalize — emitting (o, m, l) unfinalized keeps the merge an
+            # exact exponent-shift combine
+            out_refs[0][0, 0] = oacc[...]
+            out_refs[1][0, 0] = mx[...]
+            out_refs[2][0, 0] = lx[...]
+        else:
+            out_refs[0][0, 0] = _finalize(oacc[...], lx[...])
 
 
 def _decode_kernel_stats(pt_ref, sl_ref, kse_ref, vse_ref, q_ref, k_ref,
@@ -551,10 +563,11 @@ def _decode_kernel_stats(pt_ref, sl_ref, kse_ref, vse_ref, q_ref, k_ref,
 @functools.partial(
     jax.jit,
     static_argnames=("packed", "e_kv", "m_kv", "e_acc", "m_acc",
-                     "collect_stats", "interpret"),
+                     "collect_stats", "return_carry", "interpret"),
 )
 def _paged_decode(q4, k_pages, v_pages, k_se, v_se, page_table, seq_lens, *,
-                  packed, e_kv, m_kv, e_acc, m_acc, collect_stats, interpret):
+                  packed, e_kv, m_kv, e_acc, m_acc, collect_stats,
+                  return_carry, interpret):
     _count_trace("paged_attn_decode")
     b, kv, g, dh = q4.shape
     page_size = k_pages.shape[2]
@@ -602,6 +615,20 @@ def _paged_decode(q4, k_pages, v_pages, k_se, v_se, page_table, seq_lens, *,
         )(page_table, seq_lens, k_se, v_se, q4, k_pages, v_pages)
         return out, stats[0]
 
+    if return_carry:
+        c_spec = pl.BlockSpec((1, 1, g, 1),
+                              lambda bb, hk, p, pt, sl, ks, vs: (bb, hk, 0, 0))
+        c_shape = jax.ShapeDtypeStruct((b, kv, g, 1), jnp.float32)
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=4, grid=grid, in_specs=in_specs,
+            out_specs=[o_spec, c_spec, c_spec], scratch_shapes=scratch)
+        return pl.pallas_call(
+            functools.partial(_decode_kernel, emit_carry=True, **kw),
+            grid_spec=grid_spec,
+            out_shape=[o_shape, c_shape, c_shape],
+            interpret=interpret,
+        )(page_table, seq_lens, k_se, v_se, q4, k_pages, v_pages)
+
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=4, grid=grid, in_specs=in_specs,
         out_specs=o_spec, scratch_shapes=scratch)
@@ -626,6 +653,7 @@ def paged_attn_decode(
     kv_fmt=None,
     acc: tuple[int, int] = _WIDE,
     collect_stats: bool = False,
+    return_carry: bool = False,
     interpret: bool = INTERPRET,
 ):
     """One decode token of attention per sequence against the paged cache.
@@ -644,9 +672,15 @@ def paged_attn_decode(
       (``repro.serve.plan``); the page size is the chunk length n1.
     * ``collect_stats=True`` additionally returns the raw (N_STATS,)
       swamping vector over the output ensemble (see module docstring).
+    * ``return_carry=True`` skips the finalize and returns the raw
+      online-softmax carry ``(o (B,H,dh), m (B,H), l (B,H))`` — the
+      tensor-parallel merge combines per-shard carries with ``psum_carry``
+      and finalizes once, globally.
 
-    Returns (B, H, dh) f32 [, stats].
+    Returns (B, H, dh) f32 [, stats], or the carry triple.
     """
+    if collect_stats and return_carry:
+        raise ValueError("collect_stats and return_carry are exclusive")
     if q.ndim != 3:
         raise ValueError(f"q must be (B, H, dh), got {q.shape}")
     if k_pages.shape != v_pages.shape or k_pages.ndim != 4:
@@ -670,15 +704,21 @@ def paged_attn_decode(
         jnp.asarray(page_table, jnp.int32), jnp.asarray(seq_lens, jnp.int32),
         packed=packed, e_kv=int(e_kv), m_kv=int(m_kv),
         e_acc=int(e_acc), m_acc=int(m_acc),
-        collect_stats=collect_stats, interpret=interpret)
+        collect_stats=collect_stats, return_carry=return_carry,
+        interpret=interpret)
     if collect_stats:
         o, stats = out
         return o.reshape(b, h, dh), stats
+    if return_carry:
+        o, m, l = out
+        return (o.reshape(b, h, dh), m[..., 0].reshape(b, h),
+                l[..., 0].reshape(b, h))
     return out.reshape(b, h, dh)
 
 
 def paged_attn_decode_reference(q, k_pages, v_pages, k_se, v_se, page_table,
-                                seq_lens, *, kv_fmt=None, acc=_WIDE):
+                                seq_lens, *, kv_fmt=None, acc=_WIDE,
+                                return_carry=False):
     """Unfused jnp oracle for ``paged_attn_decode``: gathers pages through
     the page table with plain indexing, dequantizes with the per-page
     scales, and walks the pages in the same order with the same carry
@@ -713,7 +753,63 @@ def paged_attn_decode_reference(q, k_pages, v_pages, k_se, v_se, page_table,
         valid = tok < seq_lens[:, None, None, None]
         s = jnp.where(valid, s, NEG)
         o, m, l = _online_update(o, m, l, s, valid, vb, e_acc, m_acc)
+    if return_carry:
+        return (o.reshape(b, h, dh), m[..., 0].reshape(b, h),
+                l[..., 0].reshape(b, h))
     return _finalize(o, l).reshape(b, h, dh)
+
+
+# --------------------------------------------------------------------------
+# cross-shard carry merge (tensor-parallel serving)
+# --------------------------------------------------------------------------
+
+
+def psum_carry(o, m, l, axis_name):
+    """Merge per-shard online-softmax carries across a mesh axis.
+
+    ``o`` is ``(..., dh)``; ``m``/``l`` are ``o``'s shape minus the last
+    dim.  The global max ``m_g = pmax(m)`` stays on the integer lattice
+    (each shard's running max already is), so every rescale factor
+    ``alpha = 2^(m - m_g)`` is an exact power of two — the merge never
+    rounds a carry mantissa, the same discipline as the in-kernel rescale.
+
+    Head-sharded serving is the bit-exact special case: exactly one shard
+    holds a non-neutral carry per (row, head) and every other shard holds
+    the neutral element ``(o=0, m=NEG, l=0)``.  Then ``m_g`` is the
+    owner's max bit-for-bit, the owner's alpha is ``2^0 = 1.0``, a
+    non-owner's alpha is ``2^(NEG - m_g)`` which underflows to exactly
+    ``+0.0`` (finite ``NEG``, see above), and the psums add exact zeros —
+    the merged carry equals the owner's carry bitwise.
+    """
+    m_g = jax.lax.pmax(m, axis_name)
+    alpha = jnp.exp2(m - m_g)
+    o = jax.lax.psum(o * alpha[..., None], axis_name)
+    l = jax.lax.psum(l * alpha, axis_name)
+    return o, m_g, l
+
+
+def merge_carries(carries):
+    """Host/jnp oracle for ``psum_carry``: fold a list of carry triples
+    into one with the same exponent-shift rescale.  With neutral-element
+    non-owners (the head-sharded case) the fold is exact regardless of
+    order — ``tests/test_serve_sharded.py`` fuzzes merge order against
+    this."""
+    o, m, l = carries[0]
+    for o2, m2, l2 in carries[1:]:
+        m_new = jnp.maximum(m, m2)
+        a1 = jnp.exp2(m - m_new)
+        a2 = jnp.exp2(m2 - m_new)
+        o = o * a1[..., None] + o2 * a2[..., None]
+        l = l * a1 + l2 * a2
+        m = m_new
+    return o, m, l
+
+
+def finalize_carry(o, l):
+    """Normalize a merged carry: ``o / l`` where attended, exact 0 where
+    nothing was (``l == 0``).  Identical to the kernels' in-VMEM
+    finalize."""
+    return _finalize(o, l[..., None])
 
 
 # --------------------------------------------------------------------------

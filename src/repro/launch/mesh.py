@@ -12,7 +12,8 @@ from __future__ import annotations
 
 import jax
 
-__all__ = ["make_production_mesh", "make_smoke_mesh", "AXES"]
+__all__ = ["make_production_mesh", "make_serve_mesh", "make_smoke_mesh",
+           "AXES"]
 
 AXES = ("pod", "data", "model")
 
@@ -26,3 +27,19 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_smoke_mesh(n_data: int = 2, n_model: int = 2):
     """Small mesh over however many (fake) devices a test process has."""
     return jax.make_mesh((n_data, n_model), ("data", "model"))
+
+
+def make_serve_mesh(n_shards: int | None = None):
+    """1-D tensor-parallel serving mesh over the ``model`` axis.
+
+    Serving has no data axis — continuous batching fills one decode batch
+    per step and the batch rides every shard — so the serve mesh is just
+    ``(n_shards,)`` over ``model``.  ``n_shards=None`` takes every visible
+    device (on a forced-host test process that is the
+    ``--xla_force_host_platform_device_count`` value)."""
+    n = n_shards or len(jax.devices())
+    if n > len(jax.devices()):
+        raise ValueError(
+            f"serve mesh wants {n} shards but only {len(jax.devices())} "
+            "devices are visible")
+    return jax.make_mesh((n,), ("model",))

@@ -66,10 +66,22 @@ def parse_args(argv=None):
                          "schedule) from the latest training checkpoint")
     ap.add_argument("--monitor-cadence", type=int, default=0,
                     help="decode steps between serve-time VRR probes")
+    ap.add_argument("--serve-mesh", type=int, default=0,
+                    help="tensor-parallel shard count for the serving mesh "
+                         "(0 = single device).  Heads, d_ff and the KV "
+                         "arena's kv-head axis split across shards; logits "
+                         "stay bitwise the single-device logits")
+    ap.add_argument("--logit-wire", choices=["gather", "int8"],
+                    default="gather",
+                    help="sharded unembed reduction: exact all_gather, or "
+                         "the int8 compressed-psum wire (lossy in general)")
     ap.add_argument("--no-warmup", action="store_true",
                     help="skip the startup compile-cache warmup (every "
                          "bucket's kernels then compile lazily on first "
-                         "traffic)")
+                         "traffic).  With --serve-mesh the skipped traces "
+                         "are the sharded executables — first traffic then "
+                         "pays the full shard_map compile, so keep warmup "
+                         "on for latency-sensitive sharded serving")
     ap.add_argument("--legacy", action="store_true",
                     help="force the static-batch loop")
     ap.add_argument("--seed", type=int, default=0)
@@ -135,11 +147,27 @@ def main(argv=None) -> dict:
     tokens_needed = sum(pl + args.gen for pl in prompt_lens)
     n_pages = args.pages or (
         -(-int(tokens_needed * 1.25) // args.page_size) + 1)
+    executor = None
+    if args.serve_mesh:
+        from repro.quant.formats import FPFormat
+        from repro.serve.kvcache import PagedKVConfig
+        from repro.serve.scheduler import ShardedModelExecutor
+
+        pc = PagedKVConfig.for_model(cfg, n_pages=n_pages,
+                                     page_size=args.page_size,
+                                     kv_fmt=FPFormat(e=5, m=2))
+        executor = ShardedModelExecutor(
+            model, params, pc, kv_fmt=pc.kv_fmt,
+            n_shards=args.serve_mesh, max_batch=args.max_batch,
+            logit_wire=args.logit_wire)
+        print(f"serve mesh: {executor.n_shards} tensor-parallel shards, "
+              f"logit wire {args.logit_wire}")
     eng = ServeEngine(model, params, n_pages=n_pages,
                       page_size=args.page_size, max_batch=args.max_batch,
                       prefill_chunk_tokens=args.prefill_chunk or None,
                       reserve_admission=args.reserve_admission,
-                      monitor_cadence=args.monitor_cadence, seed=args.seed)
+                      monitor_cadence=args.monitor_cadence, seed=args.seed,
+                      executor=executor)
     if not args.no_warmup:
         # compile every certified bucket's prefill/decode kernels BEFORE
         # traffic arrives — steady-state serving then performs zero traces
@@ -173,6 +201,10 @@ def main(argv=None) -> dict:
           f"admission)")
     print(f"KV bytes/token: packed {packed:.1f} vs f32 {f32:.1f} "
           f"({f32 / packed:.2f}x)")
+    if eng.tp_shards > 1:
+        print(f"per-shard KV bytes/token: "
+              f"{eng.kv_bytes_per_token(per_shard=True):.1f} "
+              f"across {eng.tp_shards} shards")
     cstats = eng.compile_stats()
     if cstats is not None:
         steady = cstats["compiles"] - cstats["warm_compiles"]

@@ -33,11 +33,25 @@ COMPUTE_DTYPE = jnp.bfloat16
 
 @dataclasses.dataclass(frozen=True)
 class Dist:
-    """How apply-fns should interact with the mesh (None = single device)."""
+    """How apply-fns should interact with the mesh (None = single device).
+
+    ``shard_axis`` flips the serve-path layer fns into tensor-parallel
+    mode: the code is already INSIDE a ``shard_map`` body over that mesh
+    axis (so ``mesh`` stays None and ``_constrain`` is a no-op), each
+    shard's params are its output-dim slices (``sharding.specs.
+    serve_param_specs``), and cross-shard combines are explicit
+    collectives — the psum'd attention-carry merge, tiled all_gathers
+    after every output-split GEMM, and pmax-shared KV page scales.
+    ``tp_size`` is the static shard count; ``logit_wire`` picks the
+    unembed gather ("gather" = exact f32/bf16 movement, "int8" = the
+    ``train.compression.compressed_psum`` int8 wire)."""
 
     mesh: Any = None
     data_axes: tuple = ("pod", "data")
     model_axis: str = "model"
+    shard_axis: str | None = None
+    tp_size: int = 1
+    logit_wire: str = "gather"
 
     @property
     def ep_size(self) -> int:
@@ -157,8 +171,10 @@ def attn_init(key, cfg: ModelConfig) -> Params:
 
 def _q_proj(p: Params, x: jnp.ndarray, cfg: ModelConfig, positions: jnp.ndarray):
     b, s, _ = x.shape
-    h, dh = cfg.n_heads, cfg.head_dim
-    q = dense(x, p["wq"], cfg.quant.attn_qkv, p.get("bq")).reshape(b, s, h, dh)
+    dh = cfg.head_dim
+    # head count from the PARAM shape, not cfg: under tensor-parallel
+    # shard_map each shard holds a head slice of wq/wk/wv
+    q = dense(x, p["wq"], cfg.quant.attn_qkv, p.get("bq")).reshape(b, s, -1, dh)
     if cfg.qk_norm:
         q = rms_norm(q, p["q_norm"], cfg.norm_eps)
     return rope(q, positions, cfg.rope_theta)
@@ -166,9 +182,9 @@ def _q_proj(p: Params, x: jnp.ndarray, cfg: ModelConfig, positions: jnp.ndarray)
 
 def _kv_proj(p: Params, x: jnp.ndarray, cfg: ModelConfig, positions: jnp.ndarray):
     b, s, _ = x.shape
-    kv, dh = cfg.n_kv_heads, cfg.head_dim
-    k = dense(x, p["wk"], cfg.quant.attn_qkv, p.get("bk")).reshape(b, s, kv, dh)
-    v = dense(x, p["wv"], cfg.quant.attn_qkv, p.get("bv")).reshape(b, s, kv, dh)
+    dh = cfg.head_dim
+    k = dense(x, p["wk"], cfg.quant.attn_qkv, p.get("bk")).reshape(b, s, -1, dh)
+    v = dense(x, p["wv"], cfg.quant.attn_qkv, p.get("bv")).reshape(b, s, -1, dh)
     if cfg.qk_norm:
         k = rms_norm(k, p["k_norm"], cfg.norm_eps)
     k = rope(k, positions, cfg.rope_theta)
@@ -324,6 +340,45 @@ def attn_cache_init(cfg: ModelConfig, batch: int, max_t: int) -> dict[str, jnp.n
 # --------------------------------------------------------------------------
 
 
+def _merge_sharded_carry(o_l, m_l, l_l, dist: Dist):
+    """Gather a head-sharded attention carry to full heads, bit-exactly.
+
+    Each shard scatters its local-head carry into a full-head buffer at
+    ``axis_index * h_loc``, filling non-owned head positions with the
+    merge's NEUTRAL element ``(o=0, m=NEG, l=0)``; ``psum_carry`` then
+    reduces over the mesh axis.  Owners contribute ``alpha = 2^0 = 1``,
+    non-owners ``alpha = 2^(NEG - m_g)`` which underflows to exactly 0 —
+    the psum adds exact zeros, so the merged full-head carry is bitwise
+    the concatenation of the per-shard carries (see
+    ``kernels.attention.psum_carry``).  Returns finalized (..., H, dh).
+    """
+    from repro.kernels.attention import NEG, finalize_carry, psum_carry
+
+    h_loc = o_l.shape[-2]
+    lead = o_l.shape[:-2]
+    h = h_loc * dist.tp_size
+    start = jax.lax.axis_index(dist.shard_axis) * h_loc
+    zero_at = (0,) * len(lead)
+    o_f = jax.lax.dynamic_update_slice(
+        jnp.zeros(lead + (h, o_l.shape[-1]), jnp.float32), o_l,
+        zero_at + (start, 0))
+    m_f = jax.lax.dynamic_update_slice(
+        jnp.full(lead + (h,), NEG, jnp.float32), m_l, zero_at + (start,))
+    l_f = jax.lax.dynamic_update_slice(
+        jnp.zeros(lead + (h,), jnp.float32), l_l, zero_at + (start,))
+    o_f, _, l_f = psum_carry(o_f, m_f, l_f, dist.shard_axis)
+    return finalize_carry(o_f, l_f)
+
+
+def _gather_cols(y: jnp.ndarray, dist: Dist) -> jnp.ndarray:
+    """Concatenate an output-dim-split GEMM result across shards.  Pure
+    data movement (no arithmetic), so the gathered result is bitwise the
+    unsharded GEMM's — the dot itself is slice-invariant in N (each
+    output column's contraction is untouched by the split)."""
+    return jax.lax.all_gather(y, dist.shard_axis, axis=y.ndim - 1,
+                              tiled=True)
+
+
 def attn_decode_paged(
     p: Params,
     x: jnp.ndarray,
@@ -362,18 +417,30 @@ def attn_decode_paged(
     page_id = jnp.take_along_axis(
         page_table, (positions // page_size)[:, None], axis=1)[:, 0]
     slot = positions % page_size
+    ax = dist.shard_axis
     kk, kse = KV.append_token(kv["k"], kv["k_se"],
                               k1[:, 0].astype(jnp.float32), page_id, slot,
-                              kv_fmt)
+                              kv_fmt, pmax_axis=ax)
     vv, vse = KV.append_token(kv["v"], kv["v_se"],
                               v1[:, 0].astype(jnp.float32), page_id, slot,
-                              kv_fmt)
+                              kv_fmt, pmax_axis=ax)
     attend = paged_attn_decode_reference if oracle else paged_attn_decode
-    o = attend(q[:, 0].astype(jnp.float32), kk, vv, kse, vse, page_table,
-               seq_lens, kv_fmt=kv_fmt, acc=acc)
+    if ax is None:
+        o = attend(q[:, 0].astype(jnp.float32), kk, vv, kse, vse, page_table,
+                   seq_lens, kv_fmt=kv_fmt, acc=acc)
+    else:
+        # head-sharded: each local head walks its FULL-context online
+        # softmax exactly as the single-device kernel (same pages, same
+        # order, same carry rounding), then the cross-shard gather is a
+        # psum'd carry merge with neutral non-owner elements (exact)
+        o_l, m_l, l_l = attend(q[:, 0].astype(jnp.float32), kk, vv, kse, vse,
+                               page_table, seq_lens, kv_fmt=kv_fmt, acc=acc,
+                               return_carry=True)
+        o = _merge_sharded_carry(o_l, m_l, l_l, dist)
     o = o.reshape(b, 1, -1).astype(COMPUTE_DTYPE)
     new_kv = {"k": kk, "v": vv, "k_se": kse, "v_se": vse}
-    return dense(o, p["wo"], cfg.quant.attn_out), new_kv
+    y = dense(o, p["wo"], cfg.quant.attn_out)
+    return (y if ax is None else _gather_cols(y, dist)), new_kv
 
 
 def attn_prefill_paged(
@@ -532,21 +599,37 @@ def attn_prefill_bucketed(
     live = (jnp.arange(t, dtype=jnp.int32) < q_len)[:, None, None]
     kf = jnp.where(live, k[0].astype(jnp.float32), 0.0)
     vf = jnp.where(live, v[0].astype(jnp.float32), 0.0)
+    ax = dist.shard_axis
     kk, kse, _ = KV.write_prompt(kv["k"], kv["k_se"], kf, slab_page_ids,
-                                 kv_fmt)
+                                 kv_fmt, pmax_axis=ax)
     vv, vse, _ = KV.write_prompt(kv["v"], kv["v_se"], vf, slab_page_ids,
-                                 kv_fmt)
+                                 kv_fmt, pmax_axis=ax)
+    h_here = q.shape[2]  # local heads under tensor-parallel shard_map
     if call is None and block_q is None:
-        block_q = attn_blocks_for(t, cfg.n_heads, cfg.head_dim, page_size,
+        block_q = attn_blocks_for(t, h_here, cfg.head_dim, page_size,
                                   e_acc=acc[0], m_acc=acc[1], kv_fmt=kv_fmt,
                                   max_pages=int(page_row.shape[0]))
-    o = flash_prefill_paged(q[0].astype(jnp.float32), kk, vv, kse, vse,
-                            page_row, q_offset, q_len, q_offset + q_len,
-                            kv_fmt=kv_fmt, acc=acc, block_q=block_q or 128,
-                            call=call)
+    if call is not None and ax is not None:
+        import dataclasses as _dc
+        call = _dc.replace(call, h=h_here, kv_heads=kk.shape[1])
+    if ax is None:
+        o = flash_prefill_paged(q[0].astype(jnp.float32), kk, vv, kse, vse,
+                                page_row, q_offset, q_len, q_offset + q_len,
+                                kv_fmt=kv_fmt, acc=acc, block_q=block_q or 128,
+                                call=call)
+    else:
+        # same discipline as attn_decode_paged: full-context local-head
+        # walk, neutral-element psum'd carry merge (exact)
+        o_l, m_l, l_l = flash_prefill_paged(
+            q[0].astype(jnp.float32), kk, vv, kse, vse,
+            page_row, q_offset, q_len, q_offset + q_len,
+            kv_fmt=kv_fmt, acc=acc, block_q=block_q or 128,
+            call=call, return_carry=True)
+        o = _merge_sharded_carry(o_l, m_l, l_l, dist)
     o = o.reshape(1, t, -1).astype(COMPUTE_DTYPE)
     new_kv = {"k": kk, "v": vv, "k_se": kse, "v_se": vse}
-    return dense(o, p["wo"], cfg.quant.attn_out), new_kv
+    y = dense(o, p["wo"], cfg.quant.attn_out)
+    return (y if ax is None else _gather_cols(y, dist)), new_kv
 
 
 # --------------------------------------------------------------------------
@@ -564,10 +647,23 @@ def mlp_init(key, cfg: ModelConfig, d_ff: int | None = None) -> Params:
     }
 
 
-def mlp_apply(p: Params, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+def mlp_apply(p: Params, x: jnp.ndarray, cfg: ModelConfig,
+              dist: Dist | None = None) -> jnp.ndarray:
+    """SwiGLU.  Under a tensor-parallel ``dist.shard_axis`` every weight
+    is split on its OUTPUT dim (never the contraction — an N-slice of a
+    dot is bitwise the corresponding slice of the full dot, so gathered
+    results equal the unsharded ones exactly; a contraction split would
+    psum partial sums and round differently).  w_gate/w_up give the local
+    d_ff slice, the silu gate is elementwise (exact per element), the
+    hidden is all_gathered to full d_ff for w_down's contraction, and
+    w_down's d_model slice is gathered back."""
     g = dense(x, p["w_gate"], cfg.quant.mlp_up)
     u = dense(x, p["w_up"], cfg.quant.mlp_up)
-    return dense(jax.nn.silu(g) * u, p["w_down"], cfg.quant.mlp_down)
+    h = jax.nn.silu(g) * u
+    if dist is not None and dist.shard_axis is not None:
+        h = _gather_cols(h, dist)
+        return _gather_cols(dense(h, p["w_down"], cfg.quant.mlp_down), dist)
+    return dense(h, p["w_down"], cfg.quant.mlp_down)
 
 
 # --------------------------------------------------------------------------

@@ -159,8 +159,41 @@ def _embed(params, tokens, cfg: ModelConfig, dist: L.Dist, batch: dict):
 def _unembed(params, x, cfg: ModelConfig, dist: L.Dist):
     x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
     head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    if dist.shard_axis is not None:
+        return _unembed_sharded(x, head, cfg, dist)
     logits = L.dense(x, head, cfg.quant.lm_head)
     return L._constrain(logits, dist, P(dist.data_axes, None, "model"))
+
+
+def _unembed_sharded(x, head, cfg: ModelConfig, dist: L.Dist):
+    """Tensor-parallel logit gather (inside the serve ``shard_map``).
+
+    ``logit_wire="gather"``: with tied embeddings the head is replicated
+    and the dot is fully local (trivially exact); an untied ``lm_head``
+    is vocab-split and the local logits are all_gathered (pure movement,
+    exact).  ``logit_wire="int8"`` reuses the training DCN idiom
+    (``train.compression.compressed_psum``): the head stays replicated,
+    each shard computes partial logits over its d_model slice, and the
+    partials cross the wire as int8 codes under a pmax-shared scale —
+    int8 codes sum exactly in int32, so the only loss is the one
+    quantization of each partial, priced by the bit-parity test against
+    the f32 psum."""
+    ax = dist.shard_axis
+    if dist.logit_wire == "int8":
+        from repro.train.compression import compressed_psum  # late: circular
+
+        d = head.shape[0]
+        d_loc = d // dist.tp_size
+        i = jax.lax.axis_index(ax)
+        x_l = jax.lax.dynamic_slice_in_dim(x, i * d_loc, d_loc, axis=x.ndim - 1)
+        h_l = jax.lax.dynamic_slice_in_dim(head, i * d_loc, d_loc, axis=0)
+        part = L.dense(x_l, h_l, cfg.quant.lm_head).astype(jnp.float32)
+        logits, _ = compressed_psum(part, ax)
+        return logits.astype(L.COMPUTE_DTYPE)
+    logits = L.dense(x, head, cfg.quant.lm_head)
+    if not cfg.tie_embeddings:
+        logits = L._gather_cols(logits, dist)
+    return logits
 
 
 def forward_hidden(
@@ -375,6 +408,14 @@ def _check_paged(cfg: ModelConfig) -> None:
             "state is O(1) per sequence — paging buys nothing there)")
 
 
+def _check_shardable(cfg: ModelConfig, dist: L.Dist) -> None:
+    if dist.shard_axis is not None and cfg.moe is not None:
+        raise NotImplementedError(
+            "tensor-parallel paged serving covers dense attention stacks; "
+            "moe_apply is expert-parallel (its own shard_map) and cannot "
+            "nest inside the serve shard_map")
+
+
 def init_paged_state(cfg: ModelConfig, *, n_pages: int, page_size: int,
                      kv_fmt=None) -> dict:
     """Deprecated: use ``models.api.paged_init_state`` (family-agnostic)."""
@@ -406,6 +447,7 @@ def paged_decode(
     ``oracle=True`` routes attention through the unfused jnp reference —
     the logit-exactness oracle of the acceptance gate."""
     _check_paged(cfg)
+    _check_shardable(cfg, dist)
     x = params["embed"][tokens].astype(L.COMPUTE_DTYPE)
     x = L._constrain(x, dist, P(dist.data_axes, None, None))
 
@@ -420,7 +462,7 @@ def paged_decode(
         if cfg.moe is not None and "moe" in lp:
             f, _ = L.moe_apply(lp["moe"], z, cfg, dist)
         else:
-            f = L.mlp_apply(lp["mlp"], z, cfg)
+            f = L.mlp_apply(lp["mlp"], z, cfg, dist)
         return carry + f, nkv
 
     x, new_kv = scan_util.scan(body, x, (params["layers"], kv_state))
@@ -462,6 +504,7 @@ def paged_prefill(
 
     Returns (logits (1, V) or None, new arena)."""
     _check_paged(cfg)
+    _check_shardable(cfg, dist)
     b, t = tokens.shape
     if b != 1:
         raise ValueError("prefill is per admitted sequence (B = 1)")
@@ -480,7 +523,7 @@ def paged_prefill(
         if cfg.moe is not None and "moe" in lp:
             f, _ = L.moe_apply(lp["moe"], z, cfg, dist)
         else:
-            f = L.mlp_apply(lp["mlp"], z, cfg)
+            f = L.mlp_apply(lp["mlp"], z, cfg, dist)
         return carry + f, nkv
 
     x, new_kv = scan_util.scan(body, x, (params["layers"], kv_state))
@@ -493,6 +536,13 @@ def paged_prefill(
 
 
 # -- legacy entry points (thin deprecation shims over the unified pair) ----
+
+# Removal date for the PR-6 deprecation shims (decode_step_paged,
+# prefill_paged, prefill_chunk_paged here; encdec.decode_step_paged):
+# when pyproject's project version reaches this (major, minor),
+# tests/test_shims.py::test_paged_shims_sunset fails with deletion
+# instructions — the shims cannot silently outlive their removal date.
+PAGED_SHIMS_SUNSET = (0, 2)
 
 
 def decode_step_paged(params, tokens, kv_state, page_table, positions,

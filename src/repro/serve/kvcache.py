@@ -40,6 +40,7 @@ from __future__ import annotations
 
 from dataclasses import dataclass
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -50,6 +51,7 @@ from repro.quant.qtensor import pack_block, unpack_block
 __all__ = [
     "PagedKVConfig",
     "PagePool",
+    "ShardedPagePool",
     "SwapStore",
     "init_arena",
     "append_token",
@@ -126,15 +128,25 @@ def _decode(codes: jnp.ndarray, se: jnp.ndarray, fmt: FPFormat) -> jnp.ndarray:
 
 def append_token(arena_l: jnp.ndarray, se_l: jnp.ndarray, x: jnp.ndarray,
                  page_id: jnp.ndarray, slot: jnp.ndarray,
-                 fmt: FPFormat) -> tuple[jnp.ndarray, jnp.ndarray]:
+                 fmt: FPFormat,
+                 pmax_axis: str | None = None) -> tuple[jnp.ndarray,
+                                                        jnp.ndarray]:
     """Write one decode token per sequence into a layer's arena slice.
 
     ``arena_l`` (P, KV, page_size, dh) int8, ``se_l`` (P,) int32,
     ``x`` (B, KV, dh) f32 values, ``page_id``/``slot`` (B,) int32.  A write
     at ``slot == 0`` is the page's first and fixes its scale exponent.
     Padded batch rows must carry ``page_id == 0`` (the null page).
+
+    ``pmax_axis``: inside a tensor-parallel ``shard_map`` where each shard
+    holds a KV-head slice, the per-page amax is pmax'd over the mesh axis
+    BEFORE fixing the scale exponent — every shard then derives the same
+    (global, all-heads) exponent the single-device write would, so the
+    shard-local codes are a bitwise slice of the unsharded arena.
     """
     amax = jnp.max(jnp.abs(x), axis=(1, 2))  # (B,)
+    if pmax_axis is not None:
+        amax = jax.lax.pmax(amax, pmax_axis)
     se = jnp.where(slot == 0, _scale_exp(amax), se_l[page_id])
     se_l = se_l.at[page_id].set(se)
     codes = _encode(x, se[:, None, None], fmt)  # (B, KV, dh)
@@ -144,6 +156,7 @@ def append_token(arena_l: jnp.ndarray, se_l: jnp.ndarray, x: jnp.ndarray,
 
 def write_prompt(arena_l: jnp.ndarray, se_l: jnp.ndarray, x: jnp.ndarray,
                  page_ids: jnp.ndarray, fmt: FPFormat,
+                 pmax_axis: str | None = None,
                  ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Write one sequence's prompt K (or V) into a layer's arena slice.
 
@@ -153,6 +166,10 @@ def write_prompt(arena_l: jnp.ndarray, se_l: jnp.ndarray, x: jnp.ndarray,
     Returns ``(arena_l, se_l, dequant)`` where ``dequant`` (S, KV, dh) is
     the exact values the cache now holds — prefill attends to THESE, so
     later paged decode sees the same history prefill saw.
+
+    ``pmax_axis``: see ``append_token`` — the per-page amax is shared over
+    the mesh axis so KV-head-sharded writes fix the same scale exponents
+    as the single-device write.
     """
     s, kv, dh = x.shape
     npg = page_ids.shape[0]
@@ -161,6 +178,8 @@ def write_prompt(arena_l: jnp.ndarray, se_l: jnp.ndarray, x: jnp.ndarray,
                  ((0, npg * page_size - s), (0, 0), (0, 0)))
     blocks = xp.reshape(npg, page_size, kv, dh).transpose(0, 2, 1, 3)
     amax = jnp.max(jnp.abs(blocks), axis=(1, 2, 3))  # (npg,)
+    if pmax_axis is not None:
+        amax = jax.lax.pmax(amax, pmax_axis)
     se = _scale_exp(amax)
     codes = _encode(blocks, se[:, None, None, None], fmt)
     arena_l = arena_l.at[page_ids].set(codes)
@@ -270,11 +289,17 @@ class SwapStore:
                    for blob, _ in self._entries.values())
 
 
-def kv_bytes_per_token(pc: PagedKVConfig, *, carrier_bytes: int = 1) -> float:
+def kv_bytes_per_token(pc: PagedKVConfig, *, carrier_bytes: int = 1,
+                       tp_shards: int = 1) -> float:
     """Cache bytes per cached token across all layers: K + V payloads plus
     the amortized per-page scale exponents.  ``carrier_bytes=4`` prices the
-    f32-carrier baseline (2 for bf16) for the compression ratio."""
-    per_layer = 2 * pc.n_kv_heads * pc.head_dim * carrier_bytes
+    f32-carrier baseline (2 for bf16) for the compression ratio.
+
+    ``tp_shards > 1`` prices ONE shard of a tensor-parallel arena: the
+    int8 payloads split with the KV-head axis, while the per-page scale
+    exponents are replicated on every shard (they are pmax-shared at write
+    time, see ``write_prompt``)."""
+    per_layer = 2 * (pc.n_kv_heads // tp_shards) * pc.head_dim * carrier_bytes
     if carrier_bytes == 1:  # packed: two int32 scale exponents per page
         per_layer += 2 * 4 / pc.page_size
     return pc.n_layers * per_layer
@@ -381,3 +406,61 @@ class PagePool:
         for sid, pages in self._pages.items():
             assert len(pages) == self.pages_for(self._lens[sid]), \
                 f"seq {sid}: {len(pages)} pages for {self._lens[sid]} tokens"
+
+
+class ShardedPagePool(PagePool):
+    """Page accounting for a tensor-parallel arena: ONE logical allocator
+    (page ids are GLOBAL — shard ``i`` stores its KV-head slice of page
+    ``p`` at local index ``p``, so every shard's page table is the same
+    host-side array) plus one replica ``PagePool`` per shard kept in
+    lockstep.
+
+    The replicas are the mesh-mode analogue of the stamped sim arena: the
+    engine only ever talks to the primary, every mutation is mirrored, and
+    ``check_invariants`` additionally proves the per-shard pools never
+    drifted — a scheduler path that mutated one shard's accounting without
+    the others (the classic TP desync bug) fails the next invariant sweep
+    rather than corrupting a remote arena.
+    """
+
+    def __init__(self, n_pages: int, page_size: int, *, n_shards: int):
+        if n_shards < 1:
+            raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+        super().__init__(n_pages, page_size)
+        self.n_shards = n_shards
+        self._replicas = [PagePool(n_pages, page_size)
+                          for _ in range(n_shards)]
+
+    def _mirror(self, op: str, sid: int, *args) -> None:
+        want = self._pages.get(sid)
+        for i, rep in enumerate(self._replicas):
+            got = getattr(rep, op)(sid, *args)
+            if op != "release" and rep._pages.get(sid) != want:
+                raise AssertionError(
+                    f"shard {i} pool drifted on {op}(sid={sid}): "
+                    f"{got} vs primary {want}")
+
+    def allocate(self, sid: int, n_tokens: int) -> list[int]:
+        got = super().allocate(sid, n_tokens)
+        self._mirror("allocate", sid, n_tokens)
+        return got
+
+    def extend(self, sid: int, n_new: int = 1) -> list[int]:
+        got = super().extend(sid, n_new)
+        self._mirror("extend", sid, n_new)
+        return got
+
+    def release(self, sid: int) -> None:
+        super().release(sid)
+        self._mirror("release", sid)
+
+    def check_invariants(self) -> None:
+        super().check_invariants()
+        for i, rep in enumerate(self._replicas):
+            rep.check_invariants()
+            assert rep._pages == self._pages, \
+                f"shard {i} page ownership drifted from the primary"
+            assert rep._lens == self._lens, \
+                f"shard {i} sequence lengths drifted from the primary"
+            assert rep._free == self._free, \
+                f"shard {i} free list drifted from the primary"

@@ -87,6 +87,7 @@ class AttnPlan:
     m_p: int
     buckets: tuple[AttnBucket, ...]
     prefill_chunk: int | None = None
+    tp_shards: int = 1
 
     def bucket_for(self, ctx: int) -> tuple[int, AttnBucket]:
         """(index, bucket) of the narrowest bucket covering ``ctx``."""
@@ -248,7 +249,8 @@ def min_e_acc(ctx: int, *, v_hint: float = 16.0, e_min: int = 6,
 def plan_attention(max_context: int, page_size: int, *, m_p: int = 5,
                    growth: int = 4, v_hint: float = 16.0,
                    e_min: int = 6,
-                   prefill_chunk_tokens: int | None = None) -> AttnPlan:
+                   prefill_chunk_tokens: int | None = None,
+                   tp_shards: int = 1) -> AttnPlan:
     """Bucketed plan covering contexts up to ``max_context``.
 
     Bucket edges grow geometrically (``growth``x in pages) from one page;
@@ -264,6 +266,16 @@ def plan_attention(max_context: int, page_size: int, *, m_p: int = 5,
     carry-rounding events; unaligned slabs add one per resumption), and
     the e_acc overflow bound is checked at every resumption boundary
     where the unnormalized carry is materialized.
+
+    ``tp_shards`` certifies the buckets for TENSOR-PARALLEL serving: head
+    sharding leaves every head's accumulation length at the full context
+    (the shard owns its heads' complete block walks), but the cross-shard
+    ``psum_carry`` merge is ONE more accumulation stage — up to
+    ``tp_shards - 1`` extra carry-combine events per query row at the psum
+    boundary, where the unnormalized carry is also materialized onto the
+    wire, so the e_acc overflow bound must hold there too (it already
+    holds at ``max_ctx``, the same worst case, but the planner checks the
+    boundary explicitly rather than assuming it).
     """
     edges: list[int] = []
     ctx = page_size
@@ -275,9 +287,12 @@ def plan_attention(max_context: int, page_size: int, *, m_p: int = 5,
     def _bucket(c: int) -> AttnBucket:
         r = max_carry_resumptions(c, prefill_chunk_tokens)
         extra = extra_carry_events(page_size, prefill_chunk_tokens, r)
+        extra += max(tp_shards - 1, 0)  # cross-shard reduction stage
         bounds = (tuple(min(i * prefill_chunk_tokens, c)
                         for i in range(1, r + 1))
                   if prefill_chunk_tokens else ())
+        if tp_shards > 1:
+            bounds = (*bounds, c)  # carry materialized at the psum wire
         return AttnBucket(
             max_ctx=c,
             e_acc=min_e_acc(c, v_hint=v_hint, e_min=e_min,
@@ -287,4 +302,5 @@ def plan_attention(max_context: int, page_size: int, *, m_p: int = 5,
 
     return AttnPlan(page_size=page_size, m_p=m_p,
                     buckets=tuple(_bucket(c) for c in edges),
-                    prefill_chunk=prefill_chunk_tokens)
+                    prefill_chunk=prefill_chunk_tokens,
+                    tp_shards=tp_shards)

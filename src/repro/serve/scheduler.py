@@ -87,8 +87,10 @@ from repro.quant.formats import FPFormat
 from repro.serve.kvcache import (
     PagedKVConfig,
     PagePool,
+    ShardedPagePool,
     SwapStore,
     init_arena,
+    kv_bytes_per_token,
     swap_in_pages,
     swap_out_pages,
 )
@@ -100,7 +102,8 @@ from repro.serve.plan import (
 )
 from repro.telemetry.stats import EnsembleStats
 
-__all__ = ["Request", "ModelExecutor", "ServeEngine", "measure_decode_vrr"]
+__all__ = ["Request", "ModelExecutor", "ShardedModelExecutor", "ServeEngine",
+           "measure_decode_vrr"]
 
 
 @dataclass
@@ -176,6 +179,17 @@ def measure_decode_vrr(kv_state, page_row: np.ndarray,
 _PROCESS_CACHE: dict = {}
 
 
+def _device_topology() -> tuple:
+    """The process's jax device topology, folded into every executor's
+    compile-cache key: a cache entry describes executables compiled FOR a
+    topology, so two executors in processes (or test monkeypatches) that
+    see different device counts or platforms must not share one.  On a
+    forced-host test process this is the
+    ``--xla_force_host_platform_device_count`` value."""
+    devices = jax.devices()
+    return (len(devices), getattr(devices[0], "platform", "unknown"))
+
+
 def _fresh_cache_entry() -> dict:
     return {"fns": {}, "stats": {"compiles": 0, "hits": 0, "misses": 0,
                                  "warm_compiles": 0}}
@@ -208,8 +222,7 @@ class ModelExecutor:
         self.max_batch = max_batch
         self.kv = init_arena(pc)
         self.pm = get_paged_model(model.cfg)
-        key = ("model-executor", self.cfg, kv_fmt, dist, oracle, max_batch,
-               pc)
+        key = self._cache_key()
         try:
             entry = _PROCESS_CACHE.get(key)
             if entry is None:
@@ -217,6 +230,16 @@ class ModelExecutor:
         except TypeError:  # unhashable config: private, unshared cache
             entry = _fresh_cache_entry()
         self._cache = entry
+
+    def _cache_key(self) -> tuple:
+        """Everything the traced computations close over (config, formats,
+        dist, padding widths) plus the device topology — params/arena are
+        operands, so engines with different weights share executables, but
+        executables compiled for a different device count or platform must
+        not be dispatched against.  Subclasses append their own trace-
+        relevant state (the sharded executor adds its mesh descriptor)."""
+        return ("model-executor", self.cfg, self.kv_fmt, self.dist,
+                self.oracle, self.max_batch, self.pc, _device_topology())
 
     # ------------------------------ jit fns --------------------------------
     def _jit(self, key, fn, **jit_kw):
@@ -378,6 +401,129 @@ class ModelExecutor:
                                   kv_fmt=self.kv_fmt, acc=acc, key=key)
 
 
+class ShardedModelExecutor(ModelExecutor):
+    """Tensor-parallel executor over a 1-D ``model`` mesh: the SAME engine
+    seam (``repro.models.api`` paged protocol), with every jitted entry
+    wrapped in ``shard_map``.
+
+    Partitioning is output-dim only (``sharding.specs.serve_param_specs``):
+    attention heads and the KV arena's kv-head axis split across shards, so
+    each shard owns its heads' COMPLETE online-softmax walks — identical
+    block order and rounding to single-device — and the cross-shard merge is
+    the exact psum'd carry combine (``kernels.attention.psum_carry``), whose
+    neutral elements contribute exact zeros.  Sharded logits are therefore
+    bitwise the single-device logits.  Page tables stay host-side and
+    replicated: one logical allocator's page ids address every shard's
+    arena slice (``ServeEngine`` pairs this executor with a
+    ``ShardedPagePool`` that asserts per-shard allocator lockstep).
+
+    ``logit_wire`` picks the unembed reduction: ``"gather"`` (exact —
+    replicated head under tied embeddings, vocab-split + all_gather
+    otherwise) or ``"int8"`` (``train.compression.compressed_psum``'s int8
+    wire over d_model-partial logits — lossy in general, bit-exact only on
+    lattice inputs; off by default).
+
+    MoE models are rejected: ``moe_apply`` builds its OWN shard_map when a
+    mesh is configured, and nesting it inside this executor's shard_map is
+    not supported (``models.lm._check_shardable`` guards the model side).
+    """
+
+    def __init__(self, model, params, pc: PagedKVConfig, *,
+                 kv_fmt: FPFormat, mesh=None, n_shards: int | None = None,
+                 oracle: bool = False, max_batch: int = 8,
+                 logit_wire: str = "gather"):
+        from jax.sharding import PartitionSpec as P
+
+        from repro.launch.mesh import make_serve_mesh
+        from repro.sharding.specs import named_shardings, serve_param_specs
+
+        if mesh is None:
+            mesh = make_serve_mesh(n_shards)
+        if tuple(mesh.axis_names) != ("model",):
+            raise ValueError(
+                f"serve mesh must be 1-D over ('model',), got "
+                f"{tuple(mesh.axis_names)}")
+        s = mesh.shape["model"]
+        cfg = model.cfg
+        if logit_wire not in ("gather", "int8"):
+            raise ValueError(f"unknown logit_wire {logit_wire!r}")
+        if getattr(cfg, "moe", None) is not None:
+            raise NotImplementedError(
+                "ShardedModelExecutor does not support MoE models "
+                "(moe_apply's own shard_map cannot nest)")
+        for nm, dim in (("n_heads", cfg.n_heads),
+                        ("n_kv_heads", cfg.n_kv_heads),
+                        ("d_ff", cfg.d_ff)):
+            if dim % s != 0:
+                raise ValueError(
+                    f"{s}-shard serve mesh cannot split {nm}={dim}")
+        if logit_wire == "int8" and cfg.d_model % s != 0:
+            raise ValueError(
+                f"int8 logit wire slices d_model={cfg.d_model} across "
+                f"{s} shards; not divisible")
+        self.mesh = mesh
+        self.n_shards = s
+        self.logit_wire = logit_wire
+        # serve_param_specs raises on any weight the mesh cannot split
+        # (incl. untied lm_head vocab under the gather wire)
+        self._pspecs = serve_param_specs(params, n_shards=s,
+                                         logit_wire=logit_wire)
+        self._kv_specs = {"k": P(None, None, "model"),
+                          "v": P(None, None, "model"),
+                          "k_se": P(), "v_se": P()}
+        dist = Dist(shard_axis="model", tp_size=s, logit_wire=logit_wire)
+        super().__init__(model, params, pc, kv_fmt=kv_fmt, dist=dist,
+                         oracle=oracle, max_batch=max_batch)
+        # commit params and arena onto the mesh up front: per-shard weight
+        # slices and arena slices live on their shard, not re-sliced from a
+        # replicated copy at every dispatch
+        self.params = jax.device_put(
+            self.params, named_shardings(self._pspecs, mesh))
+        self.kv = jax.device_put(
+            self.kv, named_shardings(self._kv_specs, mesh))
+
+    def _cache_key(self) -> tuple:
+        return super()._cache_key() + (
+            ("mesh", tuple(self.mesh.shape.items()), self.logit_wire),)
+
+    def _decode_fn(self, acc: tuple[int, int]):
+        import functools
+
+        from jax.sharding import PartitionSpec as P
+
+        from repro.sharding.compat import shard_map
+
+        inner = functools.partial(self.pm.decode, dist=self.dist,
+                                  kv_fmt=self.kv_fmt, acc=acc,
+                                  oracle=self.oracle)
+        # check_vma=False: replication of the pmax'd page scales and the
+        # all_gather'd activations is real but not provable by the checker
+        fn = shard_map(
+            inner, mesh=self.mesh,
+            in_specs=(self._pspecs, P(), self._kv_specs, P(), P(), P()),
+            out_specs=(P(), self._kv_specs), check_vma=False)
+        return self._jit(("decode", acc, self.oracle), fn)
+
+    def _prefill_fn(self, acc: tuple[int, int], final: bool, call=None):
+        import functools
+
+        from jax.sharding import PartitionSpec as P
+
+        from repro.sharding.compat import shard_map
+
+        key = (("prefill", call.static_signature(), final)
+               if call is not None else ("prefill", acc, final))
+        inner = functools.partial(self.pm.prefill, dist=self.dist,
+                                  kv_fmt=self.kv_fmt, acc=acc, call=call,
+                                  want_logits=final)
+        fn = shard_map(
+            inner, mesh=self.mesh,
+            in_specs=(self._pspecs, P(), self._kv_specs, P(), P(), P(),
+                      P()),
+            out_specs=(P(), self._kv_specs), check_vma=False)
+        return self._jit(key, fn)
+
+
 class ServeEngine:
     """Continuous-batching serving over one model's paged KV arena."""
 
@@ -429,11 +575,19 @@ class ServeEngine:
         else:
             self.pc = getattr(executor, "pc", None)
         self.executor = executor
-        self.pool = PagePool(n_pages, page_size)
+        # tensor-parallel executors advertise their shard count; the engine
+        # then allocates through a ShardedPagePool (one logical allocator,
+        # N mirrored per-shard pools with lockstep assertions) and the plan
+        # certifies the cross-shard reduction stage
+        self.tp_shards = int(getattr(executor, "n_shards", 1) or 1)
+        self.pool = (ShardedPagePool(n_pages, page_size,
+                                     n_shards=self.tp_shards)
+                     if self.tp_shards > 1 else PagePool(n_pages, page_size))
         self.store = SwapStore()
         self.plan = plan or plan_attention(
             self.tokens_capacity, page_size,
-            prefill_chunk_tokens=prefill_chunk_tokens)
+            prefill_chunk_tokens=prefill_chunk_tokens,
+            tp_shards=self.tp_shards)
         self.max_batch = max_batch
         self.eos_id = eos_id
         self.prefill_chunk = prefill_chunk_tokens
@@ -806,7 +960,12 @@ class ServeEngine:
         utilization against the reservation baseline on this number."""
         return self.decoded_tokens / max(self.steps * self.max_batch, 1)
 
-    def kv_bytes_per_token(self, *, carrier_bytes: int = 1) -> float:
-        from repro.serve.kvcache import kv_bytes_per_token
-
-        return kv_bytes_per_token(self.pc, carrier_bytes=carrier_bytes)
+    def kv_bytes_per_token(self, *, carrier_bytes: int = 1,
+                           per_shard: bool = False) -> float:
+        """Arena bytes per cached token: the GLOBAL logical footprint by
+        default (unchanged by sharding — it is the same arena, split), or
+        what ONE shard actually holds with ``per_shard=True`` (kv heads
+        split ``tp_shards`` ways, page scale exponents replicated)."""
+        return kv_bytes_per_token(
+            self.pc, carrier_bytes=carrier_bytes,
+            tp_shards=self.tp_shards if per_shard else 1)

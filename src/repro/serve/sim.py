@@ -26,6 +26,20 @@ bursty traces and a hypothesis state machine per CI run, which is the
 evidence the chunked-prefill + preemption scheduler leans on.  The
 NUMERICS of the serve path (bit-exact kernels, logit-exact decode) are
 pinned separately in ``tests/test_serve.py`` against the real model.
+
+MESH MODE (``n_shards > 1``) simulates the tensor-parallel executor's
+state discipline without any jax: the executor keeps N per-shard stamp
+arenas (the analog of each shard's kv-head slice of the paged arena — the
+same tokens, shard-local bytes), every KV write lands on EVERY shard, and
+every verified read gathers all N shards' contributions and folds them in
+a seeded-PERMUTED order (the analog of the psum'd carry merge, whose
+combine is commutative on the integer lattice): any shard whose arena
+drifted — a write that missed it, a swap restored into only some shards, a
+poison visible on one — raises ``SimCorruption`` naming the shard, because
+a divergent contribution is exactly the state in which the real psum merge
+would stop being bit-exact.  ``ServeEngine`` pairs a mesh-mode sim with a
+``ShardedPagePool`` (the executor advertises ``n_shards``), so the fuzz
+suite also proves per-shard allocator lockstep under preemption and swap.
 """
 
 from __future__ import annotations
@@ -70,14 +84,26 @@ class SimExecutor:
     pc = None  # no device arena config; engine accounting falls back
 
     def __init__(self, *, n_pages: int, page_size: int,
-                 vocab_size: int = 50021):
+                 vocab_size: int = 50021, n_shards: int = 1,
+                 merge_seed: int = 0):
+        if n_shards < 1:
+            raise ValueError(f"n_shards must be >= 1, got {n_shards}")
         self.page_size = page_size
         self.vocab_size = vocab_size
-        self.pages = np.full((n_pages, page_size), _EMPTY, np.int64)
+        self.n_shards = n_shards
+        # one stamp arena per simulated shard; shard 0 doubles as
+        # ``self.pages`` (alias, not copy) so single-shard tests that poke
+        # the arena directly keep working — in mesh mode a poke of one
+        # shard is a divergence the next verified read must catch
+        self.shards = [np.full((n_pages, page_size), _EMPTY, np.int64)
+                       for _ in range(n_shards)]
+        self.pages = self.shards[0]
+        self._merge_rng = np.random.RandomState(merge_seed)
         self.kv = None
         self.swap_outs = 0
         self.swap_ins = 0
         self.reads_verified = 0
+        self.merges_folded = 0
 
     # ------------------------------ token stream ---------------------------
     def next_token(self, rid: int, idx: int) -> int:
@@ -85,13 +111,50 @@ class SimExecutor:
         pure function, so any schedule must produce the same stream."""
         return (rid * 1_000_003 + idx * 97 + 13) % self.vocab_size
 
+    # ------------------------------ shard plumbing -------------------------
+    def _write(self, pg: int, slot: int, val: np.int64) -> None:
+        for sh in self.shards:
+            sh[pg, slot] = val
+
+    def _merged_read(self, pg: int, slot: int, *, where: str) -> np.int64:
+        """Fold every shard's slot value in a seeded-permuted order — the
+        sim analog of the psum'd carry merge, whose combine is commutative
+        so ANY fold order must yield the same value.  A shard that
+        disagrees is named: that is precisely the drifted state in which
+        the real cross-shard merge would stop being bit-exact."""
+        if self.n_shards == 1:
+            return self.pages[pg, slot]
+        order = self._merge_rng.permutation(self.n_shards)
+        merged = self.shards[order[0]][pg, slot]
+        for s in order[1:]:
+            got = self.shards[s][pg, slot]
+            if got != merged:
+                raise SimCorruption(
+                    f"{where}: shard divergence at page {pg} slot {slot}: "
+                    f"shard {s} holds {int(got)}, merge so far holds "
+                    f"{int(merged)} — the cross-shard carry merge would "
+                    "not be bit-exact")
+            merged = max(merged, got)
+            self.merges_folded += 1
+        return merged
+
+    def check_shard_lockstep(self) -> None:
+        """Assert every shard's arena is byte-identical to shard 0 (the
+        whole-arena form of what ``_merged_read`` checks slot-wise)."""
+        for s in range(1, self.n_shards):
+            if not np.array_equal(self.shards[s], self.pages):
+                bad = np.argwhere(self.shards[s] != self.pages)[0]
+                raise SimCorruption(
+                    f"shard {s} arena diverged from shard 0 at "
+                    f"page {bad[0]} slot {bad[1]}")
+
     # ------------------------------ verification ---------------------------
     def _verify(self, rid: int, pages: list[int] | np.ndarray,
                 n_tokens: int, *, where: str) -> None:
         for idx in range(n_tokens):
             pg = int(pages[idx // self.page_size])
             slot = idx % self.page_size
-            got = self.pages[pg, slot]
+            got = self._merged_read(pg, slot, where=where)
             want = _stamp(rid, idx)
             if got != want:
                 kind = ("poisoned (stale swapped-out page)"
@@ -116,7 +179,7 @@ class SimExecutor:
                      where="prefill history")
         for j in range(len(req.tokens)):
             pg = int(req.slab_pages[j // self.page_size])
-            self.pages[pg, j % self.page_size] = _stamp(req.rid, req.t0 + j)
+            self._write(pg, j % self.page_size, _stamp(req.rid, req.t0 + j))
         return (self.next_token(req.rid, req.t0 + len(req.tokens))
                 if req.final else None)
 
@@ -125,37 +188,55 @@ class SimExecutor:
         for i, rid in enumerate(req.rids):
             pos = int(req.positions[i])
             row = req.page_table[i]
-            self.pages[int(row[pos // self.page_size]),
-                       pos % self.page_size] = _stamp(rid, pos)
+            self._write(int(row[pos // self.page_size]),
+                        pos % self.page_size, _stamp(rid, pos))
             self._verify(rid, row, int(req.seq_lens[i]), where="decode")
             out.append(self.next_token(rid, int(req.seq_lens[i])))
         return out
 
     def swap_out(self, rid: int, pages: list[int]) -> dict:
         idx = np.asarray(pages, np.int64)
-        stamps = self.pages[idx].copy()
-        # slots past the sequence's length may hold a PRIOR owner's stale
-        # stamps (pages are reused; the real engine never reads past
-        # seq_len, so the stale bytes are dead) — scrub them so the
-        # restore-time owner check only sees live data
-        stamps[(stamps >> 24) != rid] = _EMPTY
-        blob = {"stamps": stamps}
-        self.pages[idx] = _POISON
+
+        def scrubbed(arena: np.ndarray) -> np.ndarray:
+            stamps = arena[idx].copy()
+            # slots past the sequence's length may hold a PRIOR owner's
+            # stale stamps (pages are reused; the real engine never reads
+            # past seq_len, so the stale bytes are dead) — scrub them so
+            # the restore-time owner check only sees live data
+            stamps[(stamps >> 24) != rid] = _EMPTY
+            return stamps
+
+        blob = {"stamps": scrubbed(self.pages)}
+        if self.n_shards > 1:
+            # every shard swaps ITS arena slice out (the real executor's
+            # blob gathers each shard's kv-head bytes); restore must put
+            # each one back or the next merged read catches the drift
+            blob["shard_stamps"] = [scrubbed(sh) for sh in self.shards]
+        for sh in self.shards:
+            sh[idx] = _POISON
         self.swap_outs += 1
         return blob
 
     def swap_in(self, rid: int, pages: list[int], blob: dict) -> None:
-        stamps = blob["stamps"]
-        if stamps.shape[0] != len(pages):
+        per_shard = blob.get("shard_stamps") or [blob["stamps"]]
+        if len(per_shard) not in (1, self.n_shards):
             raise SimCorruption(
-                f"restore of rid {rid}: blob holds {stamps.shape[0]} pages, "
-                f"engine allocated {len(pages)}")
-        owners = {int(s) >> 24 for s in stamps.ravel()
-                  if s != _EMPTY and s != _POISON}
-        if owners - {rid}:
-            raise SimCorruption(
-                f"restore of rid {rid} got a blob stamped by rids {owners}")
-        self.pages[np.asarray(pages, np.int64)] = stamps
+                f"restore of rid {rid}: blob holds {len(per_shard)} shard "
+                f"arenas, executor runs {self.n_shards}")
+        idx = np.asarray(pages, np.int64)
+        for s, sh in enumerate(self.shards):
+            stamps = per_shard[s if len(per_shard) > 1 else 0]
+            if stamps.shape[0] != len(pages):
+                raise SimCorruption(
+                    f"restore of rid {rid}: blob holds {stamps.shape[0]} "
+                    f"pages, engine allocated {len(pages)}")
+            owners = {int(v) >> 24 for v in stamps.ravel()
+                      if v != _EMPTY and v != _POISON}
+            if owners - {rid}:
+                raise SimCorruption(
+                    f"restore of rid {rid} got a blob stamped by rids "
+                    f"{owners}")
+            sh[idx] = stamps
         self.swap_ins += 1
 
     def measure_vrr(self, page_row, ctx, acc, key):

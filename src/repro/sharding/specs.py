@@ -23,7 +23,8 @@ import jax
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-__all__ = ["ShardingRules", "build_param_specs", "named_shardings", "batch_spec"]
+__all__ = ["ShardingRules", "build_param_specs", "named_shardings",
+           "batch_spec", "serve_param_specs"]
 
 COLUMN = {"wq", "wk", "wv", "w_gate", "w_up", "in_proj", "lm_head", "frontend_proj"}
 ROW = {"wo", "w_down", "out_proj"}
@@ -100,6 +101,47 @@ def build_param_specs(params_or_shapes: Any, rules: ShardingRules):
     def f(path, leaf):
         shape = tuple(leaf.shape)
         return _leaf_spec(rules, _path_names(path), shape)
+
+    return jax.tree_util.tree_map_with_path(f, params_or_shapes)
+
+
+# Tensor-parallel SERVING splits every GEMM on its OUTPUT dim only —
+# including wo/w_down, which the training rules above split on the
+# CONTRACTION dim.  The serve path's exactness contract ("sharded logits
+# are bitwise the single-device logits") relies on N-slice invariance: an
+# output-column slice of a dot is the corresponding slice of the full dot,
+# bit-for-bit, because each output element's reduction is untouched by the
+# split.  A contraction split would psum partial sums — a different
+# accumulation order that rounds differently.  The heads/d_ff gathers are
+# tiled all_gathers (pure data movement); attention's cross-shard combine
+# is the exact psum'd carry merge (kernels.attention.psum_carry).
+_SERVE_SPLIT = COLUMN | ROW | COLUMN_BIAS
+
+
+def serve_param_specs(params_or_shapes: Any, *, n_shards: int,
+                      model_axis: str = "model",
+                      logit_wire: str = "gather"):
+    """Pytree of PartitionSpec for the tensor-parallel serve executor:
+    output-dim (last-axis) model splits for wq/wk/wv/wo/w_gate/w_up/
+    w_down/lm_head and the qkv biases; embed, norms and everything else
+    replicated.  Leading layer-stack dims are never sharded.  Under the
+    int8 logit wire the ``lm_head`` stays REPLICATED (each shard computes
+    partial logits over its d_model slice of the activations instead).
+    Divisibility is an error, not a silent fallback — a serve mesh that
+    cannot split a weight would silently change the numerics contract."""
+
+    def f(path, leaf):
+        name = _path_names(path)[-1]
+        shape = tuple(leaf.shape)
+        if name not in _SERVE_SPLIT or not shape:
+            return P()
+        if name == "lm_head" and logit_wire == "int8":
+            return P()
+        if shape[-1] % n_shards != 0:
+            raise ValueError(
+                f"serve mesh of {n_shards} shards cannot split "
+                f"{'/'.join(_path_names(path))} last dim {shape[-1]}")
+        return P(*([None] * (len(shape) - 1)), model_axis)
 
     return jax.tree_util.tree_map_with_path(f, params_or_shapes)
 

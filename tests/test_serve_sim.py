@@ -318,6 +318,140 @@ def test_utilization_beats_reservation_baseline_on_bursty_mix():
 
 
 # --------------------------------------------------------------------------
+# mesh mode: per-shard arenas, merge-order fuzzing, allocator lockstep
+# --------------------------------------------------------------------------
+
+
+def make_mesh_engine(n_shards, *, n_pages=12, max_batch=4, merge_seed=0,
+                     **kw):
+    ex = SimExecutor(n_pages=n_pages, page_size=PAGE, vocab_size=211,
+                     n_shards=n_shards, merge_seed=merge_seed)
+    eng = ServeEngine(None, None, n_pages=n_pages, page_size=PAGE,
+                      max_batch=max_batch, executor=ex, **kw)
+    return eng, ex
+
+
+def test_mesh_engine_auto_pairs_with_sharded_page_pool():
+    """An executor advertising ``n_shards`` gets a ShardedPagePool (one
+    logical allocator, N lockstep replicas); a plain one keeps PagePool."""
+    from repro.serve.kvcache import ShardedPagePool
+
+    eng, _ = make_mesh_engine(4)
+    assert eng.tp_shards == 4
+    assert isinstance(eng.pool, ShardedPagePool)
+    assert eng.plan.tp_shards == 4  # default plan re-certified for the mesh
+    eng1, _ = make_engine()
+    assert eng1.tp_shards == 1
+    assert not isinstance(eng1.pool, ShardedPagePool)
+
+
+# 2 shard counts x 50 seeds = 100 seeded mesh schedules, each with its own
+# merge-order permutation stream (merge_seed = trace seed), alternating
+# one-shot and chunked prefill, invariants checked every tick by
+# replay_trace (ShardedPagePool.check_invariants covers every replica)
+MESH_SHARDS = (2, 4)
+MESH_SEEDS_PER_SHARD = 50
+
+
+@pytest.mark.parametrize("n_shards", MESH_SHARDS)
+def test_mesh_merge_order_fuzz(n_shards):
+    preempts = merges = 0
+    for i in range(MESH_SEEDS_PER_SHARD):
+        seed = BASE_SEED + 7000 * n_shards + i
+        eng, ex = make_mesh_engine(
+            n_shards, n_pages=16, max_batch=6, merge_seed=seed,
+            prefill_chunk_tokens=(PAGE if i % 2 else None))
+        trace = poisson_burst_trace(
+            seed, n_requests=14, prompt_range=(2, 14), gen_range=(2, 10),
+            max_request_tokens=eng.tokens_capacity)
+        m = replay_trace(eng, trace)
+        assert_outputs_exact(eng, ex, m["submitted"],
+                             ctx=f"mesh {n_shards} seed {seed}")
+        ex.check_shard_lockstep()
+        eng.pool.check_invariants()
+        preempts += m["preemptions"]
+        merges += ex.merges_folded
+    assert merges > 0, "merge folds never ran — mesh mode is vacuous"
+    assert preempts > 0, (
+        f"{MESH_SEEDS_PER_SHARD} mesh schedules never preempted — the "
+        "per-shard swap path is not being exercised")
+
+
+def test_mesh_schedule_count_floor():
+    """The acceptance floor: >= 100 seeded mesh schedules per run."""
+    assert len(MESH_SHARDS) * MESH_SEEDS_PER_SHARD >= 100
+
+
+def test_mesh_divergence_is_detected():
+    """Meta-test: corrupt ONE shard's arena — the next merged read must
+    name the diverging shard, because that is the state in which the real
+    psum'd carry merge would stop being bit-exact."""
+    eng, ex = make_mesh_engine(3, n_pages=10, max_batch=2)
+    rid = eng.submit([1] * 6, 6)
+    eng.step()
+    eng.step()
+    assert rid in eng.active
+    page0 = eng.pool.pages(rid)[0]
+    ex.shards[1][page0, 0] ^= 1
+    with pytest.raises(SimCorruption, match="shard divergence"):
+        eng.run()
+
+
+def test_mesh_swap_roundtrip_restores_every_shard():
+    """Forced preempt + drain in mesh mode: the swap blob carries EVERY
+    shard's arena slice and the restore puts each one back — proven by
+    the post-restore merged reads and final whole-arena lockstep."""
+    eng, ex = make_mesh_engine(4, n_pages=20, max_batch=4, merge_seed=5,
+                               prefill_chunk_tokens=4)
+    r0 = eng.submit([1] * 10, 8)
+    r1 = eng.submit([1] * 6, 8)
+    for _ in range(5):
+        eng.step()
+    assert r0 in eng.active and not eng.active[r0].in_prefill
+    eng.preempt(r0)
+    assert ex.swap_outs == 1
+    out = eng.run()
+    assert ex.swap_ins == 1
+    assert out[r0] == expected_generation(r0, 10, 8, ex)
+    assert out[r1] == expected_generation(r1, 6, 8, ex)
+    ex.check_shard_lockstep()
+
+
+def test_mesh_partial_restore_is_detected():
+    """A blob that lost a shard's slice (or restored into the wrong shard
+    count) is corruption, not a silent fallback."""
+    ex = SimExecutor(n_pages=6, page_size=PAGE, n_shards=3)
+    from repro.serve.sim import _stamp
+
+    for j in range(6):
+        ex._write(2 + j // PAGE, j % PAGE, _stamp(1, j))
+    blob = ex.swap_out(1, [2, 3])
+    assert len(blob["shard_stamps"]) == 3
+    blob["shard_stamps"] = blob["shard_stamps"][:2]
+    with pytest.raises(SimCorruption, match="shard arenas"):
+        ex.swap_in(1, [2, 3], blob)
+
+
+def test_sharded_page_pool_mirrors_and_detects_drift():
+    """ShardedPagePool: every mutation lands on every replica; a replica
+    that drifts (lost page, stale length, desynced free list) fails
+    ``check_invariants`` naming the shard."""
+    from repro.serve.kvcache import ShardedPagePool
+
+    pool = ShardedPagePool(8, PAGE, n_shards=3)
+    pool.allocate(1, 6)
+    pool.extend(1, 2)
+    pool.allocate(2, 3)
+    pool.check_invariants()
+    assert pool.page_table([1, 2], 4).shape == (2, 4)
+    pool.release(2)
+    pool.check_invariants()
+    pool._replicas[2]._pages[1] = pool._replicas[2]._pages[1][:-1]
+    with pytest.raises(AssertionError):
+        pool.check_invariants()
+
+
+# --------------------------------------------------------------------------
 # hypothesis state machine (optional: skipped when hypothesis is absent)
 # --------------------------------------------------------------------------
 

@@ -1,21 +1,33 @@
-"""Sunset tests for the jax < 0.5 API shims.
+"""Sunset tests for the project's compatibility shims.
 
-Two shims bridge old jax APIs: ``repro.sharding.compat.shard_map`` (the
+Two jax < 0.5 API shims: ``repro.sharding.compat.shard_map`` (the
 ``jax.experimental.shard_map`` / ``check_rep`` fallback) and
 ``repro.launch.dryrun._memory`` (synthesized ``peak_memory_in_bytes``).
-Both are now gated on ``compat.LEGACY_SHIMS_NEEDED``; this module is the
-alarm clock that FAILS — naming the exact deletions — once the project's
-jax floor in pyproject.toml passes 0.5, so the dead branches cannot
-outlive the API they bridge (ROADMAP "jax API drift").
+Both are gated on ``compat.LEGACY_SHIMS_NEEDED``; the jax-floor test
+below FAILS — naming the exact deletions — once the project's jax floor
+in pyproject.toml passes 0.5, so the dead branches cannot outlive the
+API they bridge (ROADMAP "jax API drift").
+
+Four PAGED-PROTOCOL shims: the pre-``repro.models.api`` entry points
+``lm.prefill_paged`` / ``lm.decode_step_paged`` / ``lm.prefill_chunk_paged``
+and ``encdec.decode_step_paged``, kept as DeprecationWarning-emitting
+delegates for one minor release.  The same alarm-clock posture applies:
+``lm.PAGED_SHIMS_SUNSET`` pins the project version at which they go, and
+the sunset test fails with deletion instructions the release that
+reaches it.
 """
 
 from __future__ import annotations
 
+import contextlib
+import inspect
 import os
 import re
 
 import jax
+import pytest
 
+from repro.models import encdec, lm
 from repro.sharding import compat
 
 _PYPROJECT = os.path.join(os.path.dirname(os.path.dirname(
@@ -64,3 +76,46 @@ def test_shard_map_prefers_modern_entry_point():
                          check_vma=False)
     out = f(np.ones((2,), np.float32))
     assert out.shape == (2,)
+
+
+# --------------------------------------------------------------------------
+# paged-protocol shims (PR 6): delegates for the pre-models.api entry points
+# --------------------------------------------------------------------------
+
+_PAGED_SHIMS = (lm.prefill_paged, lm.decode_step_paged,
+                lm.prefill_chunk_paged, encdec.decode_step_paged)
+
+
+def _project_version() -> tuple[int, int]:
+    text = open(_PYPROJECT).read()
+    m = re.search(r'^version\s*=\s*"(\d+)\.(\d+)', text, re.M)
+    assert m, "pyproject.toml no longer declares a version"
+    return (int(m.group(1)), int(m.group(2)))
+
+
+def test_paged_shims_sunset():
+    """FAILS at the release that reaches ``lm.PAGED_SHIMS_SUNSET``: time
+    to delete the deprecated paged entry points."""
+    version = _project_version()
+    assert version < lm.PAGED_SHIMS_SUNSET, (
+        f"project version {version[0]}.{version[1]} reached the paged-shim "
+        f"sunset {lm.PAGED_SHIMS_SUNSET} — DELETE lm.prefill_paged, "
+        "lm.decode_step_paged, lm.prefill_chunk_paged and "
+        "encdec.decode_step_paged (callers use the repro.models.api paged "
+        "protocol), then remove lm.PAGED_SHIMS_SUNSET and these tests")
+
+
+@pytest.mark.parametrize("shim", _PAGED_SHIMS,
+                         ids=lambda f: f"{f.__module__}.{f.__name__}")
+def test_paged_shims_still_warn(shim):
+    """Until the sunset, every shim must emit its DeprecationWarning
+    BEFORE delegating (the call may then fail on the dummy operands —
+    only the warning is under test)."""
+    sig = inspect.signature(shim)
+    args = [None] * sum(1 for p in sig.parameters.values()
+                        if p.default is p.empty
+                        and p.kind is not p.KEYWORD_ONLY)
+    kwargs = {n: None for n, p in sig.parameters.items()
+              if p.default is p.empty and p.kind is p.KEYWORD_ONLY}
+    with pytest.warns(DeprecationWarning), contextlib.suppress(Exception):
+        shim(*args, **kwargs)
