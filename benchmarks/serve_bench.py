@@ -48,6 +48,7 @@ from repro.configs import get_smoke_config
 from repro.kernels.common import count_pallas_executions
 from repro.models import lm
 from repro.models.api import get_model
+from repro.obs import Tracer, percentile, request_latencies
 from repro.serve.scheduler import ServeEngine
 from repro.serve.sim import bursty_utilization_comparison
 
@@ -105,33 +106,21 @@ def _logit_exact(model, params, eng) -> bool:
 
 def _cold_vs_warm(model, params) -> dict:
     """Compile-tax scenario (see module docstring).  Per-request first-token
-    latency is wall-clock from the shared submit instant to the request's
-    first generated token; p99 over the batch.  Latency numbers are
-    interpret-mode wall-times (directional only) — the TRANSFERABLE
-    quantity is the compile count, which is why CI gates
+    latency (TTFT) is read off the request-lifecycle span tree: the tracer
+    stamps the root span at submit and a token event at each emission, so
+    TTFT is per-request from ITS OWN submit instant, not a shared t0.
+    Latency numbers are interpret-mode wall-times (directional only) — the
+    TRANSFERABLE quantity is the compile count, which is why CI gates
     ``warm_steady_compiles == 0`` and not the latencies."""
     kw = dict(n_pages=N_PAGES, page_size=PAGE_SIZE, max_batch=4,
               prefill_chunk_tokens=PREFILL_CHUNK)
 
-    def drive(eng, prompts):
+    def drive(eng, tracer, prompts):
         rids = [eng.submit(p, GEN) for p in prompts]
-        t0 = time.time()
-        first: dict[int, float] = {}
-        for _ in range(10_000):
-            if len(first) == len(rids):
-                break
-            eng.step()
-            now = time.time()
-            for r in rids:
-                if r in first:
-                    continue
-                seq = eng.active.get(r)
-                if (seq is not None and seq.generated) or r in eng.finished:
-                    first[r] = now - t0
-        else:
-            raise RuntimeError("first tokens did not appear")
         eng.run()
-        return [first[r] for r in rids]
+        lat = request_latencies(tracer.to_dicts())
+        assert {r["rid"] for r in lat} == set(rids)
+        return [r["ttft"] for r in lat]
 
     rng = np.random.RandomState(2)
     cfg = model.cfg
@@ -143,26 +132,26 @@ def _cold_vs_warm(model, params) -> dict:
                                      int(rng.randint(3, 23))))
                     for _ in range(4)]
 
-    cold = ServeEngine(model, params, **kw)
+    cold_tr = Tracer()
+    cold = ServeEngine(model, params, tracer=cold_tr, **kw)
     c0 = cold.compile_stats()
-    cold_lat = drive(cold, cold_prompts)
+    cold_lat = drive(cold, cold_tr, cold_prompts)
     c1 = cold.compile_stats()
 
-    warm = ServeEngine(model, params, **kw)
+    warm_tr = Tracer()
+    warm = ServeEngine(model, params, tracer=warm_tr, **kw)
     w0 = warm.compile_stats()
     warm.warmup()
     w1 = warm.compile_stats()
-    warm_lat = drive(warm, warm_prompts)
+    warm_lat = drive(warm, warm_tr, warm_prompts)
     w2 = warm.compile_stats()
 
     return {
         "cold_compiles": c1["compiles"] - c0["compiles"],
-        "cold_first_token_p99_s": round(float(np.percentile(cold_lat, 99)),
-                                        4),
+        "cold_first_token_p99_s": round(percentile(cold_lat, 99), 4),
         "warm_warmup_compiles": w1["compiles"] - w0["compiles"],
         "warm_steady_compiles": w2["compiles"] - w1["compiles"],
-        "warm_first_token_p99_s": round(float(np.percentile(warm_lat, 99)),
-                                        4),
+        "warm_first_token_p99_s": round(percentile(warm_lat, 99), 4),
         "warm_dispatch_hits": w2["hits"] - w1["hits"],
     }
 
@@ -261,8 +250,9 @@ def run(json_path: str = "BENCH_serve.json") -> dict:
     # cache is empty — every other engine below shares (and warms) it
     cold_vs_warm = _cold_vs_warm(model, params)
 
+    tracer = Tracer()
     eng = ServeEngine(model, params, n_pages=N_PAGES, page_size=PAGE_SIZE,
-                      max_batch=4, monitor_cadence=5,
+                      max_batch=4, monitor_cadence=5, tracer=tracer,
                       prefill_chunk_tokens=PREFILL_CHUNK)
     rng = np.random.RandomState(1)
     rids = [eng.submit(list(rng.randint(0, cfg.vocab_size, n)), GEN)
@@ -271,6 +261,19 @@ def run(json_path: str = "BENCH_serve.json") -> dict:
     t0 = time.time()
     results = eng.run()
     dt = max(time.time() - t0, 1e-9)
+
+    # TTFT/TPOT from the span tree (wall clock; interpret-mode, so
+    # directional only — the attribution MECHANISM is what transfers)
+    lat = request_latencies(tracer.to_dicts())
+    latency = {
+        "requests": len(lat),
+        "ttft_p50_s": percentile([r["ttft"] for r in lat], 50),
+        "ttft_p99_s": percentile([r["ttft"] for r in lat], 99),
+        "tpot_p50_s": percentile([r["tpot"] for r in lat], 50),
+        "tpot_p99_s": percentile([r["tpot"] for r in lat], 99),
+    }
+    latency = {k: round(v, 4) if isinstance(v, float) else v
+               for k, v in latency.items()}
 
     packed = eng.kv_bytes_per_token()
     f32 = eng.kv_bytes_per_token(carrier_bytes=4)
@@ -313,8 +316,9 @@ def run(json_path: str = "BENCH_serve.json") -> dict:
         "kv_compression_vs_f32": round(f32 / packed, 3),
         "kv_compression_vs_bf16": round(bf16 / packed, 3),
         "logit_exact_vs_f32_oracle": exact,
+        "latency_from_spans": latency,
         "sharded": sharded,
-        "monitor_events": eng.events,
+        "monitor_events": list(eng.events),
         "generated": {int(r): results[r] for r in rids},
     }
     eng.pool.check_invariants()
@@ -330,6 +334,9 @@ def run(json_path: str = "BENCH_serve.json") -> dict:
         print(f"  {k:34s} {out[k]}")
     print("### cold-vs-warm compile tax (warm steady-state must be 0)")
     for k, v in cold_vs_warm.items():
+        print(f"  {k:34s} {v}")
+    print("### request latency from span tree (TTFT/TPOT, wall clock)")
+    for k, v in latency.items():
         print(f"  {k:34s} {v}")
     print("### bursty-arrival scheduler comparison (virtual clock)")
     for k, v in bursty.items():

@@ -14,15 +14,21 @@ and decision is appended to ``TELEMETRY_demo.jsonl`` — the artifact CI
 uploads, and whose final event CI gates on (controller must end within
 1 bit of the closed-form bound).
 
-Run:  PYTHONPATH=src python benchmarks/telemetry_loop.py
+Both the sweep rows and the controller events land in the artifact through
+the one shared JSONL sink (``repro.obs.sink.jsonl_append`` — the same
+appender behind the controller log and the serve monitor log), so
+``TELEMETRY_demo.jsonl`` is regenerated from scratch by simply re-running
+this script:
+
+    PYTHONPATH=src python benchmarks/telemetry_loop.py
 """
 
 from __future__ import annotations
 
-import json
-
 import jax
 import jax.numpy as jnp
+
+from repro.obs.sink import jsonl_append
 
 from repro.core.policy import AccumulationPolicy, GEMMPrecision
 from repro.core.precision import min_m_acc
@@ -78,9 +84,7 @@ def run(csv=False, jsonl_path="TELEMETRY_demo.jsonl"):
                     "kernel_predicted_vrr": pred, "chunked_predicted_vrr": cor1,
                     "log_v_measured": v_meas, "n1": N1, "n2": N2,
                     "swamp_rate": float(st.swamp_rate)}
-    with open(jsonl_path, "a") as f:
-        for row in sweep.values():
-            f.write(json.dumps(row) + "\n")
+    jsonl_append(jsonl_path, list(sweep.values()))
 
     print(f"\n### closed loop: start at solver bound - 2 = {m_pred - 2}, "
           f"controller probes until the knee test passes")

@@ -62,6 +62,7 @@ from __future__ import annotations
 
 import functools
 import math
+from contextlib import contextmanager
 
 import jax
 import jax.numpy as jnp
@@ -90,6 +91,7 @@ __all__ = [
     "finalize_carry",
     "kernel_trace_counts",
     "reset_kernel_trace_counts",
+    "counting_traces",
     "NEG",
 ]
 
@@ -107,6 +109,24 @@ def kernel_trace_counts() -> dict[str, int]:
 
 def reset_kernel_trace_counts() -> None:
     _TRACE_COUNTS.clear()
+
+
+@contextmanager
+def counting_traces():
+    """Snapshot-delta view of the trace counters: yields a dict filled with
+    the with-block's DELTA on exit, without mutating the process-wide
+    counters.  Compile-count regression tests assert on the scoped delta
+    instead of calling ``reset_kernel_trace_counts()``, so they cannot race
+    each other's resets under any pytest ordering."""
+    before = dict(_TRACE_COUNTS)
+    delta: dict[str, int] = {}
+    try:
+        yield delta
+    finally:
+        for name, count in _TRACE_COUNTS.items():
+            d = count - before.get(name, 0)
+            if d:
+                delta[name] = d
 
 
 def _count_trace(name: str) -> None:

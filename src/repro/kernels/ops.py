@@ -92,6 +92,15 @@ class QDotConfig:
     in 8 bits; silently kept f32 otherwise, e.g. the (1,6,9) lm_head).
     ``out_fmt`` is the consumer-format hint: the forward output is rounded
     to this format in the GEMM epilogue (straight-through in the backward).
+    ``stats_tag`` turns on in-graph telemetry (``repro.obs.ingraph``): the
+    backward rule additionally collects the swamping-stats rows of all
+    three roles — the pair kernel's ``collect_stats`` epilogue for BWD/GRAD
+    and one stats replay of the saved residuals for FWD — and ships them
+    host-side via ``io_callback`` under the tag.  The forward path and the
+    dx/dw values are untouched (pinned bit-identical), and an untagged
+    config traces no callback at all.  ``stats_axis`` psums each row across
+    that mesh axis (``EnsembleStats.psum``) before shipping, masked to
+    shard 0 so the host sees one global window.
     """
 
     fwd: GEMMPrecision | None = None
@@ -101,6 +110,8 @@ class QDotConfig:
     fused: bool = True
     pack_residuals: bool = True
     out_fmt: FPFormat | None = None
+    stats_tag: str | None = None
+    stats_axis: str | None = None
     # autotune-table dtype label override for the forward consult: the MoE
     # expert einsum shapes are warmed under "bf16" keys (they are bf16 GEMMs
     # outside the quantized emulation) — routing them through qdot must look
@@ -262,6 +273,82 @@ def _mm_fused(
     )
 
 
+# ------------------------ in-graph telemetry emission -----------------------
+
+
+def _chunk_of(p: GEMMPrecision | None) -> int:
+    return p.chunk if (p is not None and p.chunk > 0) else 128
+
+
+def _emit_stats_row(tag: str, role: str, n: int, n1: int, m_acc: int,
+                    axis: str | None, raw: jnp.ndarray) -> None:
+    """Ship one raw ``N_STATS`` swamping row host-side from inside the
+    jitted step (``jax.experimental.io_callback``; the geometry metadata is
+    trace-time static, so only the row crosses the device boundary).  With
+    ``axis`` set, the row is psum'd across the mesh via
+    ``EnsembleStats.psum`` and zeroed on every shard but 0 — an all-zero
+    row is the raw-merge identity, so the host collector sees exactly one
+    global window per emission site."""
+    from jax.experimental import io_callback
+
+    from repro.obs.ingraph import dispatch_raw
+    from repro.telemetry.stats import EnsembleStats
+
+    raw = raw.reshape(-1).astype(jnp.float32)
+    if axis is not None:
+        raw = EnsembleStats.from_raw(raw).psum(axis).to_raw()
+        raw = jnp.where(jax.lax.axis_index(axis) == 0, raw,
+                        jnp.zeros_like(raw))
+    io_callback(
+        functools.partial(dispatch_raw, tag, role, int(n), int(n1), int(m_acc)),
+        None, raw, ordered=False)
+
+
+def _emit_qdot_stats(cfg: QDotConfig, g, xp, wp, packed: bool,
+                     t: int, k: int, n: int, raw_pair=None) -> None:
+    """Collect + emit the three roles' stats for one tagged qdot backward.
+
+    BWD/GRAD come from ``raw_pair`` (the one-pass pair kernel's
+    ``collect_stats`` epilogue — zero extra GEMMs) when available;
+    otherwise (N-split / two-GEMM fallback / oracle) they are measured by
+    stats replays of the same contractions.  FWD is always a stats replay
+    of the saved residuals — the forward pass itself stays untouched (its
+    residual-emission epilogue is exclusive with ``collect_stats``).
+    Geometry per role matches ``repro.telemetry.probe``: accumulation
+    length K / N / T, chunk = the role's rounding cadence.
+    """
+    from repro.telemetry.stats import gemm_stats
+
+    tag, axis = cfg.stats_tag, cfg.stats_axis
+    quantize = cfg.repr_fmt is not None
+    if cfg.fwd is not None:
+        _, st = gemm_stats(xp, wp, precision=cfg.fwd, repr_fmt=cfg.repr_fmt,
+                           quantize_a=False, quantize_b=False,
+                           a_packed=packed, b_packed=packed)
+        _emit_stats_row(tag, "fwd", k, _chunk_of(cfg.fwd), cfg.fwd.m_acc,
+                        axis, st.to_raw())
+    if raw_pair is not None:
+        if cfg.bwd is not None:
+            _emit_stats_row(tag, "bwd", n, _chunk_of(cfg.bwd), cfg.bwd.m_acc,
+                            axis, raw_pair[0])
+        if cfg.grad is not None:
+            _emit_stats_row(tag, "grad", t, _chunk_of(cfg.grad),
+                            cfg.grad.m_acc, axis, raw_pair[1])
+        return
+    if cfg.bwd is not None:
+        _, st = gemm_stats(g, wp.T, precision=cfg.bwd, repr_fmt=cfg.repr_fmt,
+                           quantize_a=quantize, quantize_b=False,
+                           b_packed=packed)
+        _emit_stats_row(tag, "bwd", n, _chunk_of(cfg.bwd), cfg.bwd.m_acc,
+                        axis, st.to_raw())
+    if cfg.grad is not None:
+        _, st = gemm_stats(xp.T, g, precision=cfg.grad, repr_fmt=cfg.repr_fmt,
+                           quantize_a=False, quantize_b=quantize,
+                           a_packed=packed)
+        _emit_stats_row(tag, "grad", t, _chunk_of(cfg.grad), cfg.grad.m_acc,
+                        axis, st.to_raw())
+
+
 # ------------------------- unfused reference oracle -------------------------
 
 
@@ -344,10 +431,14 @@ def _qdot2d_fwd(x, w, cfg):
 
 def _qdot2d_bwd(cfg, res, g):
     xq, wq = res
+    tagged = cfg.stats_tag is not None
     if not cfg.fused:
         gq = _maybe_q(g, cfg.repr_fmt)
         dx = _mm(gq, wq.T, cfg.bwd)
         dw = _mm(xq.T, gq, cfg.grad)
+        if tagged:
+            _emit_qdot_stats(cfg, g, xq, wq, False,
+                             xq.shape[0], xq.shape[1], wq.shape[1])
         return dx.astype(wq.dtype), dw.astype(wq.dtype)
     # out_fmt's epilogue rounding is straight-through: g passes unscaled
     # (identically in the oracle above, so fused == oracle bit-for-bit)
@@ -374,9 +465,20 @@ def _qdot2d_bwd(cfg, res, g):
                   grad_acc=(eg, mg), block_t=bt, block_k=bk, block_n=bn,
                   packed=packed, quantize_g=cfg.repr_fmt is not None)
         if segs == 1:
-            dx, dw = qmatmul_bwd_pair(g, xp, wp, **kw)
+            if tagged:
+                # same blocks, collect_stats epilogue on: dx/dw stay
+                # bit-identical (shadow carries are extra outputs, not a
+                # different reduction), BWD+GRAD stats come for free
+                dx, dw, raw = qmatmul_bwd_pair(g, xp, wp,
+                                               collect_stats=True, **kw)
+                _emit_qdot_stats(cfg, g, xp, wp, packed, t, k, n,
+                                 raw_pair=raw)
+            else:
+                dx, dw = qmatmul_bwd_pair(g, xp, wp, **kw)
         else:
             dx, dw = qmatmul_bwd_pair_nsplit(g, xp, wp, n_split=segs, **kw)
+            if tagged:
+                _emit_qdot_stats(cfg, g, xp, wp, packed, t, k, n)
         return dx, dw
     # VMEM fallback: two fused GEMMs, residuals still consumed packed
     # (the int8 transpose is an XLA copy, not a pallas pass)
@@ -389,6 +491,8 @@ def _qdot2d_bwd(cfg, res, g):
     dw = _mm_fused(xp.T, g, cfg.grad, cfg.repr_fmt,
                    quantize_a=False, quantize_b=True, a_packed=packed,
                    dtype_key=cfg.table_dtype)
+    if tagged:
+        _emit_qdot_stats(cfg, g, xp, wp, packed, t, k, n)
     return dx, dw
 
 

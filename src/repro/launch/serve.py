@@ -85,6 +85,18 @@ def parse_args(argv=None):
     ap.add_argument("--legacy", action="store_true",
                     help="force the static-batch loop")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--obs-spans", default="",
+                    help="trace the request lifecycle (repro.obs.trace) and "
+                         "export the span tree as JSONL here")
+    ap.add_argument("--obs-metrics", default="",
+                    help="record engine metrics in the unified registry "
+                         "(repro.obs.metrics) and export them as JSONL here")
+    ap.add_argument("--obs-prometheus", default="",
+                    help="also export the registry in Prometheus textfile-"
+                         "collector format here")
+    ap.add_argument("--events-capacity", type=int, default=4096,
+                    help="ring-buffer capacity for engine events "
+                         "(preempt/restore/monitor records; 0 = unbounded)")
     return ap.parse_args(argv)
 
 
@@ -162,12 +174,23 @@ def main(argv=None) -> dict:
             logit_wire=args.logit_wire)
         print(f"serve mesh: {executor.n_shards} tensor-parallel shards, "
               f"logit wire {args.logit_wire}")
+    tracer = None
+    if args.obs_spans:
+        from repro.obs.trace import Tracer
+
+        tracer = Tracer()
+    registry = None
+    if args.obs_metrics or args.obs_prometheus:
+        from repro.obs.metrics import get_registry
+
+        registry = get_registry()
     eng = ServeEngine(model, params, n_pages=n_pages,
                       page_size=args.page_size, max_batch=args.max_batch,
                       prefill_chunk_tokens=args.prefill_chunk or None,
                       reserve_admission=args.reserve_admission,
                       monitor_cadence=args.monitor_cadence, seed=args.seed,
-                      executor=executor)
+                      executor=executor, tracer=tracer, metrics=registry,
+                      events_capacity=args.events_capacity or None)
     if not args.no_warmup:
         # compile every certified bucket's prefill/decode kernels BEFORE
         # traffic arrives — steady-state serving then performs zero traces
@@ -213,10 +236,27 @@ def main(argv=None) -> dict:
               f"{cstats['hits']} dispatch hits / {cstats['misses']} misses")
     print("sample generation (request 0):", results[rids[0]])
     eng.pool.check_invariants()
+    if tracer is not None:
+        from repro.obs.trace import percentile, request_latencies
+
+        n = tracer.export_jsonl(args.obs_spans)
+        lats = request_latencies(tracer.spans)
+        p50 = percentile([r["ttft"] for r in lats], 50)
+        p99 = percentile([r["ttft"] for r in lats], 99)
+        print(f"spans: {n} exported to {args.obs_spans}; "
+              f"TTFT p50={p50} p99={p99} (s)")
+    if registry is not None:
+        from repro.obs.metrics import collect_process_metrics
+
+        collect_process_metrics(registry)
+        if args.obs_metrics:
+            registry.export_jsonl(args.obs_metrics)
+        if args.obs_prometheus:
+            registry.export_prometheus(args.obs_prometheus)
     return {"tok_per_s": float(toks_per_s), "results": results,
             "kv_ratio": f32 / packed, "max_concurrent": eng.max_concurrent,
             "preemptions": eng.preemptions, "restores": eng.restores,
-            "utilization": eng.utilization(), "events": eng.events,
+            "utilization": eng.utilization(), "events": list(eng.events),
             "compile_stats": cstats}
 
 

@@ -64,6 +64,18 @@ def parse_args(argv=None):
     ap.add_argument("--telemetry-log", default="",
                     help="JSONL event-log path (default <ckpt-dir>/telemetry"
                          ".jsonl, or ./telemetry.jsonl without a ckpt dir)")
+    ap.add_argument("--ingraph-telemetry", action="store_true",
+                    help="measure swamping on TRUE training gradients from "
+                         "inside the jitted step (repro.obs.ingraph) instead "
+                         "of the synthetic-cotangent probe; the cadence tick "
+                         "REPLACES the normal step (bit-identical numerics, "
+                         "zero duplicated compute)")
+    ap.add_argument("--obs-metrics", default="",
+                    help="export the unified metrics registry as JSONL here "
+                         "at exit (repro.obs.metrics)")
+    ap.add_argument("--obs-prometheus", default="",
+                    help="export the registry in Prometheus textfile-"
+                         "collector format here at exit")
     ap.add_argument("--loss-scaling", action="store_true")
     ap.add_argument("--mesh", default="auto",
                     help="'auto' (all devices as data), 'DxM', or 'PxDxM'")
@@ -116,6 +128,12 @@ def main(argv=None) -> dict:
     mesh = build_mesh(args.mesh)
     dist = Dist(mesh=mesh, data_axes=("data",)) if mesh is not None else Dist()
 
+    registry = None
+    if args.obs_metrics or args.obs_prometheus or args.ingraph_telemetry:
+        from repro.obs.metrics import get_registry
+
+        registry = get_registry()
+
     tc = TrainConfig(
         opt=O.OptConfig(lr=args.lr, warmup_steps=args.warmup,
                         total_steps=args.steps),
@@ -123,6 +141,17 @@ def main(argv=None) -> dict:
         use_loss_scaling=args.loss_scaling,
         scaler=O.LossScaleConfig(init_scale=1000.0, dynamic=True),
     )
+
+    ingraph = None
+    if args.ingraph_telemetry:
+        if controller is None:
+            raise SystemExit("--ingraph-telemetry needs --telemetry-cadence "
+                             "> 0 and a non-exact --policy")
+        from repro.obs.ingraph import InGraphTelemetry
+
+        ingraph = InGraphTelemetry(controller, tc, seq_len=args.seq_len,
+                                   global_batch=args.global_batch, dist=dist,
+                                   registry=registry)
 
     state = init_train_state(model, jax.random.PRNGKey(args.seed), tc)
     print(f"arch={cfg.name} params={param_count(state['params'])/1e6:.1f}M "
@@ -199,24 +228,34 @@ def main(argv=None) -> dict:
             print(f"FAULT INJECTION: dying at step {step}", flush=True)
             os._exit(42)
         batch = with_extras(next(data), cfg)
+        due_ingraph = ingraph is not None and ingraph.due(step + 1)
+        events, new_model = [], None
         with mesh or _null():
-            state, m = step_fn(state, batch)
-        if controller is not None and controller.due(step + 1):
+            if due_ingraph:
+                # the stats-variant step REPLACES the normal step: same
+                # numerics bit-for-bit, plus true-gradient swamping windows
+                # shipped to the controller from inside the backward pass
+                state, m, events, new_model = ingraph.tick(
+                    model, state, batch, step=step + 1)
+            else:
+                state, m = step_fn(state, batch)
+        if not due_ingraph and controller is not None \
+                and controller.due(step + 1):
             from repro.train.loop import run_telemetry_tick
 
             events, new_model = run_telemetry_tick(
                 controller, model, state, batch, dist, step=step + 1,
                 key=jax.random.PRNGKey(args.seed * 1000003 + step + 1),
                 seq_len=args.seq_len, global_batch=args.global_batch)
-            for e in events:
-                if e["event"] != "ok":
-                    print(json.dumps({"telemetry": e}), flush=True)
-            if new_model is not None:
-                # the controller changed some m_acc: re-plan, re-warm the
-                # autotune entries the new widths key to, re-jit (rare —
-                # hysteresis-gated)
-                model, cfg = new_model, new_model.cfg
-                step_fn = jit_step(model)
+        for e in events:
+            if e["event"] != "ok":
+                print(json.dumps({"telemetry": e}), flush=True)
+        if new_model is not None:
+            # the controller changed some m_acc: re-plan, re-warm the
+            # autotune entries the new widths key to, re-jit (rare —
+            # hysteresis-gated)
+            model, cfg = new_model, new_model.cfg
+            step_fn = jit_step(model)
         if (step + 1) % args.log_every == 0 or step + 1 == args.steps:
             last_loss = float(m["loss"])
             rec = {"step": step + 1, "loss": last_loss,
@@ -241,6 +280,14 @@ def main(argv=None) -> dict:
                         if controller else None)
     if metrics_f:
         metrics_f.close()
+    if registry is not None:
+        from repro.obs.metrics import collect_process_metrics
+
+        collect_process_metrics(registry)
+        if args.obs_metrics:
+            registry.export_jsonl(args.obs_metrics)
+        if args.obs_prometheus:
+            registry.export_prometheus(args.obs_prometheus)
     return {"final_loss": last_loss, "steps": args.steps}
 
 

@@ -1,0 +1,47 @@
+"""Injectable monotonic-clock seam for the observability layer.
+
+Every timestamp the tracing layer records comes through a ``Clock`` so the
+scheduler simulation (``repro.serve.sim``) can drive a ``VirtualClock`` from
+its integer tick counter and produce *deterministic* span trees: replaying
+the same trace with the same seed yields byte-identical span JSONL,
+regardless of host load.  Production uses ``SystemClock``
+(``time.monotonic`` — monotonic, so span durations are immune to wall-clock
+steps).
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Protocol
+
+__all__ = ["Clock", "SystemClock", "VirtualClock"]
+
+
+class Clock(Protocol):
+    def now(self) -> float:  # pragma: no cover - protocol
+        ...
+
+
+class SystemClock:
+    """Monotonic host time (seconds)."""
+
+    def now(self) -> float:
+        return time.monotonic()
+
+
+class VirtualClock:
+    """Deterministic clock for simulations: time moves only when the
+    harness says so.  ``replay_trace`` sets it to the scheduler tick, so
+    span timestamps are the tick at which the event happened."""
+
+    def __init__(self, t: float = 0.0):
+        self._t = float(t)
+
+    def now(self) -> float:
+        return self._t
+
+    def set(self, t: float) -> None:
+        self._t = float(t)
+
+    def advance(self, dt: float = 1.0) -> None:
+        self._t += float(dt)

@@ -1,0 +1,220 @@
+"""In-graph numerics telemetry: true-gradient swamping stats from the
+jitted train step.
+
+The PR-3 telemetry tick measures the backward roles on SYNTHETIC ``N(0,1)``
+gradients — true gradients exist only inside autodiff traces, where the
+eager capture hook cannot see them.  This module closes that gap (the
+ROADMAP open item): tagging a model's ``QuantPlan`` (``tag_quant_plan``)
+sets ``QDotConfig.stats_tag`` on every quantized field, which makes each
+``qdot``'s *backward rule* additionally collect the raw swamping rows of
+all three roles — the one-pass pair kernel's ``collect_stats`` epilogue for
+BWD/GRAD (zero extra GEMMs) and a residual replay for FWD — and ship them
+host-side with ``jax.experimental.io_callback``.  The forward path and
+dx/dw are bit-identical to the untagged model (pinned in
+``tests/test_obs_ingraph.py``), so the stats-variant step can *replace* the
+normal step on cadence ticks: the controller observes live training
+gradients at zero duplicated compute beyond the stats epilogues.
+
+Data path::
+
+    jitted stats-variant step
+      └─ io_callback(raw row + static geometry)   per tagged qdot backward
+           └─ dispatch_raw -> active InGraphCollector   (raw-row sum-merge)
+                └─ .probes() -> {(field, role): GemmProbe}
+                     └─ PrecisionController.observe     (same knee loop)
+
+Raw rows merge by slot-wise ``+`` (``max`` for MAX_ABS) — the exact
+ensemble union, so layers sharing a plan field and microbatch scan
+iterations compose the same way ``EnsembleStats.merge`` does.  Under a
+mesh, ``stats_axis`` makes the emission psum the window with
+``EnsembleStats.psum`` and mask it to shard 0 (an all-zero row is the merge
+identity), so the collector sees one global window.
+
+``InGraphTelemetry`` is the cadence driver: it owns the tagged-model /
+jitted-step cache and runs observe -> (on a schedule change) re-plan +
+re-tune, mirroring ``repro.train.loop.run_telemetry_tick``.
+"""
+
+from __future__ import annotations
+
+from contextlib import contextmanager
+from dataclasses import replace
+
+import jax
+import numpy as np
+
+from repro.kernels.common import (
+    N_STATS,
+    STAT_COUNT,
+    STAT_MAX_ABS,
+)
+from repro.telemetry.controller import PLAN_FIELDS, GemmProbe
+from repro.telemetry.stats import EnsembleStats
+
+__all__ = [
+    "InGraphCollector", "InGraphTelemetry", "collecting", "dispatch_raw",
+    "tag_quant_plan",
+]
+
+_ADDITIVE = tuple(i for i in range(N_STATS) if i != STAT_MAX_ABS)
+
+# active-collector stack (same shape as telemetry.capture._STACK: the
+# io_callback lands here, and an empty stack means "drop" — a tagged model
+# run outside `collecting()` costs the callback, nothing else)
+_STACK: list["InGraphCollector"] = []
+
+
+def dispatch_raw(tag: str, role: str, n: int, n1: int, m_acc: int,
+                 row) -> None:
+    """io_callback landing site: route one raw stats row to the active
+    collector.  Zero-count rows (psum-masked non-zero shards) are merge
+    identities and are dropped here."""
+    if not _STACK:
+        return
+    row = np.asarray(row, np.float64).reshape(-1)
+    if row[STAT_COUNT] <= 0:
+        return
+    _STACK[-1].ingest(tag, role, n, n1, m_acc, row)
+
+
+@contextmanager
+def collecting(collector: "InGraphCollector"):
+    _STACK.append(collector)
+    try:
+        yield collector
+    finally:
+        _STACK.pop()
+
+
+class InGraphCollector:
+    """Host-side accumulator of raw swamping rows, keyed (tag, role).
+
+    Rows arriving under the same key — layers sharing a plan field,
+    microbatch scan iterations — sum-merge in float64 (exact ensemble
+    union); ``n`` keeps the longest accumulation, matching the eager
+    probe's merge rule.
+    """
+
+    def __init__(self):
+        self._cells: dict[tuple[str, str], dict] = {}
+
+    def ingest(self, tag: str, role: str, n: int, n1: int, m_acc: int,
+               row: np.ndarray) -> None:
+        cell = self._cells.get((tag, role))
+        if cell is None:
+            self._cells[(tag, role)] = {
+                "row": row.copy(), "n": int(n), "n1": int(n1),
+                "m_acc": int(m_acc), "emissions": 1,
+            }
+            return
+        r = cell["row"]
+        for i in _ADDITIVE:
+            r[i] += row[i]
+        r[STAT_MAX_ABS] = max(r[STAT_MAX_ABS], row[STAT_MAX_ABS])
+        cell["n"] = max(cell["n"], int(n))
+        cell["emissions"] += 1
+
+    def __len__(self) -> int:
+        return len(self._cells)
+
+    def clear(self) -> None:
+        self._cells.clear()
+
+    def probes(self) -> dict[tuple[str, str], GemmProbe]:
+        """The collected windows as controller probes — drop-in for
+        ``probe_model_stats``'s return value, but measured on TRUE
+        gradients."""
+        return {
+            key: GemmProbe(stats=EnsembleStats.from_raw(cell["row"]),
+                           n=cell["n"], n1=cell["n1"], m_acc=cell["m_acc"])
+            for key, cell in self._cells.items()
+        }
+
+
+def tag_quant_plan(model_cfg, *, axis: str | None = None):
+    """The stats-variant ModelConfig: every quantized plan field tagged
+    with its own name (``attn_qkv``, ``mlp_up``, ...).  Numerics are
+    untouched — only the backward rule's telemetry emission changes."""
+    plan = model_cfg.quant
+    for name in PLAN_FIELDS:
+        qcfg = getattr(plan, name, None)
+        if qcfg is None or qcfg.is_exact:
+            continue
+        plan = replace(plan, **{name: replace(qcfg, stats_tag=name,
+                                              stats_axis=axis)})
+    return replace(model_cfg, quant=plan)
+
+
+class InGraphTelemetry:
+    """Cadence driver for the in-graph tick.
+
+    ``tick(model, state, batch, step=...)`` runs ONE stats-variant train
+    step (numerics bit-identical to the normal step — use its returned
+    state; the step is not duplicated), feeds the collected true-gradient
+    windows to the controller, and returns
+    ``(new_state, metrics, events, new_model_or_None)`` — the same
+    re-plan/re-tune contract as ``run_telemetry_tick``.  The stats-variant
+    step is jitted once and cached until the model changes, so steady-state
+    cadence ticks add zero compiles.
+    """
+
+    def __init__(self, controller, train_cfg, *, seq_len: int,
+                 global_batch: int, dist=None, axis: str | None = None,
+                 registry=None, retune: bool = True):
+        self.controller = controller
+        self.train_cfg = train_cfg
+        self.seq_len = seq_len
+        self.global_batch = global_batch
+        self.dist = dist
+        self.axis = axis
+        self.registry = registry
+        self.retune = retune
+        self._cached: tuple | None = None  # (model_cfg, jitted step)
+
+    def due(self, step: int) -> bool:
+        return self.controller.due(step)
+
+    def stats_step(self, model):
+        """The jitted stats-variant train step for ``model`` (cached)."""
+        if self._cached is not None and self._cached[0] == model.cfg:
+            return self._cached[1]
+        from repro.models.api import get_model
+        from repro.train.loop import make_train_step
+
+        tagged = get_model(tag_quant_plan(model.cfg, axis=self.axis))
+        dist = self.dist
+        if dist is None:
+            from repro.models.layers import Dist
+            dist = Dist()
+        fn = jax.jit(make_train_step(tagged, self.train_cfg, dist))
+        self._cached = (model.cfg, fn)
+        return fn
+
+    def tick(self, model, state: dict, batch: dict, *, step: int):
+        fn = self.stats_step(model)
+        collector = InGraphCollector()
+        with collecting(collector):
+            new_state, metrics = fn(state, batch)
+            jax.block_until_ready((new_state, metrics))
+            jax.effects_barrier()  # drain the io_callback queue
+        events = self.controller.observe(step, collector.probes())
+        if self.registry is not None:
+            from repro.obs.metrics import record_controller_events
+            record_controller_events(self.registry, events,
+                                     area="controller")
+        if not self.controller.dirty:
+            return new_state, metrics, events, None
+        from repro.models.api import get_model
+        from repro.telemetry.controller import apply_schedule
+
+        new_cfg = apply_schedule(model.cfg, self.controller.policy,
+                                 self.controller.schedule(),
+                                 seq_len=self.seq_len,
+                                 global_batch=self.global_batch)
+        new_model = get_model(new_cfg)
+        if self.retune:
+            from repro.train.loop import warmup_gemm_autotune
+            warmup_gemm_autotune(new_model, seq_len=self.seq_len,
+                                 global_batch=self.global_batch)
+        self._cached = None  # the re-planned model needs a fresh trace
+        return new_state, metrics, events, new_model

@@ -1,0 +1,156 @@
+"""Request-lifecycle tracing: causally-linked spans with injectable time.
+
+The serve scheduler emits one **root span per request** (``name="request"``,
+``trace_id`` = the request id) whose children cover every scheduler state
+the request passes through::
+
+    request(rid)
+    ├─ queued            admission wait (submit -> admit)
+    ├─ prefill_slab ×N   one per chunked-prefill slab
+    ├─ swapped ×M        preempt -> swap-out ... swap-in -> restored
+    └─ [token events]    one per emitted token, on the root span
+
+plus engine-level ``decode_step`` spans (no trace_id — they batch many
+requests; the ``rids`` attr links them).  Token events on the root span make
+every emitted token attributable to exactly one request, which is what the
+sim fuzz suite pins and what TTFT/TPOT are computed from
+(``request_latencies``).
+
+Timestamps come from an injected ``Clock`` (``repro.obs.clock``), so the
+scheduler sim's virtual clock produces schedule-deterministic span trees;
+span ids are a per-tracer counter, deterministic by construction.  Spans
+land in a ``RingBuffer`` (bounded memory) and export as JSONL.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from repro.obs.clock import Clock, SystemClock
+from repro.obs.sink import RingBuffer, jsonl_append
+
+__all__ = ["Span", "Tracer", "span_forest", "request_latencies", "percentile"]
+
+
+@dataclass
+class Span:
+    span_id: int
+    name: str
+    t_start: float
+    trace_id: int | str | None = None
+    parent_id: int | None = None
+    t_end: float | None = None
+    attrs: dict = field(default_factory=dict)
+    events: list = field(default_factory=list)
+
+    @property
+    def open(self) -> bool:
+        return self.t_end is None
+
+    @property
+    def duration(self) -> float | None:
+        return None if self.t_end is None else self.t_end - self.t_start
+
+    def to_dict(self) -> dict:
+        return {
+            "span_id": self.span_id, "name": self.name,
+            "trace_id": self.trace_id, "parent_id": self.parent_id,
+            "t_start": self.t_start, "t_end": self.t_end,
+            "attrs": dict(self.attrs), "events": list(self.events),
+        }
+
+
+class Tracer:
+    """Span factory + store.  All mutation goes through the tracer (it owns
+    the clock and the id counter); spans are plain data."""
+
+    def __init__(self, clock: Clock | None = None,
+                 capacity: int | None = None):
+        self.clock = clock if clock is not None else SystemClock()
+        self.spans: RingBuffer = RingBuffer(capacity)
+        self._next_id = 1
+
+    # ------------------------------ record ---------------------------------
+    def start(self, name: str, *, trace_id=None,
+              parent: "Span | None" = None, **attrs) -> Span:
+        s = Span(span_id=self._next_id, name=name, t_start=self.clock.now(),
+                 trace_id=trace_id if trace_id is not None
+                 else (parent.trace_id if parent is not None else None),
+                 parent_id=parent.span_id if parent is not None else None,
+                 attrs=attrs)
+        self._next_id += 1
+        self.spans.append(s)
+        return s
+
+    def end(self, span: Span, **attrs) -> Span:
+        span.t_end = self.clock.now()
+        if attrs:
+            span.attrs.update(attrs)
+        return span
+
+    def event(self, span: Span, name: str, **attrs) -> dict:
+        e = {"name": name, "t": self.clock.now(), **attrs}
+        span.events.append(e)
+        return e
+
+    # ------------------------------ read-out -------------------------------
+    def export_jsonl(self, path: str) -> int:
+        """Append every stored span to ``path``; returns the span count."""
+        rows = [s.to_dict() for s in self.spans]
+        jsonl_append(path, rows)
+        return len(rows)
+
+    def to_dicts(self) -> list[dict]:
+        return [s.to_dict() for s in self.spans]
+
+
+def span_forest(spans) -> dict:
+    """``{span_id: {"span": Span-dict, "children": [span_id, ...]}}`` over
+    dicts or ``Span`` objects — the tree view tests and tools walk.  Raises
+    on a dangling ``parent_id`` (an orphan span is an instrumentation bug,
+    exactly what the fuzz suite wants loud)."""
+    nodes = {}
+    for s in spans:
+        d = s.to_dict() if isinstance(s, Span) else dict(s)
+        nodes[d["span_id"]] = {"span": d, "children": []}
+    for sid, node in nodes.items():
+        pid = node["span"]["parent_id"]
+        if pid is None:
+            continue
+        if pid not in nodes:
+            raise ValueError(f"span {sid} has dangling parent_id {pid}")
+        nodes[pid]["children"].append(sid)
+    return nodes
+
+
+def request_latencies(spans) -> list[dict]:
+    """Per-request latency attribution from span token events.
+
+    For every closed root ``request`` span with >= 1 token event returns
+    ``{"rid", "ttft", "tpot", "total", "tokens"}`` where TTFT is first
+    token time - admission to the engine (span start) and TPOT the mean
+    inter-token gap (None with a single token).  Clock units pass through
+    (seconds under SystemClock, ticks under the sim's VirtualClock).
+    """
+    out = []
+    for s in spans:
+        d = s.to_dict() if isinstance(s, Span) else dict(s)
+        if d["name"] != "request" or d["t_end"] is None:
+            continue
+        toks = [e["t"] for e in d["events"] if e["name"] == "token"]
+        if not toks:
+            continue
+        ttft = toks[0] - d["t_start"]
+        tpot = (toks[-1] - toks[0]) / (len(toks) - 1) if len(toks) > 1 else None
+        out.append({"rid": d["trace_id"], "ttft": ttft, "tpot": tpot,
+                    "total": d["t_end"] - d["t_start"], "tokens": len(toks)})
+    return out
+
+
+def percentile(values, q: float) -> float | None:
+    """Nearest-rank percentile (q in [0, 100]); None on empty input."""
+    vals = sorted(v for v in values if v is not None)
+    if not vals:
+        return None
+    k = max(0, min(len(vals) - 1, int(round(q / 100.0 * (len(vals) - 1)))))
+    return vals[k]

@@ -71,9 +71,8 @@ log when given) in the training controller's schema dialect.
 
 from __future__ import annotations
 
-import json
-import os
 from collections import deque
+from contextlib import contextmanager
 from dataclasses import dataclass, field
 
 import jax
@@ -83,6 +82,7 @@ import numpy as np
 from repro.core.vrr import CUTOFF_LOG_V
 from repro.models.api import DecodeRequest, PrefillRequest, get_paged_model
 from repro.models.layers import LOCAL, Dist
+from repro.obs.sink import RingBuffer, jsonl_append
 from repro.quant.formats import FPFormat
 from repro.serve.kvcache import (
     PagedKVConfig,
@@ -193,6 +193,20 @@ def _device_topology() -> tuple:
 def _fresh_cache_entry() -> dict:
     return {"fns": {}, "stats": {"compiles": 0, "hits": 0, "misses": 0,
                                  "warm_compiles": 0}}
+
+
+def process_cache_stats() -> dict:
+    """Aggregate compile-cache traffic across every cached executor
+    configuration in this process — the surface
+    ``repro.obs.metrics.collect_process_metrics`` sweeps into the unified
+    registry.  ``entries`` counts distinct cached configurations; the
+    counter keys sum the per-entry ``compile_stats()`` dicts."""
+    agg = {"entries": len(_PROCESS_CACHE), "compiles": 0, "hits": 0,
+           "misses": 0, "warm_compiles": 0}
+    for entry in _PROCESS_CACHE.values():
+        for k, v in entry["stats"].items():
+            agg[k] = agg.get(k, 0) + v
+    return agg
 
 
 class ModelExecutor:
@@ -389,6 +403,20 @@ class ModelExecutor:
         trace), ``warm_compiles`` (traces paid during ``warmup``)."""
         return dict(self._cache["stats"])
 
+    @contextmanager
+    def compile_stats_scope(self):
+        """Snapshot-delta view of the compile counters: yields a dict that
+        is filled with the with-block's DELTA on exit.  Tests assert on the
+        scoped delta instead of resetting the process-wide counters, so
+        they compose under any pytest ordering."""
+        before = dict(self._cache["stats"])
+        delta: dict = {}
+        try:
+            yield delta
+        finally:
+            for k, v in self._cache["stats"].items():
+                delta[k] = v - before.get(k, 0)
+
     def swap_out(self, rid: int, pages: list[int]) -> dict:
         return swap_out_pages(self.kv, pages)
 
@@ -548,6 +576,9 @@ class ServeEngine:
         seed: int = 0,
         executor=None,
         warm_start: bool = False,
+        tracer=None,
+        metrics=None,
+        events_capacity: int | None = 4096,
     ):
         if prefill_chunk_tokens is not None:
             if prefill_chunk_tokens <= 0 \
@@ -598,11 +629,24 @@ class ServeEngine:
         self.oracle = oracle
         self._key = jax.random.PRNGKey(seed)
 
+        # observability (all optional): with tracer/metrics None every
+        # guarded block below is skipped — the engine's schedule and model
+        # calls are bit-identical to an uninstrumented build (pinned in
+        # tests/test_obs_spans.py).  ``events`` is ring-buffered so
+        # monitor/preempt/restore records cannot grow without bound on a
+        # long-lived engine (events_capacity=None restores the old
+        # unbounded behavior).
+        self.tracer = tracer
+        self.metrics = metrics
+        self._spans: dict[int, dict] = {}  # rid -> {root, queued, swapped}
+        if metrics is not None:
+            self._init_metrics(metrics)
+
         self.pending: deque[Request] = deque()
         self.active: dict[int, _Seq] = {}
         self.swapped: dict[int, _Swapped] = {}
         self.finished: dict[int, list[int]] = {}
-        self.events: list[dict] = []
+        self.events: RingBuffer = RingBuffer(events_capacity)
         self._next_rid = 0
         self._final_pages: dict[int, int] = {}   # reservation mode only
         self._decode_steps = 0
@@ -633,6 +677,67 @@ class ServeEngine:
         fn = getattr(self.executor, "compile_stats", None)
         return fn() if fn is not None else None
 
+    # ------------------------------ observability ---------------------------
+    def _init_metrics(self, registry) -> None:
+        """Register this engine's metric surface on ``registry`` (see README
+        "Observability" for the naming convention)."""
+        c, g, h = registry.counter, registry.gauge, registry.histogram
+        self._m_tokens = c("repro_serve_tokens_total",
+                           "generated tokens (first token + decode)")
+        self._m_slabs = c("repro_serve_prefill_slabs_total",
+                          "prefill slabs executed")
+        self._m_preempt = c("repro_serve_preemptions_total",
+                            "sequences swapped out under page pressure")
+        self._m_restore = c("repro_serve_restores_total",
+                            "swapped sequences swapped back in")
+        self._m_decode = c("repro_serve_decode_steps_total",
+                           "batched decode steps executed")
+        self._m_done = c("repro_serve_requests_finished_total",
+                         "requests run to completion")
+        self._m_free = g("repro_serve_free_pages", "free KV pages")
+        self._m_active = g("repro_serve_active_sequences",
+                           "resident sequences")
+        self._m_pending = g("repro_serve_pending_requests",
+                            "submitted, not yet admitted")
+        self._m_swapped = g("repro_serve_swapped_sequences",
+                            "preempted sequences awaiting restore")
+        self._m_ttft = h("repro_serve_ttft_seconds",
+                         "time to first token (clock units)")
+        self._m_tpot = h("repro_serve_tpot_seconds",
+                         "mean inter-token gap (clock units)")
+
+    def _obs_token(self, rid: int) -> None:
+        """One emitted token: a ``token`` event on the request's root span
+        plus the token counter."""
+        if self.tracer is not None:
+            h = self._spans.get(rid)
+            if h is not None:
+                self.tracer.event(h["root"], "token")
+        if self.metrics is not None:
+            self._m_tokens.inc()
+
+    def _obs_finish(self, rid: int) -> None:
+        """Close the request's span tree and record its TTFT/TPOT."""
+        if self.metrics is not None:
+            self._m_done.inc()
+        if self.tracer is None:
+            return
+        h = self._spans.pop(rid, None)
+        if h is None:
+            return
+        for key in ("queued", "swapped"):
+            child = h.get(key)
+            if child is not None and child.open:
+                self.tracer.end(child)
+        root = self.tracer.end(
+            h["root"], tokens=len(self.finished.get(rid, ())))
+        if self.metrics is not None:
+            from repro.obs.trace import request_latencies
+            for lat in request_latencies([root]):
+                self._m_ttft.observe(lat["ttft"])
+                if lat["tpot"] is not None:
+                    self._m_tpot.observe(lat["tpot"])
+
     # ------------------------------ intake ---------------------------------
     def submit(self, prompt: list[int], max_new: int) -> int:
         need = self.pool.pages_for(len(prompt) + max_new)
@@ -644,6 +749,14 @@ class ServeEngine:
         rid = self._next_rid
         self._next_rid += 1
         self.pending.append(Request(rid, list(prompt), max_new))
+        if self.tracer is not None:
+            root = self.tracer.start("request", trace_id=rid,
+                                     prompt_len=len(prompt), max_new=max_new)
+            self._spans[rid] = {
+                "root": root,
+                "queued": self.tracer.start("queued", parent=root),
+                "swapped": None,
+            }
         return rid
 
     # ------------------------------ admission ------------------------------
@@ -676,6 +789,11 @@ class ServeEngine:
         self.active[req.rid] = _Seq(
             rid=req.rid, tokens=list(req.prompt),
             prompt_len=len(req.prompt), max_new=req.max_new)
+        if self.tracer is not None:
+            h = self._spans.get(req.rid)
+            if h is not None and h["queued"] is not None:
+                self.tracer.end(h["queued"])
+                h["queued"] = None
         return req.rid
 
     def _reserved_outstanding(self) -> int:
@@ -713,6 +831,13 @@ class ServeEngine:
             "step": self._decode_steps, "event": "preempt", "role": "serve",
             "rid": rid, "ctx": n_tok, "free_pages": self.pool.free_pages,
         })
+        if self.tracer is not None:
+            h = self._spans.get(rid)
+            if h is not None:
+                h["swapped"] = self.tracer.start("swapped", parent=h["root"],
+                                                 ctx=n_tok)
+        if self.metrics is not None:
+            self._m_preempt.inc()
 
     def _ensure_pages(self, rid: int, new_len: int) -> bool:
         """Make the pool able to grow ``rid`` to ``new_len`` tokens,
@@ -766,6 +891,13 @@ class ServeEngine:
             "rid": rid, "ctx": ent.n_tokens,
             "free_pages": self.pool.free_pages,
         })
+        if self.tracer is not None:
+            h = self._spans.get(rid)
+            if h is not None and h["swapped"] is not None:
+                self.tracer.end(h["swapped"])
+                h["swapped"] = None
+        if self.metrics is not None:
+            self._m_restore.inc()
         return rid
 
     # ------------------------------ prefill --------------------------------
@@ -798,17 +930,28 @@ class ServeEngine:
                     bucket_i, h=self.cfg.n_heads, dh=self.cfg.head_dim,
                     kv_fmt=self.kv_fmt, slab_tokens=slab_w)
                 if self.cfg is not None else None)
+        slab_span = None
+        if self.tracer is not None:
+            h = self._spans.get(rid)
+            slab_span = self.tracer.start(
+                "prefill_slab", parent=h["root"] if h else None,
+                trace_id=rid, t0=t0, t1=t1, final=final, bucket=bucket_i)
         tok = self.executor.prefill(PrefillRequest(
             rid=rid, tokens=tuple(seq.tokens[t0:t1]),
             hist_pages=tuple(pages[:n_hist]),
             slab_pages=tuple(pages[n_hist:]), t0=t0, acc=bucket.acc,
             final=final, bucket_pages=bucket.max_pages(self.page_size),
             slab_width=slab_w, call=call))
+        if slab_span is not None:
+            self.tracer.end(slab_span)
+        if self.metrics is not None:
+            self._m_slabs.inc()
         seq.prefilled = t1
         self.prefill_slabs += 1
         if final:
             seq.tokens.append(int(tok))
             seq.generated.append(int(tok))
+            self._obs_token(rid)
             self._maybe_finish(seq)
         return rid
 
@@ -833,17 +976,28 @@ class ServeEngine:
             max(self.pool.seq_len(s.rid) for s in batch))
         width = bucket.max_pages(self.page_size)
         pt = self.pool.page_table([s.rid for s in batch], width)
+        step_span = None
+        if self.tracer is not None:
+            # engine-level: one decode step batches many requests, so no
+            # trace_id — the rids attr links it to the request trees
+            step_span = self.tracer.start(
+                "decode_step", rids=[s.rid for s in batch])
         next_toks = self.executor.decode(DecodeRequest(
             rids=tuple(s.rid for s in batch),
             last_tokens=tuple(s.tokens[-1] for s in batch),
             page_table=tuple(tuple(r) for r in pt.tolist()),
             positions=tuple(s.pos for s in batch),
             seq_lens=tuple(s.pos + 1 for s in batch), acc=bucket.acc))
+        if step_span is not None:
+            self.tracer.end(step_span)
+        if self.metrics is not None:
+            self._m_decode.inc()
         finished = []
         for seq, tok in zip(batch, next_toks):
             seq.tokens.append(int(tok))
             seq.generated.append(int(tok))
             self.decoded_tokens += 1
+            self._obs_token(seq.rid)
             if self._maybe_finish(seq):
                 finished.append(seq.rid)
         self._decode_steps += 1
@@ -858,6 +1012,8 @@ class ServeEngine:
             self.pool.release(seq.rid)
             del self.active[seq.rid]
             self._final_pages.pop(seq.rid, None)
+            if self.tracer is not None or self.metrics is not None:
+                self._obs_finish(seq.rid)
             return True
         return False
 
@@ -871,6 +1027,11 @@ class ServeEngine:
         self.max_concurrent = max(self.max_concurrent, len(self.active))
         prefilled = self._prefill_slab()
         finished = self._decode_batch() if self.active else []
+        if self.metrics is not None:
+            self._m_free.set(self.pool.free_pages)
+            self._m_active.set(len(self.active))
+            self._m_pending.set(len(self.pending))
+            self._m_swapped.set(len(self.swapped))
         return {"admitted": admitted, "restored": restored,
                 "prefilled": prefilled, "finished": finished,
                 "active": len(self.active), "pending": len(self.pending),
@@ -948,10 +1109,11 @@ class ServeEngine:
         }
         self.events.append(event)
         if self.monitor_log:
-            d = os.path.dirname(os.path.abspath(self.monitor_log))
-            os.makedirs(d, exist_ok=True)
-            with open(self.monitor_log, "a") as f:
-                f.write(json.dumps(event) + "\n")
+            jsonl_append(self.monitor_log, [event])
+        if self.metrics is not None:
+            from repro.obs.metrics import record_controller_events
+            record_controller_events(self.metrics, [event],
+                                     area="serve_monitor")
 
     # ------------------------------ accounting -----------------------------
     def utilization(self) -> float:

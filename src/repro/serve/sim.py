@@ -379,9 +379,18 @@ def replay_trace(engine, trace: list[TraceRequest], *,
     prompt_fn = prompt_fn or (lambda req: [1] * req.prompt_len)
     trace = sorted(trace, key=lambda r: r.t_arrive)
     submitted: dict[int, TraceRequest] = {}
+    # if the engine carries a tracer on a virtual clock, drive it from this
+    # loop's tick counter: span timestamps then ARE schedule positions, so
+    # a fixed trace + seed yields a byte-identical span tree
+    from repro.obs.clock import VirtualClock
+    vclock = getattr(getattr(engine, "tracer", None), "clock", None)
+    if not isinstance(vclock, VirtualClock):
+        vclock = None
     i = 0
     clock = 0
     while i < len(trace) or engine.pending or engine.active or engine.swapped:
+        if vclock is not None:
+            vclock.set(clock)
         while i < len(trace) and trace[i].t_arrive <= clock:
             rid = engine.submit(prompt_fn(trace[i]), trace[i].max_new)
             submitted[rid] = trace[i]

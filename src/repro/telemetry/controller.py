@@ -50,14 +50,13 @@ Schema, one object per line::
 
 from __future__ import annotations
 
-import json
 import math
-import os
 from dataclasses import dataclass, field, replace
 from typing import Any
 
 from repro.core.policy import AccumulationPolicy
 from repro.core.vrr import CUTOFF_LOG_V
+from repro.obs.sink import jsonl_append
 from repro.telemetry.stats import EnsembleStats, predicted_kernel_vrr
 
 __all__ = ["ControllerConfig", "GemmProbe", "PrecisionController",
@@ -200,11 +199,7 @@ class PrecisionController:
     def _log(self, events: list[dict]) -> None:
         if not self.log_path or not events:
             return
-        d = os.path.dirname(os.path.abspath(self.log_path))
-        os.makedirs(d, exist_ok=True)
-        with open(self.log_path, "a") as f:
-            for e in events:
-                f.write(json.dumps(e) + "\n")
+        jsonl_append(self.log_path, events)
 
     # --------------------------- checkpointing -----------------------------
     def to_meta(self) -> dict:

@@ -119,6 +119,26 @@ class EnsembleStats:
         z = jnp.float32(0.0)
         return cls(z, z, z, z, z, z, z, z)
 
+    def to_raw(self) -> jnp.ndarray:
+        """Inverse of ``from_raw``: recompose the (N_STATS,) raw row (sums
+        and sum-of-squares from the Welford moments).  Raw rows are closed
+        under slot-wise ``+`` (``max`` in the MAX_ABS slot), with the
+        all-zero row as identity — the property the in-graph telemetry's
+        psum-then-mask shipping relies on (``repro.obs.ingraph``)."""
+        from repro.kernels.common import N_STATS
+
+        c = self.count
+        row = [jnp.float32(0.0)] * N_STATS
+        row[STAT_COUNT] = c
+        row[STAT_SUM_Q] = c * self.mean_q
+        row[STAT_SUMSQ_Q] = self.m2_q + c * self.mean_q * self.mean_q
+        row[STAT_SUM_I] = c * self.mean_i
+        row[STAT_SUMSQ_I] = self.m2_i + c * self.mean_i * self.mean_i
+        row[STAT_MAX_ABS] = self.max_abs
+        row[STAT_SWAMPED] = self.swamped
+        row[STAT_ADDS] = self.adds
+        return jnp.stack([jnp.asarray(v, jnp.float32) for v in row])
+
     # ------------------------------ reduce ---------------------------------
     def merge(self, other: "EnsembleStats") -> "EnsembleStats":
         """Chan's parallel-Welford combine (associative, exact ensemble

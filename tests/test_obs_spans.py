@@ -1,0 +1,206 @@
+"""Span-tree invariants for the request-lifecycle tracer, pinned under the
+deterministic scheduler sim (no model, no device):
+
+* every emitted token is attributable to exactly ONE request root span
+  (token events on roots == finished generations, per request);
+* spans survive preemption/swap-out/swap-in/restore without orphans —
+  ``span_forest`` raises on any dangling parent, every ``swapped`` child
+  closes by drain, and preemption counts match ``swapped`` spans;
+* with the tracer on the sim's virtual clock, the span tree is a pure
+  function of (trace, seed): two replays are byte-identical;
+* observability OFF is bit-identical to the instrumented engine: same
+  token streams, same event log, same scheduling metrics — the guarded
+  blocks add behavior, never change it.
+"""
+
+from __future__ import annotations
+
+import os
+
+from repro.obs import MetricsRegistry, Tracer, VirtualClock, span_forest
+from repro.serve.scheduler import ServeEngine
+from repro.serve.sim import (
+    SimExecutor,
+    adversarial_trace,
+    poisson_burst_trace,
+    replay_trace,
+)
+
+BASE_SEED = int(os.environ.get("REPRO_SIM_SEED", "20260730"))
+PAGE = 4
+# the near-capacity regime from test_serve_sim: guaranteed preemptions
+TIGHT = dict(n_pages=12, max_batch=4)
+TIGHT_TRAFFIC = dict(n_requests=12, prompt_range=(2, 24), gen_range=(1, 12))
+
+
+def make_engine(*, tracer=None, metrics=None, n_pages=12, max_batch=4, **kw):
+    ex = SimExecutor(n_pages=n_pages, page_size=PAGE, vocab_size=211)
+    eng = ServeEngine(None, None, n_pages=n_pages, page_size=PAGE,
+                      max_batch=max_batch, executor=ex, tracer=tracer,
+                      metrics=metrics, **kw)
+    return eng, ex
+
+
+def traced_replay(seed, *, chunk=PAGE, traffic=TIGHT_TRAFFIC, pool=TIGHT):
+    tracer = Tracer(clock=VirtualClock())
+    eng, ex = make_engine(tracer=tracer, prefill_chunk_tokens=chunk, **pool)
+    trace = poisson_burst_trace(seed, max_request_tokens=eng.tokens_capacity,
+                                **traffic)
+    m = replay_trace(eng, trace)
+    return eng, tracer, m
+
+
+# --------------------------------------------------------------------------
+# token attribution + orphan-free trees, fuzzed
+# --------------------------------------------------------------------------
+
+
+def check_span_invariants(eng, tracer, *, ctx=""):
+    spans = tracer.to_dicts()
+    forest = span_forest(spans)  # raises on any dangling parent_id
+    roots = {s["trace_id"]: s for s in spans if s["name"] == "request"}
+    # one root per submitted request, all closed after drain
+    assert set(roots) == set(eng.finished), ctx
+    for rid, root in roots.items():
+        assert root["t_end"] is not None, f"{ctx}: rid {rid} root left open"
+        toks = [e for e in root["events"] if e["name"] == "token"]
+        assert len(toks) == len(eng.finished[rid]), (
+            f"{ctx}: rid {rid} has {len(toks)} token events but "
+            f"{len(eng.finished[rid])} generated tokens — a token is not "
+            "attributable to exactly one request")
+    # token events live ONLY on request roots: global count matches too
+    total = sum(len([e for e in s["events"] if e["name"] == "token"])
+                for s in spans)
+    assert total == sum(len(v) for v in eng.finished.values()), ctx
+    # lifecycle children carry their request's trace_id and close by drain
+    swapped = [s for s in spans if s["name"] == "swapped"]
+    for s in spans:
+        if s["name"] in ("queued", "swapped", "prefill_slab"):
+            assert s["parent_id"] is not None and s["trace_id"] in roots, (
+                f"{ctx}: orphan {s['name']} span")
+            assert s["t_end"] is not None, (
+                f"{ctx}: {s['name']} span never closed across "
+                "preempt/swap/restore")
+    assert len(swapped) == eng.preemptions, (
+        f"{ctx}: {eng.preemptions} preemptions but {len(swapped)} swapped "
+        "spans")
+    assert all(s["t_end"] is None for s in spans) is False or not spans
+    return spans
+
+
+def test_token_attribution_and_no_orphans_fuzz():
+    preempts = 0
+    for i in range(12):
+        for chunk in (None, PAGE, 2 * PAGE):
+            seed = BASE_SEED + 7000 + i
+            eng, tracer, m = traced_replay(seed, chunk=chunk)
+            check_span_invariants(eng, tracer,
+                                  ctx=f"seed {seed} chunk {chunk}")
+            preempts += m["preemptions"]
+    assert preempts > 0, ("the fuzz never preempted — swapped-span "
+                          "invariants were not exercised")
+
+
+def test_spans_survive_forced_preemption_of_oldest():
+    """The engine's own victim policy never picks the oldest resident;
+    forcing it through the public ``preempt`` must still produce a closed
+    ``swapped`` span and exact token attribution."""
+    tracer = Tracer(clock=VirtualClock())
+    eng, ex = make_engine(tracer=tracer, n_pages=16, max_batch=4,
+                          prefill_chunk_tokens=PAGE)
+    for rid in range(3):
+        eng.submit([1] * 10, 6)
+    for _ in range(6):
+        eng.step()
+    oldest = min(eng.active)
+    eng.preempt(oldest)
+    eng.run()
+    spans = check_span_invariants(eng, tracer, ctx="forced-oldest")
+    swapped = [s for s in spans if s["name"] == "swapped"
+               and s["trace_id"] == oldest]
+    assert swapped and swapped[0]["t_end"] is not None
+
+
+def test_adversarial_traces_keep_invariants():
+    for kind in ("all_long", "all_short", "long_then_short",
+                 "short_then_long"):
+        tracer = Tracer(clock=VirtualClock())
+        eng, ex = make_engine(tracer=tracer, n_pages=17, max_batch=4,
+                              prefill_chunk_tokens=PAGE)
+        trace = adversarial_trace(kind, n_requests=6,
+                                  capacity_tokens=eng.tokens_capacity)
+        replay_trace(eng, trace)
+        check_span_invariants(eng, tracer, ctx=kind)
+
+
+# --------------------------------------------------------------------------
+# determinism: the span tree is a pure function of (trace, seed)
+# --------------------------------------------------------------------------
+
+
+def test_span_tree_is_schedule_deterministic():
+    seed = BASE_SEED + 42
+    _, tr_a, _ = traced_replay(seed)
+    _, tr_b, _ = traced_replay(seed)
+    a, b = tr_a.to_dicts(), tr_b.to_dicts()
+    assert a == b, "same trace + seed produced different span trees"
+    # virtual-clock timestamps are tick numbers, not wall time
+    assert all(float(s["t_start"]).is_integer() for s in a)
+
+
+# --------------------------------------------------------------------------
+# obs-off bit-parity: instrumentation adds, never changes
+# --------------------------------------------------------------------------
+
+
+def test_obs_off_engine_is_bit_identical_to_instrumented():
+    seed = BASE_SEED + 99
+    for chunk in (None, PAGE):
+        tracer = Tracer(clock=VirtualClock())
+        reg = MetricsRegistry()
+        eng_on, _ = make_engine(tracer=tracer, metrics=reg,
+                                prefill_chunk_tokens=chunk, **TIGHT)
+        eng_off, _ = make_engine(prefill_chunk_tokens=chunk, **TIGHT)
+        trace = poisson_burst_trace(
+            seed, max_request_tokens=eng_on.tokens_capacity, **TIGHT_TRAFFIC)
+        m_on = replay_trace(eng_on, trace)
+        m_off = replay_trace(eng_off, trace)
+        assert eng_on.finished == eng_off.finished
+        assert list(eng_on.events) == list(eng_off.events)
+        for k in ("steps", "decoded_tokens", "prefill_slabs", "preemptions",
+                  "restores", "max_concurrent"):
+            assert m_on[k] == m_off[k], k
+        # and the uninstrumented engine carries zero tracing state
+        assert eng_off.tracer is None and not eng_off._spans
+
+
+def test_metrics_counters_match_engine_counters():
+    seed = BASE_SEED + 123
+    reg = MetricsRegistry()
+    eng, _ = make_engine(metrics=reg, prefill_chunk_tokens=PAGE, **TIGHT)
+    trace = poisson_burst_trace(
+        seed, max_request_tokens=eng.tokens_capacity, **TIGHT_TRAFFIC)
+    replay_trace(eng, trace)
+    assert reg.counter("repro_serve_preemptions_total").value() \
+        == eng.preemptions
+    assert reg.counter("repro_serve_restores_total").value() == eng.restores
+    assert reg.counter("repro_serve_prefill_slabs_total").value() \
+        == eng.prefill_slabs
+    assert reg.counter("repro_serve_tokens_total").value() \
+        == sum(len(v) for v in eng.finished.values())
+    assert reg.counter("repro_serve_requests_finished_total").value() \
+        == len(eng.finished)
+    assert reg.gauge("repro_serve_free_pages").value() \
+        == eng.pool.free_pages
+
+
+def test_events_ring_buffer_caps_engine_event_growth():
+    eng, _ = make_engine(events_capacity=5, prefill_chunk_tokens=PAGE,
+                         **TIGHT)
+    trace = poisson_burst_trace(
+        BASE_SEED + 7, max_request_tokens=eng.tokens_capacity,
+        **TIGHT_TRAFFIC)
+    replay_trace(eng, trace)
+    assert len(eng.events) <= 5
+    total = len(eng.events) + eng.events.dropped
+    assert total == eng.preemptions + eng.restores
