@@ -26,9 +26,17 @@ same configuration then serves different ragged prompts.  CI gates the
 warm engine's steady-state compile count at exactly ZERO — every slab of
 every prompt must land on a bucket's already-compiled kernel.
 
+The **speculative-decoding scenario** measures what speculation buys in
+the unit that transfers — tokens committed per TARGET decode pass — on a
+deterministic sim comparison (spec streams bitwise the plain engine's),
+then drives the REAL smoke draft/target pair through a warm-started
+``SpecDecodeEngine``: CI gates the sim speedup >= 1.5x, zero steady-state
+compiles with spec on, and KV bytes/token untouched by the spec lane.
+
 Writes ``BENCH_serve.json``; CI gates on the compression ratio, the pass
 count, logit exactness, the concurrency of the demo run, the bursty
-utilization comparison and the zero-steady-state-compile property.
+utilization comparison, the zero-steady-state-compile property and the
+speculative-decoding scenario.
 """
 
 from __future__ import annotations
@@ -50,7 +58,8 @@ from repro.models import lm
 from repro.models.api import get_model
 from repro.obs import Tracer, percentile, request_latencies
 from repro.serve.scheduler import ServeEngine
-from repro.serve.sim import bursty_utilization_comparison
+from repro.serve.sim import SimExecutor, bursty_utilization_comparison
+from repro.serve.spec import SpecDecodeEngine
 
 PAGE_SIZE = 8
 N_PAGES = 40
@@ -70,7 +79,7 @@ def _passes_per_decode_step(model, params, eng) -> int:
     b = len(PROMPT_LENS)
     _, bucket = eng.plan.bucket_for(max(PROMPT_LENS) + GEN)
     width = bucket.max_pages(PAGE_SIZE)
-    fn = functools.partial(lm.decode_step_paged, cfg=model.cfg,
+    fn = functools.partial(lm.paged_decode, cfg=model.cfg,
                           kv_fmt=eng.kv_fmt, acc=bucket.acc)
     return count_pallas_executions(
         fn, params, jnp.zeros((b, 1), jnp.int32), eng.kv,
@@ -90,17 +99,18 @@ def _logit_exact(model, params, eng) -> bool:
     for i, pg in pages.items():
         toks = jnp.asarray([rng.randint(0, model.cfg.vocab_size, lens[i])],
                            jnp.int32)
-        _, kv_state = lm.prefill_paged(params, toks, kv_state,
-                                       jnp.asarray(pg, jnp.int32), model.cfg,
+        pg_ids = jnp.asarray(pg, jnp.int32)
+        _, kv_state = lm.paged_prefill(params, toks, kv_state, pg_ids, pg_ids,
+                                       0, toks.shape[1], model.cfg,
                                        kv_fmt=eng.kv_fmt, acc=bucket.acc)
     pt = jnp.asarray([[1, 2], [3, 0]], jnp.int32)
     positions = jnp.asarray([lens[0], lens[1]], jnp.int32)
     tokens = jnp.asarray([[7], [9]], jnp.int32)
     kw = dict(cfg=model.cfg, kv_fmt=eng.kv_fmt, acc=bucket.acc)
-    lk, _ = lm.decode_step_paged(params, tokens, kv_state, pt, positions,
-                                 positions + 1, **kw)
-    lo, _ = lm.decode_step_paged(params, tokens, kv_state, pt, positions,
-                                 positions + 1, oracle=True, **kw)
+    lk, _ = lm.paged_decode(params, tokens, kv_state, pt, positions,
+                            positions + 1, **kw)
+    lo, _ = lm.paged_decode(params, tokens, kv_state, pt, positions,
+                            positions + 1, oracle=True, **kw)
     return bool(np.array_equal(np.asarray(lk), np.asarray(lo)))
 
 
@@ -241,6 +251,91 @@ def _sharded_scenario() -> dict:
     raise RuntimeError(f"sharded scenario emitted no record:\n{out.stdout}")
 
 
+SPEC_K_SIM = 3     # sim half: 3 drafts/round through the stamped arenas
+SPEC_K_REAL = 2    # real half: keeps the per-bucket verify warmup cheap
+
+
+def _spec_scenario(model, params) -> dict:
+    """Speculative-decoding scenario, two halves.
+
+    SIM (deterministic step counts): the same request mix through a plain
+    engine and a ``SpecDecodeEngine`` whose draft-lane wrongness knob is
+    tuned to a high-acceptance regime (~7/8 of positions agree).  The
+    transferable throughput quantity is tokens committed per TARGET decode
+    pass — wall clock in interpret mode measures the interpreter, but the
+    target-pass count is exactly what speculation buys down.  CI gates the
+    ratio >= 1.5x and that the spec streams are bitwise the plain ones.
+
+    REAL smoke pair (qwen2-1.5b target / qwen2-0.5b draft): a warm-started
+    spec engine serves ragged traffic; CI gates ZERO steady-state compiles
+    across BOTH executors and that the target arena's KV bytes/token is
+    untouched by the spec lane (the draft arena is separate HBM, never a
+    layout change)."""
+    # --- sim half -----------------------------------------------------
+    def drive(spec: bool):
+        ex = SimExecutor(n_pages=20, page_size=PAGE_SIZE, vocab_size=211)
+        kw = dict(n_pages=20, page_size=PAGE_SIZE, max_batch=4, executor=ex)
+        if spec:
+            dn = 20 + 4 * (-(-(SPEC_K_SIM + 1) // PAGE_SIZE))
+            dex = SimExecutor(
+                n_pages=dn, page_size=PAGE_SIZE, vocab_size=211,
+                draft_wrong=lambda rid, idx: (rid * 7919
+                                              + idx * 104_729) % 8 == 0)
+            eng = SpecDecodeEngine(None, None, spec_k=SPEC_K_SIM,
+                                   draft_executor=dex, draft_n_pages=dn, **kw)
+        else:
+            eng = ServeEngine(None, None, **kw)
+        rng = np.random.RandomState(5)
+        rids = [eng.submit(list(rng.randint(1, 211, n)), 12)
+                for n in (6, 13, 9, 4)]
+        out = eng.run()
+        eng.pool.check_invariants()
+        return eng, [tuple(out[r]) for r in rids]
+
+    plain_eng, plain_streams = drive(spec=False)
+    spec_eng, spec_streams = drive(spec=True)
+    tps_plain = plain_eng.decoded_tokens / max(plain_eng._decode_steps, 1)
+    tps_spec = spec_eng.decoded_tokens / max(spec_eng._decode_steps, 1)
+
+    # --- real half ----------------------------------------------------
+    dcfg = get_smoke_config("qwen2-0.5b")
+    dmodel = get_model(dcfg)
+    dparams = dmodel.init_params(jax.random.PRNGKey(7))
+    eng = SpecDecodeEngine(model, params, spec_k=SPEC_K_REAL,
+                           draft_model=dmodel, draft_params=dparams,
+                           n_pages=N_PAGES, page_size=PAGE_SIZE, max_batch=4,
+                           prefill_chunk_tokens=PREFILL_CHUNK,
+                           warm_start=True)
+    rng = np.random.RandomState(6)
+    with eng.executor.compile_stats_scope() as d_t, \
+            eng.draft_executor.compile_stats_scope() as d_d:
+        for n in PROMPT_LENS:
+            eng.submit(list(rng.randint(0, model.cfg.vocab_size, n)), GEN)
+        t0 = time.time()
+        eng.run()
+        dt = max(time.time() - t0, 1e-9)
+    eng.pool.check_invariants()
+    packed = eng.kv_bytes_per_token()
+
+    return {
+        "sim_k": SPEC_K_SIM,
+        "sim_tokens_per_target_pass_plain": round(tps_plain, 3),
+        "sim_tokens_per_target_pass_spec": round(tps_spec, 3),
+        "sim_speedup_target_passes": round(tps_spec / tps_plain, 3),
+        "sim_streams_identical": spec_streams == plain_streams,
+        "sim_acceptance_rate": round(spec_eng.acceptance_rate(), 3),
+        "real_k": SPEC_K_REAL,
+        "real_acceptance_rate": round(eng.acceptance_rate(), 3),
+        "real_spec_rounds": eng.spec_rounds,
+        "real_rollback_tokens": eng.spec_rollback_tokens,
+        "real_tokens_per_s": round(eng.decoded_tokens / dt, 2),
+        "warm_steady_compiles_spec": d_t["compiles"] + d_d["compiles"],
+        "kv_bytes_per_token_spec": round(packed, 1),
+        "kv_bytes_unchanged_by_spec": abs(
+            packed - KV_BYTES_PER_TOKEN_BASELINE) < 1e-6,
+    }
+
+
 def run(json_path: str = "BENCH_serve.json") -> dict:
     cfg = get_smoke_config("qwen2-1.5b")
     model = get_model(cfg)
@@ -290,6 +385,7 @@ def run(json_path: str = "BENCH_serve.json") -> dict:
     # this number (swap blobs are transient HOST memory and don't count)
     kv_unchanged = abs(packed - KV_BYTES_PER_TOKEN_BASELINE) < 1e-6
     sharded = _sharded_scenario()
+    spec = _spec_scenario(model, params)
 
     out = {
         "arch": cfg.name,
@@ -318,6 +414,7 @@ def run(json_path: str = "BENCH_serve.json") -> dict:
         "logit_exact_vs_f32_oracle": exact,
         "latency_from_spans": latency,
         "sharded": sharded,
+        "spec": spec,
         "monitor_events": list(eng.events),
         "generated": {int(r): results[r] for r in rids},
     }
@@ -344,6 +441,9 @@ def run(json_path: str = "BENCH_serve.json") -> dict:
     print(f"### sharded serving (1 vs {sharded['shards']} shards, "
           "forced-host mesh; parity is bitwise)")
     for k, v in sharded.items():
+        print(f"  {k:34s} {v}")
+    print("### speculative decoding (sim step counts + real smoke pair)")
+    for k, v in spec.items():
         print(f"  {k:34s} {v}")
 
     if json_path:

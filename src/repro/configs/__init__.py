@@ -13,6 +13,7 @@ from repro.models.config import ModelConfig, ShapeConfig, SHAPES  # noqa: F401
 
 ARCHS = [
     "internvl2_2b",
+    "qwen2_0_5b",
     "qwen2_1_5b",
     "qwen3_8b",
     "llama3_2_3b",
@@ -27,6 +28,7 @@ ARCHS = [
 # canonical ids from the brief -> module names
 ALIASES = {
     "internvl2-2b": "internvl2_2b",
+    "qwen2-0.5b": "qwen2_0_5b",
     "qwen2-1.5b": "qwen2_1_5b",
     "qwen3-8b": "qwen3_8b",
     "llama3.2-3b": "llama3_2_3b",

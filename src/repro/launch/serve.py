@@ -7,9 +7,13 @@ preemption/swap to a host-side store, chunked prefill slabs interleaved
 with batched decode (``--prefill-chunk``), and page eviction on
 completion — so requests of wildly different lengths share one arena and
 one decode batch.  ``--reserve-admission`` restores the worst-case
-reservation baseline (no preemption).  Families the paged path does not
-cover (ssm / hybrid / encdec) fall back to the legacy static-batch loop
-below.
+reservation baseline (no preemption).  ``--spec-decode K`` turns on
+speculative decoding: a smaller draft model (``--draft-config``)
+proposes K tokens per round, one knee-certified batched verify GEMM
+scores them, and rejections roll the paged KV back page-exactly — the
+emitted streams stay bitwise identical to plain greedy decode.
+Families the paged path does not cover (ssm / hybrid / encdec) fall
+back to the legacy static-batch loop below.
 
 Restoring from a training checkpoint honors the telemetry controller's
 realized ``precision_schedule`` (recorded in ``meta.json``): the dense-GEMM
@@ -58,6 +62,15 @@ def parse_args(argv=None):
     ap.add_argument("--reserve-admission", action="store_true",
                     help="worst-case page-reservation admission, no "
                          "preemption/swap (the pre-chunking baseline)")
+    ap.add_argument("--spec-decode", type=int, default=0, metavar="K",
+                    help="speculative decoding: a smaller draft model "
+                         "proposes K tokens per round, one batched verify "
+                         "GEMM scores them, rejection is a page-exact "
+                         "rollback (0 = off).  Token streams stay bitwise "
+                         "identical to plain greedy decode")
+    ap.add_argument("--draft-config", default="qwen2-0.5b",
+                    help="draft-model arch for --spec-decode (must share "
+                         "the target's vocabulary)")
     ap.add_argument("--policy", choices=["exact", "predicted"], default="exact",
                     help="dense-GEMM accumulation plan for the serve path")
     ap.add_argument("--chunk", type=int, default=64)
@@ -184,13 +197,39 @@ def main(argv=None) -> dict:
         from repro.obs.metrics import get_registry
 
         registry = get_registry()
-    eng = ServeEngine(model, params, n_pages=n_pages,
-                      page_size=args.page_size, max_batch=args.max_batch,
-                      prefill_chunk_tokens=args.prefill_chunk or None,
-                      reserve_admission=args.reserve_admission,
-                      monitor_cadence=args.monitor_cadence, seed=args.seed,
-                      executor=executor, tracer=tracer, metrics=registry,
-                      events_capacity=args.events_capacity or None)
+    eng_kw = dict(n_pages=n_pages,
+                  page_size=args.page_size, max_batch=args.max_batch,
+                  prefill_chunk_tokens=args.prefill_chunk or None,
+                  reserve_admission=args.reserve_admission,
+                  monitor_cadence=args.monitor_cadence, seed=args.seed,
+                  executor=executor, tracer=tracer, metrics=registry,
+                  events_capacity=args.events_capacity or None)
+    if args.spec_decode:
+        if args.serve_mesh:
+            raise SystemExit("--spec-decode does not compose with "
+                             "--serve-mesh yet (single-shard only)")
+        from repro.serve.spec import SpecDecodeEngine
+
+        draft_cfg = (get_smoke_config(args.draft_config) if args.smoke
+                     else get_config(args.draft_config))
+        if draft_cfg.vocab_size != cfg.vocab_size:
+            raise SystemExit(
+                f"draft vocab {draft_cfg.vocab_size} != target vocab "
+                f"{cfg.vocab_size}: verify compares token ids")
+        draft_cfg = plan_for_model(draft_cfg, seq_len=max_ctx,
+                                   global_batch=len(prompt_lens),
+                                   policy=policy)
+        draft_model = get_model(draft_cfg)
+        draft_params = jax.tree.map(
+            lambda x: x.astype(jnp.bfloat16) if x.dtype == jnp.float32 else x,
+            draft_model.init_params(jax.random.PRNGKey(args.seed + 7)))
+        eng = SpecDecodeEngine(model, params, spec_k=args.spec_decode,
+                               draft_model=draft_model,
+                               draft_params=draft_params, **eng_kw)
+        print(f"speculative decoding: k={args.spec_decode} draft "
+              f"{draft_cfg.name} ({args.draft_config})")
+    else:
+        eng = ServeEngine(model, params, **eng_kw)
     if not args.no_warmup:
         # compile every certified bucket's prefill/decode kernels BEFORE
         # traffic arrives — steady-state serving then performs zero traces
@@ -224,6 +263,13 @@ def main(argv=None) -> dict:
           f"admission)")
     print(f"KV bytes/token: packed {packed:.1f} vs f32 {f32:.1f} "
           f"({f32 / packed:.2f}x)")
+    if args.spec_decode:
+        print(f"spec decode: {eng.spec_rounds} rounds, acceptance "
+              f"{eng.acceptance_rate():.3f} "
+              f"({eng.spec_accepted}/{eng.spec_proposed} draft tokens), "
+              f"{eng.spec_emitted} tokens committed by verify, "
+              f"{eng.spec_rollback_tokens} rolled back, "
+              f"{eng.fallback_rows} plain-lane fallbacks")
     if eng.tp_shards > 1:
         print(f"per-shard KV bytes/token: "
               f"{eng.kv_bytes_per_token(per_shard=True):.1f} "
@@ -253,11 +299,16 @@ def main(argv=None) -> dict:
             registry.export_jsonl(args.obs_metrics)
         if args.obs_prometheus:
             registry.export_prometheus(args.obs_prometheus)
-    return {"tok_per_s": float(toks_per_s), "results": results,
-            "kv_ratio": f32 / packed, "max_concurrent": eng.max_concurrent,
-            "preemptions": eng.preemptions, "restores": eng.restores,
-            "utilization": eng.utilization(), "events": list(eng.events),
-            "compile_stats": cstats}
+    out = {"tok_per_s": float(toks_per_s), "results": results,
+           "kv_ratio": f32 / packed, "max_concurrent": eng.max_concurrent,
+           "preemptions": eng.preemptions, "restores": eng.restores,
+           "utilization": eng.utilization(), "events": list(eng.events),
+           "compile_stats": cstats}
+    if args.spec_decode:
+        out.update(spec_rounds=eng.spec_rounds,
+                   acceptance_rate=eng.acceptance_rate(),
+                   spec_rollback_tokens=eng.spec_rollback_tokens)
+    return out
 
 
 def _legacy_main(args, cfg, model, params) -> dict:

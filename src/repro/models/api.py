@@ -84,17 +84,35 @@ class DecodeRequest:
 
 
 @dataclass(frozen=True)
+class VerifyRequest:
+    """One batched speculative-verify step: per-sequence parallel lists as
+    in ``DecodeRequest``, but ``tokens`` carries ``k + 1`` candidates per
+    row (the last committed token + the draft proposals), ``positions``
+    the FIRST write position per row, and ``seq_lens`` the attended
+    length at slab index 0 (``positions + 1``)."""
+
+    rids: tuple
+    tokens: tuple          # of per-sequence (k + 1)-tuples
+    page_table: tuple
+    positions: tuple
+    seq_lens: tuple
+    acc: tuple
+
+
+@dataclass(frozen=True)
 class PagedModel:
-    """Family dispatch for the paged serving path: ``prefill``/``decode``
-    close over the ModelConfig and expose the ``lm.paged_prefill`` /
-    ``lm.paged_decode`` calling conventions uniformly — the executors
-    drive ONLY this protocol, so a family lands on the serve path by
-    providing these three callables, not by duplicating entry points."""
+    """Family dispatch for the paged serving path: ``prefill``/``decode``/
+    ``verify`` close over the ModelConfig and expose the
+    ``lm.paged_prefill`` / ``lm.paged_decode`` / ``lm.paged_verify``
+    calling conventions uniformly — the executors drive ONLY this
+    protocol, so a family lands on the serve path by providing these
+    callables, not by duplicating entry points."""
 
     cfg: ModelConfig
     init_state: Callable
     prefill: Callable
     decode: Callable
+    verify: Callable | None = None
 
 
 def paged_init_state(cfg: ModelConfig, *, n_pages: int, page_size: int,
@@ -150,11 +168,19 @@ def get_paged_model(cfg: ModelConfig) -> PagedModel:
                                positions, seq_lens, cfg,
                                dist if dist is not None else LOCAL, **kw)
 
+    def _verify(params, tokens, kv_state, page_table, positions, seq_lens,
+                dist=None, **kw):
+        from repro.models.layers import LOCAL
+        return lm.paged_verify(params, tokens, kv_state, page_table,
+                               positions, seq_lens, cfg,
+                               dist if dist is not None else LOCAL, **kw)
+
     return PagedModel(
         cfg=cfg,
         init_state=lambda **kw: paged_init_state(cfg, **kw),
         prefill=_prefill,
         decode=_decode,
+        verify=_verify,
     )
 
 

@@ -212,22 +212,6 @@ def paged_decode(params, tokens, kv_state, xk, xv, page_table,
     return logits, new_kv
 
 
-def decode_step_paged(params, tokens, kv_state, xk, xv, page_table,
-                      positions, seq_lens, cfg: ModelConfig,
-                      dist: L.Dist = L.LOCAL, *, kv_fmt,
-                      acc: tuple[int, int], oracle: bool = False):
-    """Deprecated: use ``paged_decode`` (same signature) or drive the
-    ``models.api.PagedModel`` protocol."""
-    import warnings
-
-    warnings.warn("encdec.decode_step_paged is deprecated; use "
-                  "encdec.paged_decode or the models.api.PagedModel "
-                  "protocol", DeprecationWarning, stacklevel=2)
-    return paged_decode(params, tokens, kv_state, xk, xv, page_table,
-                        positions, seq_lens, cfg, dist, kv_fmt=kv_fmt,
-                        acc=acc, oracle=oracle)
-
-
 def decode_step(params, tokens, state, pos, cfg: ModelConfig,
                 dist: L.Dist = L.LOCAL):
     """One decoder token with fixed cross-attention memory."""

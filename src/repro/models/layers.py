@@ -443,6 +443,82 @@ def attn_decode_paged(
     return (y if ax is None else _gather_cols(y, dist)), new_kv
 
 
+def attn_verify_paged(
+    p: Params,
+    x: jnp.ndarray,
+    kv: dict[str, jnp.ndarray],
+    page_table: jnp.ndarray,
+    positions: jnp.ndarray,
+    seq_lens: jnp.ndarray,
+    cfg: ModelConfig,
+    dist: Dist,
+    *,
+    kv_fmt,
+    acc: tuple[int, int],
+    oracle: bool = False,
+) -> tuple[jnp.ndarray, dict[str, jnp.ndarray]]:
+    """Speculative-decode verify: score ``S = k + 1`` tokens per sequence
+    against a layer's paged arena in ONE batched kernel call, bitwise
+    identical to ``S`` sequential ``attn_decode_paged`` steps.
+
+    ``x`` (B, S, D) — the last committed token followed by the k draft
+    proposals; ``positions`` (B,) the FIRST write position per row;
+    ``seq_lens`` (B,) the attended length at slab index 0 (``positions +
+    1``; 0 for padded rows).  The K/V for all S tokens append under the
+    decode path's exact per-slot discipline (slot-0 writes fix the page
+    scale, later slots quantize under it — appends never read, so writing
+    all S before attending changes nothing), then the (B, S) queries
+    flatten to ``B * S`` independent decode rows — each with the page
+    table of its sequence and its own attended length ``seq_lens + j``,
+    so every row's online-softmax walk IS the decode kernel's walk at
+    that context.  One compiled signature per (bucket, k) serves every
+    request; verify-batch width scales the GEMM's row count, never a
+    row's accumulation length (the contract ``plan_verify`` certifies).
+    """
+    from repro.kernels.attention import (
+        paged_attn_decode,
+        paged_attn_decode_reference,
+    )
+    from repro.serve import kvcache as KV
+
+    b, s, _ = x.shape
+    pos2 = positions[:, None] + jnp.arange(s, dtype=jnp.int32)[None, :]
+    q = _q_proj(p, x, cfg, pos2)  # (B, S, H, dh)
+    k1, v1 = _kv_proj(p, x, cfg, pos2)
+    page_size = kv["k"].shape[2]
+    ax = dist.shard_axis
+    kk, kse, vv, vse = kv["k"], kv["k_se"], kv["v"], kv["v_se"]
+    for j in range(s):
+        pos_j = positions + j
+        page_id = jnp.take_along_axis(
+            page_table, (pos_j // page_size)[:, None], axis=1)[:, 0]
+        slot = pos_j % page_size
+        kk, kse = KV.append_token(kk, kse, k1[:, j].astype(jnp.float32),
+                                  page_id, slot, kv_fmt, pmax_axis=ax)
+        vv, vse = KV.append_token(vv, vse, v1[:, j].astype(jnp.float32),
+                                  page_id, slot, kv_fmt, pmax_axis=ax)
+    # flatten: row (i, j) attends sequence i's pages at length seq_lens+j
+    # (padded rows stay 0 → the kernel emits exact zeros, nothing read)
+    q_flat = q.reshape(b * s, *q.shape[2:]).astype(jnp.float32)
+    pt_flat = jnp.repeat(page_table, s, axis=0)
+    sl_flat = jnp.where(
+        seq_lens[:, None] > 0,
+        seq_lens[:, None] + jnp.arange(s, dtype=jnp.int32)[None, :],
+        0).reshape(b * s)
+    attend = paged_attn_decode_reference if oracle else paged_attn_decode
+    if ax is None:
+        o = attend(q_flat, kk, vv, kse, vse, pt_flat, sl_flat,
+                   kv_fmt=kv_fmt, acc=acc)
+    else:
+        o_l, m_l, l_l = attend(q_flat, kk, vv, kse, vse, pt_flat, sl_flat,
+                               kv_fmt=kv_fmt, acc=acc, return_carry=True)
+        o = _merge_sharded_carry(o_l, m_l, l_l, dist)
+    o = o.reshape(b, s, -1).astype(COMPUTE_DTYPE)
+    new_kv = {"k": kk, "v": vv, "k_se": kse, "v_se": vse}
+    y = dense(o, p["wo"], cfg.quant.attn_out)
+    return (y if ax is None else _gather_cols(y, dist)), new_kv
+
+
 def attn_prefill_paged(
     p: Params,
     x: jnp.ndarray,

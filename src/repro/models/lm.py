@@ -9,7 +9,6 @@ after every k SSM layers — is a python loop of scanned sub-stacks.
 from __future__ import annotations
 
 import functools
-import warnings
 from typing import Any
 
 import jax
@@ -470,6 +469,53 @@ def paged_decode(
     return logits, new_kv
 
 
+def paged_verify(
+    params: Params,
+    tokens: jnp.ndarray,   # (B, S) int32 — last committed + k draft tokens
+    kv_state: dict,        # arena pytree, leading layer axis
+    page_table: jnp.ndarray,  # (B, max_pages) int32
+    positions: jnp.ndarray,   # (B,) int32 — FIRST write position per row
+    seq_lens: jnp.ndarray,    # (B,) int32 — attended len at slab index 0
+    cfg: ModelConfig,
+    dist: L.Dist = L.LOCAL,
+    *,
+    kv_fmt,
+    acc: tuple[int, int],
+    oracle: bool = False,
+) -> tuple[jnp.ndarray, dict]:
+    """Speculative-decode verify: score ``S = k + 1`` candidate positions
+    per sequence in one batched pass, bitwise identical to ``S``
+    sequential ``paged_decode`` steps over the same arena (each layer
+    appends the slab's K/V under the decode path's per-slot scale
+    discipline, then attends every slab index as its own decode row —
+    ``layers.attn_verify_paged``).  Returns logits (B, S, V) — row ``j``
+    is the model's next-token distribution AFTER consuming ``tokens[:,
+    :j+1]`` — plus the post-append arena, whose rejected tail the engine
+    rolls back page-exactly (``serve.kvcache.truncate_pages``)."""
+    _check_paged(cfg)
+    _check_shardable(cfg, dist)
+    x = params["embed"][tokens].astype(L.COMPUTE_DTYPE)
+    x = L._constrain(x, dist, P(dist.data_axes, None, None))
+
+    def body(carry, inp):
+        lp, kvl = inp
+        h, nkv = L.attn_verify_paged(
+            lp["attn"], L.rms_norm(carry, lp["ln1"], cfg.norm_eps), kvl,
+            page_table, positions, seq_lens, cfg, dist,
+            kv_fmt=kv_fmt, acc=acc, oracle=oracle)
+        carry = carry + h
+        z = L.rms_norm(carry, lp["ln2"], cfg.norm_eps)
+        if cfg.moe is not None and "moe" in lp:
+            f, _ = L.moe_apply(lp["moe"], z, cfg, dist)
+        else:
+            f = L.mlp_apply(lp["mlp"], z, cfg, dist)
+        return carry + f, nkv
+
+    x, new_kv = scan_util.scan(body, x, (params["layers"], kv_state))
+    logits = _unembed(params, x, cfg, dist)
+    return logits, new_kv
+
+
 def paged_prefill(
     params: Params,
     tokens: jnp.ndarray,         # (1, T) int32 — slab, padded to T
@@ -535,56 +581,7 @@ def paged_prefill(
     return logits, new_kv
 
 
-# -- legacy entry points (thin deprecation shims over the unified pair) ----
-
-# Removal date for the PR-6 deprecation shims (decode_step_paged,
-# prefill_paged, prefill_chunk_paged here; encdec.decode_step_paged):
-# when pyproject's project version reaches this (major, minor),
-# tests/test_shims.py::test_paged_shims_sunset fails with deletion
-# instructions — the shims cannot silently outlive their removal date.
-PAGED_SHIMS_SUNSET = (0, 2)
-
-
-def decode_step_paged(params, tokens, kv_state, page_table, positions,
-                      seq_lens, cfg, dist=L.LOCAL, *, kv_fmt, acc,
-                      oracle=False):
-    """Deprecated: use ``paged_decode`` (same signature) or drive the
-    ``models.api.PagedModel`` protocol."""
-    warnings.warn("decode_step_paged is deprecated; use lm.paged_decode or "
-                  "the models.api.PagedModel protocol",
-                  DeprecationWarning, stacklevel=2)
-    return paged_decode(params, tokens, kv_state, page_table, positions,
-                        seq_lens, cfg, dist, kv_fmt=kv_fmt, acc=acc,
-                        oracle=oracle)
-
-
-def prefill_paged(params, tokens, kv_state, page_ids, cfg, dist=L.LOCAL, *,
-                  kv_fmt, acc, block_q=None):
-    """Deprecated: one-shot prefill is ``paged_prefill`` with the whole
-    prompt as a single slab (``q_offset=0``, ``q_len=S``)."""
-    warnings.warn("prefill_paged is deprecated; use lm.paged_prefill or the "
-                  "models.api.PagedModel protocol",
-                  DeprecationWarning, stacklevel=2)
-    s = tokens.shape[1]
-    return paged_prefill(params, tokens, kv_state, page_ids, page_ids,
-                         0, s, cfg, dist, kv_fmt=kv_fmt, acc=acc,
-                         block_q=block_q)
-
-
-def prefill_chunk_paged(params, tokens, kv_state, hist_page_ids,
-                        slab_page_ids, cfg, dist=L.LOCAL, *, t0, kv_fmt,
-                        acc, block_q=None, want_logits=True):
-    """Deprecated: a chunked slab is ``paged_prefill`` with
-    ``page_row = hist + slab`` and ``q_offset = t0``."""
-    warnings.warn("prefill_chunk_paged is deprecated; use lm.paged_prefill "
-                  "or the models.api.PagedModel protocol",
-                  DeprecationWarning, stacklevel=2)
-    s = tokens.shape[1]
-    page_size = kv_state["k"].shape[3]
-    if t0 % page_size != 0:
-        raise ValueError(f"slab offset {t0} not page-aligned ({page_size})")
-    page_row = jnp.concatenate([jnp.asarray(hist_page_ids, jnp.int32),
-                                jnp.asarray(slab_page_ids, jnp.int32)])
-    return paged_prefill(params, tokens, kv_state, page_row, slab_page_ids,
-                         t0, s, cfg, dist, kv_fmt=kv_fmt, acc=acc,
-                         block_q=block_q, want_logits=want_logits)
+# The PR-6 deprecation shims (decode_step_paged, prefill_paged,
+# prefill_chunk_paged here; encdec.decode_step_paged) were retired at
+# their PAGED_SHIMS_SUNSET version 0.2: callers drive lm.paged_decode /
+# lm.paged_prefill or the repro.models.api paged protocol.

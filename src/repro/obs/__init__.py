@@ -20,6 +20,7 @@ from repro.obs.metrics import (
     collect_process_metrics,
     get_registry,
     record_controller_events,
+    record_spec_events,
     set_registry,
 )
 from repro.obs.sink import JsonlSink, RingBuffer, jsonl_append
@@ -35,6 +36,7 @@ __all__ = [
     "Clock", "SystemClock", "VirtualClock",
     "MetricsRegistry", "get_registry", "set_registry",
     "collect_process_metrics", "record_controller_events",
+    "record_spec_events",
     "JsonlSink", "RingBuffer", "jsonl_append",
     "Span", "Tracer", "span_forest", "request_latencies", "percentile",
 ]

@@ -29,7 +29,7 @@ from repro.obs.sink import jsonl_append
 __all__ = [
     "Counter", "Gauge", "Histogram", "MetricsRegistry",
     "get_registry", "set_registry", "collect_process_metrics",
-    "record_controller_events",
+    "record_controller_events", "record_spec_events",
 ]
 
 # latency buckets (seconds) — wide on purpose: interpret-mode CI is ~1000x
@@ -243,6 +243,47 @@ def record_controller_events(registry: MetricsRegistry, events,
             v = e.get(field)
             if v is not None:
                 gauge.set(float(v), gemm=gemm, role=role)
+
+
+def record_spec_events(registry: MetricsRegistry, events,
+                       *, area: str = "serve_spec") -> None:
+    """Mirror speculative-decode ``spec_round`` event dicts (one per batch
+    row per round, emitted by ``serve.spec.SpecDecodeEngine``) into the
+    registry: round/proposal/acceptance/emission/rollback counters plus a
+    rollback-depth histogram — the ``record_controller_events`` posture
+    applied to the spec lane's schema."""
+    rounds = registry.counter(
+        f"repro_{area}_rounds_total",
+        "speculative rounds (one per batch row per draft/verify cycle)")
+    counters = {
+        "proposed": registry.counter(
+            f"repro_{area}_proposed_tokens_total",
+            "draft tokens proposed"),
+        "accepted": registry.counter(
+            f"repro_{area}_accepted_tokens_total",
+            "draft tokens the verify pass accepted"),
+        "emitted": registry.counter(
+            f"repro_{area}_emitted_tokens_total",
+            "tokens committed by spec rounds (accepted + bonus)"),
+        "rollback_depth": registry.counter(
+            f"repro_{area}_rollback_tokens_total",
+            "rejected tokens scrubbed by page-exact rollback"),
+    }
+    depth = registry.histogram(
+        f"repro_{area}_rollback_depth",
+        "per-round rollback depth in tokens",
+        buckets=(0, 1, 2, 4, 8, 16, float("inf")))
+    for e in events:
+        if e.get("event") != "spec_round":
+            continue
+        rounds.inc()
+        for field, c in counters.items():
+            v = e.get(field)
+            if v:
+                c.inc(float(v))
+        d = e.get("rollback_depth")
+        if d is not None:
+            depth.observe(float(d))
 
 
 # --------------------------- process-wide default ---------------------------

@@ -129,7 +129,13 @@ def request_latencies(spans) -> list[dict]:
     For every closed root ``request`` span with >= 1 token event returns
     ``{"rid", "ttft", "tpot", "total", "tokens"}`` where TTFT is first
     token time - admission to the engine (span start) and TPOT the mean
-    inter-token gap (None with a single token).  Clock units pass through
+    inter-TOKEN gap (None with a single token).  TPOT is derived from the
+    per-token event timestamps, never from a decode-step count: one step
+    may emit several tokens (a speculative round commits 1..k+1 at one
+    timestamp — zero-gap runs in the event stream), and dividing the span
+    by steps would overstate the per-token latency by the acceptance
+    factor.  Events are time-sorted first so merged or re-ordered span
+    streams cannot yield negative gaps.  Clock units pass through
     (seconds under SystemClock, ticks under the sim's VirtualClock).
     """
     out = []
@@ -137,11 +143,12 @@ def request_latencies(spans) -> list[dict]:
         d = s.to_dict() if isinstance(s, Span) else dict(s)
         if d["name"] != "request" or d["t_end"] is None:
             continue
-        toks = [e["t"] for e in d["events"] if e["name"] == "token"]
+        toks = sorted(e["t"] for e in d["events"] if e["name"] == "token")
         if not toks:
             continue
         ttft = toks[0] - d["t_start"]
-        tpot = (toks[-1] - toks[0]) / (len(toks) - 1) if len(toks) > 1 else None
+        gaps = [t1 - t0 for t0, t1 in zip(toks, toks[1:])]
+        tpot = sum(gaps) / len(gaps) if gaps else None
         out.append({"rid": d["trace_id"], "ttft": ttft, "tpot": tpot,
                     "total": d["t_end"] - d["t_start"], "tokens": len(toks)})
     return out

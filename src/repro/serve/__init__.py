@@ -1,7 +1,8 @@
 # Quantized-accumulation serving subsystem: the paged QTensor KV-cache
 # (kvcache), the inference-side accumulator-width planner (plan), the
 # continuous-batching scheduler with chunked prefill + preemption/swap
-# (scheduler), and the deterministic scheduler simulation harness (sim).
+# (scheduler), the speculative-decoding lane with page-exact rollback
+# (spec), and the deterministic scheduler simulation harness (sim).
 # The serve-path attention kernels live with the other Pallas kernels in
 # repro.kernels.attention.
 from repro.serve.kvcache import (  # noqa: F401
@@ -9,11 +10,19 @@ from repro.serve.kvcache import (  # noqa: F401
     PagePool,
     SwapStore,
     init_arena,
+    truncate_pages,
 )
-from repro.serve.plan import AttnBucket, AttnPlan, plan_attention  # noqa: F401
+from repro.serve.plan import (  # noqa: F401
+    AttnBucket,
+    AttnPlan,
+    VerifyPlan,
+    plan_attention,
+    plan_verify,
+)
 from repro.serve.scheduler import (  # noqa: F401
     ModelExecutor,
     Request,
     ServeEngine,
 )
 from repro.serve.sim import SimExecutor, replay_trace  # noqa: F401
+from repro.serve.spec import SpecDecodeEngine  # noqa: F401

@@ -20,7 +20,7 @@ different lengths.  This module fixes both:
   the tokens actually cached, not ``batch * max_t``.
 
 Layout (one arena per model; the layer axis leads so the per-layer scan
-in ``models.lm.decode_step_paged`` can carry arena slices as scan xs)::
+in ``models.lm.paged_decode`` can carry arena slices as scan xs)::
 
     k / v   : (L, P, KV, page_size, dh)  int8 codes
     k_se/v_se: (L, P)                     int32 scale exponents
@@ -60,6 +60,7 @@ __all__ = [
     "dequantize_pages",
     "swap_out_pages",
     "swap_in_pages",
+    "truncate_pages",
     "kv_bytes_per_token",
 ]
 
@@ -251,6 +252,42 @@ def swap_in_pages(kv_state: dict[str, jnp.ndarray], pages: list[int],
     }
 
 
+def truncate_pages(kv_state: dict[str, jnp.ndarray],
+                   released: jnp.ndarray,
+                   boundary_page: jnp.ndarray,
+                   keep_slots: jnp.ndarray) -> dict[str, jnp.ndarray]:
+    """Scrub a rolled-back (rejected-draft) tail out of the arena.
+
+    ``released`` (R,) int32 — the page ids ``PagePool.rollback_seq_len``
+    freed (pad with 0: re-zeroing the null page is harmless).  Their codes
+    AND scale exponents return to the zero-initialized state, so on pages
+    that were fresh before the speculative append the arena is bitwise
+    identical to one that never appended.  ``boundary_page`` is the page
+    containing the rollback point when it lands mid-page: slots
+    ``>= keep_slots`` are zeroed there but its scale exponent is KEPT — it
+    was fixed by the page's slot-0 write, which is part of the accepted
+    prefix (pass ``boundary_page=0, keep_slots=0`` for a page-aligned
+    rollback; that zeroes only the never-read null page).
+
+    Rejection is page-exact and rounding-free: accepted tokens' codes are
+    untouched (no requantization — the QTensor pages are immutable wire
+    bytes, same property the swap path proves), and the next accepted
+    token writes exactly the first zeroed slot under the same scale
+    discipline a never-speculated decode would.
+    """
+    out = dict(kv_state)
+    page_size = kv_state["k"].shape[3]
+    rel = jnp.asarray(released, jnp.int32)
+    slot_mask = (jnp.arange(page_size) >= keep_slots)[None, None, :, None]
+    for name in ("k", "v"):
+        codes = kv_state[name].at[:, rel].set(jnp.int8(0))
+        codes = codes.at[:, boundary_page].set(
+            jnp.where(slot_mask, jnp.int8(0), codes[:, boundary_page]))
+        out[name] = codes
+        out[name + "_se"] = kv_state[name + "_se"].at[:, rel].set(0)
+    return out
+
+
 class SwapStore:
     """Host-side store of preempted sequences' packed KV pages.
 
@@ -384,6 +421,27 @@ class PagePool:
         self._free.extend(reversed(self._pages.pop(sid)))
         del self._lens[sid]
 
+    def rollback_seq_len(self, sid: int, new_len: int) -> list[int]:
+        """Speculative-decode rejection: shrink a sequence to ``new_len``
+        cached tokens, freeing the tail pages the rejected suffix claimed.
+        Returns the released page ids (in sequence order) so the caller can
+        scrub them from the arena (``truncate_pages``).  Freed pages go
+        back LIFO like ``release`` — a subsequent extend re-claims exactly
+        the pages a never-speculated pool would have handed out, which is
+        what keeps rolled-back arenas bitwise identical to never-appended
+        ones."""
+        if not 1 <= new_len <= self._lens[sid]:
+            raise ValueError(
+                f"rollback of seq {sid} to {new_len} tokens "
+                f"(has {self._lens[sid]})")
+        keep = self.pages_for(new_len)
+        pages = self._pages[sid]
+        tail = pages[keep:]
+        self._pages[sid] = pages[:keep]
+        self._lens[sid] = new_len
+        self._free.extend(reversed(tail))
+        return tail
+
     # ------------------------------ views ----------------------------------
     def page_table(self, sids: list[int], width: int) -> np.ndarray:
         """(len(sids), width) int32 page table, rows padded with the null
@@ -453,6 +511,11 @@ class ShardedPagePool(PagePool):
     def release(self, sid: int) -> None:
         super().release(sid)
         self._mirror("release", sid)
+
+    def rollback_seq_len(self, sid: int, new_len: int) -> list[int]:
+        got = super().rollback_seq_len(sid, new_len)
+        self._mirror("rollback_seq_len", sid, new_len)
+        return got
 
     def check_invariants(self) -> None:
         super().check_invariants()

@@ -48,6 +48,8 @@ __all__ = [
     "max_carry_resumptions",
     "extra_carry_events",
     "plan_attention",
+    "VerifyPlan",
+    "plan_verify",
 ]
 
 # the f32 VMEM carry is the emulation ceiling, same constant as the
@@ -244,6 +246,72 @@ def min_e_acc(ctx: int, *, v_hint: float = 16.0, e_min: int = 6,
         if FPFormat(e=e, m=1).max_exp >= need:
             return e
     return 8
+
+
+@dataclass(frozen=True)
+class VerifyPlan:
+    """A base ``AttnPlan`` re-certified for speculative-decode verify
+    batches of ``k`` draft tokens: one compiled verify signature per
+    (bucket, k), sharing the base plan's buckets and carry formats.  The
+    certification in ``plan_verify`` is what makes sharing sound — a
+    verify batch widens the QUERY-row count, never any row's accumulation
+    length, so Blumenfeld et al.'s keep-the-accumulator-at-the-bound
+    posture (arXiv:2401.14110) applies unchanged."""
+
+    k: int
+    plan: AttnPlan
+
+    @property
+    def s_v(self) -> int:
+        """Verify width: k draft tokens + the last committed token."""
+        return self.k + 1
+
+    def bucket_for(self, ctx: int) -> tuple[int, AttnBucket]:
+        """Bucket covering the POST-round worst case — call with
+        ``base_ctx + k + 1`` so every verify row's walk is within the
+        certified ``max_ctx``."""
+        return self.plan.bucket_for(ctx)
+
+
+def plan_verify(plan: AttnPlan, *, k: int, v_hint: float = 16.0) -> VerifyPlan:
+    """Certify ``plan``'s buckets for k-token speculative verify batches.
+
+    A verify step scores ``k + 1`` positions of one sequence in a single
+    batched GEMM, but each scored position is an INDEPENDENT query row
+    whose accumulation length is its own context (``<= max_ctx``, the
+    bucket's already-certified worst case): the verify batch adds rows to
+    the GEMM's M dimension, not blocks to any row's K walk, and the
+    sequential per-slot KV appends introduce zero extra carry-rounding
+    events (same write discipline as decode).  So the re-certification
+    re-runs the bucket's §4.4 knee test at its exact geometry (carry
+    resumptions + cross-shard events included) and re-checks the e_acc
+    overflow bound (Colbert et al., arXiv:2301.13376) at ``max_ctx`` —
+    raising, not widening, if a bucket fails: a verify plan must never
+    silently change the numerics contract the decode path certified.
+    """
+    if k < 1:
+        raise ValueError(f"speculative verify needs k >= 1, got {k}")
+    for i, b in enumerate(plan.buckets):
+        if b.max_ctx < k + 1:
+            raise ValueError(
+                f"bucket {i} (max_ctx {b.max_ctx}) cannot hold a "
+                f"{k + 1}-token verify slab")
+        extra = extra_carry_events(plan.page_size, plan.prefill_chunk,
+                                   b.resumptions)
+        extra += max(plan.tp_shards - 1, 0)
+        v = certified_log_v(b.m_acc, plan.m_p, plan.page_size, b.max_ctx,
+                            extra)
+        if v >= CUTOFF_LOG_V:
+            raise ValueError(
+                f"bucket {i} fails the knee test for k={k} verify: "
+                f"v={v:.2f} >= {CUTOFF_LOG_V} at m_acc={b.m_acc}")
+        e_need = min_e_acc(b.max_ctx, v_hint=v_hint)
+        if b.e_acc < e_need:
+            raise ValueError(
+                f"bucket {i} fails the e_acc overflow bound for k={k} "
+                f"verify: e_acc={b.e_acc} < required {e_need} at "
+                f"ctx={b.max_ctx}")
+    return VerifyPlan(k=k, plan=plan)
 
 
 def plan_attention(max_context: int, page_size: int, *, m_p: int = 5,

@@ -80,7 +80,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.vrr import CUTOFF_LOG_V
-from repro.models.api import DecodeRequest, PrefillRequest, get_paged_model
+from repro.models.api import (
+    DecodeRequest,
+    PrefillRequest,
+    VerifyRequest,
+    get_paged_model,
+)
 from repro.models.layers import LOCAL, Dist
 from repro.obs.sink import RingBuffer, jsonl_append
 from repro.quant.formats import FPFormat
@@ -93,6 +98,7 @@ from repro.serve.kvcache import (
     kv_bytes_per_token,
     swap_in_pages,
     swap_out_pages,
+    truncate_pages,
 )
 from repro.serve.plan import (
     AttnPlan,
@@ -358,9 +364,81 @@ class ModelExecutor:
         return [int(t) for t in np.asarray(
             jnp.argmax(logits[:n, 0], axis=-1))]
 
+    def _verify_fn(self, acc: tuple[int, int], s_v: int):
+        import functools
+
+        if self.pm.verify is None:
+            raise NotImplementedError(
+                f"family {self.cfg.family!r} has no paged verify entry")
+        return self._jit(
+            ("verify", acc, s_v, self.oracle),
+            functools.partial(self.pm.verify, dist=self.dist,
+                              kv_fmt=self.kv_fmt, acc=acc,
+                              oracle=self.oracle))
+
+    def verify(self, req: VerifyRequest) -> list[list[int]]:
+        """One batched speculative-verify step: scores ``s_v = k + 1``
+        candidate tokens per row in a single knee-certified pass and
+        returns each row's per-slab-index greedy argmax — entry ``j`` is
+        the target's next token AFTER consuming the row's first ``j + 1``
+        candidates, bitwise what ``s_v`` sequential ``decode`` calls
+        would have returned.  Padding mirrors ``decode`` (max_batch rows,
+        null-page tables, seq_len 0) so one compiled signature per
+        (bucket, k) serves every request mix."""
+        stats = self._cache["stats"]
+        before = stats["compiles"]
+        pt_in = np.asarray(req.page_table, np.int32)
+        n, width = pt_in.shape
+        s_v = len(req.tokens[0])
+        pt = np.zeros((self.max_batch, width), np.int32)
+        pt[:n] = pt_in
+        tokens = np.zeros((self.max_batch, s_v), np.int32)
+        tokens[:n] = req.tokens
+        pos = np.zeros((self.max_batch,), np.int32)
+        pos[:n] = req.positions
+        sl = np.zeros((self.max_batch,), np.int32)
+        sl[:n] = req.seq_lens
+        logits, self.kv = self._verify_fn(req.acc, s_v)(
+            self.params, jnp.asarray(tokens), self.kv, jnp.asarray(pt),
+            jnp.asarray(pos), jnp.asarray(sl))
+        self._count_dispatch(before)
+        out = np.asarray(jnp.argmax(logits[:n], axis=-1))  # (n, s_v)
+        return [[int(t) for t in row] for row in out]
+
+    def rollback(self, rid: int, pages_old: list[int], keep_len: int,
+                 old_len: int) -> None:
+        """Page-exact rejection: scrub the arena slots of tokens
+        ``keep_len..old_len-1`` (``kvcache.truncate_pages``) after the
+        pool rolled the sequence back.  ``pages_old`` is the PRE-rollback
+        page list.  The released-page operand is padded to a fixed width
+        (``rollback_pad``, set by ``warmup_verify``) so every rollback
+        dispatches ONE compiled signature."""
+        del rid, old_len  # page-granular: pages_old + keep_len suffice
+        page_size = self.pc.page_size
+        n_keep = -(-keep_len // page_size)
+        released = pages_old[n_keep:]
+        keep_slots = keep_len % page_size
+        boundary = pages_old[n_keep - 1] if keep_slots else 0
+        pad = getattr(self, "rollback_pad", None)
+        if pad is None:
+            pad = self.rollback_pad = max(len(released), 1)
+        if len(released) > pad:
+            raise ValueError(
+                f"rollback released {len(released)} pages > padded width "
+                f"{pad} (warm with a larger k)")
+        rel = np.zeros((pad,), np.int32)
+        rel[:len(released)] = released
+        stats = self._cache["stats"]
+        before = stats["compiles"]
+        self.kv = self._jit(("rollback", pad), truncate_pages)(
+            self.kv, jnp.asarray(rel), jnp.int32(boundary),
+            jnp.int32(keep_slots))
+        self._count_dispatch(before)
+
     # ------------------------------ warmup ---------------------------------
     def warmup(self, plan: AttnPlan,
-               prefill_chunk: int | None = None) -> dict:
+               prefill_chunk: int | None = None,
+               prefill_finals: tuple[bool, ...] | None = None) -> dict:
         """Compile every certified bucket's kernels before traffic arrives
         (the ``warmup_gemm_autotune`` posture applied to serve compiles):
         for each bucket, the padded decode step and the padded prefill
@@ -384,8 +462,9 @@ class ModelExecutor:
             call = plan.kernel_call(i, h=self.cfg.n_heads,
                                     dh=self.cfg.head_dim,
                                     kv_fmt=self.kv_fmt, slab_tokens=slab_w)
-            finals = [True] + ([False] if prefill_chunk
-                               and b.max_ctx > prefill_chunk else [])
+            finals = (list(prefill_finals) if prefill_finals is not None
+                      else [True] + ([False] if prefill_chunk
+                                     and b.max_ctx > prefill_chunk else []))
             n_slab = -(-slab_w // page_size)
             for final in finals:
                 self._prefill_fn(b.acc, final, call)(
@@ -396,6 +475,34 @@ class ModelExecutor:
         delta = stats["compiles"] - before
         stats["warm_compiles"] += delta
         return {"buckets": len(plan.buckets), "compiles": delta}
+
+    def warmup_verify(self, plan: AttnPlan, k: int, *,
+                      include_verify: bool = True) -> dict:
+        """Compile the speculative lane's signatures before traffic: one
+        ``(bucket, k)`` verify per bucket plus the single padded-width
+        rollback scrub — after this, spec-mode steady state performs zero
+        traces (the CI gate extends to spec on).  ``include_verify=False``
+        warms only the rollback scrub — the DRAFT lane rolls back but is
+        never verified, so its executor skips the per-bucket verify
+        compiles."""
+        stats = self._cache["stats"]
+        before = stats["compiles"]
+        page_size = self.pc.page_size
+        s_v = k + 1
+        self.rollback_pad = -(-s_v // page_size) + 1
+        for b in plan.buckets if include_verify else ():
+            w = b.max_pages(page_size)
+            self._verify_fn(b.acc, s_v)(
+                self.params, jnp.zeros((self.max_batch, s_v), jnp.int32),
+                self.kv, jnp.zeros((self.max_batch, w), jnp.int32),
+                jnp.zeros((self.max_batch,), jnp.int32),
+                jnp.zeros((self.max_batch,), jnp.int32))
+        self._jit(("rollback", self.rollback_pad), truncate_pages)(
+            self.kv, jnp.zeros((self.rollback_pad,), jnp.int32),
+            jnp.int32(0), jnp.int32(0))
+        delta = stats["compiles"] - before
+        stats["warm_compiles"] += delta
+        return {"buckets": len(plan.buckets), "k": k, "compiles": delta}
 
     def compile_stats(self) -> dict:
         """Copy of the process compile-cache counters: ``compiles`` (jit
@@ -550,6 +657,25 @@ class ShardedModelExecutor(ModelExecutor):
                       P()),
             out_specs=(P(), self._kv_specs), check_vma=False)
         return self._jit(key, fn)
+
+    def _verify_fn(self, acc: tuple[int, int], s_v: int):
+        import functools
+
+        from jax.sharding import PartitionSpec as P
+
+        from repro.sharding.compat import shard_map
+
+        if self.pm.verify is None:
+            raise NotImplementedError(
+                f"family {self.cfg.family!r} has no paged verify entry")
+        inner = functools.partial(self.pm.verify, dist=self.dist,
+                                  kv_fmt=self.kv_fmt, acc=acc,
+                                  oracle=self.oracle)
+        fn = shard_map(
+            inner, mesh=self.mesh,
+            in_specs=(self._pspecs, P(), self._kv_specs, P(), P(), P()),
+            out_specs=(P(), self._kv_specs), check_vma=False)
+        return self._jit(("verify", acc, s_v, self.oracle), fn)
 
 
 class ServeEngine:

@@ -85,12 +85,18 @@ class SimExecutor:
 
     def __init__(self, *, n_pages: int, page_size: int,
                  vocab_size: int = 50021, n_shards: int = 1,
-                 merge_seed: int = 0):
+                 merge_seed: int = 0, draft_wrong=None):
         if n_shards < 1:
             raise ValueError(f"n_shards must be >= 1, got {n_shards}")
         self.page_size = page_size
         self.vocab_size = vocab_size
         self.n_shards = n_shards
+        # spec-decode DRAFT-lane wrongness: ``draft_wrong(rid, idx)`` True
+        # corrupts the decode output predicting absolute index ``idx`` —
+        # the knob the fuzz suite turns to force rejections at chosen
+        # positions (page boundaries, total wrongness, seeded rates).
+        # None (and on every TARGET-lane executor): the exact stream.
+        self.draft_wrong = draft_wrong
         # one stamp arena per simulated shard; shard 0 doubles as
         # ``self.pages`` (alias, not copy) so single-shard tests that poke
         # the arena directly keep working — in mesh mode a poke of one
@@ -102,6 +108,7 @@ class SimExecutor:
         self.kv = None
         self.swap_outs = 0
         self.swap_ins = 0
+        self.rollbacks = 0
         self.reads_verified = 0
         self.merges_folded = 0
 
@@ -191,8 +198,47 @@ class SimExecutor:
             self._write(int(row[pos // self.page_size]),
                         pos % self.page_size, _stamp(rid, pos))
             self._verify(rid, row, int(req.seq_lens[i]), where="decode")
-            out.append(self.next_token(rid, int(req.seq_lens[i])))
+            tok = self.next_token(rid, int(req.seq_lens[i]))
+            if self.draft_wrong is not None \
+                    and self.draft_wrong(rid, int(req.seq_lens[i])):
+                tok = (tok + 1) % self.vocab_size
+            out.append(tok)
         return out
+
+    def verify(self, req) -> list[list[int]]:
+        """Speculative verify: stamp all ``s_v = k + 1`` candidate
+        positions of every row (the batched analog of ``s_v`` sequential
+        decode appends), verify the row's full stamped extent, and return
+        each slab index's TRUE next token — the target's stream is a pure
+        function of position, so emitted tokens are schedule- and
+        proposal-independent by construction, exactly the property the
+        fuzz suite pins bitwise."""
+        out = []
+        s_v = len(req.tokens[0])
+        for i, rid in enumerate(req.rids):
+            pos = int(req.positions[i])
+            sl = int(req.seq_lens[i])
+            row = req.page_table[i]
+            for j in range(s_v):
+                p = pos + j
+                self._write(int(row[p // self.page_size]),
+                            p % self.page_size, _stamp(rid, p))
+            self._verify(rid, row, sl + s_v - 1, where="verify")
+            out.append([self.next_token(rid, sl + j) for j in range(s_v)])
+        return out
+
+    def rollback(self, rid: int, pages_old: list[int], keep_len: int,
+                 old_len: int) -> None:
+        """Page-exact rejection: clear the stamps of tokens
+        ``keep_len..old_len-1`` back to EMPTY on every shard — the sim
+        analog of ``kvcache.truncate_pages``' zero-scrub.  A skipped or
+        mis-ranged scrub leaves rejected stamps behind, which the
+        spec-vs-plain final-arena equality check (and any read that trips
+        over a stale slot) then catches."""
+        for idx in range(keep_len, old_len):
+            pg = int(pages_old[idx // self.page_size])
+            self._write(pg, idx % self.page_size, _EMPTY)
+        self.rollbacks += 1
 
     def swap_out(self, rid: int, pages: list[int]) -> dict:
         idx = np.asarray(pages, np.int64)

@@ -56,6 +56,7 @@ def test_full_config_matches_brief(arch):
     # the FULL configs must carry the exact assigned hyperparameters
     brief = {
         "internvl2-2b": (24, 2048, 16, 8, 8192, 92553),
+        "qwen2-0.5b": (24, 896, 14, 2, 4864, 151936),
         "qwen2-1.5b": (28, 1536, 12, 2, 8960, 151936),
         "qwen3-8b": (36, 4096, 32, 8, 12288, 151936),
         "llama3.2-3b": (28, 3072, 24, 8, 8192, 128256),

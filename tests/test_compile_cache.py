@@ -17,9 +17,8 @@ slab of every prompt in a bucket.  Pinned here at three levels:
 * planner — knee certification is memoized per (bucket geometry, width):
   the evaluation count is O(#buckets) and does not grow with traffic.
 
-Plus the legacy-shim parity contract: the deprecated per-family entry
-points warn and produce bit-identical results through the unified
-``paged_prefill``/``paged_decode`` path.
+(The legacy-shim parity test that lived here retired with the PR-6 shims
+at version 0.2; tests/test_shims.py pins that they stay gone.)
 """
 
 from __future__ import annotations
@@ -35,9 +34,7 @@ from repro.kernels.attention import (
     flash_prefill,
     flash_prefill_paged,
 )
-from repro.models import lm
 from repro.models.api import get_model
-from repro.quant.formats import FP8_152
 from repro.serve import plan as P
 from repro.serve.scheduler import ServeEngine
 
@@ -195,39 +192,6 @@ def test_certification_count_constant_over_fuzz_suite():
         "knee certifications grew with traffic — memoization broke"
 
 
-# --------------------------------------------------------------------------
-# legacy shims: warn, and match the unified path bit-for-bit
-# --------------------------------------------------------------------------
-
-
-def test_legacy_entry_points_are_warned_parity_shims(smoke_model):
-    model, params = smoke_model
-    cfg = model.cfg
-    rng = np.random.RandomState(2)
-    n, page = 7, 4
-    toks = jnp.asarray([rng.randint(0, cfg.vocab_size, n)], jnp.int32)
-    pages = jnp.asarray([1, 2], jnp.int32)
-    kv_a = lm.init_paged_state(cfg, n_pages=8, page_size=page)
-    kv_b = lm.init_paged_state(cfg, n_pages=8, page_size=page)
-    with pytest.warns(DeprecationWarning, match="prefill_paged is deprecated"):
-        la, kv_a = lm.prefill_paged(params, toks, kv_a, pages, cfg,
-                                    kv_fmt=FP8_152, acc=ACC)
-    lb, kv_b = lm.paged_prefill(params, toks, kv_b, pages, pages, 0, n, cfg,
-                                kv_fmt=FP8_152, acc=ACC)
-    np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
-    for key in kv_a:
-        np.testing.assert_array_equal(np.asarray(kv_a[key]),
-                                      np.asarray(kv_b[key]))
-    pt = jnp.asarray([[1, 2]], jnp.int32)
-    pos = jnp.asarray([n], jnp.int32)
-    tok = jnp.asarray([[3]], jnp.int32)
-    with pytest.warns(DeprecationWarning,
-                      match="decode_step_paged is deprecated"):
-        da, kv_a = lm.decode_step_paged(params, tok, kv_a, pt, pos, pos + 1,
-                                        cfg, kv_fmt=FP8_152, acc=ACC)
-    db, kv_b = lm.paged_decode(params, tok, kv_b, pt, pos, pos + 1, cfg,
-                               kv_fmt=FP8_152, acc=ACC)
-    np.testing.assert_array_equal(np.asarray(da), np.asarray(db))
-    for key in kv_a:
-        np.testing.assert_array_equal(np.asarray(kv_a[key]),
-                                      np.asarray(kv_b[key]))
+# The PR-6 legacy-shim parity test that lived here was retired with the
+# shims themselves at version 0.2 (see tests/test_shims.py, which pins
+# that the deprecated entry points stay gone).

@@ -183,3 +183,38 @@ def test_percentile_nearest_rank_and_none_filtering():
     assert percentile(vals, 0) == 1.0
     assert percentile(vals, 50) == 3.0
     assert percentile(vals, 100) == 5.0
+
+
+def test_record_spec_events_maps_spec_round_schema():
+    """`record_spec_events` mirrors SpecDecodeEngine `spec_round` events
+    into `repro_serve_spec_*` counters + the rollback-depth histogram,
+    skipping non-spec events (the engine's ring buffer interleaves
+    preempt/monitor records with spec rounds)."""
+    from repro.obs import record_spec_events
+
+    r = MetricsRegistry()
+    record_spec_events(r, [
+        {"step": 3, "event": "spec_round", "role": "serve", "rid": 0,
+         "k": 4, "proposed": 4, "accepted": 4, "emitted": 5,
+         "rollback_depth": 0, "ctx": 17},
+        {"step": 4, "event": "spec_round", "role": "serve", "rid": 1,
+         "k": 4, "proposed": 4, "accepted": 1, "emitted": 2,
+         "rollback_depth": 3, "ctx": 9},
+        {"step": 4, "event": "preempt", "rid": 2},   # skipped: not a round
+    ])
+    assert r.counter("repro_serve_spec_rounds_total").value() == 2
+    assert r.counter("repro_serve_spec_proposed_tokens_total").value() == 8
+    assert r.counter("repro_serve_spec_accepted_tokens_total").value() == 5
+    assert r.counter("repro_serve_spec_emitted_tokens_total").value() == 7
+    assert r.counter("repro_serve_spec_rollback_tokens_total").value() == 3
+    h = r.histogram("repro_serve_spec_rollback_depth",
+                    buckets=(0, 1, 2, 4, 8, 16, float("inf"))).summary()
+    assert h["count"] == 2 and h["sum"] == 3.0
+    # depth 0 (all-accept) and depth 3 land in the right buckets
+    assert h["counts"][0] == 1 and h["counts"][3] == 1
+    # the textfile exporter carries every spec series
+    text = r.to_prometheus()
+    for name in ("repro_serve_spec_rounds_total",
+                 "repro_serve_spec_accepted_tokens_total",
+                 "repro_serve_spec_rollback_depth_bucket"):
+        assert name in text, name

@@ -204,3 +204,47 @@ def test_events_ring_buffer_caps_engine_event_growth():
     assert len(eng.events) <= 5
     total = len(eng.events) + eng.events.dropped
     assert total == eng.preemptions + eng.restores
+
+
+# --------------------------------------------------------------------------
+# TPOT under multi-token decode steps (speculative rounds)
+# --------------------------------------------------------------------------
+
+
+def test_tpot_from_token_events_not_step_count():
+    """A speculative round commits several tokens at ONE timestamp, so a
+    request can finish in far fewer decode steps than tokens.  TPOT must
+    be the mean inter-token gap of the event stream — here 9 tokens land
+    across 3 verify steps at ticks 1/3/5, so tpot == (5-1)/8 == 0.5; a
+    step-count derivation (span / steps) would report (5-1)/2 == 2.0 and
+    overstate the per-token latency by the acceptance factor."""
+    from repro.obs import request_latencies
+
+    clock = VirtualClock()
+    tr = Tracer(clock=clock)
+    root = tr.start("request", trace_id=7)
+    for tick, burst in ((1, 3), (3, 2), (5, 4)):
+        clock.set(tick)
+        for _ in range(burst):
+            tr.event(root, "token")
+    tr.end(root)
+    (lat,) = request_latencies(tr.spans)
+    assert lat["tokens"] == 9
+    assert lat["ttft"] == 1.0
+    assert lat["tpot"] == 0.5
+    assert lat["tpot"] != (5 - 1) / 2  # the per-step number is wrong
+
+
+def test_tpot_sorts_reordered_token_events():
+    """Merged span streams (per-shard tracers, concatenated JSONL) can
+    deliver token events out of time order; the derivation sorts before
+    differencing, so gaps can never go negative."""
+    from repro.obs import request_latencies
+
+    span = {"span_id": 1, "name": "request", "trace_id": 3,
+            "parent_id": None, "t_start": 0.0, "t_end": 9.0, "attrs": {},
+            "events": [{"name": "token", "t": t}
+                       for t in (5.0, 1.0, 3.0, 9.0, 7.0)]}
+    (lat,) = request_latencies([span])
+    assert lat["ttft"] == 1.0
+    assert lat["tpot"] == 2.0

@@ -236,8 +236,8 @@ def test_prefill_chunk_paged_bitexact_vs_oneshot(n, c_slab):
     toks = jnp.asarray([rng.randint(0, cfg.vocab_size, n)], jnp.int32)
     pages = list(range(1, -(-n // page) + 1))
     kv1 = lm.init_paged_state(cfg, n_pages=12, page_size=page)
-    l1, kv1 = lm.prefill_paged(params, toks, kv1,
-                               jnp.asarray(pages, jnp.int32), cfg,
+    pg_ids = jnp.asarray(pages, jnp.int32)
+    l1, kv1 = lm.paged_prefill(params, toks, kv1, pg_ids, pg_ids, 0, n, cfg,
                                kv_fmt=FP8_152, acc=ACC)
     kv2 = lm.init_paged_state(cfg, n_pages=12, page_size=page)
     t0 = 0
@@ -245,9 +245,10 @@ def test_prefill_chunk_paged_bitexact_vs_oneshot(n, c_slab):
         t1 = min(t0 + c_slab, n)
         hist = pages[:t0 // page]
         slab = pages[t0 // page:-(-t1 // page)]
-        l2, kv2 = lm.prefill_chunk_paged(
-            params, toks[:, t0:t1], kv2, jnp.asarray(hist, jnp.int32),
-            jnp.asarray(slab, jnp.int32), cfg, t0=t0, kv_fmt=FP8_152,
+        l2, kv2 = lm.paged_prefill(
+            params, toks[:, t0:t1], kv2,
+            jnp.asarray(hist + slab, jnp.int32),
+            jnp.asarray(slab, jnp.int32), t0, t1 - t0, cfg, kv_fmt=FP8_152,
             acc=ACC, want_logits=(t1 == n))
         t0 = t1
     np.testing.assert_array_equal(np.asarray(l1), np.asarray(l2))
@@ -442,16 +443,17 @@ def test_lm_decode_step_paged_logit_exact_vs_oracle():
     # two sequences at different positions (continuous batch), prefilled
     for pages, n in (([1, 2], 7), ([3], 2)):
         toks = jnp.asarray([rng.randint(0, cfg.vocab_size, n)], jnp.int32)
-        _, kv_state = lm.prefill_paged(params, toks, kv_state,
-                                       jnp.asarray(pages, jnp.int32), cfg,
+        pg_ids = jnp.asarray(pages, jnp.int32)
+        _, kv_state = lm.paged_prefill(params, toks, kv_state, pg_ids,
+                                       pg_ids, 0, n, cfg,
                                        kv_fmt=FP8_152, acc=bucket.acc)
     pt = jnp.asarray([[1, 2, 0], [3, 4, 0]], jnp.int32)
     positions = jnp.asarray([7, 2], jnp.int32)
     tokens = jnp.asarray([[5], [11]], jnp.int32)
     kw = dict(kv_fmt=FP8_152, acc=bucket.acc)
-    logits_k, kv_k = lm.decode_step_paged(
+    logits_k, kv_k = lm.paged_decode(
         params, tokens, kv_state, pt, positions, positions + 1, cfg, **kw)
-    logits_o, kv_o = lm.decode_step_paged(
+    logits_o, kv_o = lm.paged_decode(
         params, tokens, kv_state, pt, positions, positions + 1, cfg,
         oracle=True, **kw)
     np.testing.assert_array_equal(np.asarray(logits_k), np.asarray(logits_o))
@@ -476,10 +478,10 @@ def test_encdec_decode_step_paged():
     positions = jnp.asarray([0, 0], jnp.int32)
     tokens = jnp.asarray([[3], [9]], jnp.int32)
     kw = dict(kv_fmt=FP8_152, acc=ACC)
-    lk, kv_k = encdec.decode_step_paged(
+    lk, kv_k = encdec.paged_decode(
         params, tokens, kv_state, state["xk"], state["xv"], pt, positions,
         positions + 1, cfg, **kw)
-    lo, _ = encdec.decode_step_paged(
+    lo, _ = encdec.paged_decode(
         params, tokens, kv_state, state["xk"], state["xv"], pt, positions,
         positions + 1, cfg, oracle=True, **kw)
     np.testing.assert_array_equal(np.asarray(lk), np.asarray(lo))

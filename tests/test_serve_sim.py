@@ -14,7 +14,13 @@ suite asserts, across 500+ generated schedules:
   preemption (``replay_trace`` raises if the queue fails to drain);
 * swap-out → swap-in round trips land byte-identical stamps on the
   (possibly different) restored pages, under both the engine's own victim
-  policy and externally forced preemption at arbitrary points.
+  policy and externally forced preemption at arbitrary points;
+* speculative decoding (``SpecDecodeEngine`` + a draft-lane sim with a
+  ``draft_wrong`` rejection knob) emits streams bitwise identical to
+  plain greedy decode across 100+ seeded draft/verify/rollback
+  interleavings — forced rejections at page boundaries, rollback during
+  preemption/swap — and the page-exact rollback scrub is observed
+  directly (with a meta-test proving the probe catches a skipped scrub).
 
 The seed rotates in CI's nightly run via ``REPRO_SIM_SEED`` (the fast
 tier pins it); every failure message includes the offending seed.  The
@@ -34,11 +40,14 @@ from repro.serve.scheduler import ServeEngine
 from repro.serve.sim import (
     SimCorruption,
     SimExecutor,
+    _EMPTY,
+    _stamp,
     adversarial_trace,
     expected_generation,
     poisson_burst_trace,
     replay_trace,
 )
+from repro.serve.spec import SpecDecodeEngine
 
 # pinned in the fast tier; the nightly CI job rotates it by date
 BASE_SEED = int(os.environ.get("REPRO_SIM_SEED", "20260730"))
@@ -517,3 +526,249 @@ def test_hypothesis_state_machine():
         max_examples=40, stateful_step_count=30, deadline=None)
     run_state_machine_as_test(EngineMachine,
                               settings=EngineMachine.TestCase.settings)
+
+
+# --------------------------------------------------------------------------
+# speculative decoding: draft/verify/rollback interleavings
+# --------------------------------------------------------------------------
+
+
+def make_spec_engine(k, *, n_pages=14, max_batch=4, page_size=PAGE,
+                     draft_wrong=None, **kw):
+    """SpecDecodeEngine over two stamped sim arenas: the TARGET executor is
+    always exact (its stream defines correctness); the DRAFT executor's
+    ``draft_wrong(rid, idx)`` knob forces rejections at chosen positions."""
+    ex = SimExecutor(n_pages=n_pages, page_size=page_size, vocab_size=211)
+    dn = n_pages + max_batch * (-(-(k + 1) // page_size))
+    dex = SimExecutor(n_pages=dn, page_size=page_size, vocab_size=211,
+                      draft_wrong=draft_wrong)
+    eng = SpecDecodeEngine(None, None, spec_k=k, draft_executor=dex,
+                           draft_n_pages=dn, n_pages=n_pages,
+                           page_size=page_size, max_batch=max_batch,
+                           executor=ex, **kw)
+    return eng, ex, dex
+
+
+def _wrongness(kind, seed, page_size):
+    """Draft wrongness regimes: None (perfect draft), a seeded ~25% rate,
+    rejections exactly at page boundaries (rollbacks that cross page
+    edges), and total wrongness (every round rejects everything)."""
+    if kind is None:
+        return None
+    if kind == "always":
+        return lambda rid, idx: True
+    if kind == "page_boundary":
+        return lambda rid, idx: idx % page_size == 0
+    if kind == "rate":
+        return lambda rid, idx: (rid * 7919 + idx * 104_729 + seed) % 8 < 2
+    raise ValueError(kind)
+
+
+def _no_stale_spec_stamps(eng, ex):
+    """The page-exact rollback contract, observed directly: no active
+    row's owned pages may hold THIS row's stamp at an index at or past its
+    cached length — a skipped or mis-ranged scrub leaves exactly
+    ``_stamp(rid, idx)`` behind in the rejected slots.  (Slots past
+    seq_len may legally hold a PRIOR owner's stale bytes from page reuse;
+    only a same-rid future-index stamp is evidence of a missing scrub.)"""
+    for rid, seq in eng.active.items():
+        if seq.in_prefill:
+            continue
+        sl = eng.pool.seq_len(rid)
+        pages = eng.pool.pages(rid)
+        for idx in range(sl, len(pages) * eng.page_size):
+            got = ex.pages[pages[idx // eng.page_size],
+                           idx % eng.page_size]
+            assert got != _stamp(rid, idx), (
+                f"rid {rid}: rejected slot idx {idx} still stamped after "
+                f"rollback (seq_len {sl}) — the scrub did not run")
+
+
+SPEC_KS = (1, 2, 3)
+SPEC_WRONG = (None, "rate", "page_boundary", "always")
+SPEC_SEEDS_PER_CONFIG = 9  # 3 ks x 4 regimes x 9 seeds = 108 schedules
+
+
+@pytest.mark.parametrize("k", SPEC_KS)
+@pytest.mark.parametrize("wrong", SPEC_WRONG)
+def test_spec_fuzz_bitwise_identical_to_plain_greedy(k, wrong):
+    """Seeded bursty traces through the speculative engine, across k and
+    draft-wrongness regimes, alternating one-shot and chunked prefill:
+    every finished stream must equal BOTH the schedule-independent
+    expected stream and a plain (non-speculative) greedy engine's output
+    on the same trace, bit for bit — no matter how many tokens each round
+    accepted or rolled back.  Both page pools drain clean."""
+    rounds = rollbacks = 0
+    for i in range(SPEC_SEEDS_PER_CONFIG):
+        seed = BASE_SEED + 10_000 * k + 100 * SPEC_WRONG.index(wrong) + i
+        chunk = (None, PAGE)[i % 2]
+        ctx = f"k={k} wrong={wrong} seed={seed}"
+        eng, ex, dex = make_spec_engine(
+            k, draft_wrong=_wrongness(wrong, seed, PAGE),
+            prefill_chunk_tokens=chunk)
+        trace = poisson_burst_trace(
+            seed, n_requests=10, prompt_range=(2, 16), gen_range=(2, 10),
+            max_request_tokens=eng.tokens_capacity)
+        m = replay_trace(eng, trace)
+        # the plain-greedy reference on the SAME trace
+        peng, _ = make_engine(n_pages=14, max_batch=4,
+                              prefill_chunk_tokens=chunk)
+        replay_trace(peng, trace)
+        for rid, req in m["submitted"].items():
+            exp = expected_generation(rid, req.prompt_len, req.max_new, ex)
+            assert eng.finished.get(rid) == exp, (
+                f"{ctx}: rid {rid} spec stream {eng.finished.get(rid)} != "
+                f"expected {exp}")
+            assert eng.finished[rid] == peng.finished[rid], (
+                f"{ctx}: rid {rid} spec vs plain streams diverge")
+        eng.pool.check_invariants()
+        eng.draft_pool.check_invariants()
+        assert eng.pool.free_pages == eng.pool.n_pages - 1, ctx
+        assert eng.draft_pool.free_pages == eng.draft_pool.n_pages - 1, (
+            f"{ctx}: draft pool leaked pages")
+        rounds += eng.spec_rounds
+        rollbacks += ex.rollbacks
+        if wrong is None:
+            assert eng.acceptance_rate() == 1.0, (
+                f"{ctx}: a perfect draft must be fully accepted, got "
+                f"{eng.acceptance_rate()}")
+        if wrong == "always" and eng.spec_rounds:
+            assert eng.spec_accepted == 0, ctx
+    assert rounds > 0, f"k={k} wrong={wrong}: no spec rounds ran"
+    if wrong in ("always", "page_boundary"):
+        assert rollbacks > 0, (
+            f"k={k} wrong={wrong}: forced rejections never rolled back")
+
+
+def test_spec_schedule_count_floor():
+    """The satellite's 100+ seeded spec schedules, accounted explicitly."""
+    assert len(SPEC_KS) * len(SPEC_WRONG) * SPEC_SEEDS_PER_CONFIG >= 100
+
+
+def test_spec_k4_wide_page():
+    """k above the smallest bucket width needs a wider page (plan_verify
+    refuses a bucket that cannot hold k+1 slots); page 8 certifies k=4."""
+    eng, ex, _ = make_spec_engine(4, n_pages=10, page_size=8,
+                                  draft_wrong=lambda rid, idx: idx % 3 == 0)
+    trace = poisson_burst_trace(
+        BASE_SEED, n_requests=8, prompt_range=(2, 20), gen_range=(2, 12),
+        max_request_tokens=eng.tokens_capacity)
+    m = replay_trace(eng, trace)
+    assert_outputs_exact(eng, ex, m["submitted"], ctx="k=4 page=8")
+    assert eng.spec_rounds > 0 and ex.rollbacks > 0
+
+
+def test_spec_rollback_during_preemption_and_swap():
+    """Forced preemption interleaved with spec rounds: the draft lane is
+    dropped (recompute, not swapped), the target swaps as usual, and after
+    restore + lazy re-prime every stream is still the exact one — rollback
+    state never leaks across a preempt/swap/restore cycle."""
+    eng, ex, dex = make_spec_engine(
+        3, n_pages=16, draft_wrong=lambda rid, idx: idx % 2 == 0)
+    submitted = {}
+    for _ in range(5):
+        rid = eng.submit([1] * 8, 8)
+        submitted[rid] = (8, 8)
+    rng = np.random.RandomState(BASE_SEED + 5)
+    for _ in range(30):
+        eng.step()
+        if eng.active and rng.rand() < 0.5:
+            rids = sorted(eng.active)
+            victim = rids[rng.randint(len(rids))]
+            eng.preempt(victim)
+            assert not eng.draft_pool.owns(victim), (
+                "preempt left the victim's draft lane resident")
+        eng.pool.check_invariants()
+        eng.draft_pool.check_invariants()
+        _no_stale_spec_stamps(eng, ex)
+    out = eng.run()
+    for rid, (p, g) in submitted.items():
+        assert out[rid] == expected_generation(rid, p, g, ex), rid
+    assert eng.preemptions > 0 and eng.restores > 0
+    assert eng.spec_rounds > 0 and ex.rollbacks > 0
+    # dropped draft lanes really re-primed after restore
+    assert eng.draft_primes > len(submitted)
+
+
+def test_spec_rollback_scrubs_rejected_slots():
+    """After a rejecting round, the target arena's rejected slots read
+    EMPTY (page-exact scrub), observed after every step of a full run."""
+    eng, ex, _ = make_spec_engine(3, draft_wrong=lambda rid, idx: True)
+    rid = eng.submit([1] * 6, 5)
+    saw_rejection = False
+    for _ in range(40):
+        eng.step()
+        _no_stale_spec_stamps(eng, ex)
+        if rid in eng.active and not eng.active[rid].in_prefill \
+                and ex.rollbacks:
+            saw_rejection = True
+            sl = eng.pool.seq_len(rid)
+            pages = eng.pool.pages(rid)
+            for idx in range(sl, len(pages) * PAGE):
+                assert ex.pages[pages[idx // PAGE], idx % PAGE] == _EMPTY, (
+                    f"slot for idx {idx} not scrubbed (seq_len {sl})")
+        if not (eng.pending or eng.active or eng.swapped):
+            break
+    # prefill emits token 1; budgets 4/3/2 run spec rounds, budget 1 rides
+    # the plain lane — three all-reject rounds, three target rollbacks
+    assert saw_rejection and ex.rollbacks == 3
+    assert eng.finished[rid] == expected_generation(rid, 6, 5, ex)
+
+
+def test_spec_scrub_meta_detects_skipped_rollback():
+    """Meta-test: silence the target executor's rollback scrub (the pool
+    bookkeeping still truncates) — the stale-stamp probe must trip, or
+    every green scrub assertion above is vacuous."""
+    eng, ex, _ = make_spec_engine(3, draft_wrong=lambda rid, idx: True)
+    ex.rollback = lambda *a, **kw: None  # the planted bug
+    eng.submit([1] * 6, 5)
+    tripped = False
+    for _ in range(40):
+        eng.step()
+        try:
+            _no_stale_spec_stamps(eng, ex)
+        except AssertionError:
+            tripped = True
+            break
+        if not (eng.pending or eng.active or eng.swapped):
+            break
+    assert tripped, "stale-stamp probe missed a skipped rollback scrub"
+
+
+def test_spec_budget_one_falls_back_to_plain_decode():
+    """A row with a single token left cannot profit from speculation (a
+    round always commits >= 1 and would waste k+1 page claims): it must
+    ride the plain lane, and the spec/plain split still drains exact."""
+    eng, ex, _ = make_spec_engine(2)
+    r0 = eng.submit([1] * 4, 1)   # budget 1: plain lane only
+    r1 = eng.submit([1] * 4, 6)   # budget 6: spec lane
+    out = eng.run()
+    assert out[r0] == expected_generation(r0, 4, 1, ex)
+    assert out[r1] == expected_generation(r1, 4, 6, ex)
+    assert eng.spec_rounds > 0
+
+
+def test_spec_events_and_counters_are_consistent():
+    """spec_round events reconcile with the engine counters and the
+    emitted token totals (the same events record_spec_events consumes)."""
+    eng, ex, _ = make_spec_engine(
+        2, draft_wrong=lambda rid, idx: idx % 3 == 0)
+    trace = poisson_burst_trace(
+        BASE_SEED + 77, n_requests=8, prompt_range=(2, 12),
+        gen_range=(2, 8), max_request_tokens=eng.tokens_capacity)
+    m = replay_trace(eng, trace)
+    ev = [e for e in eng.events if e.get("event") == "spec_round"]
+    assert len(ev) == eng.spec_rounds > 0
+    assert sum(e["proposed"] for e in ev) == eng.spec_proposed
+    assert sum(e["accepted"] for e in ev) == eng.spec_accepted
+    assert sum(e["emitted"] for e in ev) == eng.spec_emitted
+    assert sum(e["rollback_depth"] for e in ev) == eng.spec_rollback_tokens
+    spec_tokens = sum(e["emitted"] for e in ev)
+    total = sum(len(eng.finished[r]) for r in m["submitted"])
+    # every stream's first token comes from the prefill final (not counted
+    # in decoded_tokens); the rest are spec-round or plain-lane decodes
+    assert spec_tokens <= eng.decoded_tokens
+    assert total == eng.decoded_tokens + len(m["submitted"])
+    for e in ev:
+        assert 0 <= e["accepted"] <= e["proposed"] == 2
+        assert 1 <= e["emitted"] <= e["accepted"] + 1

@@ -8,24 +8,19 @@ below FAILS — naming the exact deletions — once the project's jax floor
 in pyproject.toml passes 0.5, so the dead branches cannot outlive the
 API they bridge (ROADMAP "jax API drift").
 
-Four PAGED-PROTOCOL shims: the pre-``repro.models.api`` entry points
-``lm.prefill_paged`` / ``lm.decode_step_paged`` / ``lm.prefill_chunk_paged``
-and ``encdec.decode_step_paged``, kept as DeprecationWarning-emitting
-delegates for one minor release.  The same alarm-clock posture applies:
-``lm.PAGED_SHIMS_SUNSET`` pins the project version at which they go, and
-the sunset test fails with deletion instructions the release that
-reaches it.
+The four PR-6 paged-protocol shims (``lm.prefill_paged``,
+``lm.decode_step_paged``, ``lm.prefill_chunk_paged``,
+``encdec.decode_step_paged``) hit their ``PAGED_SHIMS_SUNSET`` of 0.2
+and were deleted at version 0.2.0; ``test_paged_shims_stay_retired``
+pins that they do not creep back.
 """
 
 from __future__ import annotations
 
-import contextlib
-import inspect
 import os
 import re
 
 import jax
-import pytest
 
 from repro.models import encdec, lm
 from repro.sharding import compat
@@ -79,43 +74,23 @@ def test_shard_map_prefers_modern_entry_point():
 
 
 # --------------------------------------------------------------------------
-# paged-protocol shims (PR 6): delegates for the pre-models.api entry points
+# paged-protocol shims (PR 6): retired at their 0.2 sunset
 # --------------------------------------------------------------------------
 
-_PAGED_SHIMS = (lm.prefill_paged, lm.decode_step_paged,
-                lm.prefill_chunk_paged, encdec.decode_step_paged)
 
-
-def _project_version() -> tuple[int, int]:
-    text = open(_PYPROJECT).read()
-    m = re.search(r'^version\s*=\s*"(\d+)\.(\d+)', text, re.M)
-    assert m, "pyproject.toml no longer declares a version"
-    return (int(m.group(1)), int(m.group(2)))
-
-
-def test_paged_shims_sunset():
-    """FAILS at the release that reaches ``lm.PAGED_SHIMS_SUNSET``: time
-    to delete the deprecated paged entry points."""
-    version = _project_version()
-    assert version < lm.PAGED_SHIMS_SUNSET, (
-        f"project version {version[0]}.{version[1]} reached the paged-shim "
-        f"sunset {lm.PAGED_SHIMS_SUNSET} — DELETE lm.prefill_paged, "
-        "lm.decode_step_paged, lm.prefill_chunk_paged and "
-        "encdec.decode_step_paged (callers use the repro.models.api paged "
-        "protocol), then remove lm.PAGED_SHIMS_SUNSET and these tests")
-
-
-@pytest.mark.parametrize("shim", _PAGED_SHIMS,
-                         ids=lambda f: f"{f.__module__}.{f.__name__}")
-def test_paged_shims_still_warn(shim):
-    """Until the sunset, every shim must emit its DeprecationWarning
-    BEFORE delegating (the call may then fail on the dummy operands —
-    only the warning is under test)."""
-    sig = inspect.signature(shim)
-    args = [None] * sum(1 for p in sig.parameters.values()
-                        if p.default is p.empty
-                        and p.kind is not p.KEYWORD_ONLY)
-    kwargs = {n: None for n, p in sig.parameters.items()
-              if p.default is p.empty and p.kind is p.KEYWORD_ONLY}
-    with pytest.warns(DeprecationWarning), contextlib.suppress(Exception):
-        shim(*args, **kwargs)
+def test_paged_shims_stay_retired():
+    """The deprecated paged entry points were deleted at version 0.2.0
+    (their ``PAGED_SHIMS_SUNSET``); callers drive ``lm.paged_prefill`` /
+    ``lm.paged_decode`` / ``encdec.paged_decode`` or the
+    ``repro.models.api`` paged protocol.  Nothing may reintroduce the
+    old names or the sunset constant."""
+    for mod, name in ((lm, "prefill_paged"), (lm, "decode_step_paged"),
+                      (lm, "prefill_chunk_paged"),
+                      (lm, "PAGED_SHIMS_SUNSET"),
+                      (encdec, "decode_step_paged")):
+        assert not hasattr(mod, name), (
+            f"{mod.__name__}.{name} reappeared after its 0.2 sunset")
+    # the modern entry points the shims delegated to must still exist
+    for mod, name in ((lm, "paged_prefill"), (lm, "paged_decode"),
+                      (encdec, "paged_decode")):
+        assert callable(getattr(mod, name))
