@@ -16,6 +16,7 @@ is machine-readable across PRs.
 from __future__ import annotations
 
 import json
+import os
 
 import jax
 import jax.numpy as jnp
@@ -111,7 +112,7 @@ def _bench_residual_bytes(results):
     """Activation-residual HBM per dense layer: int8-packed QTensor payloads
     vs f32 carriers, measured on the residual pytree the custom_vjp saves
     (jax.eval_shape — no FLOPs, so production shapes are free to price)."""
-    from repro.kernels.ops import _qdot2d_fwd
+    from repro.kernels.ops import _encode_seed, _qdot2d_fwd
 
     p = GEMMPrecision(m_acc=9, e_acc=6, chunk=64)
     for tag, t, k, n in [
@@ -125,7 +126,8 @@ def _bench_residual_bytes(results):
         def nbytes(pack):
             cfg = QDotConfig(fwd=p, bwd=p, grad=p, repr_fmt=FP8_152,
                              pack_residuals=pack)
-            _, res = jax.eval_shape(lambda x, w: _qdot2d_fwd(x, w, cfg), x, w)
+            _, res = jax.eval_shape(
+                lambda x, w: _qdot2d_fwd(x, w, _encode_seed(0), cfg), x, w)
             return sum(l.size * l.dtype.itemsize for l in jax.tree.leaves(res))
 
         packed, carrier = nbytes(True), nbytes(False)
@@ -136,6 +138,66 @@ def _bench_residual_bytes(results):
         })
 
 
+def _bench_below_knee_sweep(rng, results):
+    """The SR frontier sweep: sweep m_acc from the solver knee down two
+    bits at a fixed accumulation length, recording the measured knee
+    statistic for RNE vs the SR-aware statistic for stochastic-rounding
+    carries — plus the SR-off bit-parity gate (rounding="rne" explicit
+    must be the seed kernels, bit for bit).
+
+    Seed comes from ``REPRO_SR_SEED`` (pinned on PRs, date-rotated by the
+    nightly sr-frontier CI job) — the determinism contract says results
+    must hold for EVERY seed, so rotation is free fuzzing.
+    """
+    from repro.core.precision import min_m_acc
+    from repro.telemetry.stats import gemm_stats
+
+    sr_seed = int(os.environ.get("REPRO_SR_SEED", "20260808"))
+    k, chunk = 8192, 32
+    n2 = k // chunk
+    m_pred = min_m_acc(k, 5, chunked=True, chunk=chunk)
+
+    # fresh pinned draws (same as tests/test_below_knee.py's probe): the
+    # sweep must land in the regime the CI gate asserts on, independent of
+    # how many benches ran before this one
+    x = jnp.asarray(np.random.RandomState(0)
+                    .standard_normal((16, k)).astype(np.float32))
+    w = jnp.asarray(np.random.RandomState(1)
+                    .standard_normal((k, 16)).astype(np.float32))
+
+    from repro.core.vrr import CUTOFF_LOG_V
+
+    for m_acc in range(m_pred, m_pred - 3, -1):
+        prec = GEMMPrecision(m_acc=m_acc, e_acc=6, chunk=chunk)
+        _, st_rne = gemm_stats(x, w, precision=prec, repr_fmt=FP8_152,
+                               rounding="rne")
+        # the per-seed SR statistic is noisy near the cutoff at this probe
+        # size; average over 3 derived seeds so the verdict is stable under
+        # the nightly seed rotation
+        srs = [gemm_stats(x, w, precision=prec, repr_fmt=FP8_152,
+                          rounding="sr", sr_seed=sr_seed + d)[1]
+               for d in range(3)]
+        sr_v = float(np.mean([float(s.measured_log_v_sr(n2)) for s in srs]))
+        results.append({
+            "name": f"below_knee_m{m_acc}_K{k}c{chunk}",
+            "m_pred": m_pred, "sr_seed": sr_seed,
+            "rne_log_v": round(float(st_rne.measured_log_v(n2)), 3),
+            "sr_log_v": round(sr_v, 3),
+            "rne_ok": bool(st_rne.suitable(n2)),
+            "sr_ok": bool(sr_v < CUTOFF_LOG_V),
+            "sr_jitter_fraction": round(float(srs[0].jitter_fraction), 4),
+        })
+
+    # SR-off bit-parity: explicit rounding="rne" is the default pipeline
+    a = jnp.asarray(rng.standard_normal((64, 256)).astype(np.float32))
+    b = jnp.asarray(rng.standard_normal((256, 64)).astype(np.float32))
+    kw = dict(repr_fmt=FP8_152, e_acc=6, m_acc=9, block_k=64)
+    parity = np.array_equal(np.asarray(qmatmul_fused(a, b, **kw)),
+                            np.asarray(qmatmul_fused(a, b, rounding="rne",
+                                                     **kw)))
+    results.append({"name": "sr_off_bitparity", "bitexact": bool(parity)})
+
+
 def run(csv=False, json_path="BENCH_kernels.json"):
     rng = np.random.RandomState(0)
     results: list[dict] = []
@@ -143,6 +205,7 @@ def run(csv=False, json_path="BENCH_kernels.json"):
     _bench_quantize(rng, results)
     _bench_fused_vs_unfused(rng, results)
     _bench_residual_bytes(results)
+    _bench_below_knee_sweep(rng, results)
 
     print("### kernel micro-bench (interpret mode on CPU — correctness proxy)")
     for r in results:

@@ -56,6 +56,12 @@ class AccumulationPolicy:
     nzr: float = 1.0
     e_acc: int = 6
     quantize_outputs: bool = False
+    # Carry rounding for every solver-assigned GEMM: "rne" (the paper's
+    # deterministic round-to-nearest) or "sr" (stochastic rounding of the
+    # inter-chunk carry, seeded by ``sr_seed`` — deterministic given the
+    # seed; the below-the-knee training mode)
+    rounding: str = "rne"
+    sr_seed: int = 0
 
     # The emulation carries the narrow accumulator in an f32 VMEM tile, so
     # m_acc beyond f32's 23 mantissa bits is not a representable format —
@@ -120,6 +126,8 @@ def plan_for_model(cfg, *, seq_len: int, global_batch: int,
             grad=policy.for_length(int(tokens * policy.nzr) or 1),
             repr_fmt=repr_fmt,
             out_fmt=repr_fmt if policy.quantize_outputs else None,
+            rounding=policy.rounding,
+            sr_seed=policy.sr_seed,
         )
 
     d = cfg.d_model

@@ -73,7 +73,10 @@ from repro.kernels.autotune import AttnCall, fmt_tuple, register_kernel
 from repro.kernels.common import (
     INTERPRET,
     N_STATS,
+    ROUNDINGS,
     quantize_block,
+    quantize_block_sr,
+    sr_random_bits,
     stats_delta_row,
     stats_update,
 )
@@ -165,7 +168,47 @@ def _pv(p: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
         preferred_element_type=jnp.float32)
 
 
-def _online_update(o, m, l, t, valid, v, e_acc: int, m_acc: int):
+# the l carry draws its dither from a salted seed stream so it never shares
+# bits with the o carry of the same (row, block) — correlated dither between
+# numerator and denominator would bias the finalized ratio
+_L_SALT = 0x6A09E667
+
+
+def _sr_attn_bits(seed, step, *, abs_row0, head0, block_q: int, dh: int,
+                  h: int, shape3=None):
+    """Dither bits for one KV-block carry update of the online softmax.
+
+    Pure function of (seed, absolute KV-block index ``step``, absolute
+    query row, head, feature) — invariant to q blocking, grid schedule and
+    chunked-prefill resumption (a resumed walk re-derives the SAME bits the
+    one-shot walk used at that block, so resume == one-shot stays bitwise).
+    Returns ``(rbits_o, rbits_l)`` shaped like the o / l carries: the
+    kernel calls it per (head, q-tile) with scalars ``head0``/``abs_row0``;
+    the reference passes ``shape3=(h, s, dh)`` to draw the whole slab's
+    bits in one shot from identical coordinates."""
+    seed = jnp.asarray(seed).astype(jnp.uint32)
+    step = jnp.asarray(step).astype(jnp.uint32)
+    row0 = jnp.asarray(abs_row0).astype(jnp.uint32)
+    if shape3 is None:
+        head = jnp.asarray(head0).astype(jnp.uint32)
+        ro = (jax.lax.broadcasted_iota(jnp.uint32, (block_q, dh), 0) + row0)
+        co = (jax.lax.broadcasted_iota(jnp.uint32, (block_q, dh), 1)
+              + head * jnp.uint32(dh))
+        rl = (jax.lax.broadcasted_iota(jnp.uint32, (block_q, 1), 0) + row0)
+        cl = jnp.broadcast_to(head, (block_q, 1))
+    else:
+        ro = jax.lax.broadcasted_iota(jnp.uint32, shape3, 1) + row0
+        co = (jax.lax.broadcasted_iota(jnp.uint32, shape3, 0)
+              * jnp.uint32(dh)
+              + jax.lax.broadcasted_iota(jnp.uint32, shape3, 2))
+        rl, cl = ro[..., :1], co[..., :1] // jnp.uint32(dh)
+    rbits_o = sr_random_bits(seed, step, ro, co, h * dh)
+    rbits_l = sr_random_bits(seed ^ jnp.uint32(_L_SALT), step, rl, cl, h)
+    return rbits_o, rbits_l
+
+
+def _online_update(o, m, l, t, valid, v, e_acc: int, m_acc: int,
+                   rounding: str = "rne", rbits=None):
     """One KV-block step of the online softmax with the chunked
     low-precision carry discipline.
 
@@ -178,16 +221,27 @@ def _online_update(o, m, l, t, valid, v, e_acc: int, m_acc: int):
     inter-chunk stage of the paper's Corollary 1 — while everything within
     the block is ideal f32.  A fully-masked block is a carry no-op: alpha =
     2^0 = 1, the addends are exactly zero, and the carry is a representable
-    point of the accumulator format, so quantize(c + 0) == c.  Returns
+    point of the accumulator format, so quantize(c + 0) == c — under BOTH
+    roundings (a representable point is a fixed point of the SR dither
+    too, so predicating a provably-masked block away stays bit-identical
+    to running it).  ``rounding="sr"`` replaces the carry's
+    round-to-nearest with stochastic rounding driven by ``rbits``, a
+    ``(rbits_o, rbits_l)`` pair from ``_sr_attn_bits``.  Returns
     (o', m', l')."""
     m_new = jnp.maximum(m, jnp.ceil(jnp.max(t, axis=-1, keepdims=True)))
     alpha = jnp.exp2(m - m_new)
     # exp2(t - m_new) would be 2^0 = 1 on fully-masked rows (t == m_new ==
     # NEG); the explicit mask keeps invalid columns at exactly 0
     p = jnp.where(valid, jnp.exp2(t - m_new), 0.0)
-    l_new = quantize_block(l * alpha + jnp.sum(p, axis=-1, keepdims=True),
-                           e_acc, m_acc)
-    o_new = quantize_block(o * alpha + _pv(p, v), e_acc, m_acc)
+    l_raw = l * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    o_raw = o * alpha + _pv(p, v)
+    if rounding == "sr":
+        rbits_o, rbits_l = rbits
+        l_new = quantize_block_sr(l_raw, e_acc, m_acc, rbits_l)
+        o_new = quantize_block_sr(o_raw, e_acc, m_acc, rbits_o)
+    else:
+        l_new = quantize_block(l_raw, e_acc, m_acc)
+        o_new = quantize_block(o_raw, e_acc, m_acc)
     return o_new, m_new, l_new
 
 
@@ -203,12 +257,15 @@ def _finalize(o, l):
 
 def _prefill_kernel(*refs, sk_true: int, block_q: int, chunk: int,
                     e_acc: int, m_acc: int, scale: float, q_offset: int,
-                    kv_offset: int, has_carry: bool, emit_carry: bool):
+                    kv_offset: int, has_carry: bool, emit_carry: bool,
+                    rounding: str, sr_seed: int, h_total: int):
     n_in = 6 if has_carry else 3
     q_ref, k_ref, v_ref = refs[:3]
     out_refs = refs[n_in:n_in + (3 if emit_carry else 1)]
     oacc, mx, lx = refs[n_in + (3 if emit_carry else 1):]
-    qi, kk = pl.program_id(1), pl.program_id(2)
+    # program_id must be bound at kernel top level (interpret mode only
+    # substitutes it there, not inside pl.when branch jaxprs)
+    hq, qi, kk = pl.program_id(0), pl.program_id(1), pl.program_id(2)
 
     @pl.when(kk == 0)
     def _init():
@@ -241,8 +298,17 @@ def _prefill_kernel(*refs, sk_true: int, block_q: int, chunk: int,
         cols_l = kk * chunk + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
         valid = (kv_offset + cols_l <= rows) & (cols_l < sk_true)
         s = jnp.where(valid, s, NEG)
+        rbits = None
+        if rounding == "sr":
+            # dither keyed on the ABSOLUTE kv-block index and absolute
+            # (row, head, feature) — a resumed walk draws the same bits
+            rbits = _sr_attn_bits(
+                jnp.uint32(sr_seed), kv_offset // chunk + kk,
+                abs_row0=q_offset + qi * block_q, head0=hq,
+                block_q=block_q, dh=v.shape[-1], h=h_total)
         o_new, m_new, l_new = _online_update(
-            oacc[...], mx[...], lx[...], s, valid, v, e_acc, m_acc)
+            oacc[...], mx[...], lx[...], s, valid, v, e_acc, m_acc,
+            rounding=rounding, rbits=rbits)
         oacc[...] = o_new
         mx[...] = m_new
         lx[...] = l_new
@@ -260,11 +326,12 @@ def _prefill_kernel(*refs, sk_true: int, block_q: int, chunk: int,
 @functools.partial(
     jax.jit,
     static_argnames=("e_acc", "m_acc", "chunk", "block_q", "q_offset",
-                     "kv_offset", "emit_carry", "interpret"),
+                     "kv_offset", "emit_carry", "interpret", "rounding",
+                     "sr_seed"),
 )
 def _flash_prefill(q, k, v, carry_o, carry_m, carry_l, *, e_acc, m_acc,
                    chunk, block_q, q_offset, kv_offset, emit_carry,
-                   interpret):
+                   interpret, rounding="rne", sr_seed=0):
     _count_trace("flash_prefill")
     s, h, dh = q.shape
     sk_true = k.shape[0]
@@ -319,7 +386,8 @@ def _flash_prefill(q, k, v, carry_o, carry_m, carry_l, *, e_acc, m_acc,
                           chunk=chunk, e_acc=e_acc, m_acc=m_acc,
                           scale=LOG2E / math.sqrt(dh), q_offset=q_offset,
                           kv_offset=kv_offset, has_carry=has_carry,
-                          emit_carry=emit_carry),
+                          emit_carry=emit_carry, rounding=rounding,
+                          sr_seed=sr_seed, h_total=h),
         grid=grid,
         in_specs=in_specs,
         out_specs=out_specs,
@@ -352,6 +420,8 @@ def flash_prefill(
     return_carry: bool = False,
     call: AttnCall | None = None,
     interpret: bool = INTERPRET,
+    rounding: str = "rne",
+    sr_seed: int = 0,
 ) -> jnp.ndarray | tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Causal flash attention for one sequence's prefill (resumable).
 
@@ -378,7 +448,15 @@ def flash_prefill(
     * ``call`` — an ``AttnCall`` spec supplying acc/chunk/block_q/offsets
       in one struct (the same one the autotuner and the serve compile
       cache key on); explicit kwargs are ignored when it is given.
+    * ``rounding="sr"`` — stochastic rounding of the o/l carries, seeded by
+      ``sr_seed``: deterministic given the seed, block_q/schedule-invariant
+      and resume==one-shot bitwise (the dither is keyed on the ABSOLUTE
+      kv-block index and absolute row/head/feature coordinates, so a
+      resumed walk re-derives the one-shot walk's bits).  Default "rne" is
+      bit-identical to the seed-less kernel.
     """
+    if rounding not in ROUNDINGS:
+        raise ValueError(f"rounding must be one of {ROUNDINGS}")
     if call is not None:
         acc = call.acc
         chunk = call.chunk
@@ -409,14 +487,18 @@ def flash_prefill(
                           e_acc=int(e_acc), m_acc=int(m_acc),
                           chunk=int(chunk), block_q=int(block_q),
                           q_offset=int(q_offset), kv_offset=int(kv_offset),
-                          emit_carry=bool(return_carry), interpret=interpret)
+                          emit_carry=bool(return_carry), interpret=interpret,
+                          rounding=rounding, sr_seed=int(sr_seed))
 
 
 def flash_prefill_reference(q, k, v, *, acc=_WIDE, chunk=128, q_offset=0,
-                            kv_offset=0, carry=None, return_carry=False):
+                            kv_offset=0, carry=None, return_carry=False,
+                            rounding="rne", sr_seed=0):
     """Unfused jnp oracle for ``flash_prefill``: same chunk walk, same carry
     rounding, no q blocking (per-row results are block_q-invariant).
-    Mirrors the kernel's resumable-carry contract exactly."""
+    Mirrors the kernel's resumable-carry contract exactly — including the
+    SR dither coordinates, so kernel and reference agree bitwise in both
+    rounding modes."""
     s, h, dh = q.shape
     sk_true = k.shape[0]
     g = h // k.shape[1]
@@ -445,7 +527,15 @@ def flash_prefill_reference(q, k, v, *, acc=_WIDE, chunk=128, q_offset=0,
         cols_l = kk * chunk + jnp.arange(chunk)[None, None, :]
         valid = (kv_offset + cols_l <= rows) & (cols_l < sk_true)
         sc = jnp.where(valid, sc, NEG)
-        o, m, l = _online_update(o, m, l, sc, valid, vb, e_acc, m_acc)
+        rbits = None
+        if rounding == "sr":
+            rbits = _sr_attn_bits(jnp.uint32(sr_seed),
+                                  kv_offset // chunk + kk,
+                                  abs_row0=q_offset, head0=0,
+                                  block_q=s, dh=dh, h=h,
+                                  shape3=(h, s, dh))
+        o, m, l = _online_update(o, m, l, sc, valid, vb, e_acc, m_acc,
+                                 rounding=rounding, rbits=rbits)
     if return_carry:
         return (o.transpose(1, 0, 2), m[..., 0].T, l[..., 0].T)
     return _finalize(o, l).transpose(1, 0, 2)

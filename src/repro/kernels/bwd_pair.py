@@ -54,11 +54,14 @@ from repro.kernels.autotune import fmt_tuple, register_kernel
 from repro.kernels.common import (
     INTERPRET,
     N_STATS,
+    ROUNDINGS,
+    carry_update,
     pad2d,
     quantize_block,
     stats_delta_row,
     stats_update,
 )
+from repro.kernels.fused import as_sr_seed
 from repro.quant.qtensor import unpack_block
 
 __all__ = ["qmatmul_bwd_pair", "qmatmul_bwd_pair_nsplit", "pair_vmem_bytes",
@@ -90,10 +93,18 @@ def pair_vmem_bytes(block_t: int, block_k: int, block_n: int, n_padded: int,
     return tiles + 4 * block_k * n_padded     # dw carry slab
 
 
-def _pair_kernel(g_ref, x_ref, w_ref, dx_ref, dw_ref, dx_acc, dw_acc, *,
-                 e_r, m_r, qg, packed, e_bwd, m_bwd, e_grad, m_grad, block_n):
+def _pair_kernel(*refs, e_r, m_r, qg, packed, e_bwd, m_bwd, e_grad, m_grad,
+                 block_n, rounding, k, n):
+    if rounding == "sr":
+        g_ref, x_ref, w_ref, sb_ref, sg_ref, dx_ref, dw_ref, \
+            dx_acc, dw_acc = refs
+    else:
+        g_ref, x_ref, w_ref, dx_ref, dw_ref, dx_acc, dw_acc = refs
+        sb_ref = sg_ref = None
+    j = pl.program_id(0)
     i = pl.program_id(1)
     l = pl.program_id(2)
+    block_t, block_k = dx_acc.shape
 
     # one VMEM landing of the g tile feeds BOTH contractions; quantized
     # once per landing
@@ -112,7 +123,12 @@ def _pair_kernel(g_ref, x_ref, w_ref, dx_ref, dw_ref, dx_acc, dw_acc, *,
     # g[t, n] . w[k, n] contracted over n — w is NOT transposed in memory
     pdx = jax.lax.dot_general(g, w, (((1,), (1,)), ((), ())),
                               preferred_element_type=jnp.float32)
-    dx_acc[...] = quantize_block(dx_acc[...] + pdx, e_bwd, m_bwd)
+    # SR coordinates mirror qmatmul_fused(g, w.T): dx element (t, k),
+    # chunk step = the N-chunk index
+    dx_acc[...] = carry_update(
+        dx_acc[...], pdx, e_acc=e_bwd, m_acc=m_bwd, rounding=rounding,
+        seed_ref=sb_ref, step=l, row0=i * block_t, col0=j * block_k,
+        n_cols=k)
 
     @pl.when(l == pl.num_programs(2) - 1)
     def _emit_dx():
@@ -124,25 +140,40 @@ def _pair_kernel(g_ref, x_ref, w_ref, dx_ref, dw_ref, dx_acc, dw_acc, *,
     pdw = jax.lax.dot_general(x, g, (((0,), (0,)), ((), ())),
                               preferred_element_type=jnp.float32)
     prev = jnp.where(i == 0, jnp.zeros_like(pdw), dw_acc[:, sl])
-    dw_acc[:, sl] = quantize_block(prev + pdw, e_grad, m_grad)
+    # SR coordinates mirror qmatmul_fused(x.T, g): dw element (k, n),
+    # chunk step = the T-chunk index
+    dw_acc[:, sl] = carry_update(
+        prev, pdw, e_acc=e_grad, m_acc=m_grad, rounding=rounding,
+        seed_ref=sg_ref, step=i, row0=j * block_k, col0=l * block_n,
+        n_cols=n)
 
     @pl.when(i == pl.num_programs(1) - 1)
     def _emit_dw():
         dw_ref[...] = dw_acc[:, sl]
 
 
-def _pair_kernel_seg(g_ref, x_ref, w_ref, dxc_ref, dx_ref, dw_ref, dx_acc,
-                     dw_acc, *, e_r, m_r, qg, packed, e_bwd, m_bwd, e_grad,
-                     m_grad, block_n):
+def _pair_kernel_seg(*refs, e_r, m_r, qg, packed, e_bwd, m_bwd, e_grad,
+                     m_grad, block_n, rounding, k, n_total, step_off,
+                     col_off):
     """N-split segment body: identical to ``_pair_kernel`` except the dx
     carry RESUMES from ``dxc_ref`` — the running dx of the previous N
     segment — instead of zero.  Chaining segments in N order reproduces the
     unsplit kernel's chunked dx accumulation bit-for-bit: the carry values
     handed between segments are exact (1, e_bwd, m_bwd) points carried in
     f32, and the per-``block_n`` rounding cadence is unchanged because
-    segment widths are block_n-aligned."""
+    segment widths are block_n-aligned.  For SR the dither coordinates use
+    the GLOBAL N-chunk index (``step_off + l``) and global dw column
+    (``col_off + ...``), so split and unsplit draw identical bits."""
+    if rounding == "sr":
+        g_ref, x_ref, w_ref, dxc_ref, sb_ref, sg_ref, dx_ref, dw_ref, \
+            dx_acc, dw_acc = refs
+    else:
+        g_ref, x_ref, w_ref, dxc_ref, dx_ref, dw_ref, dx_acc, dw_acc = refs
+        sb_ref = sg_ref = None
+    j = pl.program_id(0)
     i = pl.program_id(1)
     l = pl.program_id(2)
+    block_t, block_k = dx_acc.shape
 
     g = quantize_block(g_ref[...], e_r, m_r) if qg else g_ref[...]
     if packed:
@@ -157,7 +188,10 @@ def _pair_kernel_seg(g_ref, x_ref, w_ref, dxc_ref, dx_ref, dw_ref, dx_acc,
 
     pdx = jax.lax.dot_general(g, w, (((1,), (1,)), ((), ())),
                               preferred_element_type=jnp.float32)
-    dx_acc[...] = quantize_block(dx_acc[...] + pdx, e_bwd, m_bwd)
+    dx_acc[...] = carry_update(
+        dx_acc[...], pdx, e_acc=e_bwd, m_acc=m_bwd, rounding=rounding,
+        seed_ref=sb_ref, step=step_off + l, row0=i * block_t,
+        col0=j * block_k, n_cols=k)
 
     @pl.when(l == pl.num_programs(2) - 1)
     def _emit_dx():
@@ -167,22 +201,30 @@ def _pair_kernel_seg(g_ref, x_ref, w_ref, dxc_ref, dx_ref, dw_ref, dx_acc,
     pdw = jax.lax.dot_general(x, g, (((0,), (0,)), ((), ())),
                               preferred_element_type=jnp.float32)
     prev = jnp.where(i == 0, jnp.zeros_like(pdw), dw_acc[:, sl])
-    dw_acc[:, sl] = quantize_block(prev + pdw, e_grad, m_grad)
+    dw_acc[:, sl] = carry_update(
+        prev, pdw, e_acc=e_grad, m_acc=m_grad, rounding=rounding,
+        seed_ref=sg_ref, step=i, row0=j * block_k,
+        col0=col_off + l * block_n, n_cols=n_total)
 
     @pl.when(i == pl.num_programs(1) - 1)
     def _emit_dw():
         dw_ref[...] = dw_acc[:, sl]
 
 
-def _pair_kernel_stats(g_ref, x_ref, w_ref, dx_ref, dw_ref, stats_ref,
-                       dx_acc, dw_acc, dxi_acc, dwi_acc, stats_acc, *,
-                       e_r, m_r, qg, packed, e_bwd, m_bwd, e_grad, m_grad,
-                       t, k, n, block_t, block_k, block_n):
+def _pair_kernel_stats(*refs, e_r, m_r, qg, packed, e_bwd, m_bwd, e_grad,
+                       m_grad, t, k, n, block_t, block_k, block_n, rounding):
     """Swamping-telemetry variant of ``_pair_kernel``: the same two chunked
     accumulations plus wide (f32) shadow carries and a (2, N_STATS) stats
     reduction — row 0 for dx (the BWD accumulator), row 1 for dw (GRAD, the
     paper's critical long accumulation).  dx/dw outputs are bit-identical to
     the stats-off kernel."""
+    if rounding == "sr":
+        g_ref, x_ref, w_ref, sb_ref, sg_ref, dx_ref, dw_ref, stats_ref, \
+            dx_acc, dw_acc, dxi_acc, dwi_acc, stats_acc = refs
+    else:
+        g_ref, x_ref, w_ref, dx_ref, dw_ref, stats_ref, \
+            dx_acc, dw_acc, dxi_acc, dwi_acc, stats_acc = refs
+        sb_ref = sg_ref = None
     j, i, l = pl.program_id(0), pl.program_id(1), pl.program_id(2)
     last_i = i == pl.num_programs(1) - 1
     last_l = l == pl.num_programs(2) - 1
@@ -207,7 +249,10 @@ def _pair_kernel_stats(g_ref, x_ref, w_ref, dx_ref, dw_ref, stats_ref,
     pdx = jax.lax.dot_general(g, w, (((1,), (1,)), ((), ())),
                               preferred_element_type=jnp.float32)
     prev_dx = dx_acc[...]
-    new_dx = quantize_block(prev_dx + pdx, e_bwd, m_bwd)
+    new_dx = carry_update(
+        prev_dx, pdx, e_acc=e_bwd, m_acc=m_bwd, rounding=rounding,
+        seed_ref=sb_ref, step=l, row0=i * block_t, col0=j * block_k,
+        n_cols=k)
     dx_acc[...] = new_dx
     dxi = dxi_acc[...] + pdx
     dxi_acc[...] = dxi
@@ -228,7 +273,10 @@ def _pair_kernel_stats(g_ref, x_ref, w_ref, dx_ref, dw_ref, stats_ref,
     pdw = jax.lax.dot_general(x, g, (((0,), (0,)), ((), ())),
                               preferred_element_type=jnp.float32)
     prev_dw = jnp.where(i == 0, jnp.zeros_like(pdw), dw_acc[:, sl])
-    new_dw = quantize_block(prev_dw + pdw, e_grad, m_grad)
+    new_dw = carry_update(
+        prev_dw, pdw, e_acc=e_grad, m_acc=m_grad, rounding=rounding,
+        seed_ref=sg_ref, step=i, row0=j * block_k, col0=l * block_n,
+        n_cols=n)
     dw_acc[:, sl] = new_dw
     dwi = jnp.where(i == 0, jnp.zeros_like(pdw), dwi_acc[:, sl]) + pdw
     dwi_acc[:, sl] = dwi
@@ -255,11 +303,11 @@ def _pair_kernel_stats(g_ref, x_ref, w_ref, dx_ref, dw_ref, stats_ref,
     jax.jit,
     static_argnames=("e_r", "m_r", "qg", "packed", "e_bwd", "m_bwd",
                      "e_grad", "m_grad", "block_t", "block_k", "block_n",
-                     "collect_stats", "interpret"),
+                     "collect_stats", "rounding", "interpret"),
 )
-def _bwd_pair(g, xq, wq, *, e_r, m_r, qg, packed, e_bwd, m_bwd, e_grad,
-              m_grad, block_t, block_k, block_n, collect_stats=False,
-              interpret=False):
+def _bwd_pair(g, xq, wq, sb, sg, *, e_r, m_r, qg, packed, e_bwd, m_bwd,
+              e_grad, m_grad, block_t, block_k, block_n, collect_stats=False,
+              rounding="rne", interpret=False):
     t, n = g.shape
     k = xq.shape[1]
     rdt = jnp.int8 if packed else jnp.float32
@@ -270,19 +318,23 @@ def _bwd_pair(g, xq, wq, *, e_r, m_r, qg, packed, e_bwd, m_bwd, e_grad,
     kp = x2.shape[1]
     grid = (kp // block_k, tp // block_t, np_ // block_n)
 
+    seed_specs = [pl.BlockSpec((1, 1), lambda j, i, l: (0, 0)),
+                  pl.BlockSpec((1, 1), lambda j, i, l: (0, 0))]
+    operands = (g2, x2, w2, sb, sg) if rounding == "sr" else (g2, x2, w2)
+
     if collect_stats:
         dx, dw, stats = pl.pallas_call(
             functools.partial(_pair_kernel_stats, e_r=e_r, m_r=m_r, qg=qg,
                               packed=packed, e_bwd=e_bwd, m_bwd=m_bwd,
                               e_grad=e_grad, m_grad=m_grad, t=t, k=k, n=n,
                               block_t=block_t, block_k=block_k,
-                              block_n=block_n),
+                              block_n=block_n, rounding=rounding),
             grid=grid,
             in_specs=[
                 pl.BlockSpec((block_t, block_n), lambda j, i, l: (i, l)),
                 pl.BlockSpec((block_t, block_k), lambda j, i, l: (i, j)),
                 pl.BlockSpec((block_k, block_n), lambda j, i, l: (j, l)),
-            ],
+            ] + (seed_specs if rounding == "sr" else []),
             out_specs=[
                 pl.BlockSpec((block_t, block_k), lambda j, i, l: (i, j)),
                 pl.BlockSpec((block_k, block_n), lambda j, i, l: (j, l)),
@@ -301,19 +353,20 @@ def _bwd_pair(g, xq, wq, *, e_r, m_r, qg, packed, e_bwd, m_bwd, e_grad,
                 pltpu.VMEM((2, N_STATS), jnp.float32),        # stats rows
             ],
             interpret=interpret,
-        )(g2, x2, w2)
+        )(*operands)
         return dx[:t, :k], dw[:k, :n], stats
 
     dx, dw = pl.pallas_call(
         functools.partial(_pair_kernel, e_r=e_r, m_r=m_r, qg=qg,
                           packed=packed, e_bwd=e_bwd, m_bwd=m_bwd,
-                          e_grad=e_grad, m_grad=m_grad, block_n=block_n),
+                          e_grad=e_grad, m_grad=m_grad, block_n=block_n,
+                          rounding=rounding, k=k, n=n),
         grid=grid,
         in_specs=[
             pl.BlockSpec((block_t, block_n), lambda j, i, l: (i, l)),  # g
             pl.BlockSpec((block_t, block_k), lambda j, i, l: (i, j)),  # x
             pl.BlockSpec((block_k, block_n), lambda j, i, l: (j, l)),  # w
-        ],
+        ] + (seed_specs if rounding == "sr" else []),
         out_specs=[
             pl.BlockSpec((block_t, block_k), lambda j, i, l: (i, j)),  # dx
             pl.BlockSpec((block_k, block_n), lambda j, i, l: (j, l)),  # dw
@@ -327,7 +380,7 @@ def _bwd_pair(g, xq, wq, *, e_r, m_r, qg, packed, e_bwd, m_bwd, e_grad,
             pltpu.VMEM((block_k, np_), jnp.float32),      # dw carry slab
         ],
         interpret=interpret,
-    )(g2, x2, w2)
+    )(*operands)
     return dx[:t, :k], dw[:k, :n]
 
 
@@ -335,10 +388,13 @@ def _bwd_pair(g, xq, wq, *, e_r, m_r, qg, packed, e_bwd, m_bwd, e_grad,
     jax.jit,
     static_argnames=("e_r", "m_r", "qg", "packed", "e_bwd", "m_bwd",
                      "e_grad", "m_grad", "block_t", "block_k", "block_n",
+                     "rounding", "n_total", "step_off", "col_off",
                      "interpret"),
 )
-def _bwd_pair_seg(g, xq, wq, dxc, *, e_r, m_r, qg, packed, e_bwd, m_bwd,
-                  e_grad, m_grad, block_t, block_k, block_n, interpret):
+def _bwd_pair_seg(g, xq, wq, dxc, sb, sg, *, e_r, m_r, qg, packed, e_bwd,
+                  m_bwd, e_grad, m_grad, block_t, block_k, block_n,
+                  rounding="rne", n_total=0, step_off=0, col_off=0,
+                  interpret=False):
     """One N segment of the split backward pair: dx carry in, dx carry (or
     final dx) + this segment's dw columns out."""
     t, n = g.shape
@@ -352,17 +408,25 @@ def _bwd_pair_seg(g, xq, wq, dxc, *, e_r, m_r, qg, packed, e_bwd, m_bwd,
     kp = x2.shape[1]
     grid = (kp // block_k, tp // block_t, np_ // block_n)
 
+    seed_specs = [pl.BlockSpec((1, 1), lambda j, i, l: (0, 0)),
+                  pl.BlockSpec((1, 1), lambda j, i, l: (0, 0))]
+    operands = (g2, x2, w2, c2, sb, sg) if rounding == "sr" \
+        else (g2, x2, w2, c2)
+
     dx, dw = pl.pallas_call(
         functools.partial(_pair_kernel_seg, e_r=e_r, m_r=m_r, qg=qg,
                           packed=packed, e_bwd=e_bwd, m_bwd=m_bwd,
-                          e_grad=e_grad, m_grad=m_grad, block_n=block_n),
+                          e_grad=e_grad, m_grad=m_grad, block_n=block_n,
+                          rounding=rounding, k=k,
+                          n_total=n_total if n_total else n,
+                          step_off=step_off, col_off=col_off),
         grid=grid,
         in_specs=[
             pl.BlockSpec((block_t, block_n), lambda j, i, l: (i, l)),  # g
             pl.BlockSpec((block_t, block_k), lambda j, i, l: (i, j)),  # x
             pl.BlockSpec((block_k, block_n), lambda j, i, l: (j, l)),  # w
             pl.BlockSpec((block_t, block_k), lambda j, i, l: (i, j)),  # dxc
-        ],
+        ] + (seed_specs if rounding == "sr" else []),
         out_specs=[
             pl.BlockSpec((block_t, block_k), lambda j, i, l: (i, j)),  # dx
             pl.BlockSpec((block_k, block_n), lambda j, i, l: (j, l)),  # dw
@@ -376,7 +440,7 @@ def _bwd_pair_seg(g, xq, wq, dxc, *, e_r, m_r, qg, packed, e_bwd, m_bwd,
             pltpu.VMEM((block_k, np_), jnp.float32),      # dw carry slab
         ],
         interpret=interpret,
-    )(g2, x2, w2, c2)
+    )(*operands)
     return dx[:t, :k], dw[:k, :n]
 
 
@@ -395,6 +459,9 @@ def qmatmul_bwd_pair(
     packed: bool = True,
     quantize_g: bool = True,
     collect_stats: bool = False,
+    rounding: str = "rne",
+    sr_seed_bwd=0,
+    sr_seed_grad=0,
     interpret: bool = INTERPRET,
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """(dx, dw) of one dense layer in a single ``pallas_call``.
@@ -411,6 +478,10 @@ def qmatmul_bwd_pair(
       row 1 the dw (GRAD) accumulator; dx/dw stay bit-identical.  Roughly
       doubles the VMEM working set (wide shadow carries), which is why the
       telemetry probe, not the train step, is the caller.
+    * ``rounding="sr"`` stochastically rounds BOTH carries; the two
+      accumulators take separate seeds (``sr_seed_bwd`` / ``sr_seed_grad``)
+      so dx matches ``qmatmul_fused(g, w.T, sr_seed=sr_seed_bwd)`` and dw
+      matches ``qmatmul_fused(x.T, g, sr_seed=sr_seed_grad)`` bitwise.
     """
     if g.ndim != 2 or xq.ndim != 2 or wq.ndim != 2:
         raise ValueError("2D operands required")
@@ -430,12 +501,16 @@ def qmatmul_bwd_pair(
         raise ValueError(
             f"packed=True expects int8 codes, got {xq.dtype}/{wq.dtype} "
             "(f32 carriers would be silently value-truncated)")
+    if rounding not in ROUNDINGS:
+        raise ValueError(f"rounding must be one of {ROUNDINGS}, "
+                         f"got {rounding!r}")
     (e_b, m_b), (e_g, m_g) = bwd_acc, grad_acc
     return _bwd_pair(
-        g, xq, wq, e_r=int(e_r), m_r=int(m_r), qg=quantize_g, packed=packed,
+        g, xq, wq, as_sr_seed(sr_seed_bwd), as_sr_seed(sr_seed_grad),
+        e_r=int(e_r), m_r=int(m_r), qg=quantize_g, packed=packed,
         e_bwd=int(e_b), m_bwd=int(m_b), e_grad=int(e_g), m_grad=int(m_g),
         block_t=block_t, block_k=block_k, block_n=block_n,
-        collect_stats=collect_stats, interpret=interpret,
+        collect_stats=collect_stats, rounding=rounding, interpret=interpret,
     )
 
 
@@ -454,6 +529,9 @@ def qmatmul_bwd_pair_nsplit(
     block_n: int = 128,
     packed: bool = True,
     quantize_g: bool = True,
+    rounding: str = "rne",
+    sr_seed_bwd=0,
+    sr_seed_grad=0,
     interpret: bool = INTERPRET,
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """The backward pair split into ``n_split`` N segments (wide-N layers
@@ -483,7 +561,11 @@ def qmatmul_bwd_pair_nsplit(
         quantize_g = False
     else:
         e_r, m_r = fmt
+    if rounding not in ROUNDINGS:
+        raise ValueError(f"rounding must be one of {ROUNDINGS}, "
+                         f"got {rounding!r}")
     (e_b, m_b), (e_g, m_g) = bwd_acc, grad_acc
+    sb, sg = as_sr_seed(sr_seed_bwd), as_sr_seed(sr_seed_grad)
     # block_n-aligned segment edges: the global chunk sequence over N is the
     # unsplit kernel's (padding chunks are carry no-ops: q(c + 0) == c)
     seg = pair_segment_width(n, n_split, block_n)
@@ -492,10 +574,11 @@ def qmatmul_bwd_pair_nsplit(
     for lo in range(0, n, seg):
         hi = min(lo + seg, n)
         dx, dw_s = _bwd_pair_seg(
-            g[:, lo:hi], xq, wq[:, lo:hi], dx,
+            g[:, lo:hi], xq, wq[:, lo:hi], dx, sb, sg,
             e_r=int(e_r), m_r=int(m_r), qg=quantize_g, packed=packed,
             e_bwd=int(e_b), m_bwd=int(m_b), e_grad=int(e_g),
             m_grad=int(m_g), block_t=block_t, block_k=block_k,
-            block_n=block_n, interpret=interpret)
+            block_n=block_n, rounding=rounding, n_total=n,
+            step_off=lo // block_n, col_off=lo, interpret=interpret)
         dws.append(dw_s)
     return dx, jnp.concatenate(dws, axis=1)

@@ -7,6 +7,12 @@ import jax.numpy as jnp
 
 __all__ = [
     "quantize_block",
+    "quantize_block_sr",
+    "quantize_carry",
+    "carry_update",
+    "threefry2x32",
+    "sr_random_bits",
+    "ROUNDINGS",
     "INTERPRET",
     "pad2d",
     "count_pallas_calls",
@@ -20,6 +26,8 @@ __all__ = [
     "STAT_MAX_ABS",
     "STAT_SWAMPED",
     "STAT_ADDS",
+    "STAT_SUM_ERR",
+    "STAT_SUMSQ_ERR",
     "stats_delta_row",
     "stats_update",
 ]
@@ -104,7 +112,7 @@ def _count_in_param(v, weighted: bool = False) -> int:
 # is the only consumer.  Counters are f32 (exact up to 2^24 events; beyond
 # that the swamp *rate* stays accurate, which is all the controller reads).
 
-N_STATS = 8
+N_STATS = 10
 (
     STAT_COUNT,     # valid output elements (the ensemble size)
     STAT_SUM_Q,     # sum of reduced-precision outputs
@@ -114,6 +122,8 @@ N_STATS = 8
     STAT_MAX_ABS,   # max |carry| over all chunk updates (exponent proxy)
     STAT_SWAMPED,   # chunk-carry adds fully absorbed: q(c + p) == c, p != 0
     STAT_ADDS,      # chunk-carry adds with a non-zero addend
+    STAT_SUM_ERR,   # sum of (q - ideal) over final outputs (rounding bias)
+    STAT_SUMSQ_ERR, # sum of (q - ideal)^2 over final outputs (rounding MSE)
 ) = range(N_STATS)
 
 
@@ -135,9 +145,11 @@ def stats_delta_row(new, prev, ideal, partial, mask, emit_out):
     om = mask & emit_out
     q = jnp.where(om, new, 0.0)
     w = jnp.where(om, ideal, 0.0)
+    err = q - w
     cnt = jnp.sum(jnp.where(om, one, zero))
     delta = jnp.stack([cnt, jnp.sum(q), jnp.sum(q * q),
-                       jnp.sum(w), jnp.sum(w * w), zero, swamped, adds])
+                       jnp.sum(w), jnp.sum(w * w), zero, swamped, adds,
+                       jnp.sum(err), jnp.sum(err * err)])
     step_max = jnp.max(jnp.where(mask, jnp.abs(new), 0.0))
     return delta, step_max
 
@@ -179,3 +191,112 @@ def quantize_block(x: jnp.ndarray, e: int, m: int) -> jnp.ndarray:
     y = jnp.where(y < min_normal, jnp.float32(0.0), y)
     y = jnp.where(jnp.signbit(x), -y, y)
     return jnp.where(jnp.isnan(x), x, y)
+
+
+# --------------------------------------------------------------------------
+# stochastic-rounding carry (rounding="sr")
+# --------------------------------------------------------------------------
+#
+# Counter-based Threefry-2x32 written in plain uint32 ops so it lowers both
+# on TPU and in interpret mode (the pltpu.prng_* primitives have no CPU
+# lowering).  The carry noise is a pure function of (seed, chunk step,
+# logical output element), never of tile shapes or grid schedule — which is
+# what makes seeded SR bitwise-reproducible across the fused, bwd-pair,
+# segmented and stats-epilogue kernel variants.
+
+ROUNDINGS = ("rne", "sr")
+
+
+def _rotl32(x: jnp.ndarray, d: int) -> jnp.ndarray:
+    return (x << jnp.uint32(d)) | (x >> jnp.uint32(32 - d))
+
+
+def threefry2x32(key0, key1, ctr0, ctr1):
+    """Standard 20-round Threefry-2x32 block: (key, counter) -> two uint32
+    words.  Inputs broadcast; all arithmetic is mod-2^32 uint32."""
+    rots = ((13, 15, 26, 6), (17, 29, 16, 24))
+    ks = (jnp.uint32(key0), jnp.uint32(key1),
+          jnp.uint32(key0) ^ jnp.uint32(key1) ^ jnp.uint32(0x1BD11BDA))
+    x0 = jnp.uint32(ctr0) + ks[0]
+    x1 = jnp.uint32(ctr1) + ks[1]
+    for g in range(5):
+        for d in rots[g % 2]:
+            x0 = x0 + x1
+            x1 = _rotl32(x1, d) ^ x0
+        x0 = x0 + ks[(g + 1) % 3]
+        x1 = x1 + ks[(g + 2) % 3] + jnp.uint32(g + 1)
+    return x0, x1
+
+
+def sr_random_bits(seed, step, row_ids, col_ids, n_cols: int) -> jnp.ndarray:
+    """Deterministic uint32 dither for one carry-update tile.
+
+    The Threefry counter pairs the element's flat LOGICAL output index
+    (``row * n_cols + col`` over the unpadded output) with the chunk-step
+    index, and the key is the caller's seed.  Padded elements may alias a
+    logical index, which is harmless: the dither is consumed elementwise
+    and the padded region is discarded.
+    """
+    flat = row_ids.astype(jnp.uint32) * jnp.uint32(n_cols) + \
+        col_ids.astype(jnp.uint32)
+    seed = jnp.asarray(seed).astype(jnp.uint32)
+    step = jnp.asarray(step).astype(jnp.uint32)
+    out, _ = threefry2x32(seed, seed ^ jnp.uint32(0x9E3779B9), flat, step)
+    return out
+
+
+def quantize_block_sr(x: jnp.ndarray, e: int, m: int,
+                      rbits: jnp.ndarray) -> jnp.ndarray:
+    """(1, e, m) stochastic-rounding quantization of a float32 block.
+
+    Adds ``rbits & (ulp_bits - 1)`` — a uniform dither in [0, ulp) on the
+    magnitude's bit pattern — then truncates the mantissa, which rounds up
+    with probability exactly equal to the discarded fraction: conditionally
+    unbiased per rounding event.  Saturation, flush-to-zero and NaN
+    semantics match ``quantize_block``; only the mantissa rounding rule
+    differs (and exact formats degenerate to identity, dither unused).
+    """
+    if m >= 23 and e >= 8:
+        return x
+    max_value = jnp.float32(2.0 ** (2 ** (e - 1) - 1) * (2.0 - 2.0 ** (-m)))
+    min_normal = jnp.float32(2.0 ** -(2 ** (e - 1) - 1))
+
+    y = jnp.abs(x)
+    if m < 23:
+        xi = jax.lax.bitcast_convert_type(y, jnp.uint32)
+        shift = jnp.uint32(23 - m)
+        low = (jnp.uint32(1) << shift) - jnp.uint32(1)
+        xi = xi + (rbits & low)
+        xi = xi & ~low
+        y = jax.lax.bitcast_convert_type(xi, jnp.float32)
+
+    y = jnp.where(jnp.isinf(x), max_value, y)
+    y = jnp.minimum(y, max_value)
+    y = jnp.where(y < min_normal, jnp.float32(0.0), y)
+    y = jnp.where(jnp.signbit(x), -y, y)
+    return jnp.where(jnp.isnan(x), x, y)
+
+
+def quantize_carry(x: jnp.ndarray, e: int, m: int, rounding: str,
+                   rbits=None) -> jnp.ndarray:
+    """Carry-update quantizer dispatch: RNE (default, bit-identical to the
+    historical kernels) or SR with caller-supplied dither bits."""
+    if rounding == "sr":
+        return quantize_block_sr(x, e, m, rbits)
+    return quantize_block(x, e, m)
+
+
+def carry_update(prev, partial, *, e_acc, m_acc, rounding, seed_ref,
+                 step, row0, col0, n_cols):
+    """One inter-chunk carry update for a kernel tile.  ``rounding="rne"``
+    is the historical bit-exact path; ``"sr"`` draws the per-element dither
+    from the seed and the element's LOGICAL coordinates (global row/col of
+    the tile origin, chunk-step index), so the bits are invariant to tile
+    shape and grid schedule — the cross-variant determinism contract."""
+    if rounding != "sr":
+        return quantize_block(prev + partial, e_acc, m_acc)
+    shape = prev.shape
+    rows = row0 + jax.lax.broadcasted_iota(jnp.int32, shape, 0)
+    cols = col0 + jax.lax.broadcasted_iota(jnp.int32, shape, 1)
+    rbits = sr_random_bits(seed_ref[0, 0], step, rows, cols, n_cols)
+    return quantize_block_sr(prev + partial, e_acc, m_acc, rbits)

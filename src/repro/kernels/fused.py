@@ -58,6 +58,8 @@ from repro.kernels.autotune import fmt_tuple, register_kernel
 from repro.kernels.common import (
     INTERPRET,
     N_STATS,
+    ROUNDINGS,
+    carry_update,
     pad2d,
     quantize_block,
     stats_delta_row,
@@ -65,10 +67,20 @@ from repro.kernels.common import (
 )
 from repro.quant.qtensor import pack_block, unpack_block
 
-__all__ = ["qmatmul_fused"]
+__all__ = ["qmatmul_fused", "as_sr_seed"]
+
+
+def as_sr_seed(seed) -> jnp.ndarray:
+    """Normalize a python int / scalar uint32 seed to the (1, 1) uint32
+    operand the SR kernels take (traced, so per-step seeds don't retrace)."""
+    arr = jnp.asarray(seed)
+    if arr.dtype != jnp.uint32:
+        arr = arr.astype(jnp.uint32)
+    return arr.reshape(1, 1)
 
 # identity quantization (folds away inside quantize_block at trace time)
 _WIDE = (8, 23)
+_carry_update = carry_update
 
 
 def _load_operand(ref, *, packed: bool, q: bool, e_r: int, m_r: int):
@@ -92,8 +104,14 @@ def _emit_output(o_ref, acc, *, e_o: int, m_o: int, pack_out: bool):
     o_ref[...] = out
 
 
-def _fused_kernel(a_ref, b_ref, o_ref, acc_ref, *, e_r, m_r, qa, qb,
-                  e_acc, m_acc, a_packed, b_packed, e_o, m_o, pack_out):
+def _fused_kernel(*refs, e_r, m_r, qa, qb, e_acc, m_acc, a_packed, b_packed,
+                  e_o, m_o, pack_out, rounding, n):
+    if rounding == "sr":
+        a_ref, b_ref, seed_ref, o_ref, acc_ref = refs
+    else:
+        a_ref, b_ref, o_ref, acc_ref = refs
+        seed_ref = None
+
     @pl.when(pl.program_id(2) == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
@@ -104,16 +122,25 @@ def _fused_kernel(a_ref, b_ref, o_ref, acc_ref, *, e_r, m_r, qa, qb,
     # intra-chunk: one MXU tile contraction, ideal (f32) accumulation
     partial = jnp.dot(a, b, preferred_element_type=jnp.float32)
     # inter-chunk: carry update rounded to the (1, e_acc, m_acc) format
-    acc_ref[...] = quantize_block(acc_ref[...] + partial, e_acc, m_acc)
+    bm, bn = acc_ref.shape
+    acc_ref[...] = _carry_update(
+        acc_ref[...], partial, e_acc=e_acc, m_acc=m_acc, rounding=rounding,
+        seed_ref=seed_ref, step=pl.program_id(2),
+        row0=pl.program_id(0) * bm, col0=pl.program_id(1) * bn, n_cols=n)
 
     @pl.when(pl.program_id(2) == pl.num_programs(2) - 1)
     def _emit():
         _emit_output(o_ref, acc_ref[...], e_o=e_o, m_o=m_o, pack_out=pack_out)
 
 
-def _fused_kernel_emitq(a_ref, b_ref, o_ref, aq_ref, bq_ref, acc_ref, *,
-                        e_r, m_r, qa, qb, e_acc, m_acc, packr,
-                        e_o, m_o, pack_out):
+def _fused_kernel_emitq(*refs, e_r, m_r, qa, qb, e_acc, m_acc, packr,
+                        e_o, m_o, pack_out, rounding, n):
+    if rounding == "sr":
+        a_ref, b_ref, seed_ref, o_ref, aq_ref, bq_ref, acc_ref = refs
+    else:
+        a_ref, b_ref, o_ref, aq_ref, bq_ref, acc_ref = refs
+        seed_ref = None
+
     @pl.when(pl.program_id(2) == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
@@ -133,17 +160,20 @@ def _fused_kernel_emitq(a_ref, b_ref, o_ref, aq_ref, bq_ref, acc_ref, *,
         bq_ref[...] = pack_block(b, e_r, m_r) if packr else b
 
     partial = jnp.dot(a, b, preferred_element_type=jnp.float32)
-    acc_ref[...] = quantize_block(acc_ref[...] + partial, e_acc, m_acc)
+    bm, bn = acc_ref.shape
+    acc_ref[...] = _carry_update(
+        acc_ref[...], partial, e_acc=e_acc, m_acc=m_acc, rounding=rounding,
+        seed_ref=seed_ref, step=pl.program_id(2),
+        row0=pl.program_id(0) * bm, col0=pl.program_id(1) * bn, n_cols=n)
 
     @pl.when(pl.program_id(2) == pl.num_programs(2) - 1)
     def _emit():
         _emit_output(o_ref, acc_ref[...], e_o=e_o, m_o=m_o, pack_out=pack_out)
 
 
-def _fused_kernel_stats(a_ref, b_ref, o_ref, stats_ref, acc_ref, ideal_ref,
-                        stats_acc, *, e_r, m_r, qa, qb, e_acc, m_acc,
+def _fused_kernel_stats(*refs, e_r, m_r, qa, qb, e_acc, m_acc,
                         a_packed, b_packed, e_o, m_o, pack_out,
-                        m, n, block_m, block_n):
+                        m, n, block_m, block_n, rounding):
     """The swamping-telemetry variant (``collect_stats=True``): the SAME
     chunked accumulation — identical values, identical order — plus a wide
     (f32) shadow carry and an (1, N_STATS) stats reduction (see
@@ -154,6 +184,12 @@ def _fused_kernel_stats(a_ref, b_ref, o_ref, stats_ref, acc_ref, ideal_ref,
     grid; the stats output block maps every grid step to block (0, 0) and is
     written once, on the final step (same single-write discipline — and the
     same compiled-TPU copy-back caveat — as the residual emission)."""
+    if rounding == "sr":
+        a_ref, b_ref, seed_ref, o_ref, stats_ref, acc_ref, ideal_ref, \
+            stats_acc = refs
+    else:
+        a_ref, b_ref, o_ref, stats_ref, acc_ref, ideal_ref, stats_acc = refs
+        seed_ref = None
     i, j, kk = pl.program_id(0), pl.program_id(1), pl.program_id(2)
     last_k = kk == pl.num_programs(2) - 1
 
@@ -171,7 +207,10 @@ def _fused_kernel_stats(a_ref, b_ref, o_ref, stats_ref, acc_ref, ideal_ref,
     partial = jnp.dot(a, b, preferred_element_type=jnp.float32)
 
     prev = acc_ref[...]
-    new = quantize_block(prev + partial, e_acc, m_acc)
+    new = _carry_update(
+        prev, partial, e_acc=e_acc, m_acc=m_acc, rounding=rounding,
+        seed_ref=seed_ref, step=kk,
+        row0=i * block_m, col0=j * block_n, n_cols=n)
     acc_ref[...] = new
     ideal = ideal_ref[...] + partial
     ideal_ref[...] = ideal
@@ -202,11 +241,12 @@ def _fused_kernel_stats(a_ref, b_ref, o_ref, stats_ref, acc_ref, ideal_ref,
     static_argnames=("e_r", "m_r", "e_acc", "m_acc", "block_m", "block_n",
                      "block_k", "qa", "qb", "emitq", "packr", "a_packed",
                      "b_packed", "e_o", "m_o", "pack_out", "collect_stats",
-                     "interpret"),
+                     "rounding", "interpret"),
 )
-def _qmatmul_fused(a, b, *, e_r, m_r, e_acc, m_acc, block_m, block_n,
-                   block_k, qa, qb, emitq, packr, a_packed, b_packed,
-                   e_o, m_o, pack_out, collect_stats=False, interpret=False):
+def _qmatmul_fused(a, b, sr_seed, *, e_r, m_r, e_acc, m_acc, block_m,
+                   block_n, block_k, qa, qb, emitq, packr, a_packed,
+                   b_packed, e_o, m_o, pack_out, collect_stats=False,
+                   rounding="rne", interpret=False):
     m, k = a.shape
     _, n = b.shape
     a32 = pad2d(a, block_m, block_k, dtype=jnp.int8 if a_packed else jnp.float32)
@@ -216,11 +256,17 @@ def _qmatmul_fused(a, b, *, e_r, m_r, e_acc, m_acc, block_m, block_n,
     grid = (mp // block_m, np_ // block_n, kp // block_k)
 
     kw = dict(e_r=e_r, m_r=m_r, qa=qa, qb=qb, e_acc=e_acc, m_acc=m_acc,
-              e_o=e_o, m_o=m_o, pack_out=pack_out)
+              e_o=e_o, m_o=m_o, pack_out=pack_out, rounding=rounding, n=n)
     in_specs = [
         pl.BlockSpec((block_m, block_k), lambda i, j, kk: (i, kk)),
         pl.BlockSpec((block_k, block_n), lambda i, j, kk: (kk, j)),
     ]
+    # the SR seed rides in as a (1, 1) uint32 operand (traced, so a per-step
+    # training seed does not retrace), broadcast to every grid step
+    operands = (a32, b32)
+    if rounding == "sr":
+        in_specs = in_specs + [pl.BlockSpec((1, 1), lambda i, j, kk: (0, 0))]
+        operands = (a32, b32, sr_seed)
     o_spec = pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j))
     o_shape = jax.ShapeDtypeStruct((mp, np_),
                                    jnp.int8 if pack_out else jnp.float32)
@@ -232,7 +278,7 @@ def _qmatmul_fused(a, b, *, e_r, m_r, e_acc, m_acc, block_m, block_n,
     if collect_stats:
         out, stats = pl.pallas_call(
             functools.partial(_fused_kernel_stats, a_packed=a_packed,
-                              b_packed=b_packed, m=m, n=n,
+                              b_packed=b_packed, m=m,
                               block_m=block_m, block_n=block_n, **kw),
             grid=grid,
             in_specs=in_specs,
@@ -249,7 +295,7 @@ def _qmatmul_fused(a, b, *, e_r, m_r, e_acc, m_acc, block_m, block_n,
                 pltpu.VMEM((1, N_STATS), jnp.float32),        # stats row
             ],
             interpret=interpret,
-        )(a32, b32)
+        )(*operands)
         return out[:m, :n], stats[0]
 
     if not emitq:
@@ -262,7 +308,7 @@ def _qmatmul_fused(a, b, *, e_r, m_r, e_acc, m_acc, block_m, block_n,
             out_shape=o_shape,
             scratch_shapes=scratch,
             interpret=interpret,
-        )(a32, b32)
+        )(*operands)
         return out[:m, :n]
 
     rdt = jnp.int8 if packr else jnp.float32
@@ -282,7 +328,7 @@ def _qmatmul_fused(a, b, *, e_r, m_r, e_acc, m_acc, block_m, block_n,
         ],
         scratch_shapes=scratch,
         interpret=interpret,
-    )(a32, b32)
+    )(*operands)
     return out[:m, :n], aq[:m, :k], bq[:k, :n]
 
 
@@ -306,6 +352,8 @@ def qmatmul_fused(
     out_fmt=None,
     pack_out: bool = False,
     collect_stats: bool = False,
+    rounding: str = "rne",
+    sr_seed=0,
     interpret: bool = INTERPRET,
 ):
     """C[M, N] = Q(A)[M, K] @ Q(B)[K, N] with chunked (1, e_acc, m_acc)
@@ -337,6 +385,12 @@ def qmatmul_fused(
       ``repro.telemetry.stats.EnsembleStats.from_raw``.  Mutually exclusive
       with ``return_quantized`` (the telemetry probe path never needs
       residuals).
+    * ``rounding`` — inter-chunk carry rounding: ``"rne"`` (default,
+      bit-identical to the historical kernels — no extra operand, no code
+      path change) or ``"sr"`` (stochastic rounding driven by an in-kernel
+      Threefry counter PRNG).  ``sr_seed`` may be a python int or a traced
+      uint32 scalar; given a seed, SR outputs are bitwise-reproducible, and
+      identical across the fused / bwd-pair / stats-epilogue variants.
     """
     if a.ndim != 2 or b.ndim != 2 or a.shape[1] != b.shape[0]:
         raise ValueError(f"bad shapes {a.shape} @ {b.shape}")
@@ -356,13 +410,17 @@ def qmatmul_fused(
     if collect_stats and return_quantized:
         raise ValueError("collect_stats is a probe-path epilogue; residual "
                          "emission is a train-path epilogue — pick one")
+    if rounding not in ROUNDINGS:
+        raise ValueError(f"rounding must be one of {ROUNDINGS}, "
+                         f"got {rounding!r}")
     return _qmatmul_fused(
-        a, b, e_r=int(e_r), m_r=int(m_r), e_acc=e_acc, m_acc=m_acc,
+        a, b, as_sr_seed(sr_seed),
+        e_r=int(e_r), m_r=int(m_r), e_acc=e_acc, m_acc=m_acc,
         block_m=block_m, block_n=block_n, block_k=block_k,
         qa=quantize_a and not a_packed, qb=quantize_b and not b_packed,
         emitq=return_quantized, packr=pack_residuals,
         a_packed=a_packed, b_packed=b_packed,
         e_o=int(e_o), m_o=int(m_o), pack_out=pack_out,
-        collect_stats=collect_stats,
+        collect_stats=collect_stats, rounding=rounding,
         interpret=interpret,
     )

@@ -58,6 +58,7 @@ from repro.kernels.bwd_pair import (
     qmatmul_bwd_pair,
     qmatmul_bwd_pair_nsplit,
 )
+from repro.kernels.common import ROUNDINGS, threefry2x32
 from repro.kernels.fused import qmatmul_fused
 from repro.kernels.qmatmul import qmatmul_pallas
 from repro.kernels.quantize import quantize_pallas
@@ -66,7 +67,36 @@ from repro.quant.qtensor import QTensor
 from repro.telemetry import capture as _capture
 
 __all__ = ["QDotConfig", "qdot", "qdot_packed", "quantize_op",
-           "qdot_gemm_variants", "bwd_pair_fits", "pair_n_segments"]
+           "qdot_gemm_variants", "bwd_pair_fits", "pair_n_segments",
+           "sr_role_seed"]
+
+# Threefry key salts deriving the three GEMM roles' independent SR streams
+# from one base seed.  The backward pair consumes the SAME bwd/grad seeds
+# its two-fused-GEMM and N-split fallbacks would, so every backward
+# realization of a qdot draws identical dither bits.
+_ROLE_SALT = {"fwd": 0x9E3779B1, "bwd": 0x85EBCA77, "grad": 0xC2B2AE3D}
+
+
+def sr_role_seed(seed, role: str):
+    """Per-role SR seed from the base seed (uint32 Threefry mix; accepts a
+    python int or a traced uint32 scalar, returns a uint32 scalar)."""
+    s = jnp.asarray(seed).astype(jnp.uint32)
+    out, _ = threefry2x32(s, jnp.uint32(_ROLE_SALT[role]),
+                          jnp.uint32(0), jnp.uint32(1))
+    return out
+
+
+def _encode_seed(seed) -> jnp.ndarray:
+    """uint32-valued seed -> f32 scalar (bit pattern preserved).  The seed
+    rides through the custom_vjp as a float operand so per-step training
+    seeds stay traced (no retrace) and the backward can hand back an
+    ordinary zero cotangent."""
+    return jax.lax.bitcast_convert_type(
+        jnp.asarray(seed).astype(jnp.uint32), jnp.float32)
+
+
+def _decode_seed(seed_f32: jnp.ndarray) -> jnp.ndarray:
+    return jax.lax.bitcast_convert_type(seed_f32, jnp.uint32)
 
 # beyond this many N segments the split pair's x re-reads and dx carry
 # round-trips stop paying for the saved g re-read; fall back to two GEMMs
@@ -101,6 +131,13 @@ class QDotConfig:
     config traces no callback at all.  ``stats_axis`` psums each row across
     that mesh axis (``EnsembleStats.psum``) before shipping, masked to
     shard 0 so the host sees one global window.
+    ``rounding`` selects the inter-chunk carry rounding for all three
+    roles: ``"rne"`` (default, bit-identical to the historical kernels) or
+    ``"sr"`` (stochastic rounding; fused-only).  ``sr_seed`` is the static
+    base seed; each role derives its own stream via ``sr_role_seed``, and a
+    per-step seed can be passed to ``qdot(..., sr_seed=)`` as a TRACED
+    value (it rides through the custom_vjp as an operand, so stepping the
+    seed does not retrace).
     """
 
     fwd: GEMMPrecision | None = None
@@ -112,6 +149,8 @@ class QDotConfig:
     out_fmt: FPFormat | None = None
     stats_tag: str | None = None
     stats_axis: str | None = None
+    rounding: str = "rne"
+    sr_seed: int = 0
     # autotune-table dtype label override for the forward consult: the MoE
     # expert einsum shapes are warmed under "bf16" keys (they are bf16 GEMMs
     # outside the quantized emulation) — routing them through qdot must look
@@ -250,6 +289,8 @@ def _mm_fused(
     out_fmt: FPFormat | None = None,
     pack_out: bool = False,
     dtype_key: str | None = None,
+    rounding: str = "rne",
+    sr_seed=0,
 ):
     """One fused pallas_call: Q(a) @ Q(b) under role-``p`` accumulation,
     block decomposition consulted from the autotune table at trace time."""
@@ -270,6 +311,7 @@ def _mm_fused(
         a_packed=a_packed, b_packed=b_packed,
         return_quantized=return_quantized, pack_residuals=pack_residuals,
         out_fmt=out_fmt, pack_out=pack_out,
+        rounding=rounding, sr_seed=sr_seed,
     )
 
 
@@ -305,7 +347,8 @@ def _emit_stats_row(tag: str, role: str, n: int, n1: int, m_acc: int,
 
 
 def _emit_qdot_stats(cfg: QDotConfig, g, xp, wp, packed: bool,
-                     t: int, k: int, n: int, raw_pair=None) -> None:
+                     t: int, k: int, n: int, raw_pair=None,
+                     seed=None) -> None:
     """Collect + emit the three roles' stats for one tagged qdot backward.
 
     BWD/GRAD come from ``raw_pair`` (the one-pass pair kernel's
@@ -321,10 +364,15 @@ def _emit_qdot_stats(cfg: QDotConfig, g, xp, wp, packed: bool,
 
     tag, axis = cfg.stats_tag, cfg.stats_axis
     quantize = cfg.repr_fmt is not None
+    rnd = cfg.rounding
+    base = seed if seed is not None else cfg.sr_seed
+    role_seed = (lambda r: sr_role_seed(base, r)) if rnd == "sr" \
+        else (lambda r: 0)
     if cfg.fwd is not None:
         _, st = gemm_stats(xp, wp, precision=cfg.fwd, repr_fmt=cfg.repr_fmt,
                            quantize_a=False, quantize_b=False,
-                           a_packed=packed, b_packed=packed)
+                           a_packed=packed, b_packed=packed,
+                           rounding=rnd, sr_seed=role_seed("fwd"))
         _emit_stats_row(tag, "fwd", k, _chunk_of(cfg.fwd), cfg.fwd.m_acc,
                         axis, st.to_raw())
     if raw_pair is not None:
@@ -338,13 +386,15 @@ def _emit_qdot_stats(cfg: QDotConfig, g, xp, wp, packed: bool,
     if cfg.bwd is not None:
         _, st = gemm_stats(g, wp.T, precision=cfg.bwd, repr_fmt=cfg.repr_fmt,
                            quantize_a=quantize, quantize_b=False,
-                           b_packed=packed)
+                           b_packed=packed,
+                           rounding=rnd, sr_seed=role_seed("bwd"))
         _emit_stats_row(tag, "bwd", n, _chunk_of(cfg.bwd), cfg.bwd.m_acc,
                         axis, st.to_raw())
     if cfg.grad is not None:
         _, st = gemm_stats(xp.T, g, precision=cfg.grad, repr_fmt=cfg.repr_fmt,
                            quantize_a=False, quantize_b=quantize,
-                           a_packed=packed)
+                           a_packed=packed,
+                           rounding=rnd, sr_seed=role_seed("grad"))
         _emit_stats_row(tag, "grad", t, _chunk_of(cfg.grad), cfg.grad.m_acc,
                         axis, st.to_raw())
 
@@ -366,11 +416,20 @@ def _maybe_q(x: jnp.ndarray, fmt: FPFormat | None) -> jnp.ndarray:
 # --------------------------------- qdot ------------------------------------
 
 
-def qdot(x: jnp.ndarray, w: jnp.ndarray, cfg: QDotConfig) -> jnp.ndarray:
-    """y[..., N] = x[..., K] @ w[K, N] with per-role reduced accumulation."""
+def qdot(x: jnp.ndarray, w: jnp.ndarray, cfg: QDotConfig, *,
+         sr_seed=None) -> jnp.ndarray:
+    """y[..., N] = x[..., K] @ w[K, N] with per-role reduced accumulation.
+
+    ``sr_seed`` overrides ``cfg.sr_seed`` (only meaningful when
+    ``cfg.rounding == "sr"``).  It may be a traced uint32/int scalar — the
+    seed rides through the custom_vjp as an operand, so stepping it per
+    training step does NOT retrace."""
+    if cfg.rounding == "sr" and not cfg.fused:
+        raise ValueError("rounding='sr' requires cfg.fused=True")
     lead = x.shape[:-1]
     k = x.shape[-1]
     x2 = x.reshape(-1, k)
+    eff = sr_seed if sr_seed is not None else cfg.sr_seed
     if (_capture.active() and not cfg.is_exact
             and not isinstance(x2, jax.core.Tracer)
             and not isinstance(w, jax.core.Tracer)):
@@ -378,8 +437,10 @@ def qdot(x: jnp.ndarray, w: jnp.ndarray, cfg: QDotConfig) -> jnp.ndarray:
         # records each quantized GEMM's concrete operands + config so the
         # stats kernels can replay them with collect_stats=True; traced
         # (jit/grad) executions never record
-        _capture.record(x=x2, w=w, cfg=cfg)
-    y2 = _qdot2d(x2, w, cfg)
+        _capture.record(x=x2, w=w, cfg=cfg,
+                        sr_seed=int(eff) if not isinstance(
+                            eff, jax.core.Tracer) else 0)
+    y2 = _qdot2d(x2, w, _encode_seed(eff), cfg)
     return y2.reshape(*lead, w.shape[1])
 
 
@@ -389,48 +450,72 @@ def qdot_packed(x: jnp.ndarray, w: jnp.ndarray, cfg: QDotConfig) -> QTensor:
     ever reaches HBM).  Not differentiable; training uses ``qdot``."""
     if cfg.out_fmt is None or cfg.out_fmt.bits > 8:
         raise ValueError("qdot_packed needs an out_fmt with <= 8 bits")
+    if cfg.rounding == "sr" and not cfg.fused:
+        raise ValueError("rounding='sr' requires cfg.fused=True")
     lead = x.shape[:-1]
     x2 = x.reshape(-1, x.shape[-1])
     if not cfg.fused:
         y = _mm(_maybe_q(x2, cfg.repr_fmt), _maybe_q(w, cfg.repr_fmt), cfg.fwd)
         return QTensor.pack(y.reshape(*lead, w.shape[1]), cfg.out_fmt)
     codes = _mm_fused(x2, w, cfg.fwd, cfg.repr_fmt,
-                      out_fmt=cfg.out_fmt, pack_out=True)
+                      out_fmt=cfg.out_fmt, pack_out=True,
+                      rounding=cfg.rounding,
+                      sr_seed=(sr_role_seed(cfg.sr_seed, "fwd")
+                               if cfg.rounding == "sr" else 0))
     return QTensor(codes.reshape(*lead, w.shape[1]), fmt=cfg.out_fmt)
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
-def _qdot2d(x: jnp.ndarray, w: jnp.ndarray, cfg: QDotConfig) -> jnp.ndarray:
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def _qdot2d(x: jnp.ndarray, w: jnp.ndarray, seed: jnp.ndarray,
+            cfg: QDotConfig) -> jnp.ndarray:
+    # ``seed`` is the SR seed bitcast to f32 (see ``_encode_seed``) so it
+    # travels as an ordinary differentiable-dtype operand; ignored when
+    # cfg.rounding == "rne".
     if not cfg.fused:
         y = _mm(_maybe_q(x, cfg.repr_fmt), _maybe_q(w, cfg.repr_fmt), cfg.fwd)
         return _maybe_q(y, cfg.out_fmt)
+    fwd_seed = (sr_role_seed(_decode_seed(seed), "fwd")
+                if cfg.rounding == "sr" else 0)
     return _mm_fused(x, w, cfg.fwd, cfg.repr_fmt, out_fmt=cfg.out_fmt,
-                     dtype_key=cfg.table_dtype)
+                     dtype_key=cfg.table_dtype, rounding=cfg.rounding,
+                     sr_seed=fwd_seed)
 
 
-def _qdot2d_fwd(x, w, cfg):
+def _qdot2d_fwd(x, w, seed, cfg):
+    # the seed joins the residuals ONLY in SR mode, so the RNE residual
+    # pytree (and its byte count) is unchanged from the seed-less kernels
+    tail = (seed,) if cfg.rounding == "sr" else ()
     if not cfg.fused:
         xq = _maybe_q(x, cfg.repr_fmt)
         wq = _maybe_q(w, cfg.repr_fmt)
         y = _maybe_q(_mm(xq, wq, cfg.fwd), cfg.out_fmt)
-        return y, (xq, wq)
+        return y, (xq, wq, *tail)
+    fwd_seed = (sr_role_seed(_decode_seed(seed), "fwd")
+                if cfg.rounding == "sr" else 0)
     if cfg.repr_fmt is None:
         # nothing to quantize: residuals are the raw operands
         return _mm_fused(x, w, cfg.fwd, None, out_fmt=cfg.out_fmt,
-                         dtype_key=cfg.table_dtype), (x, w)
+                         dtype_key=cfg.table_dtype, rounding=cfg.rounding,
+                         sr_seed=fwd_seed), (x, w, *tail)
     # one pallas_call: FWD GEMM + residual emission from the epilogue —
     # int8-packed QTensor payloads when the format fits in 8 bits
     packs = cfg.packs
     y, xq, wq = _mm_fused(x, w, cfg.fwd, cfg.repr_fmt,
                           return_quantized=True, pack_residuals=packs,
-                          out_fmt=cfg.out_fmt)
+                          out_fmt=cfg.out_fmt, rounding=cfg.rounding,
+                          sr_seed=fwd_seed)
     if packs:
-        return y, (QTensor(xq, fmt=cfg.repr_fmt), QTensor(wq, fmt=cfg.repr_fmt))
-    return y, (xq, wq)
+        return y, (QTensor(xq, fmt=cfg.repr_fmt),
+                   QTensor(wq, fmt=cfg.repr_fmt), *tail)
+    return y, (xq, wq, *tail)
 
 
 def _qdot2d_bwd(cfg, res, g):
-    xq, wq = res
+    if cfg.rounding == "sr":
+        xq, wq, seed = res
+    else:
+        (xq, wq), seed = res, None
+    dseed = jnp.zeros((), jnp.float32)  # seed gets a zero cotangent
     tagged = cfg.stats_tag is not None
     if not cfg.fused:
         gq = _maybe_q(g, cfg.repr_fmt)
@@ -439,7 +524,7 @@ def _qdot2d_bwd(cfg, res, g):
         if tagged:
             _emit_qdot_stats(cfg, g, xq, wq, False,
                              xq.shape[0], xq.shape[1], wq.shape[1])
-        return dx.astype(wq.dtype), dw.astype(wq.dtype)
+        return dx.astype(wq.dtype), dw.astype(wq.dtype), dseed
     # out_fmt's epilogue rounding is straight-through: g passes unscaled
     # (identically in the oracle above, so fused == oracle bit-for-bit)
     packed = isinstance(xq, QTensor)
@@ -461,9 +546,13 @@ def _qdot2d_bwd(cfg, res, g):
             t, k, seg_n, bwd_chunk=cb, grad_chunk=cg, bwd_acc=(eb, mb),
             grad_acc=(eg, mg), repr_fmt=fmt_tuple(cfg.repr_fmt),
             packed=packed, dtype=cfg.table_dtype or "f32")
+        s = _decode_seed(seed) if cfg.rounding == "sr" else 0
+        sb = sr_role_seed(s, "bwd") if cfg.rounding == "sr" else 0
+        sg = sr_role_seed(s, "grad") if cfg.rounding == "sr" else 0
         kw = dict(repr_fmt=cfg.repr_fmt, bwd_acc=(eb, mb),
                   grad_acc=(eg, mg), block_t=bt, block_k=bk, block_n=bn,
-                  packed=packed, quantize_g=cfg.repr_fmt is not None)
+                  packed=packed, quantize_g=cfg.repr_fmt is not None,
+                  rounding=cfg.rounding, sr_seed_bwd=sb, sr_seed_grad=sg)
         if segs == 1:
             if tagged:
                 # same blocks, collect_stats epilogue on: dx/dw stay
@@ -472,28 +561,33 @@ def _qdot2d_bwd(cfg, res, g):
                 dx, dw, raw = qmatmul_bwd_pair(g, xp, wp,
                                                collect_stats=True, **kw)
                 _emit_qdot_stats(cfg, g, xp, wp, packed, t, k, n,
-                                 raw_pair=raw)
+                                 raw_pair=raw, seed=s)
             else:
                 dx, dw = qmatmul_bwd_pair(g, xp, wp, **kw)
         else:
             dx, dw = qmatmul_bwd_pair_nsplit(g, xp, wp, n_split=segs, **kw)
             if tagged:
-                _emit_qdot_stats(cfg, g, xp, wp, packed, t, k, n)
-        return dx, dw
+                _emit_qdot_stats(cfg, g, xp, wp, packed, t, k, n, seed=s)
+        return dx, dw, dseed
     # VMEM fallback: two fused GEMMs, residuals still consumed packed
     # (the int8 transpose is an XLA copy, not a pallas pass)
+    s = _decode_seed(seed) if cfg.rounding == "sr" else 0
+    sb = sr_role_seed(s, "bwd") if cfg.rounding == "sr" else 0
+    sg = sr_role_seed(s, "grad") if cfg.rounding == "sr" else 0
     # BWD GEMM: dx[T, K] = g[T, N] @ w^T[N, K]   (accumulation length N)
     dx = _mm_fused(g, wp.T, cfg.bwd, cfg.repr_fmt,
                    quantize_a=True, quantize_b=False, b_packed=packed,
-                   dtype_key=cfg.table_dtype)
+                   dtype_key=cfg.table_dtype,
+                   rounding=cfg.rounding, sr_seed=sb)
     # GRAD GEMM: dw[K, N] = x^T[K, T] @ g[T, N]  (accumulation length T —
     # the long one, B*T tokens; the paper's critical case)
     dw = _mm_fused(xp.T, g, cfg.grad, cfg.repr_fmt,
                    quantize_a=False, quantize_b=True, a_packed=packed,
-                   dtype_key=cfg.table_dtype)
+                   dtype_key=cfg.table_dtype,
+                   rounding=cfg.rounding, sr_seed=sg)
     if tagged:
-        _emit_qdot_stats(cfg, g, xp, wp, packed, t, k, n)
-    return dx, dw
+        _emit_qdot_stats(cfg, g, xp, wp, packed, t, k, n, seed=s)
+    return dx, dw, dseed
 
 
 _qdot2d.defvjp(_qdot2d_fwd, _qdot2d_bwd)

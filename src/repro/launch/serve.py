@@ -54,7 +54,7 @@ def parse_args(argv=None):
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--page-size", type=int, default=16)
     ap.add_argument("--pages", type=int, default=0,
-                    help="KV pool pages (0 = sized for the workload +25%)")
+                    help="KV pool pages (0 = sized for the workload +25%%)")
     ap.add_argument("--max-batch", type=int, default=8)
     ap.add_argument("--prefill-chunk", type=int, default=0,
                     help="chunked-prefill slab size in tokens (multiple of "
@@ -74,6 +74,13 @@ def parse_args(argv=None):
     ap.add_argument("--policy", choices=["exact", "predicted"], default="exact",
                     help="dense-GEMM accumulation plan for the serve path")
     ap.add_argument("--chunk", type=int, default=64)
+    ap.add_argument("--v-hint", type=float, default=0.0,
+                    help="certified per-term bound on the attention "
+                         "accumulation (value magnitude x softmax weight) "
+                         "used by the planner's e_acc sizing; 0 = the "
+                         "historical default (repro.serve.plan."
+                         "DEFAULT_V_HINT).  The serve monitor reports the "
+                         "measured hint next to the planned one")
     ap.add_argument("--ckpt-dir", default="",
                     help="restore params (and the recorded precision "
                          "schedule) from the latest training checkpoint")
@@ -197,7 +204,7 @@ def main(argv=None) -> dict:
         from repro.obs.metrics import get_registry
 
         registry = get_registry()
-    eng_kw = dict(n_pages=n_pages,
+    eng_kw = dict(n_pages=n_pages, v_hint=args.v_hint or None,
                   page_size=args.page_size, max_batch=args.max_batch,
                   prefill_chunk_tokens=args.prefill_chunk or None,
                   reserve_admission=args.reserve_admission,

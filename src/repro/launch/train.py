@@ -57,6 +57,24 @@ def parse_args(argv=None):
     ap.add_argument("--pp", type=int, default=0,
                     help="precision perturbation (bits) for --policy perturbed")
     ap.add_argument("--chunk", type=int, default=64)
+    ap.add_argument("--rounding", choices=["rne", "sr"], default="rne",
+                    help="inter-chunk carry rounding for quantized GEMMs: "
+                         "round-to-nearest-even (paper default) or seeded "
+                         "stochastic rounding (the below-the-knee mode)")
+    ap.add_argument("--sr-seed", type=int, default=0,
+                    help="PRNG seed for --rounding sr (deterministic: the "
+                         "same seed reproduces the run bitwise)")
+    ap.add_argument("--a2q-reg", type=float, default=0.0,
+                    help="A2Q accumulator-aware weight-norm regularizer "
+                         "strength (0 = off).  When on, the per-output-"
+                         "channel l1 caps derived from the planned "
+                         "accumulator formats are soft-penalized in the "
+                         "loss AND hard-projected after each optimizer "
+                         "step, so reduced-e_acc carries provably never "
+                         "overflow")
+    ap.add_argument("--a2q-x-bound", type=float, default=16.0,
+                    help="certified bound on the activation operand "
+                         "magnitude for the --a2q-reg cap")
     ap.add_argument("--telemetry-cadence", type=int, default=0,
                     help="steps between swamping-telemetry probes (0 = off); "
                          "the closed-loop controller bumps/trims per-GEMM "
@@ -105,12 +123,36 @@ def main(argv=None) -> dict:
     apply_tpu_flags() if jax.default_backend() == "tpu" else None
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    if args.rounding == "sr" and args.policy == "exact":
+        raise SystemExit("--rounding sr needs a non-exact --policy (exact "
+                         "mode has no emulated carries to dither)")
     policy = AccumulationPolicy(
         mode=args.policy, chunk=args.chunk,
-        perturbation=args.pp if args.policy == "perturbed" else 0)
+        perturbation=args.pp if args.policy == "perturbed" else 0,
+        rounding=args.rounding, sr_seed=args.sr_seed)
     cfg = plan_for_model(cfg, seq_len=args.seq_len,
                          global_batch=args.global_batch, policy=policy)
     model = get_model(cfg)
+
+    a2q = None
+    if args.a2q_reg > 0:
+        # cap derived from the NARROWEST planned accumulator: a certificate
+        # against that format covers every wider one in the plan
+        from repro.telemetry.controller import PLAN_FIELDS, ROLES
+
+        precs = [p for f in PLAN_FIELDS
+                 for q in [getattr(cfg.quant, f, None)] if q is not None
+                 for r in ROLES for p in [getattr(q, r)] if p is not None]
+        if not precs:
+            raise SystemExit("--a2q-reg needs a non-exact --policy "
+                             "(nothing to certify in exact mode)")
+        narrow = min(precs, key=lambda p: (p.e_acc, p.m_acc))
+        a2q = O.A2QConfig(e_acc=narrow.e_acc, m_acc=narrow.m_acc,
+                          x_bound=args.a2q_x_bound, strength=args.a2q_reg,
+                          project=True)
+        print(f"a2q: cap per-column l1 at {O.a2q_l1_cap(a2q):.4g} "
+              f"(acc ({narrow.e_acc},{narrow.m_acc}), "
+              f"x_bound {args.a2q_x_bound})")
 
     controller = None
     if args.telemetry_cadence > 0 and args.policy != "exact":
@@ -140,6 +182,7 @@ def main(argv=None) -> dict:
         microbatches=args.microbatches,
         use_loss_scaling=args.loss_scaling,
         scaler=O.LossScaleConfig(init_scale=1000.0, dynamic=True),
+        a2q=a2q,
     )
 
     ingraph = None

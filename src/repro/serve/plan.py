@@ -45,9 +45,11 @@ __all__ = [
     "reset_certification_stats",
     "decode_m_acc",
     "min_e_acc",
+    "derive_v_hint",
     "max_carry_resumptions",
     "extra_carry_events",
     "plan_attention",
+    "DEFAULT_V_HINT",
     "VerifyPlan",
     "plan_verify",
 ]
@@ -55,6 +57,13 @@ __all__ = [
 # the f32 VMEM carry is the emulation ceiling, same constant as the
 # training-side AccumulationPolicy.M_ACC_CARRIER
 _M_ACC_MAX = 23
+
+# fallback bound on the dequantized KV magnitude when no measured hint is
+# available: 16 = the (1,5,2) KV format's |value| at exponent 4, a generous
+# ceiling for unit-variance value projections.  Every ``v_hint=None``
+# default below resolves to this constant — callers thread a measured hint
+# (``derive_v_hint``) or a config override through instead of hardcoding it.
+DEFAULT_V_HINT = 16.0
 
 
 @dataclass(frozen=True)
@@ -90,6 +99,15 @@ class AttnPlan:
     buckets: tuple[AttnBucket, ...]
     prefill_chunk: int | None = None
     tp_shards: int = 1
+    # the overflow-avoidance posture the buckets' e_acc was certified under:
+    # "bucket" = the ctx * v_hint worst case; "a2q" = a certified cap
+    # ``v_cap`` on the materialized carry itself (length-independent,
+    # Colbert et al. arXiv:2301.13376) — re-certifiers (plan_verify, the
+    # monitor) must re-check the SAME bound the planner used
+    v_hint: float = DEFAULT_V_HINT
+    guarantee: str = "bucket"
+    v_cap: float | None = None
+    e_min: int = 6
 
     def bucket_for(self, ctx: int) -> tuple[int, AttnBucket]:
         """(index, bucket) of the narrowest bucket covering ``ctx``."""
@@ -226,12 +244,26 @@ def decode_m_acc(ctx: int, page_size: int, m_p: int, *,
     return _M_ACC_MAX
 
 
-def min_e_acc(ctx: int, *, v_hint: float = 16.0, e_min: int = 6,
-              boundaries: tuple[int, ...] = ()) -> int:
+def min_e_acc(ctx: int, *, v_hint: float | None = None, e_min: int = 6,
+              boundaries: tuple[int, ...] = (),
+              guarantee: str = "bucket",
+              v_cap: float | None = None) -> int:
     """Smallest exponent width whose saturating range covers the
-    softmax-weighted sum's worst case ``ctx * v_hint`` (overflow
-    avoidance; the paper's §4 'sufficient exponent precision' made
-    explicit for the serving accumulation).
+    softmax-weighted sum's worst case (overflow avoidance; the paper's §4
+    'sufficient exponent precision' made explicit for the serving
+    accumulation).  Two guarantees:
+
+    * ``guarantee="bucket"`` (default): the length-scaled worst case
+      ``ctx * v_hint`` — the denominator ``l`` is at most ``ctx`` (each
+      exp'd score <= 1 after the running-max shift) and ``|o| <= l *
+      v_max``, with ``v_hint`` bounding the dequantized KV magnitude
+      (``None`` resolves to ``DEFAULT_V_HINT``; thread a measured hint
+      from ``derive_v_hint`` when telemetry is available).
+    * ``guarantee="a2q"``: a CERTIFIED cap ``v_cap`` on the materialized
+      carry itself — the accumulator-aware weight-norm constraint
+      (Colbert et al., arXiv:2301.13376) bounds ``|sum w_i x_i| <=
+      ||w||_1 * x_max`` independent of the accumulation length, so the
+      exponent range only has to cover ``v_cap``, not ``ctx * v_hint``.
 
     ``boundaries`` are the chunked-prefill resumption points (context
     lengths at which the UNNORMALIZED carry is materialized to HBM): the
@@ -239,13 +271,41 @@ def min_e_acc(ctx: int, *, v_hint: float = 16.0, e_min: int = 6,
     ``l <= ctx_boundary`` and ``|o| <= l * v_max`` at each hand-off.  The
     materialized carries grow monotonically with the boundary, so the
     binding constraint is the largest, but the planner checks them all
-    explicitly rather than assuming monotonicity."""
-    need = max((math.log2(max(c, 1) * max(v_hint, 1.0))
-                for c in (*boundaries, ctx)), default=0.0)
+    explicitly rather than assuming monotonicity.  (Under "a2q" the cap
+    already bounds every materialization, so boundaries are moot.)"""
+    if guarantee == "a2q":
+        if v_cap is None or v_cap <= 0.0:
+            raise ValueError(
+                "guarantee='a2q' needs a positive certified carry cap "
+                f"v_cap, got {v_cap!r}")
+        need = math.log2(max(v_cap, 1.0))
+    elif guarantee == "bucket":
+        hint = DEFAULT_V_HINT if v_hint is None else v_hint
+        need = max((math.log2(max(c, 1) * max(hint, 1.0))
+                    for c in (*boundaries, ctx)), default=0.0)
+    else:
+        raise ValueError(f"unknown overflow guarantee {guarantee!r}")
     for e in range(e_min, 9):
         if FPFormat(e=e, m=1).max_exp >= need:
             return e
     return 8
+
+
+def derive_v_hint(stats, ctx: int, *, margin_bits: int = 1) -> float:
+    """Measured KV-magnitude hint from a telemetry stats window.
+
+    The bucket overflow bound is ``|o| <= ctx * v_hint``; a stats window
+    whose ``max_abs`` tracked the materialized carry therefore certifies
+    any hint >= ``max_abs / ctx``.  Rounds UP to a power of two with
+    ``margin_bits`` of headroom (the measurement is a sample, not a
+    worst case) and falls back to ``DEFAULT_V_HINT`` when the window is
+    empty or non-finite — deriving never yields a LOOSER bound than the
+    hardcoded default used to, only a justified tighter one."""
+    ma = float(stats.max_abs)
+    if not math.isfinite(ma) or ma <= 0.0 or ctx <= 0:
+        return DEFAULT_V_HINT
+    hint = 2.0 ** (math.ceil(math.log2(ma / ctx)) + margin_bits)
+    return float(min(hint, DEFAULT_V_HINT))
 
 
 @dataclass(frozen=True)
@@ -273,7 +333,8 @@ class VerifyPlan:
         return self.plan.bucket_for(ctx)
 
 
-def plan_verify(plan: AttnPlan, *, k: int, v_hint: float = 16.0) -> VerifyPlan:
+def plan_verify(plan: AttnPlan, *, k: int,
+                v_hint: float | None = None) -> VerifyPlan:
     """Certify ``plan``'s buckets for k-token speculative verify batches.
 
     A verify step scores ``k + 1`` positions of one sequence in a single
@@ -291,6 +352,10 @@ def plan_verify(plan: AttnPlan, *, k: int, v_hint: float = 16.0) -> VerifyPlan:
     """
     if k < 1:
         raise ValueError(f"speculative verify needs k >= 1, got {k}")
+    # default to the hint (and overflow guarantee) the base plan was
+    # certified under — a verify plan re-checks the SAME bound, it does not
+    # silently substitute the hardcoded fallback
+    hint = plan.v_hint if v_hint is None else v_hint
     for i, b in enumerate(plan.buckets):
         if b.max_ctx < k + 1:
             raise ValueError(
@@ -305,7 +370,8 @@ def plan_verify(plan: AttnPlan, *, k: int, v_hint: float = 16.0) -> VerifyPlan:
             raise ValueError(
                 f"bucket {i} fails the knee test for k={k} verify: "
                 f"v={v:.2f} >= {CUTOFF_LOG_V} at m_acc={b.m_acc}")
-        e_need = min_e_acc(b.max_ctx, v_hint=v_hint)
+        e_need = min_e_acc(b.max_ctx, v_hint=hint, e_min=plan.e_min,
+                           guarantee=plan.guarantee, v_cap=plan.v_cap)
         if b.e_acc < e_need:
             raise ValueError(
                 f"bucket {i} fails the e_acc overflow bound for k={k} "
@@ -315,10 +381,12 @@ def plan_verify(plan: AttnPlan, *, k: int, v_hint: float = 16.0) -> VerifyPlan:
 
 
 def plan_attention(max_context: int, page_size: int, *, m_p: int = 5,
-                   growth: int = 4, v_hint: float = 16.0,
+                   growth: int = 4, v_hint: float | None = None,
                    e_min: int = 6,
                    prefill_chunk_tokens: int | None = None,
-                   tp_shards: int = 1) -> AttnPlan:
+                   tp_shards: int = 1,
+                   guarantee: str = "bucket",
+                   v_cap: float | None = None) -> AttnPlan:
     """Bucketed plan covering contexts up to ``max_context``.
 
     Bucket edges grow geometrically (``growth``x in pages) from one page;
@@ -345,6 +413,7 @@ def plan_attention(max_context: int, page_size: int, *, m_p: int = 5,
     holds at ``max_ctx``, the same worst case, but the planner checks the
     boundary explicitly rather than assuming it).
     """
+    hint = DEFAULT_V_HINT if v_hint is None else v_hint
     edges: list[int] = []
     ctx = page_size
     while ctx < max_context:
@@ -363,12 +432,15 @@ def plan_attention(max_context: int, page_size: int, *, m_p: int = 5,
             bounds = (*bounds, c)  # carry materialized at the psum wire
         return AttnBucket(
             max_ctx=c,
-            e_acc=min_e_acc(c, v_hint=v_hint, e_min=e_min,
-                            boundaries=bounds),
+            e_acc=min_e_acc(c, v_hint=hint, e_min=e_min,
+                            boundaries=bounds, guarantee=guarantee,
+                            v_cap=v_cap),
             m_acc=decode_m_acc(c, page_size, m_p, extra_events=extra),
             resumptions=r)
 
     return AttnPlan(page_size=page_size, m_p=m_p,
                     buckets=tuple(_bucket(c) for c in edges),
                     prefill_chunk=prefill_chunk_tokens,
-                    tp_shards=tp_shards)
+                    tp_shards=tp_shards,
+                    v_hint=hint, guarantee=guarantee, v_cap=v_cap,
+                    e_min=e_min)

@@ -103,6 +103,7 @@ from repro.serve.kvcache import (
 from repro.serve.plan import (
     AttnPlan,
     certified_log_v,
+    derive_v_hint,
     extra_carry_events,
     plan_attention,
 )
@@ -697,6 +698,7 @@ class ServeEngine:
         monitor_cadence: int = 0,
         monitor_log: str | None = None,
         swamp_threshold: float = 0.15,
+        v_hint: float | None = None,
         oracle: bool = False,
         dist: Dist = LOCAL,
         seed: int = 0,
@@ -744,7 +746,7 @@ class ServeEngine:
         self.plan = plan or plan_attention(
             self.tokens_capacity, page_size,
             prefill_chunk_tokens=prefill_chunk_tokens,
-            tp_shards=self.tp_shards)
+            tp_shards=self.tp_shards, v_hint=v_hint)
         self.max_batch = max_batch
         self.eos_id = eos_id
         self.prefill_chunk = prefill_chunk_tokens
@@ -1232,6 +1234,11 @@ class ServeEngine:
             "cutoff": round(CUTOFF_LOG_V, 4),
             "swamp_rate": round(swamp, 6),
             "swamp_threshold": self.swamp_threshold,
+            # measured KV-magnitude hint from this window: what a re-plan
+            # could certify the e_acc overflow bound with, vs the hint the
+            # current plan was built under
+            "v_hint_plan": self.plan.v_hint,
+            "v_hint_measured": derive_v_hint(stats, ctx),
         }
         self.events.append(event)
         if self.monitor_log:

@@ -45,7 +45,18 @@ Schema, one object per line::
      "measured_vrr", "predicted_vrr",            # live vs closed-form VRR
      "log_v", "log_v_pred", "cutoff",            # knee-test operands (n2-based)
      "swamp_rate", "max_exp",                    # raw swamping signals
-     "n", "n1", "n2"}                            # accumulation geometry
+     "n", "n1", "n2",                            # accumulation geometry
+     "rounding",                                 # carry mode: "rne" | "sr"
+     "noise_ratio", "jitter_fraction"}           # SR-mode error decomposition
+
+Stochastic-rounding carries (``rounding="sr"``) invert the failure mode the
+closed form models: RNE swamping silently REMOVES variance (VRR < 1), while
+SR injects zero-mean jitter (VRR >= 1, ``n2 (1 - VRR)`` goes negative and
+meaningless).  SR probes therefore run the knee test on the jitter-based
+statistic ``measured_log_v_sr`` and act on the MEASURED breach only — the
+RNE closed form would flag every deliberately below-knee width SR exists to
+run at.  ``jitter_fraction`` near 1 in the log is the signature that the
+carry error is unbiased dither rather than systematic swamping.
 """
 
 from __future__ import annotations
@@ -86,12 +97,18 @@ class ControllerConfig:
 class GemmProbe:
     """One monitored accumulator's measurement + geometry: the stats
     window, the total accumulation length ``n``, the chunk length ``n1``
-    (the kernel's rounding cadence) and the currently-running ``m_acc``."""
+    (the kernel's rounding cadence) and the currently-running ``m_acc``.
+
+    ``rounding`` is the carry-rounding mode of the probed kernel ("rne" or
+    "sr") — it selects which knee statistic the controller evaluates, since
+    the two modes fail differently (RNE swamping REMOVES variance, SR
+    injects zero-mean jitter; see ``EnsembleStats.measured_log_v_sr``)."""
 
     stats: EnsembleStats
     n: int
     n1: int
     m_acc: int
+    rounding: str = "rne"
 
 
 @dataclass
@@ -129,17 +146,23 @@ class PrecisionController:
                 probes: dict[tuple[str, str], GemmProbe]) -> list[dict]:
         events = []
         for key, probe in sorted(probes.items()):
+            sr = probe.rounding == "sr"
             n2 = max(-(-probe.n // max(probe.n1, 1)), 1)
             m_pred = self._predicted_bound(probe.n)
             measured = float(probe.stats.measured_vrr)
-            v_meas = float(probe.stats.measured_log_v(n2))
+            v_meas = float(probe.stats.measured_log_v_sr(n2) if sr
+                           else probe.stats.measured_log_v(n2))
             pred = predicted_kernel_vrr(probe.m_acc, self.policy.m_p,
                                         probe.n1, n2, nzr=self.policy.nzr)
             v_pred = n2 * (1.0 - pred)
             floor = max(m_pred - self.cfg.max_trim_below, self.cfg.m_acc_min)
 
             breach_m = v_meas >= self.cfg.cutoff
-            breach_p = v_pred >= self.cfg.cutoff
+            # the closed form models RNE swamping (variance REMOVAL); under
+            # SR the carry error is injected zero-mean jitter, so the
+            # prediction would flag every deliberately below-knee width the
+            # SR mode exists to run at — SR acts on measurement only
+            breach_p = (not sr) and v_pred >= self.cfg.cutoff
             source = ("both" if breach_m and breach_p
                       else "measured" if breach_m
                       else "predicted" if breach_p else None)
@@ -180,6 +203,10 @@ class PrecisionController:
                 "max_exp": round(float(probe.stats.max_exponent), 2)
                 if math.isfinite(float(probe.stats.max_exponent)) else None,
                 "n": probe.n, "n1": probe.n1, "n2": n2,
+                "rounding": probe.rounding,
+                "noise_ratio": round(float(probe.stats.noise_ratio), 6),
+                "jitter_fraction":
+                    round(float(probe.stats.jitter_fraction), 6),
             })
         self._log(events)
         return events

@@ -67,15 +67,27 @@ def _chunk(p) -> int:
 
 
 def probe_gemm(x: jnp.ndarray, w: jnp.ndarray, qcfg, *,
-               key: jax.Array) -> dict[str, GemmProbe]:
-    """Stats for all three roles of one dense GEMM x[T, K] @ w[K, N]."""
+               key: jax.Array, sr_seed: int | None = None
+               ) -> dict[str, GemmProbe]:
+    """Stats for all three roles of one dense GEMM x[T, K] @ w[K, N].
+
+    SR configs are replayed with SR carries at the same per-role seeds the
+    training kernels derive (``sr_role_seed``), so the probe measures the
+    jitter regime the model actually trains in."""
+    from repro.kernels.ops import sr_role_seed
+
     t, k = x.shape
     n = w.shape[1]
+    rnd = qcfg.rounding
+    base = sr_seed if sr_seed is not None else qcfg.sr_seed
+    role_seed = (lambda r: sr_role_seed(base, r)) if rnd == "sr" \
+        else (lambda r: 0)
     out: dict[str, GemmProbe] = {}
     if qcfg.fwd is not None:
-        _, st = gemm_stats(x, w, precision=qcfg.fwd, repr_fmt=qcfg.repr_fmt)
+        _, st = gemm_stats(x, w, precision=qcfg.fwd, repr_fmt=qcfg.repr_fmt,
+                           rounding=rnd, sr_seed=role_seed("fwd"))
         out["fwd"] = GemmProbe(stats=st, n=k, n1=_chunk(qcfg.fwd),
-                               m_acc=qcfg.fwd.m_acc)
+                               m_acc=qcfg.fwd.m_acc, rounding=rnd)
     if qcfg.bwd is None and qcfg.grad is None:
         return out
     g = jax.random.normal(key, (t, n), jnp.float32)
@@ -87,14 +99,16 @@ def probe_gemm(x: jnp.ndarray, w: jnp.ndarray, qcfg, *,
         xq, wq = x, w
     if qcfg.bwd is not None:
         _, st = gemm_stats(g, wq.T, precision=qcfg.bwd,
-                           repr_fmt=qcfg.repr_fmt, quantize_b=False)
+                           repr_fmt=qcfg.repr_fmt, quantize_b=False,
+                           rounding=rnd, sr_seed=role_seed("bwd"))
         out["bwd"] = GemmProbe(stats=st, n=n, n1=_chunk(qcfg.bwd),
-                               m_acc=qcfg.bwd.m_acc)
+                               m_acc=qcfg.bwd.m_acc, rounding=rnd)
     if qcfg.grad is not None:
         _, st = gemm_stats(xq.T, g, precision=qcfg.grad,
-                           repr_fmt=qcfg.repr_fmt, quantize_a=False)
+                           repr_fmt=qcfg.repr_fmt, quantize_a=False,
+                           rounding=rnd, sr_seed=role_seed("grad"))
         out["grad"] = GemmProbe(stats=st, n=t, n1=_chunk(qcfg.grad),
-                                m_acc=qcfg.grad.m_acc)
+                                m_acc=qcfg.grad.m_acc, rounding=rnd)
     return out
 
 
@@ -111,8 +125,9 @@ def probe_model_stats(model, params, batch, dist=None, *,
 
     probes: dict[tuple[str, str], GemmProbe] = {}
 
-    def ingest(name, x, w, qcfg, sub):
-        for role, p in probe_gemm(x, w, qcfg, key=sub).items():
+    def ingest(name, x, w, qcfg, sub, sr_seed=None):
+        for role, p in probe_gemm(x, w, qcfg, key=sub,
+                                  sr_seed=sr_seed).items():
             prev = probes.get((name, role))
             if prev is None:
                 probes[(name, role)] = p
@@ -121,14 +136,16 @@ def probe_model_stats(model, params, batch, dist=None, *,
                 # ensembles, keep the longest accumulation (it dominates)
                 probes[(name, role)] = GemmProbe(
                     stats=prev.stats.merge(p.stats),
-                    n=max(prev.n, p.n), n1=prev.n1, m_acc=prev.m_acc)
+                    n=max(prev.n, p.n), n1=prev.n1, m_acc=prev.m_acc,
+                    rounding=prev.rounding)
 
     for rec in buf:
         name = _plan_field(cfg.quant, rec["cfg"])
         if name is None:
             continue
         key, sub = jax.random.split(key)
-        ingest(name, rec["x"], rec["w"], rec["cfg"], sub)
+        ingest(name, rec["x"], rec["w"], rec["cfg"], sub,
+               rec.get("sr_seed"))
 
     # synthetic fallback for plan fields the eager pass could not capture
     # concretely (scanned/remat'd layer blocks execute as tracers)

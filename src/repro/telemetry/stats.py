@@ -42,8 +42,10 @@ from repro.kernels.common import (
     STAT_ADDS,
     STAT_COUNT,
     STAT_MAX_ABS,
+    STAT_SUM_ERR,
     STAT_SUM_I,
     STAT_SUM_Q,
+    STAT_SUMSQ_ERR,
     STAT_SUMSQ_I,
     STAT_SUMSQ_Q,
     STAT_SWAMPED,
@@ -71,10 +73,13 @@ class EnsembleStats:
     max_abs: jnp.ndarray    # max |carry| seen across all chunk updates
     swamped: jnp.ndarray    # fully-absorbed chunk adds (q(c+p) == c, p != 0)
     adds: jnp.ndarray       # chunk adds with a non-zero addend
+    err_sum: jnp.ndarray = 0.0    # sum of (q - ideal) over final outputs
+    err_sumsq: jnp.ndarray = 0.0  # sum of (q - ideal)^2 over final outputs
 
     def tree_flatten(self):
         return ((self.count, self.mean_q, self.m2_q, self.mean_i, self.m2_i,
-                 self.max_abs, self.swamped, self.adds), None)
+                 self.max_abs, self.swamped, self.adds,
+                 self.err_sum, self.err_sumsq), None)
 
     @classmethod
     def tree_unflatten(cls, _, children):
@@ -112,12 +117,14 @@ class EnsembleStats:
             max_abs=f32(raw[STAT_MAX_ABS]),
             swamped=f32(raw[STAT_SWAMPED]),
             adds=f32(raw[STAT_ADDS]),
+            err_sum=f32(raw[STAT_SUM_ERR]),
+            err_sumsq=f32(raw[STAT_SUMSQ_ERR]),
         )
 
     @classmethod
     def zero(cls) -> "EnsembleStats":
         z = jnp.float32(0.0)
-        return cls(z, z, z, z, z, z, z, z)
+        return cls(z, z, z, z, z, z, z, z, z, z)
 
     def to_raw(self) -> jnp.ndarray:
         """Inverse of ``from_raw``: recompose the (N_STATS,) raw row (sums
@@ -137,6 +144,8 @@ class EnsembleStats:
         row[STAT_MAX_ABS] = self.max_abs
         row[STAT_SWAMPED] = self.swamped
         row[STAT_ADDS] = self.adds
+        row[STAT_SUM_ERR] = self.err_sum
+        row[STAT_SUMSQ_ERR] = self.err_sumsq
         return jnp.stack([jnp.asarray(v, jnp.float32) for v in row])
 
     # ------------------------------ reduce ---------------------------------
@@ -160,6 +169,8 @@ class EnsembleStats:
             max_abs=jnp.maximum(self.max_abs, other.max_abs),
             swamped=self.swamped + other.swamped,
             adds=self.adds + other.adds,
+            err_sum=self.err_sum + other.err_sum,
+            err_sumsq=self.err_sumsq + other.err_sumsq,
         )
 
     def psum(self, axis_name: str) -> "EnsembleStats":
@@ -182,6 +193,8 @@ class EnsembleStats:
             max_abs=jax.lax.pmax(self.max_abs, axis_name),
             swamped=jax.lax.psum(self.swamped, axis_name),
             adds=jax.lax.psum(self.adds, axis_name),
+            err_sum=jax.lax.psum(self.err_sum, axis_name),
+            err_sumsq=jax.lax.psum(self.err_sumsq, axis_name),
         )
 
     # ----------------------------- read-outs -------------------------------
@@ -218,8 +231,58 @@ class EnsembleStats:
         the inter-chunk stage's."""
         return float(n) * (1.0 - float(self.measured_vrr))
 
-    def suitable(self, n: int, *, cutoff: float = CUTOFF_LOG_V) -> bool:
-        """The paper's §4.4 knee test, applied to the measurement."""
+    # -------------------------- error-moment read-outs ----------------------
+    #
+    # The err slots track q - ideal over the final outputs directly, which
+    # is what lets the controller tell the two failure modes apart:
+    # RNE swamping REMOVES ensemble variance (measured_vrr < 1, error
+    # anti-correlated with the signal), while stochastic rounding INJECTS
+    # zero-mean jitter (measured_vrr >= 1) that the paper's n(1 - VRR)
+    # statistic would mis-read as negative "loss".
+
+    @property
+    def error_mse(self):
+        """Mean squared (q - ideal) error over the output ensemble."""
+        return self.err_sumsq / jnp.maximum(self.count, 1.0)
+
+    @property
+    def error_bias(self):
+        """Mean (q - ideal) error — ~0 for an unbiased (SR) carry."""
+        return self.err_sum / jnp.maximum(self.count, 1.0)
+
+    @property
+    def noise_ratio(self):
+        """Error energy relative to the ideal signal variance,
+        MSE / Var(ideal).  0 when the ideal ensemble is degenerate."""
+        return jnp.where(self.m2_i > 0.0,
+                         self.error_mse / jnp.maximum(self.var_i, 1e-30), 0.0)
+
+    @property
+    def jitter_fraction(self):
+        """Share of the error energy NOT explained by a constant offset:
+        1 - bias^2 / MSE.  Near 1 for zero-mean SR jitter."""
+        mse = self.error_mse
+        b = self.error_bias
+        return jnp.where(mse > 0.0,
+                         1.0 - b * b / jnp.maximum(mse, 1e-30), 1.0)
+
+    def measured_log_v_sr(self, n: int) -> float:
+        """SR-aware analogue of ``measured_log_v``: n times the fraction of
+        the quantized output's energy that is rounding noise,
+        ``n * MSE / (Var(ideal) + MSE)``.  For an RNE carry the two
+        statistics agree to first order (error anti-correlated with signal,
+        so lost variance ~ MSE); for an SR carry this one stays meaningful
+        where n(1 - VRR) goes negative."""
+        r = float(self.noise_ratio)
+        return float(n) * (r / (1.0 + r))
+
+    def suitable(self, n: int, *, cutoff: float = CUTOFF_LOG_V,
+                 rounding: str = "rne") -> bool:
+        """The paper's §4.4 knee test, applied to the measurement.  With
+        ``rounding="sr"`` the SR-aware noise statistic replaces n(1 - VRR)
+        (swamping cannot occur in expectation; jitter is the failure mode)."""
+        if rounding == "sr":
+            return self.measured_log_v_sr(n) < cutoff
         return self.measured_log_v(n) < cutoff
 
 
@@ -245,7 +308,8 @@ def _acc(p) -> tuple[int, int, int]:
 def gemm_stats(a: jnp.ndarray, b: jnp.ndarray, *, precision=None,
                repr_fmt=None, quantize_a: bool = True,
                quantize_b: bool = True, a_packed: bool = False,
-               b_packed: bool = False) -> tuple[jnp.ndarray, EnsembleStats]:
+               b_packed: bool = False, rounding: str = "rne",
+               sr_seed=0) -> tuple[jnp.ndarray, EnsembleStats]:
     """One fused GEMM with the swamping-stats epilogue: returns
     ``(c, EnsembleStats)``; ``c`` is bit-identical to the stats-off call.
     ``block_k`` is pinned to the precision's chunk (numerics)."""
@@ -256,13 +320,15 @@ def gemm_stats(a: jnp.ndarray, b: jnp.ndarray, *, precision=None,
         a, b, repr_fmt=repr_fmt, e_acc=e_acc, m_acc=m_acc,
         block_k=chunk if chunk > 0 else 128,
         quantize_a=quantize_a, quantize_b=quantize_b,
-        a_packed=a_packed, b_packed=b_packed, collect_stats=True)
+        a_packed=a_packed, b_packed=b_packed, collect_stats=True,
+        rounding=rounding, sr_seed=sr_seed)
     return y, EnsembleStats.from_raw(raw)
 
 
 def bwd_pair_stats(g: jnp.ndarray, xq: jnp.ndarray, wq: jnp.ndarray, *,
                    repr_fmt=None, bwd=None, grad=None, packed: bool = True,
-                   quantize_g: bool = True,
+                   quantize_g: bool = True, rounding: str = "rne",
+                   sr_seed_bwd=0, sr_seed_grad=0,
                    ) -> tuple[jnp.ndarray, jnp.ndarray,
                               EnsembleStats, EnsembleStats]:
     """The one-pass backward pair with stats: ``(dx, dw, bwd_stats,
@@ -274,5 +340,6 @@ def bwd_pair_stats(g: jnp.ndarray, xq: jnp.ndarray, wq: jnp.ndarray, *,
     dx, dw, raw = qmatmul_bwd_pair(
         g, xq, wq, repr_fmt=repr_fmt, bwd_acc=(eb, mb), grad_acc=(eg, mg),
         block_t=cg if cg > 0 else 128, block_n=cb if cb > 0 else 128,
-        packed=packed, quantize_g=quantize_g, collect_stats=True)
+        packed=packed, quantize_g=quantize_g, collect_stats=True,
+        rounding=rounding, sr_seed_bwd=sr_seed_bwd, sr_seed_grad=sr_seed_grad)
     return dx, dw, EnsembleStats.from_raw(raw[0]), EnsembleStats.from_raw(raw[1])

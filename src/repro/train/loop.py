@@ -38,6 +38,11 @@ class TrainConfig:
     scaler: O.LossScaleConfig = O.LossScaleConfig(dynamic=True)
     microbatches: int = 1
     use_loss_scaling: bool = False  # bf16 training rarely needs it; fp8 does
+    # A2Q accumulator-aware weight-norm constraint (repro.train.optimizer):
+    # soft penalty (strength > 0) joins the loss, and the hard per-column
+    # projection runs inside adamw_update — the overflow certificate then
+    # holds at every step boundary
+    a2q: O.A2QConfig | None = None
     # Cast f32 master params to bf16 ONCE per step, before the microbatch
     # loop, so FSDP weight all-gathers move bf16 (half the wire bytes) and
     # the per-use f32->bf16 converts disappear.  Autodiff through the cast
@@ -190,8 +195,14 @@ def make_train_step(
     cfg = model.cfg
     nmb = train_cfg.microbatches
 
+    a2q = train_cfg.a2q
+
     def loss_for(params, batch, scale):
         loss, metrics = model.loss_fn(params, batch, cfg, dist)
+        if a2q is not None and a2q.strength > 0:
+            # added BEFORE the loss scale so its gradient is unscaled along
+            # with everything else by unscale_and_check
+            loss = loss + O.a2q_penalty(params, a2q)
         return loss * scale, metrics
 
     grad_fn = jax.value_and_grad(loss_for, has_aux=True)
@@ -251,7 +262,8 @@ def make_train_step(
             grads = jax.tree.map(lambda g: jnp.where(skip, jnp.zeros_like(g), g), grads)
 
         params, opt, stats = O.adamw_update(
-            state["params"], grads, state["opt"], train_cfg.opt, skip=skip)
+            state["params"], grads, state["opt"], train_cfg.opt, skip=skip,
+            a2q=a2q)
         new_state = {"params": params, "opt": opt, "scaler": scaler}
         out_metrics = {
             "loss": loss,

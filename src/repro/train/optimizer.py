@@ -15,8 +15,12 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
+from repro.quant.formats import FPFormat
+
 __all__ = ["OptConfig", "init_opt_state", "adamw_update", "LossScaleConfig",
-           "init_scaler", "scale_loss", "unscale_and_check"]
+           "init_scaler", "scale_loss", "unscale_and_check",
+           "A2QConfig", "acc_format_max", "a2q_l1_cap", "a2q_penalty",
+           "a2q_project", "a2q_certificate"]
 
 
 @dataclass(frozen=True)
@@ -30,6 +34,110 @@ class OptConfig:
     warmup_steps: int = 100
     total_steps: int = 10_000
     min_lr_ratio: float = 0.1
+
+
+# ------------------------- A2Q overflow avoidance ---------------------------
+#
+# Accumulator-aware quantization (Colbert et al., arXiv:2301.13376) turned
+# into a training-side guarantee for the chunked carries: a GEMM's reduced
+# accumulator can NEVER overflow if every output channel's weight column
+# satisfies ``||w_col||_1 * x_bound <= acc_max / 2^margin_bits``, because
+# every partial sum obeys ``|sum_i w_i x_i| <= ||w||_1 * max|x|`` — a bound
+# on the WEIGHTS, checked offline, instead of a runtime worst case on the
+# accumulation length.  The cap is enforced two ways, composable:
+#
+# * a soft penalty (``a2q_penalty``, added to the loss) that steers columns
+#   toward feasibility without hard-clipping gradients, and
+# * a hard projection (``a2q_project``, applied inside ``adamw_update``)
+#   that rescales any column still over the cap after the step — the
+#   certificate (``a2q_certificate``) is then unconditional.
+#
+# ``margin_bits >= 1`` keeps certified carries strictly below the
+# saturating format's max_value, so the telemetry overflow detector
+# (STAT_MAX_ABS reaching the clamp) cleanly separates constrained from
+# unconstrained runs.
+
+
+def acc_format_max(e_acc: int, m_acc: int) -> float:
+    """Largest representable magnitude of the (1, e_acc, m_acc) saturating
+    accumulator format — the budget the A2Q cap divides up."""
+    return FPFormat(e=e_acc, m=m_acc).max_value
+
+
+@dataclass(frozen=True)
+class A2QConfig:
+    """Accumulator-aware weight-norm constraint for one accumulator plan.
+
+    ``x_bound`` is the certified bound on the OTHER operand's magnitude —
+    for quantized training this is the representation format's max_value
+    (e.g. 448 for (1,5,2)... in practice the activation clip), threaded
+    from the same plan that sized ``(e_acc, m_acc)``."""
+
+    e_acc: int = 6
+    m_acc: int = 9
+    x_bound: float = 16.0
+    margin_bits: int = 1     # >= 1: certified carries stay below the clamp
+    strength: float = 0.0    # soft-penalty coefficient (0 = projection only)
+    project: bool = True     # hard per-column rescale inside adamw_update
+
+
+def a2q_l1_cap(cfg: A2QConfig) -> float:
+    """Per-output-channel l1 budget: ``acc_max / 2^margin / x_bound``."""
+    return (acc_format_max(cfg.e_acc, cfg.m_acc)
+            / (2.0 ** cfg.margin_bits) / max(cfg.x_bound, 1e-30))
+
+
+def _col_l1(w: jnp.ndarray) -> jnp.ndarray:
+    # (K, N) weight: one accumulation per output channel = per column
+    return jnp.sum(jnp.abs(w.astype(jnp.float32)), axis=0)
+
+
+def a2q_penalty(params: Any, cfg: A2QConfig) -> jnp.ndarray:
+    """Soft constraint: summed squared l1-excess over the cap, across every
+    matrix leaf (scaled by ``cfg.strength``; add to the training loss)."""
+    cap = a2q_l1_cap(cfg)
+    excess = jnp.float32(0.0)
+    for p in jax.tree.leaves(params):
+        if p.ndim == 2:
+            over = jnp.maximum(_col_l1(p) - cap, 0.0)
+            excess = excess + jnp.sum(over * over)
+    return cfg.strength * excess
+
+
+def a2q_project(params: Any, cfg: A2QConfig) -> Any:
+    """Hard constraint: rescale any weight column whose l1 norm exceeds the
+    cap back onto it (the projection onto the per-column l1 ball along the
+    column's own direction — magnitudes shrink uniformly, signs and the
+    column's shape are preserved)."""
+    cap = a2q_l1_cap(cfg)
+
+    def proj(p):
+        if p.ndim != 2:
+            return p
+        norm = _col_l1(p)
+        scale = jnp.where(norm > cap, cap / jnp.maximum(norm, 1e-30), 1.0)
+        return (p.astype(jnp.float32) * scale[None, :]).astype(p.dtype)
+
+    return jax.tree.map(proj, params)
+
+
+def a2q_certificate(params: Any, cfg: A2QConfig) -> dict:
+    """The guarantee, stated: worst per-column carry bound vs the format
+    ceiling.  ``ok`` is the overflow-impossibility verdict the tests (and
+    a checkpoint audit) assert on."""
+    cap = a2q_l1_cap(cfg)
+    worst = 0.0
+    for p in jax.tree.leaves(params):
+        if p.ndim == 2:
+            worst = max(worst, float(jnp.max(_col_l1(p))))
+    acc_max = acc_format_max(cfg.e_acc, cfg.m_acc)
+    return {
+        "l1_cap": cap,
+        "max_col_l1": worst,
+        "carry_bound": worst * cfg.x_bound,
+        "acc_max": acc_max,
+        "ok": worst <= cap * (1.0 + 1e-6),
+    }
 
 
 def schedule(cfg: OptConfig, step: jnp.ndarray) -> jnp.ndarray:
@@ -53,10 +161,13 @@ def global_norm(tree: Any) -> jnp.ndarray:
 
 
 def adamw_update(params: Any, grads: Any, opt: dict, cfg: OptConfig,
-                 *, skip: jnp.ndarray | None = None) -> tuple[Any, dict, dict]:
+                 *, skip: jnp.ndarray | None = None,
+                 a2q: A2QConfig | None = None) -> tuple[Any, dict, dict]:
     """One AdamW step.  ``skip`` (bool scalar) makes the whole update a no-op
     (used by the dynamic loss scaler on overflow) while still advancing the
-    compiled graph — no host round-trip."""
+    compiled graph — no host round-trip.  ``a2q`` (with ``project=True``)
+    re-projects every matrix leaf onto its per-column l1 cap after the
+    step, so the overflow certificate holds at every step boundary."""
     step = opt["step"] + 1
     lr = schedule(cfg, step)
     gnorm = global_norm(grads)
@@ -79,6 +190,9 @@ def adamw_update(params: Any, grads: Any, opt: dict, cfg: OptConfig,
     new_params = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
     new_m = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
     new_v = jax.tree.map(lambda t: t[2], out, is_leaf=lambda x: isinstance(x, tuple))
+
+    if a2q is not None and a2q.project:
+        new_params = a2q_project(new_params, a2q)
 
     if skip is not None:
         keep = lambda new, old: jnp.where(skip, old, new)  # noqa: E731

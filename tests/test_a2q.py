@@ -1,0 +1,192 @@
+"""A2Q accumulator-aware overflow avoidance: the guarantee, adversarially.
+
+The claim (Colbert et al.-style, adapted to the chunked carries): once every
+weight column satisfies ``||w_col||_1 * x_bound <= acc_max / 2^margin``, NO
+input bounded by ``x_bound`` can drive any carry of the reduced-``e_acc``
+accumulator to its saturation clamp — so the telemetry overflow detector
+(``max_abs`` reaching the format's ``max_value``) can never trip.
+
+The positive half is proven by adversarial search (seeded random search over
+ragged shapes, weight scales and SIGN-ALIGNED worst-case inputs — the
+hypothesis library is an optional extra, so the search is hand-rolled and
+deterministic); the negative half is a meta-test: the same adversary against
+UNCONSTRAINED weights does trip the detector, so the guarantee is doing the
+work, not the detector being blind.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.policy import GEMMPrecision
+from repro.telemetry.stats import gemm_stats
+from repro.train import optimizer as O
+
+# narrow exponent so the cap binds at test scale: acc (1,4,9), inputs
+# bounded by 4, margin 1 => per-column l1 cap = 255.75 / 2 / 4 ~ 32
+A2Q = O.A2QConfig(e_acc=4, m_acc=9, x_bound=4.0, margin_bits=1,
+                  strength=1e-3)
+ACC_MAX = O.acc_format_max(A2Q.e_acc, A2Q.m_acc)
+PREC = GEMMPrecision(m_acc=A2Q.m_acc, e_acc=A2Q.e_acc, chunk=32)
+
+
+def _adversarial_x(w: np.ndarray, x_bound: float, rng,
+                   mode: str) -> np.ndarray:
+    """Worst-case bounded input for ``max |x @ w|``: magnitudes at the
+    bound, signs aligned with the heaviest column (or random, for
+    coverage of the non-extremal face)."""
+    if mode == "aligned":
+        col = int(np.argmax(np.abs(w).sum(0)))
+        return (np.sign(w[:, col]) * x_bound).astype(np.float32)[None, :]
+    if mode == "anti":
+        col = int(np.argmax(np.abs(w).sum(0)))
+        return (-np.sign(w[:, col]) * x_bound).astype(np.float32)[None, :]
+    return (rng.choice([-1.0, 1.0], size=(4, w.shape[0])) * x_bound *
+            rng.uniform(0.5, 1.0, size=(4, w.shape[0]))).astype(np.float32)
+
+
+def _max_carry(x: np.ndarray, w: jnp.ndarray, *, rounding="rne",
+               sr_seed=0) -> float:
+    """max |carry| the real kernel saw across every chunk update."""
+    _, st = gemm_stats(jnp.asarray(x), w, precision=PREC,
+                       rounding=rounding, sr_seed=sr_seed)
+    return float(st.max_abs)
+
+
+@pytest.mark.parametrize("rounding", ["rne", "sr"])
+def test_a2q_constrained_never_overflows_adversarial(rounding):
+    rng = np.random.RandomState(0)
+    for trial in range(12):
+        k = int(rng.randint(16, 257))
+        n = int(rng.randint(4, 49))
+        scale = float(rng.uniform(0.5, 20.0))
+        w = jnp.asarray(rng.standard_normal((k, n)).astype(np.float32)
+                        * scale)
+        wp = O.a2q_project({"w": w}, A2Q)["w"]
+        assert O.a2q_certificate({"w": wp}, A2Q)["ok"]
+        for mode in ("aligned", "anti", "random"):
+            x = _adversarial_x(np.asarray(wp), A2Q.x_bound, rng, mode)
+            m = _max_carry(x, wp, rounding=rounding, sr_seed=trial)
+            # certified: strictly below the saturation clamp (margin bit)
+            assert m < ACC_MAX, (trial, mode, m)
+
+
+def test_a2q_meta_unconstrained_trips_detector():
+    # the same adversary against weights ~4x over the cap MUST reach the
+    # clamp — proves the detector the positive test relies on is live
+    rng = np.random.RandomState(1)
+    tripped = 0
+    for trial in range(6):
+        k = int(rng.randint(64, 257))
+        n = int(rng.randint(4, 33))
+        w = jnp.asarray(rng.standard_normal((k, n)).astype(np.float32))
+        wp = O.a2q_project({"w": w}, A2Q)["w"] * 4.0
+        x = _adversarial_x(np.asarray(wp), A2Q.x_bound, rng, "aligned")
+        if _max_carry(x, wp) >= ACC_MAX:
+            tripped += 1
+    assert tripped == 6
+
+
+# ----------------------------- optimizer side ------------------------------
+
+
+def test_a2q_penalty_and_projection():
+    rng = np.random.RandomState(2)
+    params = {"w": jnp.asarray(rng.standard_normal((64, 8))
+                               .astype(np.float32) * 8),
+              "b": jnp.asarray(rng.standard_normal((8,))
+                               .astype(np.float32))}
+    assert not O.a2q_certificate(params, A2Q)["ok"]
+    assert float(O.a2q_penalty(params, A2Q)) > 0
+    proj = O.a2q_project(params, A2Q)
+    cert = O.a2q_certificate(proj, A2Q)
+    assert cert["ok"] and cert["carry_bound"] <= ACC_MAX / 2 * (1 + 1e-6)
+    # projection lands ON the cap; recomputed norms sit within f32 epsilon
+    assert float(O.a2q_penalty(proj, A2Q)) < 1e-9
+    # vectors pass through untouched; signs/zeros of matrices preserved
+    np.testing.assert_array_equal(np.asarray(proj["b"]),
+                                  np.asarray(params["b"]))
+    assert np.all(np.sign(np.asarray(proj["w"]))
+                  == np.sign(np.asarray(params["w"])))
+
+
+def test_adamw_update_holds_certificate():
+    rng = np.random.RandomState(3)
+    params = {"w": jnp.asarray(rng.standard_normal((64, 8))
+                               .astype(np.float32) * 8)}
+    grads = {"w": jnp.asarray(rng.standard_normal((64, 8))
+                              .astype(np.float32))}
+    opt = O.init_opt_state(params)
+    cfg = O.OptConfig(lr=1e-2, warmup_steps=0, total_steps=10)
+    new_params, _, _ = O.adamw_update(params, grads, opt, cfg, a2q=A2Q)
+    assert O.a2q_certificate(new_params, A2Q)["ok"]
+
+
+# ------------------------- serve planner a2q mode --------------------------
+
+
+def test_plan_a2q_guarantee_is_length_independent():
+    from repro.serve.plan import min_e_acc
+
+    bucket = [min_e_acc(ctx, e_min=3) for ctx in (256, 4096, 65536)]
+    a2q = [min_e_acc(ctx, e_min=3, guarantee="a2q", v_cap=256.0)
+           for ctx in (256, 4096, 65536)]
+    assert len(set(a2q)) == 1              # certified cap: no ctx term
+    assert bucket[-1] > bucket[0]          # worst-case bound keeps growing
+    assert a2q[0] <= bucket[-1]
+
+
+def test_plan_a2q_guarantee_validation():
+    from repro.serve.plan import min_e_acc
+
+    with pytest.raises(ValueError):
+        min_e_acc(1024, guarantee="a2q")          # needs v_cap
+    with pytest.raises(ValueError):
+        min_e_acc(1024, guarantee="a2q", v_cap=0.0)
+    with pytest.raises(ValueError):
+        min_e_acc(1024, guarantee="certified-by-vibes")
+
+
+def test_plan_attention_records_and_verifies_a2q():
+    from repro.serve.plan import plan_attention, plan_verify
+
+    plan = plan_attention(4096, 16, guarantee="a2q", v_cap=256.0, e_min=3)
+    assert plan.guarantee == "a2q" and plan.v_cap == 256.0
+    # re-certification must re-check the SAME (a2q) bound the plan was
+    # built under, not silently fall back to the bucket worst case
+    vp = plan_verify(plan, k=8)
+    assert vp.k == 8 and vp.plan.guarantee == "a2q"
+
+
+# ----------------------- v_hint satellite regression -----------------------
+
+
+def test_min_e_acc_default_v_hint_pinned():
+    # threading v_hint must not move the historical default plan: the old
+    # hardcoded 16.0 is now DEFAULT_V_HINT, and None means exactly that
+    from repro.serve.plan import DEFAULT_V_HINT, min_e_acc
+
+    assert DEFAULT_V_HINT == 16.0
+    for ctx in (128, 1024, 4096, 65536):
+        assert min_e_acc(ctx) == min_e_acc(ctx, v_hint=16.0)
+    # a certified smaller hint can only shrink the requirement
+    for ctx in (1024, 65536):
+        assert min_e_acc(ctx, v_hint=1.0) <= min_e_acc(ctx)
+
+
+def test_derive_v_hint_from_stats():
+    from repro.serve.plan import DEFAULT_V_HINT, derive_v_hint
+    from repro.telemetry.stats import EnsembleStats
+
+    empty = EnsembleStats.from_raw(jnp.zeros((10,), jnp.float32))
+    assert derive_v_hint(empty, 4096) == DEFAULT_V_HINT  # no data: safe
+    raw = jnp.zeros((10,), jnp.float32).at[0].set(1.0).at[5].set(2048.0)
+    st = EnsembleStats.from_raw(raw)
+    got = derive_v_hint(st, 4096)
+    assert 0 < got <= DEFAULT_V_HINT
+    # measured carries near the worst case push the hint back to default
+    raw_hot = raw.at[5].set(16.0 * 4096)
+    assert derive_v_hint(EnsembleStats.from_raw(raw_hot), 4096) \
+        == DEFAULT_V_HINT

@@ -15,7 +15,8 @@ from repro.core.policy import GEMMPrecision
 from repro.kernels.bwd_pair import qmatmul_bwd_pair
 from repro.kernels.common import count_pallas_calls
 from repro.kernels.fused import qmatmul_fused
-from repro.kernels.ops import QDotConfig, _qdot2d_fwd, qdot, qdot_packed
+from repro.kernels.ops import (QDotConfig, _encode_seed, _qdot2d_fwd, qdot,
+                               qdot_packed)
 from repro.kernels.qmatmul import qmatmul_pallas
 from repro.kernels.quantize import quantize_pallas
 from repro.kernels.ref import ref_qmatmul
@@ -315,7 +316,7 @@ def test_qdot_packed_residual_bytes_drop_4x():
     x, w = _rand(t, k, n, 37)
 
     def res_bytes(cfg):
-        _, res = _qdot2d_fwd(x, w, cfg)
+        _, res = _qdot2d_fwd(x, w, _encode_seed(0), cfg)
         return sum(l.size * l.dtype.itemsize for l in jax.tree.leaves(res))
 
     packed = res_bytes(_cfg())
@@ -324,7 +325,8 @@ def test_qdot_packed_residual_bytes_drop_4x():
     assert carrier == 4 * (t * k + k * n)
     assert carrier >= 3.5 * packed
     # and the packed residuals decode to exactly the f32-carrier residuals
-    (_, res_p), (_, res_c) = _qdot2d_fwd(x, w, _cfg()), _qdot2d_fwd(x, w, _cfg(pack=False))
+    (_, res_p), (_, res_c) = (_qdot2d_fwd(x, w, _encode_seed(0), _cfg()),
+                              _qdot2d_fwd(x, w, _encode_seed(0), _cfg(pack=False)))
     for qt, arr in zip(res_p, res_c):
         assert isinstance(qt, QTensor)
         np.testing.assert_array_equal(np.asarray(qt.unpack()), np.asarray(arr))

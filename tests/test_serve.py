@@ -13,6 +13,7 @@ import pytest
 
 from repro.configs import get_smoke_config
 from repro.core.vrr import CUTOFF_LOG_V
+from repro.kernels.common import N_STATS
 from repro.kernels.attention import (
     flash_prefill,
     flash_prefill_reference,
@@ -112,7 +113,7 @@ def test_paged_decode_inactive_row_and_stats_neutrality():
     plain = paged_attn_decode(q, arena["k"], arena["v"], arena["k_se"],
                               arena["v_se"], pt, lens, kv_fmt=FP8_152, acc=ACC)
     np.testing.assert_array_equal(np.asarray(with_stats), np.asarray(plain))
-    assert raw.shape == (8,) and float(raw[0]) > 0
+    assert raw.shape == (N_STATS,) and float(raw[0]) > 0
 
 
 # --------------------------------------------------------------------------
